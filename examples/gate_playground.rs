@@ -1,0 +1,82 @@
+//! Gate playground: the electrical side of CRAM-PM (paper §2).
+//!
+//! Walks the resistive-divider analysis for every gate: bias windows,
+//! per-state currents, the XOR and full-adder compound sequences, the
+//! §3.4 row-width experiment and the §5.5 variation margins.
+//!
+//! ```bash
+//! cargo run --release --example gate_playground
+//! ```
+
+use cram_pm::gates::compound::{full_adder_via_sequence, xor_via_sequence};
+use cram_pm::gates::{gate_current, solve_window, GateKind};
+use cram_pm::tech::interconnect::{max_row_width, InterconnectModel};
+use cram_pm::tech::{MtjParams, Technology, VariationAnalysis};
+
+fn main() {
+    for tech in Technology::ALL {
+        let mtj = MtjParams::for_technology(tech);
+        println!("═══ {tech} MTJ: R_P={:.2}kΩ R_AP={:.2}kΩ I_crit(eff)={:.1}µA ═══",
+            mtj.r_p / 1e3, mtj.r_ap / 1e3, mtj.i_crit_eff() * 1e6);
+
+        for kind in GateKind::ALL {
+            let w = solve_window(&mtj, kind, 0.0);
+            let v = w.midpoint();
+            print!(
+                "  {:<5} pre-set {}  V_gate {v:.3} V  currents(µA):",
+                kind.name(),
+                kind.preset() as u8
+            );
+            for ones in 0..=kind.n_inputs() {
+                let i = gate_current(&mtj, v, kind.n_inputs(), ones, kind.preset(), 0.0);
+                let mark = if i > mtj.i_crit_eff() { "*" } else { " " };
+                print!(" {ones}→{:.0}{mark}", i * 1e6);
+            }
+            println!("   (* = switches)");
+        }
+        println!();
+    }
+
+    println!("── compound sequences ──");
+    println!("  XOR via NOR/COPY/TH (Table 2):");
+    for a in [false, true] {
+        for b in [false, true] {
+            println!("    {} ⊕ {} = {}", a as u8, b as u8, xor_via_sequence(a, b) as u8);
+        }
+    }
+    println!("  full adder via MAJ3/INV/COPY/MAJ5 (Fig. 2):");
+    for a in [false, true] {
+        for b in [false, true] {
+            for c in [false, true] {
+                let (s, co) = full_adder_via_sequence(a, b, c);
+                println!(
+                    "    {}+{}+{} = sum {} carry {}",
+                    a as u8, b as u8, c as u8, s as u8, co as u8
+                );
+            }
+        }
+    }
+
+    println!("\n── §3.4 row width (near-term, 22 nm copper LL) ──");
+    let mtj = MtjParams::near_term();
+    let wire = InterconnectModel::at_22nm();
+    let a = max_row_width(&mtj, &wire, GateKind::Nor2);
+    println!(
+        "  2-input NOR keeps switching up to {} cells away (R_line {:.0} Ω, RC {:.2} % of t_sw)",
+        a.max_cells,
+        a.r_line_at_max,
+        a.latency_overhead * 100.0
+    );
+
+    println!("\n── §5.5 variation margins (near-term) ──");
+    let va = VariationAnalysis::new(mtj, 5000, 1);
+    for kind in GateKind::ALL {
+        let r = va.check_gate(kind, 0.10);
+        println!(
+            "  {:<5} ±10% I_crit: worst-case {}  MC yield {:.1} %",
+            kind.name(),
+            if r.functional_worst_case { "OK   " } else { "FAILS" },
+            r.mc_yield * 100.0
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! CRAM-PM vs near-memory processing, benchmark by benchmark — the
+//! Fig. 9/10 comparison as an interactive report, plus the gate-level
+//! Fig. 11 face-off against Ambit and Pinatubo.
+//!
+//! ```bash
+//! cargo run --release --example nmp_faceoff
+//! ```
+
+use cram_pm::baselines::{AmbitModel, BulkOp, CramGateModel, NmpBaseline, PinatuboModel};
+use cram_pm::bench_apps::all_benchmarks;
+use cram_pm::isa::PresetMode;
+use cram_pm::tech::Technology;
+
+fn main() {
+    let nmp = NmpBaseline::paper();
+    let hyp = NmpBaseline::hypothetical();
+    println!(
+        "NMP baseline: {} ARM-A5-class cores @ {:.0} MHz, {:.1} GB/s links, {:.2} W",
+        nmp.cores,
+        nmp.clock_hz / 1e6,
+        nmp.link_bw / 1e9,
+        nmp.power()
+    );
+    println!("NMP-Hyp: {} cores, zero memory overhead, {:.2} W\n", hyp.cores, hyp.power());
+
+    for tech in Technology::ALL {
+        println!("═══ {tech} ═══");
+        println!(
+            "  {:<5} {:>13} {:>13} {:>11} {:>11} {:>12} {:>12}",
+            "bench", "CRAM (it/s)", "NMP (it/s)", "rate ×NMP", "rate ×Hyp", "eff ×NMP", "eff ×Hyp"
+        );
+        for b in all_benchmarks() {
+            let cram = b.cram(tech, PresetMode::Gang);
+            let p = b.nmp_profile();
+            println!(
+                "  {:<5} {:>13.3e} {:>13.3e} {:>10.0}× {:>10.0}× {:>11.0}× {:>11.0}×",
+                b.name(),
+                cram.match_rate,
+                nmp.match_rate(&p),
+                cram.match_rate / nmp.match_rate(&p),
+                cram.match_rate / hyp.match_rate(&p),
+                cram.efficiency / nmp.efficiency(&p),
+                cram.efficiency / hyp.efficiency(&p),
+            );
+        }
+        println!();
+    }
+
+    println!("═══ gate-level (Fig. 11): 32 MB bulk bitwise ═══");
+    let ambit = AmbitModel::default();
+    let vec_bits = 32 * 1024 * 1024 * 8;
+    for tech in Technology::ALL {
+        let cram = CramGateModel::new(tech);
+        print!("  [{tech}]");
+        for op in BulkOp::FIG11 {
+            print!(
+                "  {} {:.0}×",
+                op.name(),
+                cram.throughput(op, vec_bits) / ambit.throughput(op)
+            );
+        }
+        println!(
+            "  | Pinatubo-OR {:.1}×",
+            cram.throughput(BulkOp::Or, vec_bits) / PinatuboModel::default().or_throughput()
+        );
+    }
+}

@@ -1,0 +1,75 @@
+"""AOT export: lower the L2 model to HLO **text** artifacts for the
+rust PJRT runtime.
+
+HLO text — not serialized ``HloModuleProto`` — is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+
+Artifacts land in ``--out-dir`` together with ``manifest.txt``:
+
+    <name> <rows> <frag_chars> <pat_chars> <file>
+
+one line per variant — a whitespace format the rust side parses without
+a JSON dependency (the build image is offline).
+
+Run once via ``make artifacts``; python never runs on the request path.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Exported shape variants: (name, rows, frag_chars, pat_chars).
+# Rows are multiples of the kernel's 128-row VMEM block.
+VARIANTS = [
+    # Quickstart / integration-test scale.
+    ("dna_small", 256, 64, 16),
+    # The paper's 100-char patterns against kilocharacter fragments
+    # (fragment folded to 256 to keep the artifact compile-time sane;
+    # the coordinator tiles longer fragments over row blocks).
+    ("dna_100", 256, 256, 100),
+    # Word-count: single-alignment word match (Table 4, 32-bit words).
+    ("wordcount", 512, 16, 16),
+    # String-match: 10-char needles over 60-char segments (Table 4).
+    ("stringmatch", 512, 60, 10),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, rows, frag, pat in VARIANTS:
+        lowered = model.lower_variant(rows, frag, pat)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {rows} {frag} {pat} {fname}")
+        print(f"wrote {path} ({len(text)} chars) [{rows}x{frag} pat={pat}]")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines)} variants, jax {jax.__version__}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""L1: the CRAM-PM match kernel as a Pallas kernel.
+
+The kernel mirrors the array's bit-level dataflow (paper §3.2):
+
+* 2-bit character codes are compared **bit-wise** — XOR on the low bit,
+  XOR on the high bit, then a NOR that collapses the two XOR outputs to
+  the per-character match bit (Fig. 4a);
+* the similarity score is the **popcount of the match string** — the
+  role the Fig. 4b adder reduction tree plays in the array;
+* rows are the parallel axis: every row computes the same alignment at
+  the same time, exactly the row-level SIMD of §2.4. The Pallas grid
+  tiles rows into VMEM blocks the way banks tile the reference across
+  arrays (hardware adaptation: DESIGN.md §6).
+
+Pallas runs under ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the kernel lowers to plain HLO ops —
+the form the rust runtime loads. On a real TPU the same BlockSpec
+structure expresses the HBM→VMEM schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM block: 2-bit codes arrive as int32, so a (128, frag)
+# block keeps the working set at frag ≈ 1000 chars around
+# 128·1000·4 B ≈ 512 KB — half a TPU core's VMEM, leaving room for the
+# output tile and double buffering.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _match_kernel(frag_ref, pat_ref, out_ref, *, pat_chars: int, n_align: int):
+    """One row-block: sweep all alignments, bit-level compare + popcount."""
+    frag = frag_ref[...]  # (block_rows, frag_chars) int32 codes
+    pat = pat_ref[...]  # (1, pat_chars) int32 codes
+
+    def alignment(loc, _):
+        # Aligned window of the fragment (dynamic in loc, static size).
+        window = jax.lax.dynamic_slice_in_dim(frag, loc, pat_chars, axis=1)
+        # Bit-level comparison, exactly as the array does it:
+        # two XORs per character...
+        x = jnp.bitwise_xor(window, pat)
+        x_lo = jnp.bitwise_and(x, 1)
+        x_hi = jnp.bitwise_and(jnp.right_shift(x, 1), 1)
+        # ...then NOR to the match bit (1 iff both bit-XORs are 0).
+        match_bit = jnp.where(jnp.bitwise_or(x_lo, x_hi) == 0, 1, 0)
+        # Adder-tree popcount of the match string = row-wise sum.
+        score = jnp.sum(match_bit, axis=1, dtype=jnp.int32)
+        out_ref[:, pl.dslice(loc, 1)] = score[:, None]
+        return 0
+
+    jax.lax.fori_loop(0, n_align, alignment, 0)
+
+
+def match_scores(frag_codes, pat_codes, *, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Similarity scores ``(rows, n_align)`` via the Pallas kernel.
+
+    ``rows`` must be a multiple of ``block_rows`` (the AOT variants are
+    exported that way; the rust runtime pads the last block).
+    """
+    rows, frag_chars = frag_codes.shape
+    pat_chars = pat_codes.shape[-1]
+    n_align = frag_chars - pat_chars + 1
+    if rows % block_rows != 0:
+        raise ValueError(f"rows {rows} not a multiple of block_rows {block_rows}")
+
+    kernel = functools.partial(_match_kernel, pat_chars=pat_chars, n_align=n_align)
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Row-block of the fragment matrix into VMEM.
+            pl.BlockSpec((block_rows, frag_chars), lambda i: (i, 0)),
+            # The pattern is broadcast to every block (§3.2: the same
+            # pattern is distributed across all rows).
+            pl.BlockSpec((1, pat_chars), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n_align), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n_align), jnp.int32),
+        interpret=True,
+    )(frag_codes, pat_codes.reshape(1, -1))

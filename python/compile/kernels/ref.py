@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the CRAM-PM match computation (L1 correctness
+reference).
+
+Semantics being modelled (paper Algorithm 1): for every row and every
+alignment ``loc``, count the characters of the pattern that equal the
+aligned characters of the row's reference fragment. Characters are
+2-bit codes (A=0, C=1, G=2, T=3).
+
+The oracle is deliberately written with gather + compare — no bit
+tricks — so that the Pallas kernel's bit-level implementation (XOR per
+bit, NOR to a match bit, adder-tree popcount) is checked against an
+independent formulation.
+"""
+
+import jax.numpy as jnp
+
+
+def n_alignments(frag_chars: int, pat_chars: int) -> int:
+    """Alignments per Algorithm 1: until the tails meet."""
+    assert frag_chars >= pat_chars >= 1
+    return frag_chars - pat_chars + 1
+
+
+def score_profile_ref(frag_codes, pat_codes):
+    """Similarity scores for every row and alignment.
+
+    Args:
+      frag_codes: int array ``(rows, frag_chars)`` of 2-bit codes.
+      pat_codes: int array ``(pat_chars,)`` of 2-bit codes.
+
+    Returns:
+      int32 array ``(rows, frag_chars - pat_chars + 1)``.
+    """
+    frag_chars = frag_codes.shape[-1]
+    pat_chars = pat_codes.shape[-1]
+    n = n_alignments(frag_chars, pat_chars)
+    idx = jnp.arange(n)[:, None] + jnp.arange(pat_chars)[None, :]
+    windows = frag_codes[:, idx]  # (rows, n, pat)
+    return jnp.sum(windows == pat_codes[None, None, :], axis=-1).astype(jnp.int32)
+
+
+def best_alignment_ref(frag_codes, pat_codes):
+    """Per-row ``(best_loc, best_score)`` — ties break to the lowest
+    ``loc``, matching the rust coordinator's convention."""
+    scores = score_profile_ref(frag_codes, pat_codes)
+    best_loc = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    best_score = jnp.max(scores, axis=-1).astype(jnp.int32)
+    return best_loc, best_score

@@ -1,0 +1,42 @@
+"""L2: the array-level match model (build-time JAX, never imported at
+runtime).
+
+Wraps the L1 Pallas kernel into the computation one CRAM-PM array pass
+performs: all rows score their fragment against the pattern at every
+alignment, and the per-row best alignment (the quantity the host
+extracts from the score read-outs, §3.2 "Data Output") is reduced on
+the spot so the rust coordinator gets ``(scores, best_loc,
+best_score)`` in one executable.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import match as kernels
+
+
+def array_pass(frag_codes, pat_codes):
+    """One array pass.
+
+    Args:
+      frag_codes: int32 ``(rows, frag_chars)`` 2-bit codes, one fragment
+        per row (the folded reference, Fig. 3).
+      pat_codes: int32 ``(pat_chars,)`` 2-bit codes (the pattern,
+        broadcast to all rows).
+
+    Returns:
+      Tuple of ``scores (rows, n_align) int32``, ``best_loc (rows,)
+      int32`` (ties to the lowest loc) and ``best_score (rows,) int32``.
+    """
+    scores = kernels.match_scores(frag_codes, pat_codes)
+    best_loc = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    best_score = jnp.max(scores, axis=-1).astype(jnp.int32)
+    return scores, best_loc, best_score
+
+
+def lower_variant(rows: int, frag_chars: int, pat_chars: int):
+    """AOT-lower ``array_pass`` for a concrete shape; returns the
+    jax ``Lowered`` object."""
+    frag = jax.ShapeDtypeStruct((rows, frag_chars), jnp.int32)
+    pat = jax.ShapeDtypeStruct((pat_chars,), jnp.int32)
+    return jax.jit(array_pass).lower(frag, pat)

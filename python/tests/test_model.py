@@ -1,0 +1,65 @@
+"""L2 correctness: the array-pass model (kernel + best-alignment
+reduction) and the AOT export path."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def codes(rng, *shape):
+    return jnp.asarray(rng.integers(0, 4, size=shape), dtype=jnp.int32)
+
+
+def test_array_pass_shapes_and_dtypes():
+    rng = np.random.default_rng(0)
+    scores, best_loc, best_score = model.array_pass(codes(rng, 128, 64), codes(rng, 16))
+    assert scores.shape == (128, 49) and scores.dtype == jnp.int32
+    assert best_loc.shape == (128,) and best_loc.dtype == jnp.int32
+    assert best_score.shape == (128,) and best_score.dtype == jnp.int32
+
+
+def test_best_alignment_matches_oracle():
+    rng = np.random.default_rng(1)
+    frag, pat = codes(rng, 128, 48), codes(rng, 12)
+    _, best_loc, best_score = model.array_pass(frag, pat)
+    want_loc, want_score = ref.best_alignment_ref(frag, pat)
+    np.testing.assert_array_equal(np.asarray(best_loc), np.asarray(want_loc))
+    np.testing.assert_array_equal(np.asarray(best_score), np.asarray(want_score))
+
+
+def test_best_ties_break_low():
+    # A constant fragment ties every alignment; argmax must pick loc 0.
+    frag = jnp.zeros((128, 32), dtype=jnp.int32)
+    pat = jnp.zeros((8,), dtype=jnp.int32)
+    _, best_loc, best_score = model.array_pass(frag, pat)
+    assert (np.asarray(best_loc) == 0).all()
+    assert (np.asarray(best_score) == 8).all()
+
+
+def test_planted_pattern_recovered():
+    rng = np.random.default_rng(2)
+    frag = codes(rng, 256, 64)
+    pat = frag[77, 30:46]
+    _, best_loc, best_score = model.array_pass(frag, pat)
+    assert int(best_score[77]) == 16
+    assert int(best_loc[77]) == 30
+
+
+@pytest.mark.parametrize("name,rows,frag,pat", aot.VARIANTS)
+def test_variants_lower_to_hlo_text(name, rows, frag, pat):
+    """Every exported variant must lower and contain an HLO module."""
+    lowered = model.lower_variant(rows, frag, pat)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), f"{name}: not HLO text"
+    # All three outputs present as a tuple root.
+    assert "ROOT" in text
+
+
+def test_hlo_text_is_deterministic():
+    a = aot.to_hlo_text(model.lower_variant(128, 32, 8))
+    b = aot.to_hlo_text(model.lower_variant(128, 32, 8))
+    assert a == b

@@ -1,0 +1,39 @@
+//! Bench: regenerate Fig. 11 (gate-level throughput vs Ambit /
+//! Pinatubo) and measure the *software* bulk-bitwise rate of the
+//! columnar bit simulator for context.
+//!
+//! `cargo bench --bench fig11_gates`
+
+use cram_pm::array::CramArray;
+use cram_pm::experiments::fig11_gates;
+use cram_pm::gates::GateKind;
+use cram_pm::isa::{MicroInstr, Program, Stage};
+use cram_pm::util::bench::{bench, section};
+
+fn main() {
+    section("Fig. 11 — data regeneration");
+    fig11_gates::run();
+
+    section("software columnar simulator: bulk bitwise rate");
+    // 16K rows × one gate step = 16K bit-ops per execute.
+    let rows = 16 * 1024;
+    let mut arr = CramArray::new(rows, 8);
+    for c in 0..4 {
+        for r in (0..rows).step_by(c + 2) {
+            arr.set(r, c, true);
+        }
+    }
+    for (name, kind, ins) in [
+        ("NOR2", GateKind::Nor2, vec![0u32, 1]),
+        ("MAJ3", GateKind::Maj3, vec![0, 1, 2]),
+        ("MAJ5", GateKind::Maj5, vec![0, 1, 2, 3, 4]),
+    ] {
+        let mut prog = Program::new();
+        prog.push(Stage::Match, MicroInstr::gate(kind, 6, &ins));
+        let r = bench(&format!("bitsim {name} ({rows} rows)"), 1.0, || {
+            arr.execute(&prog).unwrap()
+        });
+        println!("{r}");
+        println!("  → {:.2} Gbit-ops/s software", rows as f64 / r.median / 1e9);
+    }
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate Fig. 5 (design-point characterization) and time
+//! the step-accurate model that produces it.
+//!
+//! `cargo bench --bench fig5_dna`
+
+use cram_pm::experiments::fig5_designs;
+use cram_pm::isa::PresetMode;
+use cram_pm::sim::{DnaPassModel, SystemConfig};
+use cram_pm::tech::Technology;
+use cram_pm::util::bench::{bench, section};
+
+fn main() {
+    section("Fig. 5 — data regeneration");
+    fig5_designs::run();
+
+    section("Fig. 5 — model cost");
+    for mode in [PresetMode::Standard, PresetMode::Gang] {
+        let r = bench(&format!("pass_cost paper_dna {mode:?}"), 1.0, || {
+            DnaPassModel::new(SystemConfig::paper_dna(Technology::NearTerm, mode)).pass_cost()
+        });
+        println!("{r}");
+    }
+    let r = bench("fig5 full regeneration", 2.0, || {
+        fig5_designs::fig5(Technology::NearTerm, 3_000_000, 170.0)
+    });
+    println!("{r}");
+}

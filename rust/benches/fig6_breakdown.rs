@@ -1,0 +1,29 @@
+//! Bench: regenerate Fig. 6 (stage breakdown) and time the per-stage
+//! costing engine.
+//!
+//! `cargo bench --bench fig6_breakdown`
+
+use cram_pm::experiments::fig6_breakdown;
+use cram_pm::isa::{CodeGen, PresetMode};
+use cram_pm::sim::{Simulator, SystemConfig};
+use cram_pm::tech::Technology;
+use cram_pm::util::bench::{bench, section};
+
+fn main() {
+    section("Fig. 6 — data regeneration");
+    fig6_breakdown::run();
+
+    section("Fig. 6 — costing throughput");
+    let cfg = SystemConfig::paper_dna(Technology::NearTerm, PresetMode::Standard);
+    let layout = cfg.layout();
+    let sim = Simulator::new(cfg.tech, cfg.geometry());
+    let mut cg = CodeGen::new(layout, cfg.preset_mode);
+    let prog = cg.alignment_program(0, true);
+    println!("program: {} micro-instructions per alignment", prog.len());
+    let r = bench("cost_program (1 alignment, 100-char pattern)", 2.0, || sim.cost_program(&prog));
+    println!("{r}");
+    println!(
+        "  → {:.1} M micro-instructions costed per second",
+        prog.len() as f64 / r.median / 1e6
+    );
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 7 (pattern-length sensitivity).
+//!
+//! `cargo bench --bench fig7_pattern_length`
+
+use cram_pm::experiments::fig7_pattern_length;
+use cram_pm::tech::Technology;
+use cram_pm::util::bench::{bench, section};
+
+fn main() {
+    section("Fig. 7 — data regeneration");
+    fig7_pattern_length::run();
+
+    section("Fig. 7 — sweep cost");
+    let r = bench("pattern-length sweep {100,200,300}", 2.0, || {
+        fig7_pattern_length::fig7(Technology::NearTerm, &[100, 200, 300], 170.0)
+    });
+    println!("{r}");
+}

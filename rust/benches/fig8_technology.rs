@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig. 8 (MTJ technology sensitivity).
+//!
+//! `cargo bench --bench fig8_technology`
+
+use cram_pm::experiments::fig8_technology;
+use cram_pm::util::bench::{bench, section};
+
+fn main() {
+    section("Fig. 8 — data regeneration");
+    fig8_technology::run();
+
+    section("Fig. 8 — sweep cost");
+    let r = bench("near+long corner evaluation", 2.0, || fig8_technology::fig8(170.0));
+    println!("{r}");
+}

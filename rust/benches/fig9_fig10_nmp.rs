@@ -1,0 +1,16 @@
+//! Bench: regenerate Figs. 9 & 10 (CRAM-PM vs NMP across the Table 4
+//! benchmark suite).
+//!
+//! `cargo bench --bench fig9_fig10_nmp`
+
+use cram_pm::experiments::fig9_10_nmp;
+use cram_pm::util::bench::{bench, section};
+
+fn main() {
+    section("Figs. 9/10 — data regeneration");
+    fig9_10_nmp::run();
+
+    section("Figs. 9/10 — suite evaluation cost");
+    let r = bench("all 5 benchmarks × 2 corners", 2.0, fig9_10_nmp::fig9_10);
+    println!("{r}");
+}

@@ -1,0 +1,99 @@
+//! Bench: the L3 hot paths — codegen, the columnar bit simulator, the
+//! oracular index, the XLA artifact execution, and the full pipeline.
+//! This is the §Perf driver (EXPERIMENTS.md).
+//!
+//! `cargo bench --bench hotpath`
+
+use cram_pm::array::{CramArray, RowLayout};
+use cram_pm::bench_apps::dna::DnaWorkload;
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::dna::Encoded;
+use cram_pm::isa::{CodeGen, PresetMode};
+use cram_pm::scheduler::{OracularScheduler, RowAddr};
+use cram_pm::util::bench::{bench, section};
+use cram_pm::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1234);
+
+    section("codegen: macro → micro lowering");
+    let probe = RowLayout::new(256, 100, usize::MAX / 2);
+    let mut cg = CodeGen::new(probe, PresetMode::Gang);
+    let scratch = {
+        let _ = cg.alignment_program(0, true);
+        cg.stats().scratch_high_water
+    };
+    let layout = RowLayout::new(256, 100, scratch);
+    let mut cg = CodeGen::new(layout, PresetMode::Gang);
+    let n_instr = cg.alignment_program(0, true).len();
+    let r = bench("alignment_program (100-char pattern)", 2.0, || cg.alignment_program(7, true));
+    println!("{r}");
+    println!("  → {:.1} M micro-instructions generated/s", n_instr as f64 / r.median / 1e6);
+
+    section("columnar bit simulator: full Algorithm 1 iteration");
+    let rows = 1024;
+    let mut arr = CramArray::new(rows, layout.total_cols());
+    for row in 0..rows {
+        let frag = Encoded::from_ascii(&rng.dna(256));
+        arr.write_encoded(row, layout.frag_col() as usize, &frag);
+    }
+    arr.broadcast_encoded(layout.pat_col() as usize, &Encoded::from_ascii(&rng.dna(100)));
+    let prog = cg.alignment_program(0, true);
+    let r = bench(&format!("execute 1 alignment ({} micros, {rows} rows)", prog.len()), 2.0, || {
+        arr.execute(&prog).unwrap()
+    });
+    println!("{r}");
+    println!(
+        "  → {:.2} M row-gate-ops/s",
+        (prog.len() * rows) as f64 / r.median / 1e6
+    );
+
+    section("oracular index");
+    let w = DnaWorkload::generate(1 << 20, 4096, 24, 0.01, 7);
+    let frags = w.fragments(256, 24);
+    let addrs: Vec<RowAddr> =
+        (0..frags.len()).map(|i| RowAddr { array: 0, row: i as u32 }).collect();
+    let r = bench("index build (1M-char reference)", 3.0, || {
+        OracularScheduler::build(&frags, addrs.clone(), w.patterns.clone(), 12, 64)
+    });
+    println!("{r}");
+    let idx = OracularScheduler::build(&frags, addrs, w.patterns.clone(), 12, 64);
+    let pats = w.patterns.clone();
+    let mut i = 0;
+    let r = bench("candidate lookup", 1.0, || {
+        i = (i + 1) % pats.len();
+        idx.candidates(&pats[i])
+    });
+    println!("{r}");
+    println!("  → {:.2} M lookups/s", 1.0 / r.median / 1e6);
+
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        section("XLA artifact execution (dna_small: 256×64, pat 16)");
+        let rt = cram_pm::runtime::Runtime::load(std::path::Path::new("artifacts")).unwrap();
+        let frag: Vec<i32> = (0..256 * 64).map(|_| rng.below(4) as i32).collect();
+        let pat: Vec<i32> = (0..16).map(|_| rng.below(4) as i32).collect();
+        let r = bench("execute dna_small", 2.0, || rt.execute("dna_small", &frag, &pat).unwrap());
+        println!("{r}");
+        println!(
+            "  → {:.2} M row-alignments/s through PJRT",
+            (256 * 49) as f64 / r.median / 1e6
+        );
+
+        section("coordinator pipeline end-to-end (XLA engine)");
+        let w = DnaWorkload::generate(1 << 17, 512, 16, 0.0, 3);
+        let frags = w.fragments(64, 16);
+        let cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        let coord = Coordinator::new(cfg, frags.clone()).unwrap();
+        let r = bench("512 patterns through the pipeline", 5.0, || coord.run(&w.patterns).unwrap());
+        println!("{r}");
+        println!("  → {:.0} patterns/s host throughput", 512.0 / r.median);
+
+        let mut cfg2 = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg2.engine = EngineKind::Cpu;
+        let coord2 = Coordinator::new(cfg2, frags).unwrap();
+        let r = bench("same, CPU oracle engine", 5.0, || coord2.run(&w.patterns).unwrap());
+        println!("{r}");
+    } else {
+        eprintln!("(artifacts missing — skipping XLA benches; run `make artifacts`)");
+    }
+}

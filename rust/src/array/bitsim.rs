@@ -1,0 +1,314 @@
+//! Columnar bit-level simulator for one CRAM-PM array.
+
+use crate::dna::Encoded;
+use crate::isa::{MicroInstr, Program};
+use crate::Result;
+use anyhow::{bail, ensure};
+
+/// Functional state of one CRAM-PM array.
+///
+/// Storage is column-major: column `c` owns `words_per_col` consecutive
+/// `u64` words, bit `r % 64` of word `r / 64` holding row `r`'s cell.
+/// A row-parallel gate step therefore runs at 64 rows per word op.
+#[derive(Debug, Clone)]
+pub struct CramArray {
+    rows: usize,
+    cols: usize,
+    words_per_col: usize,
+    cells: Vec<u64>,
+}
+
+/// Data produced by executing a program: memory reads and score-buffer
+/// read-outs.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ExecOutput {
+    /// One entry per `ReadRow`: the bits read.
+    pub reads: Vec<Vec<bool>>,
+    /// One entry per `ReadScoreAllRows`: the integer score per row
+    /// (LSB-first reassembly of the score bits).
+    pub scores: Vec<Vec<u64>>,
+}
+
+impl CramArray {
+    /// New all-zero array.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0, "array must be non-empty");
+        let words_per_col = rows.div_ceil(64);
+        CramArray { rows, cols, words_per_col, cells: vec![0; words_per_col * cols] }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    fn col_words(&self, col: usize) -> &[u64] {
+        &self.cells[col * self.words_per_col..(col + 1) * self.words_per_col]
+    }
+
+    #[inline]
+    fn col_words_mut(&mut self, col: usize) -> &mut [u64] {
+        &mut self.cells[col * self.words_per_col..(col + 1) * self.words_per_col]
+    }
+
+    /// Read one cell.
+    pub fn get(&self, row: usize, col: usize) -> bool {
+        assert!(row < self.rows && col < self.cols, "cell ({row},{col}) out of bounds");
+        self.col_words(col)[row / 64] >> (row % 64) & 1 == 1
+    }
+
+    /// Write one cell (memory mode).
+    pub fn set(&mut self, row: usize, col: usize, val: bool) {
+        assert!(row < self.rows && col < self.cols, "cell ({row},{col}) out of bounds");
+        let w = &mut self.col_words_mut(col)[row / 64];
+        if val {
+            *w |= 1 << (row % 64);
+        } else {
+            *w &= !(1 << (row % 64));
+        }
+    }
+
+    /// Set an entire column to `val` (the gang preset).
+    pub fn set_column(&mut self, col: usize, val: bool) {
+        assert!(col < self.cols, "column {col} out of bounds");
+        let fill = if val { u64::MAX } else { 0 };
+        self.col_words_mut(col).fill(fill);
+    }
+
+    /// Write a bit string into one row (memory mode).
+    pub fn write_row_bits(&mut self, row: usize, col: usize, bits: &[bool]) {
+        for (i, &b) in bits.iter().enumerate() {
+            self.set(row, col + i, b);
+        }
+    }
+
+    /// Read `len` bits from one row.
+    pub fn read_row_bits(&self, row: usize, col: usize, len: usize) -> Vec<bool> {
+        (0..len).map(|i| self.get(row, col + i)).collect()
+    }
+
+    /// Write a 2-bit-encoded string into a row at `col`.
+    pub fn write_encoded(&mut self, row: usize, col: usize, s: &Encoded) {
+        self.write_row_bits(row, col, &s.bits());
+    }
+
+    /// Write the same 2-bit-encoded string into **every** row at `col`
+    /// (how patterns are broadcast under the paper's second
+    /// pattern-assignment option, §3.2).
+    pub fn broadcast_encoded(&mut self, col: usize, s: &Encoded) {
+        let bits = s.bits();
+        for (i, &b) in bits.iter().enumerate() {
+            self.set_column(col + i, b);
+        }
+    }
+
+    /// Row-parallel gate step: fire `kind` with inputs at `ins`,
+    /// output at `out`. The output column must have been pre-set; the
+    /// simulator recomputes it wholesale (pre-set ⊕ switch), which is
+    /// electrically identical.
+    fn gate_step(&mut self, kind: crate::gates::GateKind, out: usize, ins: &[usize]) -> Result<()> {
+        ensure!(out < self.cols, "gate output column {out} out of bounds");
+        for &c in ins {
+            ensure!(c < self.cols, "gate input column {c} out of bounds");
+            ensure!(c != out, "gate output {out} aliases input (non-destructive rule)");
+        }
+        let t = kind.threshold();
+        let preset = kind.preset();
+        let wpc = self.words_per_col;
+        for w in 0..wpc {
+            // Bit-sliced popcount of up to 5 input bits per row:
+            // (s2 s1 s0) = number of 1-inputs, per bit lane.
+            let (mut s0, mut s1, mut s2) = (0u64, 0u64, 0u64);
+            for &c in ins {
+                let x = self.cells[c * wpc + w];
+                let c0 = s0 & x;
+                s0 ^= x;
+                let c1 = s1 & c0;
+                s1 ^= c0;
+                s2 |= c1;
+            }
+            // switch iff ones <= threshold.
+            let switch = match t {
+                0 => !(s0 | s1 | s2),
+                1 => !(s1 | s2),
+                2 => !(s2 | (s1 & s0)),
+                _ => bail!("unsupported gate threshold {t}"),
+            };
+            let out_word = if preset { !switch } else { switch };
+            self.cells[out * wpc + w] = out_word;
+        }
+        Ok(())
+    }
+
+    /// Execute a program, returning read data.
+    pub fn execute(&mut self, prog: &Program) -> Result<ExecOutput> {
+        let mut out = ExecOutput::default();
+        for (_, instr) in &prog.instrs {
+            self.execute_instr(instr, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// Execute a single micro-instruction.
+    pub fn execute_instr(&mut self, instr: &MicroInstr, out: &mut ExecOutput) -> Result<()> {
+        match instr {
+            MicroInstr::Preset { col, val } | MicroInstr::GangPreset { col, val } => {
+                ensure!((*col as usize) < self.cols, "preset column {col} out of bounds");
+                self.set_column(*col as usize, *val);
+            }
+            MicroInstr::Gate { kind, out: o, ins, n_ins } => {
+                let ins: Vec<usize> =
+                    ins[..*n_ins as usize].iter().map(|&c| c as usize).collect();
+                self.gate_step(*kind, *o as usize, &ins)?;
+            }
+            MicroInstr::WriteRow { row, col, bits } => {
+                ensure!((*row as usize) < self.rows, "row {row} out of bounds");
+                ensure!(
+                    *col as usize + bits.len() <= self.cols,
+                    "row write spills past column {}",
+                    self.cols
+                );
+                self.write_row_bits(*row as usize, *col as usize, bits);
+            }
+            MicroInstr::ReadRow { row, col, len } => {
+                out.reads.push(self.read_row_bits(*row as usize, *col as usize, *len as usize));
+            }
+            MicroInstr::ReadScoreAllRows { col, len } => {
+                ensure!(*len <= 64, "score wider than 64 bits");
+                let mut scores = Vec::with_capacity(self.rows);
+                for r in 0..self.rows {
+                    let mut v = 0u64;
+                    for i in 0..*len {
+                        v |= (self.get(r, (*col + i) as usize) as u64) << i;
+                    }
+                    scores.push(v);
+                }
+                out.scores.push(scores);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::RowLayout;
+    use crate::dna::{encode, score_profile};
+    use crate::gates::GateKind;
+    use crate::isa::{CodeGen, PresetMode};
+
+    #[test]
+    fn cell_get_set_roundtrip() {
+        let mut a = CramArray::new(130, 10); // crosses word boundaries
+        a.set(0, 0, true);
+        a.set(63, 3, true);
+        a.set(64, 3, true);
+        a.set(129, 9, true);
+        assert!(a.get(0, 0) && a.get(63, 3) && a.get(64, 3) && a.get(129, 9));
+        assert!(!a.get(1, 0) && !a.get(65, 3));
+        a.set(64, 3, false);
+        assert!(!a.get(64, 3));
+    }
+
+    #[test]
+    fn gang_preset_fills_column() {
+        let mut a = CramArray::new(70, 4);
+        a.set_column(2, true);
+        for r in 0..70 {
+            assert!(a.get(r, 2));
+        }
+        assert!(!a.get(0, 1));
+    }
+
+    #[test]
+    fn gate_step_row_parallel_nor() {
+        let mut a = CramArray::new(4, 3);
+        // rows: (0,0), (0,1), (1,0), (1,1)
+        a.set(1, 1, true);
+        a.set(2, 0, true);
+        a.set(3, 0, true);
+        a.set(3, 1, true);
+        a.gate_step(GateKind::Nor2, 2, &[0, 1]).unwrap();
+        assert!(a.get(0, 2));
+        assert!(!a.get(1, 2) && !a.get(2, 2) && !a.get(3, 2));
+    }
+
+    #[test]
+    fn gate_step_is_non_destructive() {
+        let mut a = CramArray::new(128, 4);
+        for r in (0..128).step_by(3) {
+            a.set(r, 0, true);
+        }
+        let before: Vec<bool> = (0..128).map(|r| a.get(r, 0)).collect();
+        a.gate_step(GateKind::Inv, 1, &[0]).unwrap();
+        let after: Vec<bool> = (0..128).map(|r| a.get(r, 0)).collect();
+        assert_eq!(before, after);
+        for r in 0..128 {
+            assert_eq!(a.get(r, 1), !a.get(r, 0));
+        }
+    }
+
+    #[test]
+    fn gate_rejects_output_aliasing_input() {
+        let mut a = CramArray::new(8, 4);
+        assert!(a.gate_step(GateKind::Nor2, 1, &[0, 1]).is_err());
+    }
+
+    #[test]
+    fn maj5_bitsliced_matches_scalar() {
+        let mut a = CramArray::new(256, 6);
+        // Pseudo-random but deterministic fill.
+        let mut state = 0x9E3779B97F4A7C15u64;
+        for c in 0..5 {
+            for r in 0..256 {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                a.set(r, c, state >> 33 & 1 == 1);
+            }
+        }
+        a.gate_step(GateKind::Maj5, 5, &[0, 1, 2, 3, 4]).unwrap();
+        for r in 0..256 {
+            let ones = (0..5).filter(|&c| a.get(r, c)).count();
+            assert_eq!(a.get(r, 5), ones >= 3, "row {r}");
+        }
+    }
+
+    /// End-to-end: the full Algorithm 1 program over the bit-level array
+    /// reproduces the character-level similarity oracle, for every
+    /// alignment, in both preset modes. This ties together codegen,
+    /// compound gates, the layout, and the columnar simulator.
+    #[test]
+    fn algorithm1_matches_similarity_oracle() {
+        let frag_strs: [&[u8]; 3] = [b"ACGTACGTACGTACGT", b"TTTTACGTGGGGCCCC", b"GATTACAGATTACAGA"];
+        let pattern = encode(b"ACGT");
+        let layout = RowLayout::new(16, 4, 200);
+        for mode in [PresetMode::Standard, PresetMode::Gang] {
+            let mut arr = CramArray::new(frag_strs.len(), layout.total_cols());
+            for (r, f) in frag_strs.iter().enumerate() {
+                arr.write_encoded(r, layout.frag_col() as usize, &Encoded::from_ascii(f));
+            }
+            arr.broadcast_encoded(layout.pat_col() as usize, &Encoded { codes: pattern.clone() });
+
+            let mut cg = CodeGen::new(layout, mode);
+            for loc in 0..layout.n_alignments() as u32 {
+                let prog = cg.alignment_program(loc, true);
+                let out = arr.execute(&prog).unwrap();
+                let scores = &out.scores[0];
+                for (r, f) in frag_strs.iter().enumerate() {
+                    let expect = score_profile(&encode(f), &pattern)[loc as usize];
+                    assert_eq!(
+                        scores[r] as usize, expect,
+                        "{mode:?} row {r} loc {loc}: fragment {}",
+                        std::str::from_utf8(f).unwrap()
+                    );
+                }
+            }
+        }
+    }
+}

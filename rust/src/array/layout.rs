@@ -1,0 +1,138 @@
+//! Per-row data layout (paper §3.1, Fig. 3).
+//!
+//! Each row has four compartments: a fragment of the folded reference,
+//! one pattern, the similarity score, and scratch for intermediate
+//! results. The same layout applies to every row so that row-parallel
+//! computation addresses the same columns everywhere.
+
+
+/// Column map of one CRAM-PM row. All strings are stored 2 bits per
+/// character (§3.1 "we simply use 2-bits to encode the four characters"),
+/// LSB first per character.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowLayout {
+    /// Reference-fragment length, characters.
+    pub frag_chars: usize,
+    /// Pattern length, characters.
+    pub pat_chars: usize,
+    /// Scratch compartment width, bits (sized from codegen's high-water
+    /// mark; see [`crate::isa::CodeGen`]).
+    pub scratch_cols: usize,
+}
+
+impl RowLayout {
+    /// Layout with an explicit scratch budget.
+    pub fn new(frag_chars: usize, pat_chars: usize, scratch_cols: usize) -> Self {
+        assert!(pat_chars >= 1, "pattern must be non-empty");
+        assert!(
+            frag_chars >= pat_chars,
+            "fragment ({frag_chars}) must be at least as long as the pattern ({pat_chars}) (§3.1)"
+        );
+        RowLayout { frag_chars, pat_chars, scratch_cols }
+    }
+
+    /// First column of the fragment compartment.
+    pub fn frag_col(&self) -> u32 {
+        0
+    }
+
+    /// First column of the pattern compartment.
+    pub fn pat_col(&self) -> u32 {
+        (2 * self.frag_chars) as u32
+    }
+
+    /// Width of the similarity score, bits:
+    /// `N = ⌊log₂ len(pattern)⌋ + 1` (§3.2).
+    pub fn score_bits(&self) -> usize {
+        (usize::BITS - self.pat_chars.leading_zeros()) as usize
+    }
+
+    /// First column of the score compartment.
+    pub fn score_col(&self) -> u32 {
+        self.pat_col() + (2 * self.pat_chars) as u32
+    }
+
+    /// First column of the scratch compartment. The per-character match
+    /// string (§3.2 Phase 1 output) lives at the start of scratch.
+    pub fn scratch_col(&self) -> u32 {
+        self.score_col() + self.score_bits() as u32
+    }
+
+    /// First scratch column past the match string.
+    pub fn free_scratch_col(&self) -> u32 {
+        self.scratch_col() + self.pat_chars as u32
+    }
+
+    /// Total row width, columns.
+    pub fn total_cols(&self) -> usize {
+        self.scratch_col() as usize + self.scratch_cols
+    }
+
+    /// Number of pattern alignments a row supports: Algorithm 1 iterates
+    /// `loc` until the pattern's tail meets the fragment's tail.
+    pub fn n_alignments(&self) -> usize {
+        self.frag_chars - self.pat_chars + 1
+    }
+
+    /// Column of the fragment character at index `i`, low bit.
+    pub fn frag_char_col(&self, i: usize) -> u32 {
+        assert!(i < self.frag_chars, "fragment index {i} out of range");
+        self.frag_col() + (2 * i) as u32
+    }
+
+    /// Column of the pattern character at index `i`, low bit.
+    pub fn pat_char_col(&self, i: usize) -> u32 {
+        assert!(i < self.pat_chars, "pattern index {i} out of range");
+        self.pat_col() + (2 * i) as u32
+    }
+
+    /// Column of match-string bit `i`.
+    pub fn match_bit_col(&self, i: usize) -> u32 {
+        assert!(i < self.pat_chars, "match bit {i} out of range");
+        self.scratch_col() + i as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compartments_do_not_overlap() {
+        let l = RowLayout::new(100, 32, 64);
+        assert!(l.frag_col() < l.pat_col());
+        assert!(l.pat_col() < l.score_col());
+        assert!(l.score_col() < l.scratch_col());
+        assert_eq!(l.total_cols(), l.scratch_col() as usize + 64);
+    }
+
+    #[test]
+    fn score_bits_matches_paper_formula() {
+        // N = ⌊log₂ len(pattern)⌋ + 1; for the typical 100-char pattern
+        // the paper derives N = 7.
+        assert_eq!(RowLayout::new(1000, 100, 0).score_bits(), 7);
+        assert_eq!(RowLayout::new(10, 1, 0).score_bits(), 1);
+        assert_eq!(RowLayout::new(10, 8, 0).score_bits(), 4);
+    }
+
+    #[test]
+    fn alignments_count() {
+        let l = RowLayout::new(100, 100, 0);
+        assert_eq!(l.n_alignments(), 1);
+        assert_eq!(RowLayout::new(1000, 100, 0).n_alignments(), 901);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least as long")]
+    fn fragment_shorter_than_pattern_rejected() {
+        RowLayout::new(10, 11, 0);
+    }
+
+    #[test]
+    fn char_columns_are_2bit_strided() {
+        let l = RowLayout::new(50, 10, 0);
+        assert_eq!(l.frag_char_col(0), 0);
+        assert_eq!(l.frag_char_col(3), 6);
+        assert_eq!(l.pat_char_col(1), l.pat_col() + 2);
+    }
+}

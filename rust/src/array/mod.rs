@@ -1,0 +1,18 @@
+//! The CRAM-PM array: bit-level functional simulation with the paper's
+//! execution semantics (§2.3–§2.4, §3.1).
+//!
+//! * One logic gate active per row at a time; the same gate fires in
+//!   **all rows on the same columns** simultaneously (row-level SIMD).
+//! * Memory access and computation are mutually exclusive.
+//! * Computation is non-destructive: gate inputs keep their values.
+//!
+//! The simulator stores the array column-major with rows bit-packed
+//! into `u64` words, so a row-parallel gate step is a handful of word
+//! operations per 64 rows — the software analogue of the array's
+//! parallelism, and the hot path of the functional engine.
+
+pub mod bitsim;
+pub mod layout;
+
+pub use bitsim::{CramArray, ExecOutput};
+pub use layout::RowLayout;

@@ -1,0 +1,81 @@
+//! Ambit baseline: bulk bitwise operations in commodity DRAM
+//! (Seshadri et al., MICRO'17; paper §5.4 / Fig. 11).
+//!
+//! Ambit computes with triple-row activation, but only on a designated
+//! set of compute rows — every operation is a sequence of AAP
+//! (ACTIVATE-ACTIVATE-PRECHARGE) / AP primitives that *copy* operand
+//! rows into the compute group, trigger the charge-sharing operation,
+//! and copy the result back. The per-op primitive counts below follow
+//! the Ambit paper's command sequences; each primitive is bounded by
+//! DRAM timing (≈ tRAS + tRP).
+
+use crate::baselines::cram_gates::BulkOp;
+
+/// DRAM-timing-driven Ambit throughput model.
+#[derive(Debug, Clone, Copy)]
+pub struct AmbitModel {
+    /// Bits per DRAM row (8 KB row).
+    pub row_bits: usize,
+    /// Banks operated in parallel within the evaluated module.
+    pub banks: usize,
+    /// Latency of one AAP primitive, s (tRAS + tRP class).
+    pub t_aap: f64,
+}
+
+impl Default for AmbitModel {
+    fn default() -> Self {
+        AmbitModel { row_bits: 8 * 1024 * 8, banks: 1, t_aap: 80e-9 }
+    }
+}
+
+impl AmbitModel {
+    /// AAP-class primitives per bulk operation (Ambit Table: row copies
+    /// into the B-group, the triple-activation, result copy-back).
+    pub fn primitives(&self, op: BulkOp) -> usize {
+        match op {
+            // NOT: AAP (copy source to DCC row) + AP (activate negated).
+            BulkOp::Not => 2,
+            // AND/OR: 3 copies into B-group + triple activate/copy out.
+            BulkOp::And | BulkOp::Or => 4,
+            // NAND/NOR: AND/OR plus the NOT.
+            BulkOp::Nand | BulkOp::Nor => 5,
+            // XOR/XNOR: Ambit's published sequence.
+            BulkOp::Xor | BulkOp::Xnor => 7,
+        }
+    }
+
+    /// Bulk bitwise throughput, bit-operations per second, for vectors
+    /// large enough to fill rows (the 32 MB vectors of §5.4).
+    pub fn throughput(&self, op: BulkOp) -> f64 {
+        let bits_per_step = (self.row_bits * self.banks) as f64;
+        bits_per_step / (self.primitives(op) as f64 * self.t_aap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn not_is_fastest_ambit_op() {
+        // §5.4: "Ambit achieves the highest throughput for NOT".
+        let m = AmbitModel::default();
+        for op in [BulkOp::And, BulkOp::Or, BulkOp::Nand, BulkOp::Nor, BulkOp::Xor] {
+            assert!(m.throughput(BulkOp::Not) > m.throughput(op));
+        }
+    }
+
+    #[test]
+    fn xor_is_slowest() {
+        let m = AmbitModel::default();
+        assert!(m.throughput(BulkOp::Xor) < m.throughput(BulkOp::And));
+    }
+
+    #[test]
+    fn throughput_order_of_magnitude() {
+        // Hundreds of GOps/s for NOT on one module — the published
+        // Ambit scale.
+        let t = AmbitModel::default().throughput(BulkOp::Not);
+        assert!((1e11..1e13).contains(&t), "Ambit NOT {t} ops/s off scale");
+    }
+}

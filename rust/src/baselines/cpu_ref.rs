@@ -1,0 +1,118 @@
+//! Software reference matcher — the functional oracle.
+//!
+//! Computes exactly what Algorithm 1 computes (similarity scores over
+//! every alignment of every fragment) with plain CPU code. The
+//! bit-level array simulator, the AOT'd XLA model and the step engine
+//! are all validated against this.
+
+use crate::dna::score_profile;
+
+/// Best alignment of a pattern: where and how good.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BestAlignment {
+    /// Row (fragment) index.
+    pub row: usize,
+    /// Alignment offset within the fragment (`loc`).
+    pub loc: usize,
+    /// Similarity score (character matches).
+    pub score: usize,
+}
+
+/// Reference matcher over a set of per-row fragments (2-bit codes).
+#[derive(Debug, Clone)]
+pub struct CpuMatcher {
+    fragments: Vec<Vec<u8>>,
+}
+
+impl CpuMatcher {
+    /// New matcher over fragments.
+    pub fn new(fragments: Vec<Vec<u8>>) -> Self {
+        CpuMatcher { fragments }
+    }
+
+    /// Number of fragments (rows).
+    pub fn rows(&self) -> usize {
+        self.fragments.len()
+    }
+
+    /// Score profile of `pattern` against one fragment.
+    pub fn profile(&self, row: usize, pattern: &[u8]) -> Vec<usize> {
+        score_profile(&self.fragments[row], pattern)
+    }
+
+    /// Best alignment across all fragments (ties broken by lowest row,
+    /// then lowest loc — the deterministic order the coordinator also
+    /// uses).
+    pub fn best(&self, pattern: &[u8]) -> Option<BestAlignment> {
+        let mut best: Option<BestAlignment> = None;
+        for (row, frag) in self.fragments.iter().enumerate() {
+            for (loc, &score) in score_profile(frag, pattern).iter().enumerate() {
+                let better = match best {
+                    None => true,
+                    Some(b) => score > b.score,
+                };
+                if better {
+                    best = Some(BestAlignment { row, loc, score });
+                }
+            }
+        }
+        best
+    }
+
+    /// Best alignment restricted to candidate rows (what Oracular
+    /// actually evaluates).
+    pub fn best_among(&self, pattern: &[u8], rows: &[u32]) -> Option<BestAlignment> {
+        let mut best: Option<BestAlignment> = None;
+        for &row in rows {
+            let row = row as usize;
+            for (loc, &score) in score_profile(&self.fragments[row], pattern).iter().enumerate() {
+                let better = match best {
+                    None => true,
+                    Some(b) => score > b.score,
+                };
+                if better {
+                    best = Some(BestAlignment { row, loc, score });
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dna::encode;
+
+    #[test]
+    fn finds_planted_exact_match() {
+        let fragments = vec![
+            encode(b"AAAAAAAAAAAAAAAA"),
+            encode(b"CCCCGATTACACCCCC"),
+            encode(b"GGGGGGGGGGGGGGGG"),
+        ];
+        let m = CpuMatcher::new(fragments);
+        let best = m.best(&encode(b"GATTACA")).unwrap();
+        assert_eq!(best.row, 1);
+        assert_eq!(best.loc, 4);
+        assert_eq!(best.score, 7);
+    }
+
+    #[test]
+    fn ties_break_to_first_row_and_loc() {
+        let m = CpuMatcher::new(vec![encode(b"ACACAC"), encode(b"ACACAC")]);
+        let best = m.best(&encode(b"AC")).unwrap();
+        assert_eq!((best.row, best.loc, best.score), (0, 0, 2));
+    }
+
+    #[test]
+    fn best_among_respects_candidate_set() {
+        let m = CpuMatcher::new(vec![encode(b"GATTACAT"), encode(b"TTTTTTTT")]);
+        let p = encode(b"GATT");
+        let restricted = m.best_among(&p, &[1]).unwrap();
+        assert_eq!(restricted.row, 1);
+        assert!(restricted.score < 4);
+        let free = m.best(&p).unwrap();
+        assert_eq!((free.row, free.score), (0, 4));
+    }
+}

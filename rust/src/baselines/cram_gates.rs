@@ -1,0 +1,148 @@
+//! CRAM-PM bulk bitwise throughput (the left side of Fig. 11).
+//!
+//! For gate-level comparison the paper runs basic Boolean operations
+//! over 32 MB vectors, mapped so that every row of every array holds a
+//! segment of the operand vectors side by side. One bit-operation per
+//! row per step, all rows in parallel: throughput is
+//! `total_rows / step_time`, where a step is a gang preset plus the
+//! gate firing (single-step ops), or three of each (XOR, per Table 2).
+
+use crate::tech::{MtjParams, PeripheryModel, Technology};
+
+/// Bulk bitwise operations compared in Fig. 11.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BulkOp {
+    /// Bitwise NOT.
+    Not,
+    /// Bitwise AND.
+    And,
+    /// Bitwise OR.
+    Or,
+    /// Bitwise NAND.
+    Nand,
+    /// Bitwise NOR.
+    Nor,
+    /// Bitwise XOR.
+    Xor,
+    /// Bitwise XNOR.
+    Xnor,
+}
+
+impl BulkOp {
+    /// Fig. 11's operations.
+    pub const FIG11: [BulkOp; 4] = [BulkOp::Not, BulkOp::Or, BulkOp::Nand, BulkOp::Xor];
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BulkOp::Not => "NOT",
+            BulkOp::And => "AND",
+            BulkOp::Or => "OR",
+            BulkOp::Nand => "NAND",
+            BulkOp::Nor => "NOR",
+            BulkOp::Xor => "XOR",
+            BulkOp::Xnor => "XNOR",
+        }
+    }
+}
+
+/// CRAM-PM bulk-bitwise throughput model.
+#[derive(Debug, Clone, Copy)]
+pub struct CramGateModel {
+    /// Device parameters.
+    pub mtj: MtjParams,
+    /// Periphery model.
+    pub periphery: PeripheryModel,
+    /// Per-micro-instruction SMC issue latency, s.
+    pub issue_latency: f64,
+    /// Operand-segment bits stored per row (layout: A | B | out |
+    /// scratch must fit the §3.4 row bound).
+    pub segment_bits: usize,
+}
+
+impl CramGateModel {
+    /// Model for a technology corner with the evaluation defaults.
+    pub fn new(tech: Technology) -> Self {
+        CramGateModel {
+            mtj: MtjParams::for_technology(tech),
+            periphery: PeripheryModel::at_22nm(),
+            issue_latency: 0.10e-9,
+            segment_bits: 512,
+        }
+    }
+
+    /// `(gang presets, gate firings)` per output bit.
+    pub fn steps(&self, op: BulkOp) -> (usize, usize) {
+        match op {
+            BulkOp::Not | BulkOp::And | BulkOp::Or | BulkOp::Nand | BulkOp::Nor => (1, 1),
+            // Table 2: NOR + COPY + TH, each with its own pre-set cell.
+            BulkOp::Xor => (3, 3),
+            // XOR followed by INV.
+            BulkOp::Xnor => (4, 4),
+        }
+    }
+
+    /// Wall time to produce one output bit in one row, s.
+    pub fn step_time(&self, op: BulkOp) -> f64 {
+        let (presets, gates) = self.steps(op);
+        let preset_t =
+            self.mtj.write_latency + self.periphery.compute_step_latency() + self.issue_latency;
+        let gate_t =
+            self.mtj.switching_latency + self.periphery.compute_step_latency() + self.issue_latency;
+        presets as f64 * preset_t + gates as f64 * gate_t
+    }
+
+    /// Rows needed to hold a vector of `vector_bits` bits.
+    pub fn rows_for(&self, vector_bits: usize) -> usize {
+        vector_bits.div_ceil(self.segment_bits)
+    }
+
+    /// Bulk throughput over a `vector_bits`-bit vector, bit-ops/s:
+    /// all rows compute in parallel; each row needs `segment_bits`
+    /// sequential steps, so throughput is rows per step-time.
+    pub fn throughput(&self, op: BulkOp, vector_bits: usize) -> f64 {
+        self.rows_for(vector_bits) as f64 / self.step_time(op)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const VEC_32MB: usize = 32 * 1024 * 1024 * 8;
+
+    #[test]
+    fn basic_ops_have_comparable_throughput() {
+        // §5.4: "The throughput of basic logic operations (NOT, OR,
+        // NAND) is very comparable to each other in CRAM-PM, unlike
+        // Ambit."
+        let m = CramGateModel::new(Technology::NearTerm);
+        let t_not = m.throughput(BulkOp::Not, VEC_32MB);
+        for op in [BulkOp::Or, BulkOp::Nand, BulkOp::Nor, BulkOp::And] {
+            let r = m.throughput(op, VEC_32MB) / t_not;
+            assert!((0.99..1.01).contains(&r), "{} deviates: {r}", op.name());
+        }
+    }
+
+    #[test]
+    fn xor_is_three_times_slower() {
+        let m = CramGateModel::new(Technology::NearTerm);
+        let r = m.throughput(BulkOp::Not, VEC_32MB) / m.throughput(BulkOp::Xor, VEC_32MB);
+        assert!((2.5..3.5).contains(&r), "XOR/NOT step ratio {r}");
+    }
+
+    #[test]
+    fn long_term_roughly_doubles_throughput() {
+        let near = CramGateModel::new(Technology::NearTerm);
+        let long = CramGateModel::new(Technology::LongTerm);
+        let r = long.throughput(BulkOp::Not, VEC_32MB) / near.throughput(BulkOp::Not, VEC_32MB);
+        assert!((1.8..3.0).contains(&r), "long/near {r}");
+    }
+
+    #[test]
+    fn tens_of_teraops_scale() {
+        // The scale at which the 178× gap to Ambit's ~0.4 TOps arises.
+        let t = CramGateModel::new(Technology::NearTerm).throughput(BulkOp::Not, VEC_32MB);
+        assert!((1e13..1e15).contains(&t), "CRAM NOT {t} off scale");
+    }
+}

@@ -1,0 +1,36 @@
+//! Comparison baselines (paper §4 "Baselines for comparison", §5.3,
+//! §5.4).
+//!
+//! * [`cpu_ref`] — a real software string matcher. Not a paper baseline
+//!   per se: it is the *functional oracle* every engine is validated
+//!   against, and the thing a user without CRAM-PM hardware would run.
+//! * [`gpu`] — the GPU BWA baseline (BarraCUDA-style), modelled as the
+//!   pattern-matching kernel share of a calibrated GPU throughput
+//!   (§3: that kernel is 46–88 % of runtime depending on allowed
+//!   mismatches).
+//! * [`nmp`] — the near-memory-processing baseline: an HMC logic layer
+//!   of ARM Cortex-A5-class in-order cores plus serial links, with the
+//!   paper's *NMP-Hyp* variant (128 cores, zero memory overhead).
+//! * [`ambit`] / [`pinatubo`] — DRAM and NVM bulk-bitwise substrates
+//!   for the gate-level comparison of Fig. 11.
+//! * [`cram_gates`] — CRAM-PM's own bulk-bitwise throughput model, the
+//!   left-hand side of every Fig. 11 ratio.
+//!
+//! The models are analytical (the original testbeds are hardware we do
+//! not have); every constant is a documented calibration, and the
+//! experiments assert the paper's *shapes* (who wins, by what order),
+//! not absolute numbers. See DESIGN.md §2.
+
+pub mod ambit;
+pub mod cpu_ref;
+pub mod cram_gates;
+pub mod gpu;
+pub mod nmp;
+pub mod pinatubo;
+
+pub use ambit::AmbitModel;
+pub use cpu_ref::CpuMatcher;
+pub use cram_gates::{BulkOp, CramGateModel};
+pub use gpu::GpuBaseline;
+pub use nmp::{NmpBaseline, WorkProfile};
+pub use pinatubo::PinatuboModel;

@@ -1,0 +1,55 @@
+//! Pinatubo baseline: bulk bitwise operations in NVM via multi-row
+//! sensing (Li et al., DAC'16; paper §5.4).
+//!
+//! Pinatubo activates multiple word lines and senses the combined
+//! resistance with a reference-adjustable sense amplifier — the paper
+//! quotes its published **OR** throughput on a 2²⁰-bit vector at the
+//! highest-parallelism (128-row) operating point.
+
+/// Pinatubo throughput model.
+#[derive(Debug, Clone, Copy)]
+pub struct PinatuboModel {
+    /// Bits per activated row group (columns sensed in parallel).
+    pub row_bits: usize,
+    /// Rows combined per multi-row activation (best published: 128).
+    pub rows_per_op: usize,
+    /// Latency of one multi-row sense + write-back, s (NVM sensing is
+    /// slower than DRAM activation).
+    pub t_op: f64,
+}
+
+impl Default for PinatuboModel {
+    fn default() -> Self {
+        PinatuboModel { row_bits: 1024, rows_per_op: 128, t_op: 10e-9 }
+    }
+}
+
+impl PinatuboModel {
+    /// OR throughput, bit-operations per second: each sense consumes
+    /// `rows_per_op` operand bits per column and produces one result
+    /// bit; ops counted as operand bits processed (the convention that
+    /// matches the published GOps numbers).
+    pub fn or_throughput(&self) -> f64 {
+        (self.row_bits * self.rows_per_op) as f64 / self.t_op
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn or_throughput_scale() {
+        // ~10 TOps/s at the 128-row operating point — the right scale
+        // for CRAM-PM to beat by ≈6× (near-term, §5.4).
+        let t = PinatuboModel::default().or_throughput();
+        assert!((1e12..1e14).contains(&t), "Pinatubo OR {t} off scale");
+    }
+
+    #[test]
+    fn more_rows_more_throughput() {
+        let base = PinatuboModel::default();
+        let fewer = PinatuboModel { rows_per_op: 16, ..base };
+        assert!(base.or_throughput() > fewer.or_throughput());
+    }
+}

@@ -1,0 +1,136 @@
+//! Bit count (BC, MiBench): count the ones in a set of fixed-length
+//! vectors (Table 4: 10⁶ 32-bit vectors).
+//!
+//! Mapping: one vector per row, vector bits in the leading columns; the
+//! count is the `add_pm` reduction tree — the same Fig. 4b machinery
+//! DNA uses for its similarity score, which is why the paper calls BC
+//! a "common computational kernel for pattern matching".
+
+use crate::baselines::WorkProfile;
+use crate::bench_apps::common::{data_parallel_report, AppReport, Benchmark, PassSpec};
+use crate::isa::{MacroInstr, PresetMode, Program};
+use crate::tech::Technology;
+
+/// Bit-count benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BitCount {
+    /// Number of vectors.
+    pub vectors: usize,
+    /// Bits per vector.
+    pub bits: usize,
+    /// Rows per array (Table 4: 512×512).
+    pub rows: usize,
+}
+
+impl BitCount {
+    /// Paper scale.
+    pub fn paper() -> Self {
+        BitCount { vectors: 1_000_000, bits: 32, rows: 512 }
+    }
+
+    /// Test scale.
+    pub fn small() -> Self {
+        BitCount { vectors: 1024, bits: 32, rows: 64 }
+    }
+
+    /// The per-pass spec: popcount of the vector bits into the score
+    /// compartment, then read out.
+    pub fn pass_spec(&self, mode: PresetMode) -> PassSpec {
+        // The vector occupies the first `bits` columns of the fragment
+        // compartment. Sizing the layout with `pat_chars = bits` gives
+        // the score compartment ⌊log₂ bits⌋+1 bits — enough to hold the
+        // count even when every bit is set.
+        let chars = self.bits;
+        let bits = self.bits as u32;
+        PassSpec::build(chars, chars, mode, 1.0, move |cg| {
+            let l = *cg.layout();
+            let mut prog = Program::new();
+            cg.reset_scratch();
+            cg.lower(&mut prog, &MacroInstr::AddPm { start: 0, end: bits, result: l.score_col() });
+            cg.lower(
+                &mut prog,
+                &MacroInstr::ReadScore { col: l.score_col(), len: l.score_bits() as u32 },
+            );
+            prog
+        })
+    }
+}
+
+impl Benchmark for BitCount {
+    fn name(&self) -> &'static str {
+        "BC"
+    }
+
+    fn items(&self) -> usize {
+        self.vectors
+    }
+
+    fn cram(&self, tech: Technology, mode: PresetMode) -> AppReport {
+        let spec = self.pass_spec(mode);
+        data_parallel_report(self.name(), self.vectors, self.rows, &spec, tech)
+    }
+
+    /// A scalar core popcounts a 32-bit word in a handful of
+    /// instructions (hardware popcount / nibble table) and streams
+    /// 4 bytes per item: the lowest compute-to-memory ratio in the
+    /// suite — exactly why §5.3 finds BC benefits least once memory
+    /// overhead is idealised away.
+    fn nmp_profile(&self) -> WorkProfile {
+        WorkProfile { instrs_per_item: 12.0, bytes_per_item: self.bits as f64 / 8.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::CramArray;
+    use crate::util::Rng;
+
+    /// Functional proof of the mapping: the in-array reduction tree
+    /// popcounts every row's vector correctly.
+    #[test]
+    fn in_array_popcount_matches_software() {
+        let bc = BitCount { vectors: 96, bits: 32, rows: 96 };
+        let spec = bc.pass_spec(PresetMode::Gang);
+        let mut arr = CramArray::new(bc.rows, spec.layout.total_cols());
+        let mut rng = Rng::new(23);
+        let mut expect = Vec::new();
+        for r in 0..bc.rows {
+            let v = rng.next_u64() & 0xFFFF_FFFF;
+            expect.push((v as u32).count_ones() as u64);
+            for b in 0..32 {
+                arr.set(r, b, v >> b & 1 == 1);
+            }
+        }
+        let out = arr.execute(&spec.program).unwrap();
+        assert_eq!(out.scores[0], expect);
+    }
+
+    #[test]
+    fn both_preset_modes_agree_functionally() {
+        for mode in [PresetMode::Standard, PresetMode::Gang] {
+            let bc = BitCount { vectors: 8, bits: 32, rows: 8 };
+            let spec = bc.pass_spec(mode);
+            let mut arr = CramArray::new(8, spec.layout.total_cols());
+            for b in 0..32 {
+                arr.set(3, b, b % 3 == 0); // 11 ones
+            }
+            let out = arr.execute(&spec.program).unwrap();
+            assert_eq!(out.scores[0][3], 11, "{mode:?}");
+            assert_eq!(out.scores[0][0], 0);
+        }
+    }
+
+    #[test]
+    fn report_scales_with_problem_size() {
+        let small = BitCount { vectors: 1_000, bits: 32, rows: 512 };
+        let big = BitCount { vectors: 1_000_000, bits: 32, rows: 512 };
+        let rs = small.cram(Technology::NearTerm, PresetMode::Gang);
+        let rb = big.cram(Technology::NearTerm, PresetMode::Gang);
+        assert!(rb.arrays > rs.arrays);
+        assert!(rb.match_rate > rs.match_rate);
+        // Efficiency is per-item work — roughly size-independent.
+        let ratio = rb.efficiency / rs.efficiency;
+        assert!((0.5..2.0).contains(&ratio), "efficiency ratio {ratio}");
+    }
+}

@@ -1,0 +1,104 @@
+//! Shared machinery for mapping data-parallel benchmarks onto CRAM-PM.
+
+use crate::array::RowLayout;
+use crate::baselines::WorkProfile;
+use crate::isa::{CodeGen, PresetMode, Program, Stage};
+use crate::sim::Simulator;
+use crate::smc::ArrayGeometry;
+use crate::tech::Technology;
+
+/// One benchmark's row-parallel pass: the layout and the program every
+/// row executes in lock-step.
+pub struct PassSpec {
+    /// Row layout (sizes the array columns).
+    pub layout: RowLayout,
+    /// The per-pass program (built with a codegen over `layout`).
+    pub program: Program,
+    /// Items completed per row per pass (usually 1).
+    pub items_per_row: f64,
+}
+
+impl PassSpec {
+    /// Build a spec by probing scratch demand first, then lowering with
+    /// a right-sized layout (the same two-step sizing the DNA model
+    /// uses).
+    pub fn build(
+        frag_chars: usize,
+        pat_chars: usize,
+        mode: PresetMode,
+        items_per_row: f64,
+        build: impl Fn(&mut CodeGen) -> Program,
+    ) -> Self {
+        let probe = RowLayout::new(frag_chars, pat_chars, usize::MAX / 2);
+        let mut cg = CodeGen::new(probe, mode);
+        let _ = build(&mut cg);
+        let layout = RowLayout::new(frag_chars, pat_chars, cg.stats().scratch_high_water);
+        let mut cg = CodeGen::new(layout, mode);
+        let program = build(&mut cg);
+        PassSpec { layout, program, items_per_row }
+    }
+
+    /// Cost this pass on one array: `(masked latency s, energy J)`.
+    /// Read-out masking against presets is applied as in §3.2.
+    pub fn cost(&self, tech: Technology, rows: usize) -> (f64, f64) {
+        let sim = Simulator::new(tech, ArrayGeometry::new(rows, self.layout.total_cols()));
+        let b = sim.cost_program(&self.program);
+        let masked = b
+            .latency(Stage::ReadOut)
+            .min(b.latency(Stage::PresetMatch) + b.latency(Stage::PresetScore));
+        (b.total_latency() - masked, b.total_energy())
+    }
+}
+
+/// CRAM-PM-side report for one benchmark on one corner.
+#[derive(Debug, Clone)]
+pub struct AppReport {
+    /// Benchmark name.
+    pub name: String,
+    /// Items matched/processed per second across the whole substrate.
+    pub match_rate: f64,
+    /// Substrate power, W.
+    pub power: f64,
+    /// Items per second per mW.
+    pub efficiency: f64,
+    /// Arrays used.
+    pub arrays: usize,
+}
+
+/// A Table 4 benchmark: CRAM-PM mapping + NMP work profile.
+pub trait Benchmark {
+    /// Benchmark name (Table 4 row).
+    fn name(&self) -> &'static str;
+
+    /// Problem size, items.
+    fn items(&self) -> usize;
+
+    /// CRAM-PM match rate / power / efficiency.
+    fn cram(&self, tech: Technology, mode: PresetMode) -> AppReport;
+
+    /// Per-item instruction/byte trace for the NMP baseline.
+    fn nmp_profile(&self) -> WorkProfile;
+}
+
+/// Standard data-parallel report: the whole problem is resident, one
+/// item per row, all arrays in lock-step (gang execution, §3.3).
+pub fn data_parallel_report(
+    name: &str,
+    items: usize,
+    rows_per_array: usize,
+    spec: &PassSpec,
+    tech: Technology,
+) -> AppReport {
+    let arrays = items.div_ceil((rows_per_array as f64 * spec.items_per_row) as usize);
+    let (lat, energy_per_array) = spec.cost(tech, rows_per_array);
+    let items_per_pass = rows_per_array as f64 * spec.items_per_row * arrays as f64;
+    let match_rate = items_per_pass.min(items as f64) / lat;
+    let power = energy_per_array / lat * arrays as f64;
+    AppReport {
+        name: name.to_string(),
+        match_rate,
+        power,
+        efficiency: match_rate / (power * 1e3),
+        arrays,
+    }
+}

@@ -1,0 +1,50 @@
+//! Benchmark applications (paper §4, Table 4).
+//!
+//! | Benchmark | Problem size | Pattern | Array |
+//! |---|---|---|---|
+//! | DNA | 3 G chars | 100 chars | case-study substrate (§3.4) |
+//! | Bit count | 10⁶ 32-bit vectors | 1 bit | 512×512 |
+//! | String match | 10 396 542 words | 10-char string | 512×512 |
+//! | RC4 | 10 396 542 words | 248-bit key | 1024×1024 |
+//! | Word count | 1 471 016 words | 32 bits | 512×512 |
+//!
+//! Each application provides (a) a **workload generator** (synthetic —
+//! see DESIGN.md §2 for the data substitutions), (b) the **CRAM-PM
+//! mapping**: the row layout and per-pass micro-program, costed by the
+//! step engine, (c) the **NMP work profile** (instructions + bytes per
+//! item) that drives the §5.3 baseline, and (d) a small **functional
+//! run** on the bit-level array used by the test suite to prove the
+//! mapping computes the right thing.
+
+pub mod bitcount;
+pub mod common;
+pub mod dna;
+pub mod rc4;
+pub mod stringmatch;
+pub mod wordcount;
+
+pub use bitcount::BitCount;
+pub use common::{AppReport, Benchmark, PassSpec};
+pub use dna::DnaBench;
+pub use rc4::Rc4Bench;
+pub use stringmatch::StringMatchBench;
+pub use wordcount::WordCountBench;
+
+use crate::isa::PresetMode;
+use crate::tech::Technology;
+
+/// All five Table 4 benchmarks with their paper problem sizes.
+pub fn all_benchmarks() -> Vec<Box<dyn Benchmark>> {
+    vec![
+        Box::new(DnaBench::paper()),
+        Box::new(BitCount::paper()),
+        Box::new(StringMatchBench::paper()),
+        Box::new(Rc4Bench::paper()),
+        Box::new(WordCountBench::paper()),
+    ]
+}
+
+/// Convenience: reports for all benchmarks on one corner/mode.
+pub fn all_reports(tech: Technology, mode: PresetMode) -> Vec<AppReport> {
+    all_benchmarks().iter().map(|b| b.cram(tech, mode)).collect()
+}

@@ -1,0 +1,188 @@
+//! Rivest Cipher 4 (RC4): stream-cipher XOR of a keystream with text
+//! (Table 4: 10 396 542 words, 248-bit key segments, 1024×1024 arrays).
+//!
+//! Mapping (§4): text segments live in the fragment compartment, the
+//! keystream segment in the pattern compartment; ciphering is a 248-bit
+//! bitwise XOR per row — the operation the paper credits for RC4's
+//! standout compute-efficiency gains ("CRAM-PM's efficiency in handling
+//! its high number of XOR operations").
+//!
+//! The keystream itself (the PRGA) is generated once on the host — it
+//! is sequential by construction; what scales with data volume, and
+//! what CRAM-PM accelerates, is the XOR over the text.
+
+use crate::baselines::WorkProfile;
+use crate::bench_apps::common::{data_parallel_report, AppReport, Benchmark, PassSpec};
+use crate::isa::{MacroInstr, PresetMode, Program};
+use crate::tech::Technology;
+
+/// RC4 benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct Rc4Bench {
+    /// Corpus size, 32-bit words.
+    pub words: usize,
+    /// Key/segment width, bits (Table 4: 248).
+    pub segment_bits: usize,
+    /// Rows per array (Table 4: 1024×1024).
+    pub rows: usize,
+}
+
+impl Rc4Bench {
+    /// Paper scale.
+    pub fn paper() -> Self {
+        Rc4Bench { words: 10_396_542, segment_bits: 248, rows: 1024 }
+    }
+
+    /// Per-pass spec: XOR the key segment onto the text segment, then
+    /// stream the ciphertext out through the row buffer.
+    pub fn pass_spec(&self, mode: PresetMode) -> PassSpec {
+        let chars = self.segment_bits.div_ceil(2);
+        let bits = self.segment_bits as u32;
+        let words_per_row = self.segment_bits as f64 / 32.0;
+        PassSpec::build(chars, chars, mode, words_per_row, move |cg| {
+            let l = *cg.layout();
+            let mut prog = Program::new();
+            cg.reset_scratch();
+            // Ciphertext lands in reserved scratch (out-of-place XOR
+            // keeps the plaintext intact — computation is
+            // non-destructive).
+            let out = cg.reserve_scratch(bits);
+            cg.lower(
+                &mut prog,
+                &MacroInstr::XorPm { out, a: l.frag_col(), b: l.pat_col(), ncell: bits },
+            );
+            // Stream the ciphertext out, 62 bits per score-buffer slot.
+            let mut col = out;
+            let mut left = bits;
+            while left > 0 {
+                let chunk = left.min(62);
+                cg.lower(&mut prog, &MacroInstr::ReadScore { col, len: chunk });
+                col += chunk;
+                left -= chunk;
+            }
+            prog
+        })
+    }
+}
+
+impl Benchmark for Rc4Bench {
+    fn name(&self) -> &'static str {
+        "RC4"
+    }
+
+    fn items(&self) -> usize {
+        self.words
+    }
+
+    fn cram(&self, tech: Technology, mode: PresetMode) -> AppReport {
+        let spec = self.pass_spec(mode);
+        data_parallel_report(self.name(), self.words, self.rows, &spec, tech)
+    }
+
+    /// Scalar RC4: byte-serial PRGA state updates (S-box swaps with
+    /// data-dependent addressing and load-use stalls — poison for an
+    /// in-order A5) plus the XOR and keystream amortization of the
+    /// per-message key schedule: ≈240 instructions per 32-bit word,
+    /// 8 bytes moved.
+    fn nmp_profile(&self) -> WorkProfile {
+        WorkProfile { instrs_per_item: 240.0, bytes_per_item: 8.0 }
+    }
+}
+
+/// Software RC4 (KSA + PRGA) — the functional reference for tests and
+/// the host-side keystream generator for the CRAM mapping.
+#[derive(Debug, Clone)]
+pub struct Rc4 {
+    s: [u8; 256],
+    i: u8,
+    j: u8,
+}
+
+impl Rc4 {
+    /// Key-schedule a new cipher.
+    pub fn new(key: &[u8]) -> Self {
+        assert!(!key.is_empty() && key.len() <= 256);
+        let mut s = [0u8; 256];
+        for (i, v) in s.iter_mut().enumerate() {
+            *v = i as u8;
+        }
+        let mut j = 0u8;
+        for i in 0..256 {
+            j = j.wrapping_add(s[i]).wrapping_add(key[i % key.len()]);
+            s.swap(i, j as usize);
+        }
+        Rc4 { s, i: 0, j: 0 }
+    }
+
+    /// Next keystream byte.
+    pub fn next_byte(&mut self) -> u8 {
+        self.i = self.i.wrapping_add(1);
+        self.j = self.j.wrapping_add(self.s[self.i as usize]);
+        self.s.swap(self.i as usize, self.j as usize);
+        self.s[(self.s[self.i as usize].wrapping_add(self.s[self.j as usize])) as usize]
+    }
+
+    /// XOR a buffer with the keystream (encrypt/decrypt).
+    pub fn process(&mut self, data: &[u8]) -> Vec<u8> {
+        data.iter().map(|&b| b ^ self.next_byte()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::CramArray;
+    use crate::util::Rng;
+
+    #[test]
+    fn rc4_known_vector() {
+        // RFC 6229-style check: key "Key", plaintext "Plaintext".
+        let mut c = Rc4::new(b"Key");
+        let ct = c.process(b"Plaintext");
+        assert_eq!(ct, [0xBB, 0xF3, 0x16, 0xE8, 0xD9, 0x40, 0xAF, 0x0A, 0xD3]);
+    }
+
+    #[test]
+    fn rc4_roundtrip() {
+        let mut enc = Rc4::new(b"secret");
+        let ct = enc.process(b"attack at dawn");
+        let mut dec = Rc4::new(b"secret");
+        assert_eq!(dec.process(&ct), b"attack at dawn");
+    }
+
+    /// Functional proof of the CRAM mapping: the in-array XOR equals
+    /// the software cipher for every row.
+    #[test]
+    fn in_array_xor_matches_software_cipher() {
+        let bench = Rc4Bench { words: 8, segment_bits: 62, rows: 16 };
+        let spec = bench.pass_spec(PresetMode::Gang);
+        let mut arr = CramArray::new(bench.rows, spec.layout.total_cols());
+        let mut rng = Rng::new(77);
+        let mut keystream = Rc4::new(b"bench key");
+
+        let mut expect: Vec<u64> = Vec::new();
+        for r in 0..bench.rows {
+            let text = rng.next_u64() & ((1u64 << 62) - 1);
+            // 62-bit keystream slice per row from the real PRGA.
+            let mut key = 0u64;
+            for b in 0..8 {
+                key |= (keystream.next_byte() as u64) << (8 * b);
+            }
+            key &= (1u64 << 62) - 1;
+            for b in 0..62 {
+                arr.set(r, spec.layout.frag_col() as usize + b, text >> b & 1 == 1);
+                arr.set(r, spec.layout.pat_col() as usize + b, key >> b & 1 == 1);
+            }
+            expect.push(text ^ key);
+        }
+        let out = arr.execute(&spec.program).unwrap();
+        assert_eq!(out.scores[0], expect, "in-array XOR != software XOR");
+    }
+
+    #[test]
+    fn report_uses_1024_row_arrays() {
+        let r = Rc4Bench::paper().cram(Technology::NearTerm, PresetMode::Gang);
+        // 10.4 M 32-bit words at 7.75 words/row, 1024 rows/array.
+        assert!((1_000..2_000).contains(&r.arrays), "arrays = {}", r.arrays);
+    }
+}

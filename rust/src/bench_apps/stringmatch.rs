@@ -1,0 +1,173 @@
+//! String match (SM, Phoenix suite): find the most/least similar part
+//! of a pre-stored reference text for a search string (Table 4:
+//! 10 396 542 words, 10-char search string).
+//!
+//! Mapping (§4): space-separated string segments go to rows; the search
+//! string is the pattern; every row sweeps all alignments in lock-step,
+//! exactly the Algorithm 1 machinery with text instead of bases.
+//! Characters are folded into the 2-bit code space as the paper does
+//! for every benchmark ("we simply stick to a straight-forward 2-bit
+//! representation for each character").
+
+use crate::baselines::WorkProfile;
+use crate::bench_apps::common::{AppReport, Benchmark};
+use crate::isa::PresetMode;
+use crate::sim::{DnaPassModel, SystemConfig};
+use crate::tech::Technology;
+use crate::util::Rng;
+
+/// String-match benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct StringMatchBench {
+    /// Corpus size, words.
+    pub words: usize,
+    /// Search-string length, characters.
+    pub pat_chars: usize,
+    /// Segment (fragment) length per row, characters.
+    pub frag_chars: usize,
+    /// Mean word length incl. separator (sizes words per row).
+    pub mean_word_chars: f64,
+    /// Rows per array (Table 4: 512×512).
+    pub rows: usize,
+}
+
+impl StringMatchBench {
+    /// Paper scale.
+    pub fn paper() -> Self {
+        StringMatchBench {
+            words: 10_396_542,
+            pat_chars: 10,
+            frag_chars: 60,
+            mean_word_chars: 7.5,
+            rows: 512,
+        }
+    }
+
+    /// Words held per row.
+    pub fn words_per_row(&self) -> f64 {
+        self.frag_chars as f64 / self.mean_word_chars
+    }
+
+    /// System config for the step model.
+    fn config(&self, tech: Technology, mode: PresetMode) -> SystemConfig {
+        let mut cfg = SystemConfig::small(tech, mode);
+        cfg.rows = self.rows;
+        cfg.frag_chars = self.frag_chars;
+        cfg.pat_chars = self.pat_chars;
+        let rows_needed = (self.words as f64 / self.words_per_row()).ceil() as usize;
+        cfg.arrays = rows_needed.div_ceil(self.rows).max(1);
+        cfg
+    }
+}
+
+impl Benchmark for StringMatchBench {
+    fn name(&self) -> &'static str {
+        "SM"
+    }
+
+    fn items(&self) -> usize {
+        self.words
+    }
+
+    fn cram(&self, tech: Technology, mode: PresetMode) -> AppReport {
+        let cfg = self.config(tech, mode);
+        let pass = DnaPassModel::new(cfg).pass_cost();
+        // One pass sweeps the search string across every resident
+        // segment: all words are matched per pass.
+        let match_rate = self.words as f64 / pass.masked_latency;
+        let power = pass.power() * cfg.arrays as f64;
+        AppReport {
+            name: self.name().to_string(),
+            match_rate,
+            power,
+            efficiency: match_rate / (power * 1e3),
+            arrays: cfg.arrays,
+        }
+    }
+
+    /// Scalar string search: per word, sliding comparison against the
+    /// search string with early exit, plus tokenization — ≈60
+    /// instructions per needle character. Moderate compute-to-memory
+    /// ratio.
+    fn nmp_profile(&self) -> WorkProfile {
+        WorkProfile {
+            instrs_per_item: 60.0 * self.pat_chars as f64,
+            bytes_per_item: self.mean_word_chars,
+        }
+    }
+}
+
+/// Synthetic corpus generator: space-separated words over a 4-letter
+/// alphabet (the 2-bit fold), with a needle planted at known places.
+#[derive(Debug, Clone)]
+pub struct SmWorkload {
+    /// The corpus text (ACGT-folded bytes with `A`=separator analog).
+    pub segments: Vec<Vec<u8>>,
+    /// The search string.
+    pub needle: Vec<u8>,
+    /// Segment indices where the needle was planted.
+    pub planted: Vec<usize>,
+}
+
+impl SmWorkload {
+    /// Generate `n_segments` segments of `frag_chars`, planting
+    /// `needle` in a fraction `plant_rate` of them.
+    pub fn generate(
+        n_segments: usize,
+        frag_chars: usize,
+        pat_chars: usize,
+        plant_rate: f64,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let needle = rng.dna(pat_chars);
+        let mut segments = Vec::with_capacity(n_segments);
+        let mut planted = Vec::new();
+        for i in 0..n_segments {
+            let mut seg = rng.dna(frag_chars);
+            if rng.chance(plant_rate) {
+                let pos = rng.below(frag_chars - pat_chars + 1);
+                seg[pos..pos + pat_chars].copy_from_slice(&needle);
+                planted.push(i);
+            }
+            segments.push(seg);
+        }
+        SmWorkload { segments, needle, planted }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::CpuMatcher;
+    use crate::dna::encode;
+
+    #[test]
+    fn planted_needles_found_by_reference_matcher() {
+        let w = SmWorkload::generate(64, 60, 10, 0.25, 31);
+        assert!(!w.planted.is_empty());
+        let m = CpuMatcher::new(w.segments.iter().map(|s| encode(s)).collect());
+        for &seg in &w.planted {
+            let prof = m.profile(seg, &encode(&w.needle));
+            assert!(prof.iter().any(|&s| s == 10), "needle lost in segment {seg}");
+        }
+    }
+
+    #[test]
+    fn report_covers_whole_corpus() {
+        let b = StringMatchBench::paper();
+        let r = b.cram(Technology::NearTerm, PresetMode::Gang);
+        // 10.4 M words at ~8 words/row, 512 rows/array.
+        assert!((2_000..4_000).contains(&r.arrays), "arrays = {}", r.arrays);
+        assert!(r.match_rate > 0.0);
+    }
+
+    #[test]
+    fn longer_needle_means_lower_rate() {
+        let mut b = StringMatchBench::paper();
+        let r10 = b.cram(Technology::NearTerm, PresetMode::Gang);
+        b.pat_chars = 20;
+        let r20 = b.cram(Technology::NearTerm, PresetMode::Gang);
+        assert!(r20.match_rate < r10.match_rate);
+    }
+}

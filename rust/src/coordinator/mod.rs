@@ -1,0 +1,33 @@
+//! The L3 serving coordinator (paper §2.5 "System Integration").
+//!
+//! CRAM-PM attaches to a host as a compute engine: the host streams
+//! pattern batches at it, the coordinator schedules them onto arrays
+//! (Naive broadcast or Oracular candidate routing), fires gang
+//! execution, and collects the annotated scores (§3.2 "Data Output").
+//!
+//! This module is that host-side stack, as a three-stage pipeline of
+//! std threads connected by channels (the build image has no tokio;
+//! the structure is the same — see Cargo.toml):
+//!
+//! ```text
+//!   scheduler ──(WorkItem: pattern + gathered candidate fragments)──▶
+//!   executor  ──(XLA artifact / bit-level array pass)──▶
+//!   reducer   ──(best alignment per pattern + metrics)
+//! ```
+//!
+//! Backpressure is the bounded channel between stages: a slow executor
+//! stalls the scheduler instead of ballooning memory — the same role
+//! the paper's "all rows must have their patterns ready" lock-step
+//! plays at array level.
+//!
+//! Functional results come from the XLA artifact (or the bit-level
+//! array simulator, selectable per [`EngineKind`]); *hardware* time and
+//! energy for the run come from the step-accurate model, so a pipeline
+//! run reports both "what matched where" and "what it would cost on
+//! the spintronic substrate".
+
+pub mod engine;
+pub mod pipeline;
+
+pub use engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngine, WorkItem, WorkResult};
+pub use pipeline::{Coordinator, CoordinatorConfig, RunMetrics};

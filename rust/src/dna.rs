@@ -1,0 +1,157 @@
+//! Character encoding for pattern matching (paper §3.1).
+//!
+//! CRAM-PM stores strings with a fixed-width binary code — 2 bits per
+//! character for the DNA alphabet {A, C, G, T}, and byte-width codes for
+//! the text benchmarks. One character-level comparison therefore costs
+//! `bits_per_char` bit-level XORs plus one NOR-reduction (§3.2).
+
+
+/// The four DNA bases in code order: `A=00, C=01, G=10, T=11`.
+pub const BASES: [u8; 4] = [b'A', b'C', b'G', b'T'];
+
+/// Encode one base to its 2-bit code. Panics on non-ACGT input.
+pub fn encode_base(b: u8) -> u8 {
+    match b {
+        b'A' | b'a' => 0,
+        b'C' | b'c' => 1,
+        b'G' | b'g' => 2,
+        b'T' | b't' => 3,
+        _ => panic!("not a DNA base: {:?}", b as char),
+    }
+}
+
+/// Decode a 2-bit code back to its base character.
+pub fn decode_base(code: u8) -> u8 {
+    BASES[(code & 0b11) as usize]
+}
+
+/// Encode an ACGT string into 2-bit codes, one code per byte.
+pub fn encode(seq: &[u8]) -> Vec<u8> {
+    seq.iter().map(|&b| encode_base(b)).collect()
+}
+
+/// Decode 2-bit codes back into an ACGT string.
+pub fn decode(codes: &[u8]) -> Vec<u8> {
+    codes.iter().map(|&c| decode_base(c)).collect()
+}
+
+/// A string of 2-bit codes together with its bit-level view — the form
+/// in which data lives in a CRAM-PM row compartment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Encoded {
+    /// One 2-bit code per character.
+    pub codes: Vec<u8>,
+}
+
+impl Encoded {
+    /// Encode an ACGT byte string.
+    pub fn from_ascii(seq: &[u8]) -> Self {
+        Encoded { codes: encode(seq) }
+    }
+
+    /// Character length.
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    /// Whether the string is empty.
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Bit-level view, LSB-first per character: character `i` occupies
+    /// bits `2i` (low) and `2i + 1` (high) — the column order used by
+    /// the array layout (§3.1).
+    pub fn bits(&self) -> Vec<bool> {
+        let mut out = Vec::with_capacity(self.codes.len() * 2);
+        for &c in &self.codes {
+            out.push(c & 1 == 1);
+            out.push(c & 2 == 2);
+        }
+        out
+    }
+
+    /// Rebuild from the bit-level view produced by [`Encoded::bits`].
+    pub fn from_bits(bits: &[bool]) -> Self {
+        assert!(bits.len() % 2 == 0, "bit string must pair up into 2-bit codes");
+        let codes = bits
+            .chunks(2)
+            .map(|pair| pair[0] as u8 | (pair[1] as u8) << 1)
+            .collect();
+        Encoded { codes }
+    }
+}
+
+/// Similarity score between a pattern and a reference window at a given
+/// alignment: the number of matching characters (§3, "similarity
+/// score"). This is the scalar oracle every other engine (bit-level
+/// array, XLA artifact, step model) is validated against.
+pub fn similarity(reference: &[u8], pattern: &[u8], loc: usize) -> usize {
+    assert!(loc + pattern.len() <= reference.len(), "alignment out of range");
+    reference[loc..loc + pattern.len()]
+        .iter()
+        .zip(pattern)
+        .filter(|(a, b)| a == b)
+        .count()
+}
+
+/// All similarity scores of `pattern` against `fragment` — one per
+/// alignment `loc` per Algorithm 1.
+pub fn score_profile(fragment: &[u8], pattern: &[u8]) -> Vec<usize> {
+    if pattern.is_empty() || pattern.len() > fragment.len() {
+        return Vec::new();
+    }
+    (0..=fragment.len() - pattern.len())
+        .map(|loc| similarity(fragment, pattern, loc))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_encode_decode() {
+        let s = b"ACGTACGTTTGGCCAA";
+        assert_eq!(decode(&encode(s)), s.to_vec());
+    }
+
+    #[test]
+    fn bit_view_roundtrip() {
+        let e = Encoded::from_ascii(b"GATTACA");
+        assert_eq!(Encoded::from_bits(&e.bits()), e);
+        assert_eq!(e.bits().len(), 14);
+    }
+
+    #[test]
+    fn bit_order_lsb_first() {
+        // G = 10₂ → low bit 0, high bit 1.
+        let e = Encoded::from_ascii(b"G");
+        assert_eq!(e.bits(), vec![false, true]);
+    }
+
+    #[test]
+    fn similarity_counts_matches() {
+        let reference = encode(b"ACGTACGT");
+        let pattern = encode(b"ACGT");
+        assert_eq!(similarity(&reference, &pattern, 0), 4);
+        assert_eq!(similarity(&reference, &pattern, 4), 4);
+        assert_eq!(similarity(&reference, &pattern, 1), 0); // CGTA vs ACGT
+        assert_eq!(similarity(&reference, &pattern, 2), 0); // GTAC vs ACGT
+    }
+
+    #[test]
+    fn score_profile_length() {
+        let fragment = encode(b"ACGTACGTAC");
+        let pattern = encode(b"ACGT");
+        let profile = score_profile(&fragment, &pattern);
+        assert_eq!(profile.len(), 7);
+        assert_eq!(profile[0], 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a DNA base")]
+    fn rejects_non_dna() {
+        encode(b"ACGN");
+    }
+}

@@ -1,0 +1,114 @@
+//! Design ablations — the DESIGN.md §5 design-choice studies the paper
+//! discusses but does not quantify:
+//!
+//! * **read-out masking** (§3.2): scheduling the score-buffer drain
+//!   under the next iteration's presets vs. serializing it;
+//! * **preset scheduling** (§5.1): standard row-serial presets vs.
+//!   hoisted gang presets (the *Opt* designs) — isolated from pattern
+//!   scheduling;
+//! * **banking** (§4): 1–16 banks per array, latency masking vs.
+//!   control-replication energy.
+
+use crate::experiments::rule;
+use crate::isa::PresetMode;
+use crate::sim::banking::BankedConfig;
+use crate::sim::{DnaPassModel, SystemConfig};
+use crate::tech::Technology;
+
+/// One ablation row: a configuration and its pass cost.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    /// Configuration label.
+    pub label: String,
+    /// Pass latency, s.
+    pub latency: f64,
+    /// Pass energy, J.
+    pub energy: f64,
+}
+
+/// Read-out masking and preset-scheduling ablation grid.
+pub fn masking_and_presets(tech: Technology) -> Vec<AblationRow> {
+    let mut rows = Vec::new();
+    for mode in [PresetMode::Standard, PresetMode::Gang] {
+        for mask in [false, true] {
+            let mut cfg = SystemConfig::paper_dna(tech, mode);
+            cfg.mask_readout = mask;
+            let pc = DnaPassModel::new(cfg).pass_cost();
+            rows.push(AblationRow {
+                label: format!("{mode:?}{}", if mask { "+mask" } else { "" }),
+                latency: pc.masked_latency,
+                energy: pc.energy,
+            });
+        }
+    }
+    rows
+}
+
+/// Banking ablation at a fixed substrate capacity.
+pub fn banking(tech: Technology, mode: PresetMode) -> Vec<AblationRow> {
+    let mut cfg = SystemConfig::paper_dna(tech, mode);
+    cfg.rows = 10_240; // divisible by all bank counts below
+    [1usize, 2, 4, 8, 16]
+        .iter()
+        .map(|&banks| {
+            let c = BankedConfig::with_banks(cfg, banks).pass_cost();
+            AblationRow {
+                label: format!("{banks} bank{}", if banks > 1 { "s" } else { "" }),
+                latency: c.latency,
+                energy: c.energy,
+            }
+        })
+        .collect()
+}
+
+/// Print all ablations.
+pub fn run() {
+    rule("Ablation — read-out masking × preset scheduling (DNA pass, near-term)");
+    println!("  {:<18} {:>14} {:>14}", "design", "pass latency", "pass energy");
+    for r in masking_and_presets(Technology::NearTerm) {
+        println!("  {:<18} {:>12.3e} s {:>12.3e} J", r.label, r.latency, r.energy);
+    }
+
+    for mode in [PresetMode::Standard, PresetMode::Gang] {
+        rule(&format!("Ablation — banking under {mode:?} presets (near-term)"));
+        println!("  {:<18} {:>14} {:>14}", "banks", "pass latency", "pass energy");
+        for r in banking(Technology::NearTerm, mode) {
+            println!("  {:<18} {:>12.3e} s {:>12.3e} J", r.label, r.latency, r.energy);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_only_helps_latency_never_energy() {
+        for tech in Technology::ALL {
+            let rows = masking_and_presets(tech);
+            // rows: [Std, Std+mask, Gang, Gang+mask]
+            assert!(rows[1].latency <= rows[0].latency);
+            assert!(rows[3].latency <= rows[2].latency);
+            assert!((rows[1].energy - rows[0].energy).abs() / rows[0].energy < 1e-9);
+            assert!((rows[3].energy - rows[2].energy).abs() / rows[2].energy < 1e-9);
+        }
+    }
+
+    #[test]
+    fn banking_latency_monotone_energy_monotone_opposite() {
+        let rows = banking(Technology::NearTerm, PresetMode::Standard);
+        for pair in rows.windows(2) {
+            assert!(pair[1].latency < pair[0].latency, "more banks must be faster (standard)");
+            assert!(pair[1].energy > pair[0].energy, "more banks must cost replication energy");
+        }
+    }
+
+    #[test]
+    fn gang_presets_reduce_banking_benefit() {
+        let std_rows = banking(Technology::NearTerm, PresetMode::Standard);
+        let gang_rows = banking(Technology::NearTerm, PresetMode::Gang);
+        let std_gain = std_rows[0].latency / std_rows.last().unwrap().latency;
+        let gang_gain = gang_rows[0].latency / gang_rows.last().unwrap().latency;
+        assert!(std_gain > 2.0 * gang_gain, "std {std_gain} vs gang {gang_gain}");
+    }
+}

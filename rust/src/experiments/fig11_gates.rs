@@ -1,0 +1,122 @@
+//! Fig. 11 — gate-level throughput comparison against Ambit and
+//! Pinatubo on 32 MB vectors (§5.4).
+//!
+//! Paper anchors: CRAM-PM NOT beats Ambit NOT by ≈178× (near-term) /
+//! ≈370× (long-term); basic CRAM-PM ops are mutually comparable
+//! (unlike Ambit's); XOR shows the smallest complex-op advantage; and
+//! CRAM-PM OR beats Pinatubo OR by ≈6× / ≈12×.
+
+use crate::baselines::{AmbitModel, BulkOp, CramGateModel, PinatuboModel};
+use crate::experiments::rule;
+use crate::tech::Technology;
+
+/// 32 MB in bits — the Ambit comparison vector size.
+pub const VEC_32MB: usize = 32 * 1024 * 1024 * 8;
+
+/// One Fig. 11 bar: CRAM-PM vs Ambit for one op.
+#[derive(Debug, Clone)]
+pub struct GateRow {
+    /// Operation.
+    pub op: BulkOp,
+    /// Technology corner.
+    pub tech: Technology,
+    /// CRAM-PM throughput, ops/s.
+    pub cram: f64,
+    /// Ambit throughput, ops/s.
+    pub ambit: f64,
+    /// Ratio.
+    pub speedup: f64,
+}
+
+/// Regenerate the Fig. 11 Ambit comparison.
+pub fn fig11_ambit() -> Vec<GateRow> {
+    let ambit = AmbitModel::default();
+    let mut rows = Vec::new();
+    for tech in Technology::ALL {
+        let cram = CramGateModel::new(tech);
+        for op in BulkOp::FIG11 {
+            let c = cram.throughput(op, VEC_32MB);
+            let a = ambit.throughput(op);
+            rows.push(GateRow { op, tech, cram: c, ambit: a, speedup: c / a });
+        }
+    }
+    rows
+}
+
+/// The Pinatubo OR comparison: `(near ratio, long ratio)`.
+pub fn fig11_pinatubo() -> (f64, f64) {
+    let pin = PinatuboModel::default().or_throughput();
+    let near = CramGateModel::new(Technology::NearTerm).throughput(BulkOp::Or, VEC_32MB);
+    let long = CramGateModel::new(Technology::LongTerm).throughput(BulkOp::Or, VEC_32MB);
+    (near / pin, long / pin)
+}
+
+/// Print Fig. 11.
+pub fn run() {
+    rule("Fig. 11 — bulk bitwise throughput vs Ambit (32 MB vectors)");
+    println!(
+        "  {:<6} {:<10} {:>14} {:>14} {:>10}",
+        "op", "tech", "CRAM (GOps)", "Ambit (GOps)", "speedup"
+    );
+    for r in fig11_ambit() {
+        println!(
+            "  {:<6} {:<10} {:>14.1} {:>14.1} {:>9.1}×",
+            r.op.name(),
+            r.tech.to_string(),
+            r.cram / 1e9,
+            r.ambit / 1e9,
+            r.speedup
+        );
+    }
+    let (near, long) = fig11_pinatubo();
+    println!("\n  vs Pinatubo OR: {near:.1}× near-term, {long:.1}× long-term (paper: ≈6× / ≈12×)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(rows: &[GateRow], op: BulkOp, tech: Technology) -> &GateRow {
+        rows.iter().find(|r| r.op == op && r.tech == tech).unwrap()
+    }
+
+    #[test]
+    fn not_speedup_matches_paper_anchors() {
+        // Paper: ≈178× near-term, ≈370× long-term.
+        let rows = fig11_ambit();
+        let near = row(&rows, BulkOp::Not, Technology::NearTerm).speedup;
+        let long = row(&rows, BulkOp::Not, Technology::LongTerm).speedup;
+        assert!((100.0..320.0).contains(&near), "near NOT speedup {near}");
+        assert!((250.0..700.0).contains(&long), "long NOT speedup {long}");
+        assert!(long > near);
+    }
+
+    #[test]
+    fn cram_wins_every_op() {
+        for r in fig11_ambit() {
+            assert!(r.speedup > 1.0, "{} {}: {}", r.op.name(), r.tech, r.speedup);
+        }
+    }
+
+    #[test]
+    fn xor_advantage_smaller_than_or_and_nand() {
+        // §5.4: the complex XOR benefits least among multi-input ops
+        // (Ambit's XOR is 7 primitives, but CRAM-PM's costs 3 full
+        // steps vs 1).
+        let rows = fig11_ambit();
+        for tech in Technology::ALL {
+            let xor = row(&rows, BulkOp::Xor, tech).speedup;
+            let or = row(&rows, BulkOp::Or, tech).speedup;
+            let nand = row(&rows, BulkOp::Nand, tech).speedup;
+            assert!(xor < or && xor < nand, "{tech}: xor {xor} or {or} nand {nand}");
+        }
+    }
+
+    #[test]
+    fn pinatubo_ratios_match_paper() {
+        let (near, long) = fig11_pinatubo();
+        assert!((3.0..12.0).contains(&near), "near {near} (paper ≈6×)");
+        assert!((6.0..25.0).contains(&long), "long {long} (paper ≈12×)");
+        assert!(long > near);
+    }
+}

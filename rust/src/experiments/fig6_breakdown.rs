@@ -1,0 +1,80 @@
+//! Fig. 6 — energy and latency breakdown of the computation stages,
+//! plus the preset / bit-line-driver overhead shares quoted in §5.1
+//! (paper: presets are 43.86 % of energy and 97.25 % of latency;
+//! BL drivers <1 % / ≈2.7 %).
+
+use crate::experiments::rule;
+use crate::isa::PresetMode;
+use crate::sim::{DnaPassModel, StageBreakdown, SystemConfig};
+use crate::tech::Technology;
+
+/// The Fig. 6 data: per-alignment breakdown of the unoptimized design.
+pub struct Fig6 {
+    /// Per-alignment stage breakdown.
+    pub breakdown: StageBreakdown,
+}
+
+/// Regenerate Fig. 6 (unoptimized = Standard presets, as in §5.1).
+pub fn fig6(tech: Technology) -> Fig6 {
+    let cfg = SystemConfig::paper_dna(tech, PresetMode::Standard);
+    let pass = DnaPassModel::new(cfg).pass_cost();
+    Fig6 { breakdown: pass.per_alignment }
+}
+
+/// Print Fig. 6 at paper scale.
+pub fn run() {
+    rule("Fig. 6 — stage breakdown (DNA, near-term, unoptimized design)");
+    let f = fig6(Technology::NearTerm);
+    let b = &f.breakdown;
+    println!(
+        "  overheads: preset {:.2} % energy / {:.2} % latency   (paper: 43.86 % / 97.25 %)",
+        b.preset_energy_share() * 100.0,
+        b.preset_latency_share() * 100.0
+    );
+    println!(
+        "             BL driver {:.2} % energy / {:.2} % latency (paper: <1 % / 2.7 %)",
+        b.bitline_energy_share() * 100.0,
+        b.bitline_latency_share() * 100.0
+    );
+    println!("\n  computation-only shares (presets & BL excluded, as in the paper):");
+    println!("  {:<22} {:>12} {:>12}", "stage", "latency %", "energy %");
+    for (stage, lat, en) in b.fig6_view() {
+        println!("  ({}) {:<18} {:>11.1} {:>12.1}", stage.number(), format!("{stage:?}"), lat * 100.0, en * 100.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Stage;
+
+    #[test]
+    fn overhead_shares_match_paper_shape() {
+        let b = fig6(Technology::NearTerm).breakdown;
+        // Preset dominates latency overwhelmingly, and is a large
+        // minority of energy.
+        assert!(b.preset_latency_share() > 0.9);
+        assert!((0.25..0.65).contains(&b.preset_energy_share()));
+        // BL drivers are marginal on both axes.
+        assert!(b.bitline_energy_share() < 0.01);
+        assert!(b.bitline_latency_share() < 0.03);
+    }
+
+    #[test]
+    fn computation_shares_match_fig6_shape() {
+        let b = fig6(Technology::NearTerm).breakdown;
+        let view = b.fig6_view();
+        let get = |s: Stage| view.iter().find(|(st, _, _)| *st == s).unwrap();
+        // Fig. 6a: match + additions dominate energy, additions ≈ 2×.
+        let (_, _, match_en) = get(Stage::Match);
+        let (_, _, score_en) = get(Stage::ComputeScore);
+        assert!(match_en + score_en > 0.6);
+        assert!(score_en > match_en);
+        // Fig. 6b: read-outs + additions dominate latency.
+        let (_, ro_lat, _) = get(Stage::ReadOut);
+        let (_, score_lat, _) = get(Stage::ComputeScore);
+        assert!(ro_lat + score_lat > 0.5);
+        // §5.1: stage-1 writes are <1 % everywhere (not in the
+        // per-alignment view; checked in sim::engine tests).
+    }
+}

@@ -1,0 +1,49 @@
+//! Fig. 8 — sensitivity to MTJ technology: OracularOpt on the
+//! near-term vs projected long-term device (Table 3).
+//!
+//! Paper shape: the long-term projection boosts both match rate and
+//! compute efficiency by ≈2.15×.
+
+use crate::experiments::rule;
+use crate::isa::PresetMode;
+use crate::scheduler::{RateReport, ThroughputModel};
+use crate::sim::SystemConfig;
+use crate::tech::Technology;
+
+/// Regenerate Fig. 8: `(OracularOpt, OracularOptProj)` reports.
+pub fn fig8(rows_per_pattern: f64) -> (RateReport, RateReport) {
+    let rep = |tech| {
+        let cfg = SystemConfig::paper_dna(tech, PresetMode::Gang);
+        ThroughputModel::new(cfg).oracular(rows_per_pattern, 3_000_000)
+    };
+    (rep(Technology::NearTerm), rep(Technology::LongTerm))
+}
+
+/// Print Fig. 8 at paper scale.
+pub fn run() {
+    rule("Fig. 8 — MTJ technology sensitivity (OracularOpt vs OracularOptProj)");
+    let (near, long) = fig8(170.0);
+    println!("  {:<18} {:>14} {:>16}", "design", "rate (pat/s)", "eff (/s/mW)");
+    println!("  {:<18} {:>14.3e} {:>16.3e}", "OracularOpt", near.match_rate, near.efficiency);
+    println!("  {:<18} {:>14.3e} {:>16.3e}", "OracularOptProj", long.match_rate, long.efficiency);
+    println!(
+        "\n  projected boost: rate {:.2}×, efficiency {:.2}×  (paper: ≈2.15×)",
+        long.match_rate / near.match_rate,
+        long.efficiency / near.efficiency
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_boost_matches_paper_ballpark() {
+        let (near, long) = fig8(170.0);
+        let rate_boost = long.match_rate / near.match_rate;
+        let eff_boost = long.efficiency / near.efficiency;
+        // Paper: ≈2.15× for both.
+        assert!((1.5..3.2).contains(&rate_boost), "rate boost {rate_boost}");
+        assert!(eff_boost > rate_boost, "projected device must also save energy");
+    }
+}

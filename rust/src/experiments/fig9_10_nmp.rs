@@ -1,0 +1,194 @@
+//! Figs. 9 & 10 — CRAM-PM vs near-memory processing across the five
+//! Table 4 benchmarks: normalized match rate (Fig. 9) and normalized
+//! compute efficiency (Fig. 10), for near-term (*Oracular*) and
+//! long-term (*OracularProj*) devices, against NMP and the idealized
+//! NMP-Hyp (128 cores, zero memory overhead).
+//!
+//! Paper shapes asserted by the tests: every benchmark improves by
+//! orders of magnitude vs NMP; improvements shrink vs NMP-Hyp; WC has
+//! the maximum match-rate gain (133 552× long-term in the paper); BC
+//! gains least in efficiency (low compute-to-memory ratio); RC4 gains
+//! most in efficiency (XOR-dominated).
+
+use crate::baselines::NmpBaseline;
+use crate::bench_apps::all_benchmarks;
+use crate::experiments::rule;
+use crate::isa::PresetMode;
+use crate::tech::Technology;
+
+/// One benchmark row of Figs. 9/10.
+#[derive(Debug, Clone)]
+pub struct NmpRow {
+    /// Benchmark name.
+    pub name: String,
+    /// Technology corner.
+    pub tech: Technology,
+    /// CRAM-PM match rate / NMP match rate.
+    pub rate_vs_nmp: f64,
+    /// CRAM-PM match rate / NMP-Hyp match rate.
+    pub rate_vs_hyp: f64,
+    /// CRAM-PM efficiency / NMP efficiency.
+    pub eff_vs_nmp: f64,
+    /// CRAM-PM efficiency / NMP-Hyp efficiency.
+    pub eff_vs_hyp: f64,
+}
+
+/// Regenerate the Fig. 9/10 data.
+pub fn fig9_10() -> Vec<NmpRow> {
+    let nmp = NmpBaseline::paper();
+    let hyp = NmpBaseline::hypothetical();
+    let mut rows = Vec::new();
+    for tech in Technology::ALL {
+        for b in all_benchmarks() {
+            let cram = b.cram(tech, PresetMode::Gang);
+            let p = b.nmp_profile();
+            rows.push(NmpRow {
+                name: b.name().to_string(),
+                tech,
+                rate_vs_nmp: cram.match_rate / nmp.match_rate(&p),
+                rate_vs_hyp: cram.match_rate / hyp.match_rate(&p),
+                eff_vs_nmp: cram.efficiency / nmp.efficiency(&p),
+                eff_vs_hyp: cram.efficiency / hyp.efficiency(&p),
+            });
+        }
+    }
+    rows
+}
+
+/// Print Figs. 9 & 10.
+pub fn run() {
+    let rows = fig9_10();
+    rule("Fig. 9 — normalized match rate vs NMP (log-scale data)");
+    println!(
+        "  {:<6} {:<10} {:>14} {:>14}",
+        "bench", "tech", "vs NMP", "vs NMP-Hyp"
+    );
+    for r in &rows {
+        println!(
+            "  {:<6} {:<10} {:>13.1}× {:>13.1}×",
+            r.name,
+            r.tech.to_string(),
+            r.rate_vs_nmp,
+            r.rate_vs_hyp
+        );
+    }
+    rule("Fig. 10 — normalized compute efficiency vs NMP (log-scale data)");
+    println!(
+        "  {:<6} {:<10} {:>14} {:>14}",
+        "bench", "tech", "vs NMP", "vs NMP-Hyp"
+    );
+    for r in &rows {
+        println!(
+            "  {:<6} {:<10} {:>13.1}× {:>13.1}×",
+            r.name,
+            r.tech.to_string(),
+            r.eff_vs_nmp,
+            r.eff_vs_hyp
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows_for(tech: Technology) -> Vec<NmpRow> {
+        fig9_10().into_iter().filter(|r| r.tech == tech).collect()
+    }
+
+    #[test]
+    fn all_benchmarks_beat_nmp_by_orders_of_magnitude() {
+        for r in fig9_10() {
+            assert!(r.rate_vs_nmp > 10.0, "{} ({}) only {}× vs NMP", r.name, r.tech, r.rate_vs_nmp);
+        }
+    }
+
+    #[test]
+    fn hyp_baseline_shrinks_every_improvement() {
+        // §5.3: "All applications have smaller improvement w.r.t.
+        // NMP-Hyp ... since NMP-Hyp has no memory overhead".
+        for r in fig9_10() {
+            assert!(r.rate_vs_hyp < r.rate_vs_nmp, "{}", r.name);
+            assert!(r.eff_vs_hyp <= r.eff_vs_nmp * 1.0001, "{}", r.name);
+        }
+    }
+
+    #[test]
+    fn wc_has_max_match_rate_improvement_long_term() {
+        // §5.3: "The maximum improvement is 133552× (for WC) for
+        // long-term MTJ technology".
+        let rows = rows_for(Technology::LongTerm);
+        let wc = rows.iter().find(|r| r.name == "WC").unwrap();
+        for r in &rows {
+            assert!(
+                wc.rate_vs_nmp >= r.rate_vs_nmp,
+                "WC ({}×) not max: {} at {}×",
+                wc.rate_vs_nmp,
+                r.name,
+                r.rate_vs_nmp
+            );
+        }
+        // Order of magnitude: 10⁴–10⁶ (paper: 1.3·10⁵).
+        assert!((1e4..1e7).contains(&wc.rate_vs_nmp), "WC gain {}", wc.rate_vs_nmp);
+    }
+
+    #[test]
+    fn bc_gains_least_efficiency_vs_hyp() {
+        // §5.3: "BC shows the least benefit w.r.t. NMP-Hyp, since BC
+        // has a lower compute to memory access ratio".
+        for tech in Technology::ALL {
+            let rows = rows_for(tech);
+            let bc = rows.iter().find(|r| r.name == "BC").unwrap();
+            for r in &rows {
+                assert!(
+                    bc.eff_vs_hyp <= r.eff_vs_hyp,
+                    "{tech}: BC ({}) not min: {} at {}",
+                    bc.eff_vs_hyp,
+                    r.name,
+                    r.eff_vs_hyp
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rc4_efficiency_gain_shape() {
+        // §5.3: "RC4 has the highest improvements of approx. 300× and
+        // 900× ... in compute efficiency due to CRAM-PM's efficiency in
+        // handling its high number of XOR operations."
+        //
+        // In our first-principles energy model RC4's gain is the
+        // highest of the *fixed-work* kernels (DNA/SM/BC); WC's gain is
+        // coupled to its extreme match-rate gain (the 133 552× of
+        // Fig. 9) and exceeds it — a documented divergence
+        // (EXPERIMENTS.md §Fig10): the paper's per-benchmark CRAM
+        // energy accounting for WC is not derivable from its text.
+        for tech in Technology::ALL {
+            let rows = rows_for(tech);
+            let rc4 = rows.iter().find(|r| r.name == "RC4").unwrap();
+            for r in rows.iter().filter(|r| r.name != "WC" && r.name != "RC4") {
+                assert!(
+                    rc4.eff_vs_hyp >= r.eff_vs_hyp,
+                    "{tech}: RC4 ({}) below {} at {}",
+                    rc4.eff_vs_hyp,
+                    r.name,
+                    r.eff_vs_hyp
+                );
+            }
+        }
+        // Near-term absolute gain vs NMP in the paper's ≈300× decade.
+        let near = rows_for(Technology::NearTerm);
+        let rc4 = near.iter().find(|r| r.name == "RC4").unwrap();
+        assert!((30.0..3000.0).contains(&rc4.eff_vs_nmp), "RC4 vs NMP {}", rc4.eff_vs_nmp);
+    }
+
+    #[test]
+    fn long_term_beats_near_term_everywhere() {
+        let near = rows_for(Technology::NearTerm);
+        let long = rows_for(Technology::LongTerm);
+        for (n, l) in near.iter().zip(&long) {
+            assert_eq!(n.name, l.name);
+            assert!(l.rate_vs_nmp > n.rate_vs_nmp, "{}", n.name);
+        }
+    }
+}

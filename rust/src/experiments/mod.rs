@@ -1,0 +1,45 @@
+//! Experiment drivers: one per paper table/figure (§5 evaluation).
+//!
+//! Every driver regenerates the corresponding result — the same rows
+//! or series the paper reports — from this repository's models, and
+//! prints it in a shape directly comparable to the paper. The absolute
+//! numbers come from our calibrated analytical substrate (DESIGN.md
+//! §2); the *shapes* (who wins, by what order, where crossovers fall)
+//! are asserted by the test suite.
+//!
+//! Run them all with `cram-pm experiment all`, or individually (see
+//! `cram-pm experiment --help`).
+
+pub mod ablation;
+pub mod fig11_gates;
+pub mod fig5_designs;
+pub mod fig6_breakdown;
+pub mod fig7_pattern_length;
+pub mod fig8_technology;
+pub mod fig9_10_nmp;
+pub mod row_width;
+pub mod scheduling;
+pub mod tables;
+pub mod variation;
+
+/// Pretty horizontal rule for experiment output.
+pub fn rule(title: &str) {
+    println!("\n────────────────────────────────────────────────────────────");
+    println!("{title}");
+    println!("────────────────────────────────────────────────────────────");
+}
+
+/// Run every experiment at its default (paper) scale.
+pub fn run_all() {
+    tables::run();
+    row_width::run();
+    fig5_designs::run();
+    fig6_breakdown::run();
+    fig7_pattern_length::run();
+    fig8_technology::run();
+    fig9_10_nmp::run();
+    fig11_gates::run();
+    variation::run();
+    ablation::run();
+    scheduling::run();
+}

@@ -1,0 +1,62 @@
+//! §3.4 "Array Size" — the maximum-row-width experiment: shift a
+//! 2-input gate's output cell away from its inputs until the output
+//! current falls below the critical switching current.
+//!
+//! Paper anchors at 22 nm, near-term: ≈2 K cells per row, with the
+//! wire-RC latency overhead "barely reaching 1.7 %" of the MTJ
+//! switching time.
+
+use crate::experiments::rule;
+use crate::tech::interconnect::{max_row_width, row_width_for_pattern_matching, InterconnectModel};
+use crate::tech::{MtjParams, RowWidthAnalysis, Technology};
+
+/// Regenerate the experiment for one corner.
+pub fn row_width(tech: Technology) -> Vec<RowWidthAnalysis> {
+    let mtj = MtjParams::for_technology(tech);
+    let wire = InterconnectModel::at_22nm();
+    row_width_for_pattern_matching(&mtj, &wire)
+}
+
+/// Print the §3.4 experiment.
+pub fn run() {
+    rule("§3.4 — maximum row width (copper LL, 160 nm segments, 22 nm)");
+    for tech in Technology::ALL {
+        println!("  [{tech}]");
+        println!(
+            "    {:<6} {:>12} {:>14} {:>16}",
+            "gate", "max cells", "R_line (Ω)", "RC overhead (%)"
+        );
+        for a in row_width(tech) {
+            println!(
+                "    {:<6} {:>12} {:>14.0} {:>16.3}",
+                a.gate,
+                a.max_cells,
+                a.r_line_at_max,
+                a.latency_overhead * 100.0
+            );
+        }
+    }
+    let mtj = MtjParams::near_term();
+    let wire = InterconnectModel::at_22nm();
+    let nor = max_row_width(&mtj, &wire, crate::gates::GateKind::Nor2);
+    println!(
+        "\n  paper anchor (2-input gate, near-term): {} cells (paper ≈2K), RC overhead at that \
+         width {:.2} % (paper ≤1.7 %)",
+        nor.max_cells,
+        wire.line_delay(nor.max_cells) / mtj.switching_latency * 100.0
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn experiment_produces_rows_for_all_gates() {
+        for tech in Technology::ALL {
+            let rows = row_width(tech);
+            assert_eq!(rows.len(), 5);
+            assert!(rows.iter().all(|a| a.max_cells > 0));
+        }
+    }
+}

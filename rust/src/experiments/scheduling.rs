@@ -1,0 +1,117 @@
+//! §5 "Practical Considerations (Pattern Scheduling)" — how close a
+//! practical hash-based scheduler comes to the Oracular ideal.
+//!
+//! The paper: "The feasibility of any pattern scheduler is contingent
+//! upon the distribution of the patterns"; ill-schedules (patterns with
+//! no good home row) cause redundant computation. This experiment
+//! quantifies it on synthetic workloads: seed length and read error
+//! rate vs. index selectivity, unmatched patterns, and pass packing.
+
+use crate::bench_apps::dna::DnaWorkload;
+use crate::experiments::rule;
+use crate::scheduler::{OracularScheduler, PatternScheduler, RowAddr};
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SchedulingPoint {
+    /// Seed length.
+    pub k: usize,
+    /// Per-base read error rate.
+    pub error_rate: f64,
+    /// Mean candidate rows per pattern.
+    pub mean_candidates: f64,
+    /// Fraction of patterns with no candidates (ill-schedules).
+    pub unmatched_frac: f64,
+    /// Mean distinct patterns packed per pass.
+    pub patterns_per_pass: f64,
+}
+
+/// Sweep seed length × error rate on a synthetic workload.
+pub fn sweep(ref_chars: usize, n_patterns: usize, pat_chars: usize, seed: u64) -> Vec<SchedulingPoint> {
+    let mut out = Vec::new();
+    for &error_rate in &[0.0, 0.02, 0.05, 0.10] {
+        let w = DnaWorkload::generate(ref_chars, n_patterns, pat_chars, error_rate, seed);
+        let fragments = w.fragments(4 * pat_chars, pat_chars);
+        let rows: Vec<RowAddr> =
+            (0..fragments.len()).map(|i| RowAddr { array: 0, row: i as u32 }).collect();
+        for &k in &[6usize, 8, 12] {
+            if k > pat_chars {
+                continue;
+            }
+            let sched = OracularScheduler::build(
+                &fragments,
+                rows.clone(),
+                w.patterns.clone(),
+                k,
+                256,
+            );
+            let stats = sched.stats();
+            let passes = sched.schedule(n_patterns);
+            let scheduled: usize = passes.iter().map(|p| p.distinct_patterns()).sum();
+            out.push(SchedulingPoint {
+                k,
+                error_rate,
+                mean_candidates: stats.mean_rows_per_pattern,
+                unmatched_frac: stats.unmatched_patterns as f64 / n_patterns as f64,
+                patterns_per_pass: scheduled as f64 / passes.len().max(1) as f64,
+            });
+        }
+    }
+    out
+}
+
+/// Print the scheduling-practicality study.
+pub fn run() {
+    rule("§5 Practical Considerations — hash-based scheduler feasibility");
+    println!(
+        "  {:>4} {:>8} {:>16} {:>12} {:>14}",
+        "k", "err", "mean cand/pat", "unmatched", "patterns/pass"
+    );
+    for p in sweep(1 << 18, 512, 24, 77) {
+        println!(
+            "  {:>4} {:>8.2} {:>16.1} {:>11.1}% {:>14.1}",
+            p.k,
+            p.error_rate,
+            p.mean_candidates,
+            p.unmatched_frac * 100.0,
+            p.patterns_per_pass
+        );
+    }
+    println!(
+        "\n  longer seeds sharpen selectivity (fewer candidate rows) but lose erroneous\n  \
+         reads (more ill-schedules) — the spectrum between Naive and Oracular (§5)."
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn longer_seeds_are_more_selective() {
+        let pts = sweep(1 << 15, 128, 24, 3);
+        let at = |k: usize, e: f64| {
+            pts.iter().find(|p| p.k == k && p.error_rate == e).unwrap().mean_candidates
+        };
+        assert!(at(12, 0.0) <= at(6, 0.0), "k=12 should not be less selective than k=6");
+    }
+
+    #[test]
+    fn error_free_reads_never_unmatched() {
+        let pts = sweep(1 << 15, 128, 24, 5);
+        for p in pts.iter().filter(|p| p.error_rate == 0.0) {
+            assert_eq!(p.unmatched_frac, 0.0, "k={}", p.k);
+        }
+    }
+
+    #[test]
+    fn errors_raise_ill_schedule_rate_for_long_seeds() {
+        let pts = sweep(1 << 15, 256, 24, 7);
+        let at = |k: usize, e: f64| {
+            pts.iter().find(|p| p.k == k && p.error_rate == e).unwrap().unmatched_frac
+        };
+        assert!(at(12, 0.10) >= at(12, 0.0));
+        // Short seeds are robust: still mostly matched at 10 % errors.
+        assert!(at(6, 0.10) < 0.2, "k=6 unmatched {}", at(6, 0.10));
+    }
+}

@@ -1,0 +1,117 @@
+//! Tables 1–3: gate truth tables from the electrical model, and the
+//! technology-derived bias windows.
+
+use crate::experiments::rule;
+use crate::gates::{compound, gate_current, solve_window, GateKind};
+use crate::tech::{MtjParams, Technology};
+
+/// Table 1: the 2-input NOR truth table with the divider currents that
+/// realise it.
+pub struct Table1 {
+    /// `(in0, in1, out, i_out A, switches)` rows.
+    pub rows: Vec<(bool, bool, bool, f64, bool)>,
+}
+
+/// Regenerate Table 1 on a technology corner.
+pub fn table1(tech: Technology) -> Table1 {
+    let mtj = MtjParams::for_technology(tech);
+    let v = solve_window(&mtj, GateKind::Nor2, 0.0).midpoint();
+    let rows = [(false, false), (false, true), (true, false), (true, true)]
+        .iter()
+        .map(|&(a, b)| {
+            let ones = a as usize + b as usize;
+            let i = gate_current(&mtj, v, 2, ones, false, 0.0);
+            let switches = i > mtj.i_crit_eff();
+            (a, b, GateKind::Nor2.eval(&[a, b]), i, switches)
+        })
+        .collect();
+    Table1 { rows }
+}
+
+/// Table 2: the XOR construction `S1=NOR, S2=COPY, Out=TH`.
+pub struct Table2 {
+    /// `(in0, in1, s1, s2, out)` rows.
+    pub rows: Vec<(bool, bool, bool, bool, bool)>,
+}
+
+/// Regenerate Table 2 by running the compound sequence.
+pub fn table2() -> Table2 {
+    let rows = [(false, false), (false, true), (true, false), (true, true)]
+        .iter()
+        .map(|&(a, b)| {
+            let mut slots = [a, b, false, false, false];
+            compound::evaluate_sequence(&compound::xor_steps(), &mut slots);
+            (a, b, slots[2], slots[3], slots[4])
+        })
+        .collect();
+    Table2 { rows }
+}
+
+/// Print Tables 1–3.
+pub fn run() {
+    rule("Table 1 — 2-input NOR truth table (electrical)");
+    for tech in Technology::ALL {
+        println!("  [{tech}]  In0 In1 | Out  I_out(µA)  I>I_crit?");
+        for (a, b, out, i, sw) in table1(tech).rows {
+            println!(
+                "            {}   {}  |  {}   {:>8.2}   {}",
+                a as u8,
+                b as u8,
+                out as u8,
+                i * 1e6,
+                if sw { "yes (switch)" } else { "no" }
+            );
+        }
+    }
+
+    rule("Table 2 — XOR as NOR/COPY/TH sequence");
+    println!("  In0 In1 | S1=NOR S2=COPY | Out=TH  (expect In0⊕In1)");
+    for (a, b, s1, s2, out) in table2().rows {
+        println!(
+            "   {}   {}  |   {}      {}     |   {}",
+            a as u8, b as u8, s1 as u8, s2 as u8, out as u8
+        );
+    }
+
+    rule("Table 3 (derived) — V_gate windows from the divider model");
+    for tech in Technology::ALL {
+        let mtj = MtjParams::for_technology(tech);
+        println!("  [{tech}] (I_crit_eff = {:.2} µA)", mtj.i_crit_eff() * 1e6);
+        for kind in GateKind::ALL {
+            let w = solve_window(&mtj, kind, 0.0);
+            println!(
+                "    V_{:<5} {:.3}–{:.3} V  (margin {:.1} %)",
+                kind.name(),
+                w.v_min,
+                w.v_max,
+                w.margin() * 100.0
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_electrical_rows_match_logic() {
+        for tech in Technology::ALL {
+            for (a, b, out, _, switches) in table1(tech).rows {
+                assert_eq!(out, !(a | b));
+                // NOR pre-sets 0: output is 1 exactly when it switches.
+                assert_eq!(out, switches);
+            }
+        }
+    }
+
+    #[test]
+    fn table2_rows_match_paper() {
+        let t = table2();
+        // (In0,In1,S1,S2,Out): 00→(1,1,0), 01→(0,0,1), 10→(0,0,1), 11→(0,0,0)
+        assert_eq!(t.rows[0], (false, false, true, true, false));
+        assert_eq!(t.rows[1], (false, true, false, false, true));
+        assert_eq!(t.rows[2], (true, false, false, false, true));
+        assert_eq!(t.rows[3], (true, true, false, false, false));
+    }
+}

@@ -1,0 +1,146 @@
+//! Multi-step gate sequences (paper §2.2, Table 2 and Fig. 2).
+//!
+//! XOR is not a threshold function, so CRAM-PM builds it from three
+//! single-step gates plus two scratch cells; the 1-bit full adder is the
+//! paper's 4-step majority-gate construction [9] — the workhorse of the
+//! similarity-score reduction tree.
+
+use crate::gates::GateKind;
+
+/// One step of a compound sequence: which gate fires, reading from
+/// `inputs` and writing to `output`, where operands are symbolic slot
+/// indices resolved by the caller (the code generator maps them to
+/// array columns, the evaluator to values).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompoundStep {
+    /// Gate fired in this step.
+    pub kind: GateKind,
+    /// Input slot indices (length = `kind.n_inputs()`).
+    pub inputs: [usize; 5],
+    /// Output slot index (must be pre-set to `kind.preset()` first).
+    pub output: usize,
+}
+
+impl CompoundStep {
+    fn new(kind: GateKind, inputs: &[usize], output: usize) -> Self {
+        let mut padded = [usize::MAX; 5];
+        padded[..inputs.len()].copy_from_slice(inputs);
+        CompoundStep { kind, inputs: padded, output }
+    }
+
+    /// The live input slots.
+    pub fn input_slots(&self) -> &[usize] {
+        &self.inputs[..self.kind.n_inputs()]
+    }
+}
+
+/// Number of single-step gate invocations in an XOR (paper Table 2).
+pub const XOR_GATES: usize = 3;
+
+/// Number of single-step gate invocations in a full adder (Fig. 2).
+pub const FULL_ADDER_GATES: usize = 4;
+
+/// XOR slot convention: `0 = In0`, `1 = In1`, `2 = S1` (scratch),
+/// `3 = S2` (scratch), `4 = Out`.
+///
+/// Steps (Table 2): `S1 = NOR(In0, In1)`, `S2 = COPY(S1)`,
+/// `Out = TH(In0, In1, S1, S2)`.
+pub fn xor_steps() -> [CompoundStep; XOR_GATES] {
+    [
+        CompoundStep::new(GateKind::Nor2, &[0, 1], 2),
+        CompoundStep::new(GateKind::Copy, &[2], 3),
+        CompoundStep::new(GateKind::Th4, &[0, 1, 2, 3], 4),
+    ]
+}
+
+/// Full-adder slot convention: `0 = In0`, `1 = In1`, `2 = Ci`,
+/// `3 = Co`, `4 = S1` (scratch), `5 = S2` (scratch), `6 = Sum`.
+///
+/// Steps (Fig. 2): `Co = MAJ3(In0, In1, Ci)`, `S1 = INV(Co)`,
+/// `S2 = COPY(S1)`, `Sum = MAJ5(In0, In1, Ci, S1, S2)`.
+pub fn full_adder_steps() -> [CompoundStep; FULL_ADDER_GATES] {
+    [
+        CompoundStep::new(GateKind::Maj3, &[0, 1, 2], 3),
+        CompoundStep::new(GateKind::Inv, &[3], 4),
+        CompoundStep::new(GateKind::Copy, &[4], 5),
+        CompoundStep::new(GateKind::Maj5, &[0, 1, 2, 4, 5], 6),
+    ]
+}
+
+/// Evaluate a compound sequence over a slot file, mimicking the array:
+/// each step pre-sets its output slot, then fires the gate. Inputs are
+/// never modified (CRAM-PM computation is non-destructive, §1).
+pub fn evaluate_sequence(steps: &[CompoundStep], slots: &mut [bool]) {
+    for step in steps {
+        slots[step.output] = step.kind.preset();
+        let inputs: Vec<bool> = step.input_slots().iter().map(|&i| slots[i]).collect();
+        slots[step.output] = step.kind.eval(&inputs);
+    }
+}
+
+/// Convenience: XOR of two bits through the 3-step sequence.
+pub fn xor_via_sequence(a: bool, b: bool) -> bool {
+    let mut slots = [a, b, false, false, false];
+    evaluate_sequence(&xor_steps(), &mut slots);
+    slots[4]
+}
+
+/// Convenience: full-adder (sum, carry) through the 4-step sequence.
+pub fn full_adder_via_sequence(a: bool, b: bool, ci: bool) -> (bool, bool) {
+    let mut slots = [a, b, ci, false, false, false, false];
+    evaluate_sequence(&full_adder_steps(), &mut slots);
+    (slots[6], slots[3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xor_sequence_is_xor() {
+        for a in [false, true] {
+            for b in [false, true] {
+                assert_eq!(xor_via_sequence(a, b), a ^ b, "XOR({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn full_adder_sequence_is_a_full_adder() {
+        for a in [false, true] {
+            for b in [false, true] {
+                for ci in [false, true] {
+                    let (sum, co) = full_adder_via_sequence(a, b, ci);
+                    let expect = a as u8 + b as u8 + ci as u8;
+                    assert_eq!(sum as u8 + 2 * co as u8, expect, "FA({a},{b},{ci})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sequences_do_not_clobber_inputs() {
+        for a in [false, true] {
+            for b in [false, true] {
+                let mut slots = [a, b, false, false, false];
+                evaluate_sequence(&xor_steps(), &mut slots);
+                assert_eq!((slots[0], slots[1]), (a, b), "inputs must be non-destructive");
+            }
+        }
+    }
+
+    #[test]
+    fn step_counts_match_paper() {
+        assert_eq!(xor_steps().len(), XOR_GATES);
+        assert_eq!(full_adder_steps().len(), FULL_ADDER_GATES);
+    }
+
+    #[test]
+    fn outputs_never_alias_live_inputs() {
+        // A step's output slot must not be one of its own inputs: the
+        // pre-set would destroy the input before the gate fires.
+        for step in xor_steps().iter().chain(full_adder_steps().iter()) {
+            assert!(!step.input_slots().contains(&step.output), "{step:?}");
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Electrical model of gate formation: Kirchhoff analysis of the
+//! resistive divider from paper Fig. 1(c)/(d), and the `V_gate` window
+//! solver that turns truth tables into bias voltages (§2.1).
+//!
+//! Circuit: every input MTJ sits between its BSL (driven to `V_gate`)
+//! and the shared logic line LL; the output MTJ sits between LL and its
+//! grounded BSL. With input resistances `R_i` and output resistance
+//! `R_out`, the output current is a series combination of the inputs'
+//! parallel resistance with the output:
+//!
+//! ```text
+//! I_out = V_gate / ( (R_1 ∥ R_2 ∥ … ∥ R_n) + R_out + R_extra )
+//! ```
+//!
+//! `R_extra` carries the logic-line interconnect resistance — zero for
+//! adjacent cells, growing with cell distance — which is what limits the
+//! maximum row width in §3.4 (see [`crate::tech::interconnect`]).
+
+use crate::gates::GateKind;
+use crate::tech::MtjParams;
+
+/// Parallel resistance of a gate's inputs when exactly `ones` of the
+/// `n` inputs store logic 1 (anti-parallel, high resistance).
+pub fn parallel_input_resistance(mtj: &MtjParams, n: usize, ones: usize) -> f64 {
+    assert!(ones <= n && n > 0, "bad input state: {ones} ones of {n}");
+    let g = (n - ones) as f64 / mtj.r_p + ones as f64 / mtj.r_ap;
+    1.0 / g
+}
+
+/// Output current for a gate with the given input state.
+///
+/// `preset` is the output cell's pre-set logic value (it determines
+/// `R_out` at evaluation time); `r_extra` is additional series
+/// resistance on the logic line (interconnect).
+pub fn gate_current(
+    mtj: &MtjParams,
+    v_gate: f64,
+    n_inputs: usize,
+    ones: usize,
+    preset: bool,
+    r_extra: f64,
+) -> f64 {
+    let r_in = parallel_input_resistance(mtj, n_inputs, ones);
+    let r_out = mtj.resistance(preset);
+    v_gate / (r_in + r_out + r_extra)
+}
+
+/// Electrically evaluate a gate: compute the output state after the
+/// step, given concrete input bits and a bias voltage.
+///
+/// The output switches away from its pre-set iff the output current
+/// exceeds the (guard-banded) critical switching current.
+pub fn evaluate(mtj: &MtjParams, kind: GateKind, v_gate: f64, inputs: &[bool], r_extra: f64) -> bool {
+    assert_eq!(inputs.len(), kind.n_inputs());
+    let ones = inputs.iter().filter(|&&b| b).count();
+    let i_out = gate_current(mtj, v_gate, kind.n_inputs(), ones, kind.preset(), r_extra);
+    let switches = i_out > mtj.i_crit_eff();
+    kind.preset() ^ switches
+}
+
+/// A feasible `V_gate` interval for a gate: any bias strictly inside
+/// `(v_min, v_max)` realises the gate's truth table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VoltageWindow {
+    /// Gate this window realises.
+    pub kind: GateKind,
+    /// Below this bias the `ones == threshold` state no longer switches.
+    pub v_min: f64,
+    /// At or above this bias the `ones == threshold + 1` state would
+    /// spuriously switch.
+    pub v_max: f64,
+}
+
+impl VoltageWindow {
+    /// Midpoint bias — the operating point used by the simulator.
+    pub fn midpoint(&self) -> f64 {
+        0.5 * (self.v_min + self.v_max)
+    }
+
+    /// Window width, V. Larger ⇒ more robust to variation (§5.5).
+    pub fn width(&self) -> f64 {
+        self.v_max - self.v_min
+    }
+
+    /// Guaranteed relative variation tolerance. The window scales
+    /// linearly with `I_crit`, so a midpoint-biased gate under a
+    /// fractional `I_crit` disturbance `d` stays functional iff
+    /// `midpoint < v_max·(1−d)` and `midpoint > v_min·(1+d)`; the upper
+    /// corner binds first, giving `d < (v_max − v_min) / (2·v_max)` —
+    /// exactly this margin. Used by the §5.5 analysis.
+    pub fn margin(&self) -> f64 {
+        0.5 * self.width() / self.v_max
+    }
+
+    /// Whether two windows overlap — i.e. a single bias voltage could
+    /// realise either gate, the ambiguity §5.5 checks under variation.
+    pub fn overlaps(&self, other: &VoltageWindow) -> bool {
+        self.v_min < other.v_max && other.v_min < self.v_max
+    }
+}
+
+/// Solve the `V_gate` window for a gate on a given technology.
+///
+/// The boundary states are `ones == t` (must switch: needs
+/// `I_out > I_crit`, so `V > I_crit · R_total(t)`) and `ones == t + 1`
+/// (must not switch: `V < I_crit · R_total(t+1)`). Because resistance
+/// rises monotonically with the number of 1-inputs, these two
+/// constraints bound all others.
+pub fn solve_window(mtj: &MtjParams, kind: GateKind, r_extra: f64) -> VoltageWindow {
+    let n = kind.n_inputs();
+    let t = kind.threshold();
+    let r_out = mtj.resistance(kind.preset());
+    let i_c = mtj.i_crit_eff();
+    let v_min = i_c * (parallel_input_resistance(mtj, n, t) + r_out + r_extra);
+    // For a gate whose threshold equals its arity there is no "must not
+    // switch" state; cap by the supply-rail-ish 2×v_min. (No such gate
+    // exists in the current zoo, but the solver stays total.)
+    let v_max = if t + 1 <= n {
+        i_c * (parallel_input_resistance(mtj, n, t + 1) + r_out + r_extra)
+    } else {
+        2.0 * v_min
+    };
+    VoltageWindow { kind, v_min, v_max }
+}
+
+/// Energy dissipated by one gate step with a concrete input state:
+/// the divider burns `V_gate · I_total` for the duration of the MTJ
+/// switching window. `I_total = I_out` (series circuit).
+pub fn gate_step_energy(mtj: &MtjParams, kind: GateKind, v_gate: f64, ones: usize) -> f64 {
+    let i = gate_current(mtj, v_gate, kind.n_inputs(), ones, kind.preset(), 0.0);
+    v_gate * i * mtj.switching_latency
+}
+
+/// Average gate-step energy over a uniform distribution of input states
+/// — used by the analytical (non-bit-level) simulator.
+pub fn gate_step_energy_avg(mtj: &MtjParams, kind: GateKind) -> f64 {
+    let n = kind.n_inputs();
+    let v = solve_window(mtj, kind, 0.0).midpoint();
+    let total: f64 = (0..=n)
+        .map(|ones| {
+            // Binomial weight of this input state count.
+            let weight = binomial(n, ones) as f64 / (1u64 << n) as f64;
+            weight * gate_step_energy(mtj, kind, v, ones)
+        })
+        .sum();
+    total
+}
+
+fn binomial(n: usize, k: usize) -> u64 {
+    let mut acc = 1u64;
+    for i in 0..k {
+        acc = acc * (n - i) as u64 / (i + 1) as u64;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::Technology;
+
+    fn all_inputs(n: usize) -> Vec<Vec<bool>> {
+        (0..1usize << n)
+            .map(|m| (0..n).map(|i| (m >> i) & 1 == 1).collect())
+            .collect()
+    }
+
+    #[test]
+    fn parallel_resistance_monotone_in_ones() {
+        let mtj = MtjParams::near_term();
+        for n in 1..=5 {
+            for ones in 1..=n {
+                assert!(
+                    parallel_input_resistance(&mtj, n, ones)
+                        > parallel_input_resistance(&mtj, n, ones - 1)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn windows_are_nonempty_for_all_gates_and_techs() {
+        for tech in Technology::ALL {
+            let mtj = MtjParams::for_technology(tech);
+            for kind in GateKind::ALL {
+                let w = solve_window(&mtj, kind, 0.0);
+                assert!(w.v_min > 0.0 && w.v_max > w.v_min, "{kind} window empty on {tech}");
+            }
+        }
+    }
+
+    /// The crate's load-bearing correctness statement: for every gate,
+    /// every technology, and every input state, the *electrical*
+    /// evaluation at the window midpoint equals the *logical* threshold
+    /// semantics.
+    #[test]
+    fn electrical_matches_logical_exhaustively() {
+        for tech in Technology::ALL {
+            let mtj = MtjParams::for_technology(tech);
+            for kind in GateKind::ALL {
+                let v = solve_window(&mtj, kind, 0.0).midpoint();
+                for inputs in all_inputs(kind.n_inputs()) {
+                    assert_eq!(
+                        evaluate(&mtj, kind, v, &inputs, 0.0),
+                        kind.eval(&inputs),
+                        "{kind} disagreed on {inputs:?} ({tech})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nor_currents_ordered_as_paper_table1() {
+        // I_00 > I_01 = I_10 > I_11, with only I_00 above I_crit.
+        let mtj = MtjParams::near_term();
+        let v = solve_window(&mtj, GateKind::Nor2, 0.0).midpoint();
+        let i00 = gate_current(&mtj, v, 2, 0, false, 0.0);
+        let i01 = gate_current(&mtj, v, 2, 1, false, 0.0);
+        let i11 = gate_current(&mtj, v, 2, 2, false, 0.0);
+        assert!(i00 > i01 && i01 > i11);
+        assert!(i00 > mtj.i_crit_eff());
+        assert!(i01 < mtj.i_crit_eff());
+    }
+
+    #[test]
+    fn gate_voltage_ordering_more_inputs_lower_bias() {
+        // Table 3's driving intuition: more inputs ⇒ lower parallel
+        // input resistance ⇒ lower bias window. Our divider model
+        // reproduces it within each pre-set class (the paper's
+        // SPICE-level table additionally folds in access-transistor and
+        // current-direction effects that flatten the pre-set-1 offset;
+        // see EXPERIMENTS.md for the computed-vs-Table-3 comparison).
+        for tech in Technology::ALL {
+            let mtj = MtjParams::for_technology(tech);
+            let mid = |k| solve_window(&mtj, k, 0.0).midpoint();
+            // pre-set-0 class: INV > NOR > TH4 (1 → 2 → 4 inputs)
+            assert!(mid(GateKind::Inv) > mid(GateKind::Nor2));
+            assert!(mid(GateKind::Nor2) > mid(GateKind::Th4));
+            // pre-set-1 class: COPY > MAJ3 > MAJ5 (1 → 3 → 5 inputs)
+            assert!(mid(GateKind::Copy) > mid(GateKind::Maj3));
+            assert!(mid(GateKind::Maj3) > mid(GateKind::Maj5));
+        }
+    }
+
+    #[test]
+    fn extra_series_resistance_shifts_window_up() {
+        let mtj = MtjParams::near_term();
+        let w0 = solve_window(&mtj, GateKind::Nor2, 0.0);
+        let w1 = solve_window(&mtj, GateKind::Nor2, 500.0);
+        assert!(w1.v_min > w0.v_min);
+    }
+
+    #[test]
+    fn step_energy_positive_and_bounded() {
+        let mtj = MtjParams::near_term();
+        for kind in GateKind::ALL {
+            let e = gate_step_energy_avg(&mtj, kind);
+            assert!(e > 0.0);
+            // Should be within an order of magnitude of a memory write.
+            assert!(e < 100.0 * mtj.write_energy, "{kind} energy {e} implausible");
+        }
+    }
+
+    #[test]
+    fn window_overlap_detection() {
+        let mtj = MtjParams::near_term();
+        let nor = solve_window(&mtj, GateKind::Nor2, 0.0);
+        assert!(nor.overlaps(&nor));
+        let shifted = VoltageWindow { kind: GateKind::Or2, v_min: nor.v_max + 0.01, v_max: nor.v_max + 0.02 };
+        assert!(!nor.overlaps(&shifted));
+    }
+}

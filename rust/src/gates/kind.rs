@@ -1,0 +1,190 @@
+//! The CRAM-PM gate zoo and its logical (threshold) semantics.
+
+
+/// Every single-step gate CRAM-PM can form (paper §2.2).
+///
+/// Each gate is characterised by three constants:
+///
+/// * the number of inputs,
+/// * the output **pre-set** value (written before the gate fires),
+/// * a **threshold** `t`: the output MTJ switches away from its pre-set
+///   iff at most `t` of the inputs are logic 1 (fewer 1s ⇒ lower input
+///   resistance ⇒ higher output current).
+///
+/// XOR is deliberately absent: it is not a threshold function, which is
+/// exactly the paper's argument for the multi-step construction in
+/// [`crate::gates::compound`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GateKind {
+    /// 1-input NOT. Pre-set 0; switches (to 1) iff the input is 0.
+    Inv,
+    /// 1-input buffer. Pre-set 1; switches (to 0) iff the input is 0.
+    /// One step instead of the two back-to-back INVs (§2.2).
+    Copy,
+    /// 2-input NOR. Pre-set 0; switches iff both inputs are 0 (Table 1).
+    Nor2,
+    /// 2-input OR. Pre-set 1; switches iff both inputs are 0.
+    Or2,
+    /// 2-input NAND. Pre-set 0; switches iff at most one input is 1.
+    Nand2,
+    /// 2-input AND. Pre-set 1; switches iff at most one input is 1.
+    And2,
+    /// 3-input majority. Pre-set 1; switches iff at most one input is 1.
+    Maj3,
+    /// 5-input majority. Pre-set 1; switches iff at most two inputs are 1.
+    Maj5,
+    /// 4-input threshold gate used by the XOR sequence (paper Table 2):
+    /// pre-set 0; output 1 iff at most one input is 1.
+    Th4,
+}
+
+impl GateKind {
+    /// All gate kinds, for exhaustive sweeps.
+    pub const ALL: [GateKind; 9] = [
+        GateKind::Inv,
+        GateKind::Copy,
+        GateKind::Nor2,
+        GateKind::Or2,
+        GateKind::Nand2,
+        GateKind::And2,
+        GateKind::Maj3,
+        GateKind::Maj5,
+        GateKind::Th4,
+    ];
+
+    /// Number of gate inputs.
+    pub fn n_inputs(&self) -> usize {
+        match self {
+            GateKind::Inv | GateKind::Copy => 1,
+            GateKind::Nor2 | GateKind::Or2 | GateKind::Nand2 | GateKind::And2 => 2,
+            GateKind::Maj3 => 3,
+            GateKind::Th4 => 4,
+            GateKind::Maj5 => 5,
+        }
+    }
+
+    /// Output pre-set value written before the gate fires.
+    pub fn preset(&self) -> bool {
+        match self {
+            GateKind::Inv | GateKind::Nor2 | GateKind::Nand2 | GateKind::Th4 => false,
+            GateKind::Copy | GateKind::Or2 | GateKind::And2 | GateKind::Maj3 | GateKind::Maj5 => {
+                true
+            }
+        }
+    }
+
+    /// Switching threshold: the output flips iff `ones(inputs) <= t`.
+    pub fn threshold(&self) -> usize {
+        match self {
+            GateKind::Inv | GateKind::Copy | GateKind::Nor2 | GateKind::Or2 => 0,
+            GateKind::Nand2 | GateKind::And2 | GateKind::Maj3 | GateKind::Th4 => 1,
+            GateKind::Maj5 => 2,
+        }
+    }
+
+    /// Logical output of the gate for the given inputs (threshold
+    /// semantics). The electrical model in [`crate::gates::divider`]
+    /// must agree with this for any `V_gate` inside the gate's window —
+    /// that agreement is tested exhaustively.
+    pub fn eval(&self, inputs: &[bool]) -> bool {
+        assert_eq!(
+            inputs.len(),
+            self.n_inputs(),
+            "{self:?} takes {} inputs, got {}",
+            self.n_inputs(),
+            inputs.len()
+        );
+        let ones = inputs.iter().filter(|&&b| b).count();
+        let switches = ones <= self.threshold();
+        self.preset() ^ switches
+    }
+
+    /// Human-readable name matching the paper's notation.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GateKind::Inv => "INV",
+            GateKind::Copy => "COPY",
+            GateKind::Nor2 => "NOR",
+            GateKind::Or2 => "OR",
+            GateKind::Nand2 => "NAND",
+            GateKind::And2 => "AND",
+            GateKind::Maj3 => "MAJ3",
+            GateKind::Maj5 => "MAJ5",
+            GateKind::Th4 => "TH",
+        }
+    }
+}
+
+impl std::fmt::Display for GateKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Enumerate all 2^n input vectors for a gate.
+    fn all_inputs(n: usize) -> Vec<Vec<bool>> {
+        (0..1usize << n)
+            .map(|m| (0..n).map(|i| (m >> i) & 1 == 1).collect())
+            .collect()
+    }
+
+    #[test]
+    fn nor_truth_table_matches_paper_table1() {
+        let g = GateKind::Nor2;
+        assert!(g.eval(&[false, false]));
+        assert!(!g.eval(&[false, true]));
+        assert!(!g.eval(&[true, false]));
+        assert!(!g.eval(&[true, true]));
+    }
+
+    #[test]
+    fn inv_and_copy() {
+        assert!(GateKind::Inv.eval(&[false]));
+        assert!(!GateKind::Inv.eval(&[true]));
+        assert!(!GateKind::Copy.eval(&[false]));
+        assert!(GateKind::Copy.eval(&[true]));
+    }
+
+    #[test]
+    fn two_input_gates_match_boolean_definitions() {
+        for inp in all_inputs(2) {
+            let (a, b) = (inp[0], inp[1]);
+            assert_eq!(GateKind::Nor2.eval(&inp), !(a | b));
+            assert_eq!(GateKind::Or2.eval(&inp), a | b);
+            assert_eq!(GateKind::Nand2.eval(&inp), !(a & b));
+            assert_eq!(GateKind::And2.eval(&inp), a & b);
+        }
+    }
+
+    #[test]
+    fn majority_gates() {
+        for inp in all_inputs(3) {
+            let ones = inp.iter().filter(|&&b| b).count();
+            assert_eq!(GateKind::Maj3.eval(&inp), ones >= 2);
+        }
+        for inp in all_inputs(5) {
+            let ones = inp.iter().filter(|&&b| b).count();
+            assert_eq!(GateKind::Maj5.eval(&inp), ones >= 3);
+        }
+    }
+
+    #[test]
+    fn th4_matches_paper_table2_rows() {
+        // Table 2: Out = TH(In0, In1, S1, S2) with S1 = NOR(In0,In1),
+        // S2 = COPY(S1). The four reachable input rows:
+        assert!(!GateKind::Th4.eval(&[false, false, true, true])); // 00 → 0
+        assert!(GateKind::Th4.eval(&[false, true, false, false])); // 01 → 1
+        assert!(GateKind::Th4.eval(&[true, false, false, false])); // 10 → 1
+        assert!(!GateKind::Th4.eval(&[true, true, false, false])); // 11 → 0
+    }
+
+    #[test]
+    #[should_panic(expected = "takes 2 inputs")]
+    fn wrong_arity_panics() {
+        GateKind::Nor2.eval(&[true]);
+    }
+}

@@ -1,0 +1,27 @@
+//! In-array logic-gate formation (paper §2.1–§2.2).
+//!
+//! A CRAM-PM gate is a resistive voltage divider: input cells are biased
+//! at `V_gate` on their bit-select lines, the output cell's BSL is
+//! grounded, and every participating MTJ is connected to the row's logic
+//! line. The summed current through the (pre-set) output MTJ either
+//! exceeds the critical switching current — flipping the output — or it
+//! does not. Because input resistances only enter through their parallel
+//! combination, every single-step CRAM-PM gate is a **threshold
+//! function** of the number of logic-1 inputs; `V_gate` and the output
+//! pre-set select which threshold function, i.e. which gate.
+//!
+//! [`divider`] solves the electrical side (currents, `V_gate` windows),
+//! [`kind`] defines the gate zoo and its logical semantics, and
+//! [`compound`] builds the paper's multi-step XOR and full-adder
+//! sequences out of single-step gates.
+
+pub mod compound;
+pub mod divider;
+pub mod kind;
+
+pub use compound::{full_adder_steps, xor_steps, CompoundStep, FULL_ADDER_GATES, XOR_GATES};
+pub use divider::{
+    gate_current, gate_step_energy, gate_step_energy_avg, parallel_input_resistance, solve_window,
+    VoltageWindow,
+};
+pub use kind::GateKind;

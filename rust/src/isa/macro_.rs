@@ -1,0 +1,120 @@
+//! Macro-instructions: the high-level programming interface (paper
+//! §3.3). Each macro is a two-dimensional block operation — multi-bit
+//! operands applied across all rows — that the code generator lowers to
+//! a micro-instruction sequence.
+
+use crate::gates::GateKind;
+
+/// The macro-instruction set from §3.3.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MacroInstr {
+    /// `write_pm(x, r, c, n)` — write `bits` into row `row` starting at
+    /// column `col`.
+    WritePm {
+        /// Target row.
+        row: u32,
+        /// Starting column.
+        col: u32,
+        /// Bits to write, LSB first.
+        bits: Vec<bool>,
+    },
+    /// `read_pm` / `readdir_pm` — read `len` bits from row `row`.
+    ReadPm {
+        /// Source row.
+        row: u32,
+        /// Starting column.
+        col: u32,
+        /// Bits to read.
+        len: u32,
+    },
+    /// `preset(c, ncell, val)` — pre-set `ncell` consecutive columns to
+    /// `val` across all rows.
+    Preset {
+        /// Starting column.
+        col: u32,
+        /// Number of columns.
+        ncell: u32,
+        /// Pre-set value.
+        val: bool,
+    },
+    /// Bitwise gate over `ncell`-bit operands, e.g. `nand_pm(ci, cj,
+    /// ck, ncell)`: lowered to `ncell` gate micro-instructions.
+    GatePm {
+        /// Gate type.
+        kind: GateKind,
+        /// Starting column of the output operand.
+        out: u32,
+        /// Starting columns of the input operands.
+        ins: Vec<u32>,
+        /// Operand width in bits.
+        ncell: u32,
+    },
+    /// Bitwise XOR over `ncell`-bit operands — lowered to the 3-step
+    /// sequence of Table 2 per bit (XOR has no single-step gate).
+    XorPm {
+        /// Starting column of the output operand.
+        out: u32,
+        /// Starting column of operand A.
+        a: u32,
+        /// Starting column of operand B.
+        b: u32,
+        /// Operand width in bits.
+        ncell: u32,
+    },
+    /// `add_pm(start, end, result)` — popcount: sum the single-bit cell
+    /// contents in columns `[start, end)` per row into the score
+    /// compartment at `result` (§3.3). Lowered to the reduction tree of
+    /// 1-bit full adders from Fig. 4b by the spatio-temporal scheduler.
+    AddPm {
+        /// First summed column.
+        start: u32,
+        /// One past the last summed column.
+        end: u32,
+        /// Starting column where the count lands.
+        result: u32,
+    },
+    /// Phase 1 of Algorithm 1 for one alignment: compare the pattern to
+    /// the fragment at offset `loc`, producing the match string.
+    MatchPm {
+        /// Alignment offset in characters (`loc` in Algorithm 1).
+        loc: u32,
+    },
+    /// Stage (8): read every row's score out through the score buffer.
+    ReadScore {
+        /// Starting column of the score.
+        col: u32,
+        /// Score width, bits.
+        len: u32,
+    },
+}
+
+impl MacroInstr {
+    /// Short mnemonic (paper notation).
+    pub fn mnemonic(&self) -> String {
+        match self {
+            MacroInstr::WritePm { .. } => "write_pm".into(),
+            MacroInstr::ReadPm { .. } => "read_pm".into(),
+            MacroInstr::Preset { .. } => "preset".into(),
+            MacroInstr::GatePm { kind, .. } => format!("{}_pm", kind.name().to_lowercase()),
+            MacroInstr::XorPm { .. } => "xor_pm".into(),
+            MacroInstr::AddPm { .. } => "add_pm".into(),
+            MacroInstr::MatchPm { .. } => "match_pm".into(),
+            MacroInstr::ReadScore { .. } => "readscore_pm".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnemonics_follow_paper_notation() {
+        assert_eq!(
+            MacroInstr::GatePm { kind: GateKind::Nand2, out: 0, ins: vec![1, 2], ncell: 8 }
+                .mnemonic(),
+            "nand_pm"
+        );
+        assert_eq!(MacroInstr::AddPm { start: 0, end: 4, result: 8 }.mnemonic(), "add_pm");
+    }
+}

@@ -1,0 +1,209 @@
+//! Micro-instructions: the bit-level operations the SMC issues to the
+//! CRAM-PM substrate (paper §3.3 "Code Generation").
+
+use crate::gates::GateKind;
+
+/// The computation stages of the step-accurate model (paper §4,
+/// stages (1)–(8)). Every micro-instruction is tagged with the stage it
+/// belongs to so the simulator can produce the Fig. 6 breakdowns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stage {
+    /// (1) Write patterns into each row.
+    WritePatterns,
+    /// (2) Pre-set output cells for the match phase.
+    PresetMatch,
+    /// (3) Activate bit-lines (match phase).
+    ActivateBitlinesMatch,
+    /// (4) Perform the aligned comparison.
+    Match,
+    /// (5) Pre-set output cells for the score phase.
+    PresetScore,
+    /// (6) Activate bit-lines (score phase).
+    ActivateBitlinesScore,
+    /// (7) Compute the similarity score (adder reduction tree).
+    ComputeScore,
+    /// (8) Read out the score (optional).
+    ReadOut,
+}
+
+impl Stage {
+    /// All stages in paper order.
+    pub const ALL: [Stage; 8] = [
+        Stage::WritePatterns,
+        Stage::PresetMatch,
+        Stage::ActivateBitlinesMatch,
+        Stage::Match,
+        Stage::PresetScore,
+        Stage::ActivateBitlinesScore,
+        Stage::ComputeScore,
+        Stage::ReadOut,
+    ];
+
+    /// Paper stage number (1-based).
+    pub fn number(&self) -> usize {
+        Stage::ALL.iter().position(|s| s == self).unwrap() + 1
+    }
+
+    /// Whether this stage is a preset stage (the Fig. 6 breakdown
+    /// excludes presets and reports them separately).
+    pub fn is_preset(&self) -> bool {
+        matches!(self, Stage::PresetMatch | Stage::PresetScore)
+    }
+
+    /// Whether this stage is bit-line driver activation.
+    pub fn is_bitline(&self) -> bool {
+        matches!(self, Stage::ActivateBitlinesMatch | Stage::ActivateBitlinesScore)
+    }
+}
+
+/// One bit-level operation on the substrate.
+///
+/// Computational variants operate on **all rows in parallel** at the
+/// named columns; memory variants address a single row (§2.4).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MicroInstr {
+    /// Pre-set the cell at `col` (all rows) to `val` using standard
+    /// row-sequential writes — one row at a time (§3.4 "Preset
+    /// Overhead", the slow path the unoptimized designs use).
+    Preset { col: u32, val: bool },
+    /// Gang pre-set: set `col` to `val` in every row simultaneously —
+    /// electrically a row-parallel COPY with all outputs in `col`.
+    GangPreset { col: u32, val: bool },
+    /// Fire `kind` with inputs at `ins[..n_ins]` and output at `out`,
+    /// row-parallel. The output must have been pre-set to
+    /// `kind.preset()` beforehand; codegen guarantees it.
+    Gate { kind: GateKind, out: u32, ins: [u32; 5], n_ins: u8 },
+    /// Memory-mode write of `bits` into row `row` starting at `col`.
+    WriteRow { row: u32, col: u32, bits: Vec<bool> },
+    /// Memory-mode read of `len` bits from row `row` starting at `col`.
+    ReadRow { row: u32, col: u32, len: u32 },
+    /// Read the `len`-bit score at `col` out of every row through the
+    /// peripheral score buffer — one row per buffer slot at a time
+    /// (§3.2 "Data Output").
+    ReadScoreAllRows { col: u32, len: u32 },
+}
+
+impl MicroInstr {
+    /// Build a gate micro-instruction.
+    pub fn gate(kind: GateKind, out: u32, inputs: &[u32]) -> Self {
+        assert_eq!(inputs.len(), kind.n_inputs(), "{kind} arity");
+        assert!(!inputs.contains(&out), "gate output {out} aliases an input: preset would destroy it");
+        let mut ins = [u32::MAX; 5];
+        ins[..inputs.len()].copy_from_slice(inputs);
+        MicroInstr::Gate { kind, out, ins, n_ins: inputs.len() as u8 }
+    }
+
+    /// Input columns of a gate instruction (empty for non-gates).
+    pub fn gate_inputs(&self) -> &[u32] {
+        match self {
+            MicroInstr::Gate { ins, n_ins, .. } => &ins[..*n_ins as usize],
+            _ => &[],
+        }
+    }
+
+    /// Whether this is a row-parallel compute operation (vs memory).
+    pub fn is_compute(&self) -> bool {
+        matches!(self, MicroInstr::Gate { .. } | MicroInstr::GangPreset { .. })
+    }
+}
+
+/// A stage-tagged micro-instruction stream — the unit the SMC executes
+/// and the step-accurate simulator costs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Program {
+    /// The instruction stream, in issue order.
+    pub instrs: Vec<(Stage, MicroInstr)>,
+}
+
+impl Program {
+    /// Empty program.
+    pub fn new() -> Self {
+        Program::default()
+    }
+
+    /// Append an instruction under a stage tag.
+    pub fn push(&mut self, stage: Stage, instr: MicroInstr) {
+        self.instrs.push((stage, instr));
+    }
+
+    /// Append all of `other`.
+    pub fn extend(&mut self, other: Program) {
+        self.instrs.extend(other.instrs);
+    }
+
+    /// Number of instructions.
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// Whether the program is empty.
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Count of instructions matching a predicate.
+    pub fn count_where(&self, f: impl Fn(&MicroInstr) -> bool) -> usize {
+        self.instrs.iter().filter(|(_, i)| f(i)).count()
+    }
+
+    /// Count of gate firings of a given kind.
+    pub fn gate_count(&self, kind: GateKind) -> usize {
+        self.count_where(|i| matches!(i, MicroInstr::Gate { kind: k, .. } if *k == kind))
+    }
+
+    /// Highest column index touched (used to validate against the row
+    /// layout and the §3.4 row-width bound).
+    pub fn max_column(&self) -> Option<u32> {
+        self.instrs
+            .iter()
+            .filter_map(|(_, i)| match i {
+                MicroInstr::Preset { col, .. } | MicroInstr::GangPreset { col, .. } => Some(*col),
+                MicroInstr::Gate { out, ins, n_ins, .. } => {
+                    Some((*out).max(ins[..*n_ins as usize].iter().copied().max().unwrap_or(0)))
+                }
+                MicroInstr::WriteRow { col, bits, .. } => Some(col + bits.len() as u32 - 1),
+                MicroInstr::ReadRow { col, len, .. } | MicroInstr::ReadScoreAllRows { col, len } => {
+                    Some(col + len - 1)
+                }
+            })
+            .max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_numbers_match_paper() {
+        assert_eq!(Stage::WritePatterns.number(), 1);
+        assert_eq!(Stage::Match.number(), 4);
+        assert_eq!(Stage::ReadOut.number(), 8);
+    }
+
+    #[test]
+    fn gate_constructor_checks_arity() {
+        let g = MicroInstr::gate(GateKind::Maj3, 9, &[1, 2, 3]);
+        assert_eq!(g.gate_inputs(), &[1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn gate_constructor_rejects_bad_arity() {
+        MicroInstr::gate(GateKind::Nor2, 9, &[1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "aliases an input")]
+    fn gate_constructor_rejects_aliasing() {
+        MicroInstr::gate(GateKind::Nor2, 2, &[1, 2]);
+    }
+
+    #[test]
+    fn max_column_tracks_all_operands() {
+        let mut p = Program::new();
+        p.push(Stage::PresetMatch, MicroInstr::GangPreset { col: 40, val: false });
+        p.push(Stage::Match, MicroInstr::gate(GateKind::Nor2, 40, &[7, 99]));
+        assert_eq!(p.max_column(), Some(99));
+    }
+}

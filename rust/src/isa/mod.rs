@@ -1,0 +1,22 @@
+//! The CRAM-PM instruction set (paper §3.3).
+//!
+//! Two levels, exactly as the paper defines them:
+//!
+//! * **micro-instructions** ([`micro`]) — bit-level operations the SMC
+//!   issues to the substrate: presets, single gate firings on named
+//!   columns, row reads/writes, score read-outs. Computational micros
+//!   are *block* operations: they fire on the named columns of **every
+//!   row** simultaneously (§2.4 row-level parallelism).
+//! * **macro-instructions** ([`macro_`]) — the programming interface:
+//!   multi-bit operands (`nand_pm`, `add_pm`, `match_pm`, `write_pm`,
+//!   `preset` variants, …) that the code generator ([`codegen`]) lowers
+//!   into micro sequences, including the spatio-temporal scheduling of
+//!   the `add_pm` reduction tree and of output-cell presets (§2.6).
+
+pub mod codegen;
+pub mod macro_;
+pub mod micro;
+
+pub use codegen::{CodeGen, CodegenStats, PresetMode};
+pub use macro_::MacroInstr;
+pub use micro::{MicroInstr, Program, Stage};

@@ -1,0 +1,58 @@
+//! # CRAM-PM — Computational RAM for String Matching at Scale
+//!
+//! A full-system reproduction of *"Computational RAM to Accelerate String
+//! Matching at Scale"* (Chowdhury et al., 2018): a spintronic
+//! processing-in-memory substrate in which every MRAM cell can be
+//! reconfigured as an input or output of a logic gate formed inside the
+//! array, and the row-parallel SIMD execution model it enables for
+//! large-scale pattern matching.
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — a Pallas kernel (`python/compile/kernels/`) modelling the
+//!   array's bit-level compare + popcount dataflow,
+//! * **L2** — a JAX model (`python/compile/model.py`) wrapping the kernel
+//!   into the array-level score computation, AOT-lowered to HLO text,
+//! * **L3** — this crate: device/technology models, the gate-level array
+//!   simulator, the SMC memory controller, the step-accurate timing and
+//!   energy engine, pattern schedulers, baselines, the PJRT runtime that
+//!   executes the AOT artifacts on the hot path, and the async
+//!   coordinator that ties it all together.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! model once, and the `cram-pm` binary is self-contained afterwards.
+//!
+//! ## Module map
+//!
+//! | module | paper section | contents |
+//! |---|---|---|
+//! | [`tech`] | §4 Table 3, §3.4, §5.5 | MTJ device + periphery + interconnect models, process variation |
+//! | [`gates`] | §2.1–2.2 | resistive-divider gate formation, V_gate windows, compound XOR/adder sequences |
+//! | [`isa`] | §3.3 | micro/macro instructions and code generation |
+//! | [`array`] | §2.3–2.4, §3.1 | bit-level CRAM-PM array with row-parallel semantics |
+//! | [`smc`] | §3.3 | memory controller: decode LUT, issue, cycle allocation |
+//! | [`sim`] | §4 stages (1)–(8) | step-accurate timing/energy engine, per-stage breakdowns |
+//! | [`scheduler`] | §5 | Naive / Oracular / *Opt pattern schedulers |
+//! | [`baselines`] | §4–5 | GPU (BWA), NMP/NMP-Hyp (HMC), Ambit, Pinatubo, CPU reference |
+//! | [`bench_apps`] | §4 Table 4 | DNA, BitCount, StringMatch, RC4, WordCount workloads |
+//! | [`runtime`] | — | PJRT client: load + execute `artifacts/*.hlo.txt` |
+//! | [`coordinator`] | §2.5 | async serving loop: pattern pool → arrays → scores |
+//! | [`experiments`] | §5 | one driver per paper table/figure |
+
+pub mod array;
+pub mod baselines;
+pub mod bench_apps;
+pub mod coordinator;
+pub mod dna;
+pub mod experiments;
+pub mod gates;
+pub mod isa;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod smc;
+pub mod tech;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,168 @@
+//! `cram-pm` — command-line interface to the CRAM-PM reproduction.
+//!
+//! ```text
+//! cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|tables|all>
+//! cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N]
+//!             [--pat-chars N] [--naive] [--seed S] [--error-rate F]
+//! cram-pm info
+//! ```
+//!
+//! (Arguments are hand-parsed: the offline build image vendors no clap.)
+
+use cram_pm::bench_apps::dna::DnaWorkload;
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::{experiments, Result};
+use std::collections::HashMap;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|tables|all>\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n  cram-pm info"
+    );
+    std::process::exit(2);
+}
+
+/// Parse `--key value` pairs and bare flags from argv.
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut kv = HashMap::new();
+    let mut flags = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                kv.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        } else {
+            flags.push(a.clone());
+            i += 1;
+        }
+    }
+    (kv, flags)
+}
+
+fn cmd_experiment(which: &str) {
+    match which {
+        "tables" => experiments::tables::run(),
+        "fig5" => experiments::fig5_designs::run(),
+        "fig6" => experiments::fig6_breakdown::run(),
+        "fig7" => experiments::fig7_pattern_length::run(),
+        "fig8" => experiments::fig8_technology::run(),
+        "fig9" | "fig10" | "fig9-10" => experiments::fig9_10_nmp::run(),
+        "fig11" => experiments::fig11_gates::run(),
+        "row-width" => experiments::row_width::run(),
+        "variation" => experiments::variation::run(),
+        "ablation" => experiments::ablation::run(),
+        "scheduling" => experiments::scheduling::run(),
+        "all" => experiments::run_all(),
+        other => {
+            eprintln!("unknown experiment: {other}");
+            usage();
+        }
+    }
+}
+
+fn cmd_run(kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
+    let get = |k: &str, d: usize| kv.get(k).map(|v| v.parse().unwrap_or(d)).unwrap_or(d);
+    let engine = match kv.get("engine").map(|s| s.as_str()).unwrap_or("xla") {
+        "xla" => EngineKind::Xla,
+        "bitsim" => EngineKind::Bitsim,
+        "cpu" => EngineKind::Cpu,
+        other => {
+            eprintln!("unknown engine: {other}");
+            usage();
+        }
+    };
+    let n_patterns = get("patterns", 200);
+    let ref_chars = get("ref-chars", 65_536);
+    let pat_chars = get("pat-chars", 16);
+    let frag_chars = get("frag-chars", 64);
+    let seed = get("seed", 42) as u64;
+    let error_rate: f64 = kv.get("error-rate").map(|v| v.parse().unwrap_or(0.0)).unwrap_or(0.0);
+    let naive = flags.iter().any(|f| f == "naive");
+
+    println!(
+        "generating workload: {ref_chars}-char reference, {n_patterns} patterns × {pat_chars} chars \
+         (error rate {error_rate})"
+    );
+    let w = DnaWorkload::generate(ref_chars, n_patterns, pat_chars, error_rate, seed);
+    let fragments = w.fragments(frag_chars, pat_chars);
+    println!("folded into {} fragments of {frag_chars} chars", fragments.len());
+
+    let mut cfg = CoordinatorConfig::xla("dna_small", frag_chars, pat_chars);
+    cfg.engine = engine;
+    if naive {
+        cfg.oracular = None;
+    }
+    if let Some(dir) = kv.get("artifacts") {
+        cfg.artifacts_dir = dir.into();
+    }
+    let coord = Coordinator::new(cfg, fragments)?;
+    let (results, metrics) = coord.run(&w.patterns)?;
+
+    let perfect = results
+        .iter()
+        .filter(|r| r.best.map_or(false, |b| b.score == pat_chars))
+        .count();
+    println!("\n── run report ──────────────────────────────────────");
+    println!("engine            {}", metrics.engine);
+    println!("patterns          {}", metrics.patterns);
+    println!("matched           {} ({} with perfect score)", metrics.matched, perfect);
+    println!("engine passes     {}", metrics.passes);
+    println!("mean candidates   {:.1} rows/pattern", metrics.mean_candidates);
+    println!(
+        "host wall         {:.3} s ({:.0} patterns/s)",
+        metrics.wall_seconds, metrics.host_rate
+    );
+    println!(
+        "substrate model   {:.3e} s, {:.3e} J, {:.3e} patterns/s",
+        metrics.hw_seconds, metrics.hw_energy, metrics.hw_match_rate
+    );
+    Ok(())
+}
+
+fn cmd_info() {
+    println!(
+        "cram-pm — reproduction of \"Computational RAM to Accelerate String Matching at Scale\""
+    );
+    println!("\nthree-layer stack:");
+    println!("  L1  python/compile/kernels/match.py  (Pallas, interpret=True)");
+    println!("  L2  python/compile/model.py          (JAX, AOT → artifacts/*.hlo.txt)");
+    println!("  L3  this binary                       (coordinator + step-accurate simulator)");
+    match cram_pm::runtime::Runtime::load(std::path::Path::new("artifacts")) {
+        Ok(rt) => {
+            println!("\nartifacts loaded on {}:", rt.platform());
+            for name in rt.variant_names() {
+                let v = rt.variant(name).unwrap();
+                println!(
+                    "  {name}: {} rows × {} chars, {}-char patterns ({} alignments)",
+                    v.rows,
+                    v.frag_chars,
+                    v.pat_chars,
+                    v.n_alignments()
+                );
+            }
+        }
+        Err(e) => println!("\nartifacts not loaded ({e}); run `make artifacts`"),
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("experiment") => {
+            let which = args.get(1).map(|s| s.as_str()).unwrap_or("all");
+            cmd_experiment(which);
+        }
+        Some("run") => {
+            let (kv, flags) = parse_flags(&args[1..]);
+            cmd_run(&kv, &flags)?;
+        }
+        Some("info") => cmd_info(),
+        _ => usage(),
+    }
+    Ok(())
+}

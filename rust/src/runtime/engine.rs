@@ -1,0 +1,202 @@
+//! The PJRT execution engine: HLO text → compiled executables →
+//! score computation on the hot path.
+
+use crate::runtime::{Manifest, Variant};
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Output of one executable invocation (one array pass).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PassOutput {
+    /// Row-major scores, `rows × n_alignments`.
+    pub scores: Vec<i32>,
+    /// Per-row best alignment offset.
+    pub best_loc: Vec<i32>,
+    /// Per-row best score.
+    pub best_score: Vec<i32>,
+    /// Alignments per row (the score row stride).
+    pub n_alignments: usize,
+}
+
+impl PassOutput {
+    /// Score of `row` at alignment `loc`.
+    pub fn score(&self, row: usize, loc: usize) -> i32 {
+        self.scores[row * self.n_alignments + loc]
+    }
+}
+
+struct LoadedVariant {
+    variant: Variant,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime: a PJRT CPU client plus one compiled executable per
+/// manifest variant.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    variants: HashMap<String, LoadedVariant>,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` and compile it on the CPU client.
+    ///
+    /// HLO **text** is the interchange format (see `aot.py`): the text
+    /// parser reassigns instruction ids, sidestepping the 64-bit-id
+    /// protos jax ≥ 0.5 emits that xla_extension 0.5.1 rejects.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let mut variants = HashMap::new();
+        for v in &manifest.variants {
+            let path = manifest.hlo_path(v);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e}", v.name))?;
+            variants.insert(v.name.clone(), LoadedVariant { variant: v.clone(), exe });
+        }
+        Ok(Runtime { client, variants })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of the loaded variants.
+    pub fn variant_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.variants.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Shape metadata of a variant.
+    pub fn variant(&self, name: &str) -> Option<&Variant> {
+        self.variants.get(name).map(|lv| &lv.variant)
+    }
+
+    /// Execute one array pass: `frag_codes` is row-major
+    /// `rows × frag_chars` (2-bit codes as i32), `pat_codes` is
+    /// `pat_chars` long. Shorter inputs are zero-padded to the
+    /// variant's shape ('A'-padding; callers mask padded rows).
+    pub fn execute(&self, name: &str, frag_codes: &[i32], pat_codes: &[i32]) -> Result<PassOutput> {
+        let lv = self
+            .variants
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown variant {name} (have {:?})", self.variant_names()))?;
+        let v = &lv.variant;
+        let want = v.rows * v.frag_chars;
+        if frag_codes.len() > want {
+            anyhow::bail!("fragment buffer {} exceeds variant capacity {want}", frag_codes.len());
+        }
+        if pat_codes.len() != v.pat_chars {
+            anyhow::bail!("pattern length {} != variant pat_chars {}", pat_codes.len(), v.pat_chars);
+        }
+
+        let mut frag = frag_codes.to_vec();
+        frag.resize(want, 0);
+        let frag_lit = xla::Literal::vec1(&frag)
+            .reshape(&[v.rows as i64, v.frag_chars as i64])
+            .map_err(|e| anyhow!("reshape fragment: {e}"))?;
+        let pat_lit = xla::Literal::vec1(pat_codes);
+
+        let result = lv
+            .exe
+            .execute::<xla::Literal>(&[frag_lit, pat_lit])
+            .map_err(|e| anyhow!("execute {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        // aot.py lowers with return_tuple=True: (scores, best_loc, best_score).
+        let (scores, best_loc, best_score) =
+            result.to_tuple3().map_err(|e| anyhow!("untuple: {e}"))?;
+        Ok(PassOutput {
+            scores: scores.to_vec::<i32>().map_err(|e| anyhow!("scores: {e}"))?,
+            best_loc: best_loc.to_vec::<i32>().map_err(|e| anyhow!("best_loc: {e}"))?,
+            best_score: best_score.to_vec::<i32>().map_err(|e| anyhow!("best_score: {e}"))?,
+            n_alignments: v.n_alignments(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dna::{encode, score_profile};
+    use crate::util::Rng;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<Runtime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn loads_all_manifest_variants() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.variant_names().contains(&"dna_small"));
+        assert_eq!(rt.variant("dna_small").unwrap().rows, 256);
+    }
+
+    /// The cross-layer correctness keystone: the AOT'd XLA artifact
+    /// (L1 Pallas kernel through L2 JAX model) agrees with the rust
+    /// CPU oracle on random data.
+    #[test]
+    fn xla_scores_match_cpu_oracle() {
+        let Some(rt) = runtime() else { return };
+        let v = rt.variant("dna_small").unwrap().clone();
+        let mut rng = Rng::new(99);
+        let frags: Vec<Vec<u8>> = (0..v.rows).map(|_| encode(&rng.dna(v.frag_chars))).collect();
+        let pattern = encode(&rng.dna(v.pat_chars));
+
+        let frag_i32: Vec<i32> =
+            frags.iter().flat_map(|f| f.iter().map(|&c| c as i32)).collect();
+        let pat_i32: Vec<i32> = pattern.iter().map(|&c| c as i32).collect();
+        let out = rt.execute("dna_small", &frag_i32, &pat_i32).unwrap();
+
+        for (r, frag) in frags.iter().enumerate().step_by(17) {
+            let want = score_profile(frag, &pattern);
+            for (loc, &w) in want.iter().enumerate() {
+                assert_eq!(out.score(r, loc), w as i32, "row {r} loc {loc}");
+            }
+            let best = want.iter().copied().max().unwrap() as i32;
+            assert_eq!(out.best_score[r], best, "row {r} best");
+            assert_eq!(want[out.best_loc[r] as usize] as i32, best, "row {r} best loc");
+        }
+    }
+
+    #[test]
+    fn short_input_is_padded() {
+        let Some(rt) = runtime() else { return };
+        let v = rt.variant("dna_small").unwrap().clone();
+        // Only 2 rows provided; the rest pad to 'A'*frag.
+        let frag_i32 = vec![3i32; 2 * v.frag_chars];
+        let pat_i32 = vec![3i32; v.pat_chars];
+        let out = rt.execute("dna_small", &frag_i32, &pat_i32).unwrap();
+        assert_eq!(out.best_score[0], v.pat_chars as i32);
+        assert_eq!(out.best_score[2], 0, "padded row must score zero vs all-T pattern");
+    }
+
+    #[test]
+    fn wrong_pattern_length_rejected() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("dna_small", &[0; 64], &[0; 3]).is_err());
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("nope", &[], &[]).is_err());
+    }
+}

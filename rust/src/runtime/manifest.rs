@@ -1,0 +1,126 @@
+//! Artifact manifest: the whitespace-separated variant table written
+//! by `python/compile/aot.py` (`manifest.txt`).
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::{Path, PathBuf};
+
+/// One exported shape variant of the L2 model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Variant {
+    /// Variant name (e.g. `dna_small`).
+    pub name: String,
+    /// Rows per executable invocation.
+    pub rows: usize,
+    /// Fragment length, characters.
+    pub frag_chars: usize,
+    /// Pattern length, characters.
+    pub pat_chars: usize,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+}
+
+impl Variant {
+    /// Alignments per row this variant computes.
+    pub fn n_alignments(&self) -> usize {
+        self.frag_chars - self.pat_chars + 1
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// Artifact directory the manifest came from.
+    pub dir: PathBuf,
+    /// Exported variants.
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`. Format per line:
+    /// `name rows frag_chars pat_chars file`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let mut variants = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 5 {
+                bail!("manifest line {}: expected 5 fields, got {}", lineno + 1, f.len());
+            }
+            let v = Variant {
+                name: f[0].to_string(),
+                rows: f[1].parse().context("rows")?,
+                frag_chars: f[2].parse().context("frag_chars")?,
+                pat_chars: f[3].parse().context("pat_chars")?,
+                file: f[4].to_string(),
+            };
+            if v.pat_chars > v.frag_chars || v.rows == 0 {
+                bail!("manifest line {}: inconsistent variant {v:?}", lineno + 1);
+            }
+            variants.push(v);
+        }
+        if variants.is_empty() {
+            bail!("manifest {} lists no variants", path.display());
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    /// Find a variant by name.
+    pub fn variant(&self, name: &str) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// Absolute path of a variant's HLO file.
+    pub fn hlo_path(&self, v: &Variant) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(content: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("crampm-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), content).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_well_formed_manifest() {
+        let dir = write_manifest("a 256 64 16 a.hlo.txt\nb 512 16 16 b.hlo.txt\n");
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.variants.len(), 2);
+        let a = m.variant("a").unwrap();
+        assert_eq!((a.rows, a.frag_chars, a.pat_chars), (256, 64, 16));
+        assert_eq!(a.n_alignments(), 49);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let dir = write_manifest("bad line here\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_inconsistent_variant() {
+        let dir = write_manifest("x 256 16 64 x.hlo.txt\n"); // pat > frag
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load and execute the AOT artifacts (`artifacts/
+//! *.hlo.txt`) produced by `python/compile/aot.py`.
+//!
+//! This is the only place the stack touches XLA at runtime. Python is
+//! never on the request path: `make artifacts` lowers the L2 model
+//! once, and this module compiles the HLO text onto the PJRT CPU
+//! client at startup (one executable per shape variant) and serves
+//! score computations from then on.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{PassOutput, Runtime};
+pub use manifest::{Manifest, Variant};

@@ -1,0 +1,65 @@
+//! Pattern scheduling (paper §5): which pattern goes to which row of
+//! which array for each pass of Algorithm 1.
+//!
+//! * [`NaiveScheduler`] — one pattern at a time, broadcast to every row
+//!   of every array: maximal redundant computation, throughput limited
+//!   to one pattern per pass.
+//! * [`OracularScheduler`] — perfect-information scheduling: a pattern
+//!   is only sent to rows whose fragment can plausibly produce a high
+//!   similarity score. Implemented the way the paper hints
+//!   ("hash-based filtering is not uncommon"): a k-mer seed index over
+//!   the fragments. Many patterns share one pass, each occupying only
+//!   its candidate rows.
+//!
+//! The *Opt* variants change preset scheduling, not pattern
+//! scheduling — they are selected via
+//! [`crate::isa::PresetMode`] in the system configuration.
+//!
+//! [`throughput`] turns pass costs + scheduler statistics into the
+//! match-rate / compute-efficiency numbers of Figs. 5 and 7–10.
+
+pub mod naive;
+pub mod oracular;
+pub mod throughput;
+
+pub use naive::NaiveScheduler;
+pub use oracular::{OracularScheduler, OracularStats};
+pub use throughput::{RateReport, ThroughputModel};
+
+/// A row address across the substrate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RowAddr {
+    /// Array index.
+    pub array: u32,
+    /// Row within the array.
+    pub row: u32,
+}
+
+/// One scheduled pass: for each occupied row, which pattern it matches.
+/// Rows not present sit idle (their fragments still burn compute in
+/// lock-step, but produce ignored scores).
+#[derive(Debug, Clone, Default)]
+pub struct Pass {
+    /// `(row, pattern id)` assignments; at most one pattern per row.
+    pub assignments: Vec<(RowAddr, usize)>,
+}
+
+impl Pass {
+    /// Number of distinct patterns in this pass.
+    pub fn distinct_patterns(&self) -> usize {
+        let mut ids: Vec<usize> = self.assignments.iter().map(|&(_, p)| p).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+}
+
+/// A pattern scheduler: partitions a pattern pool into passes.
+pub trait PatternScheduler {
+    /// Schedule `n_patterns` patterns (identified by index) onto the
+    /// substrate. Every pattern must appear in at least one pass.
+    fn schedule(&self, n_patterns: usize) -> Vec<Pass>;
+
+    /// Scheduler name for reports.
+    fn name(&self) -> &'static str;
+}

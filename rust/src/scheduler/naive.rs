@@ -1,0 +1,72 @@
+//! The Naive design (paper §5): "take one pattern and blindly copy it
+//! to every row of all arrays to perform similarity search".
+
+use crate::scheduler::{Pass, PatternScheduler, RowAddr};
+
+/// Broadcast scheduler: one pass per pattern, pattern occupying every
+/// row of every array.
+#[derive(Debug, Clone, Copy)]
+pub struct NaiveScheduler {
+    /// Arrays in the substrate.
+    pub arrays: usize,
+    /// Rows per array.
+    pub rows: usize,
+}
+
+impl NaiveScheduler {
+    /// New broadcast scheduler for the given substrate shape.
+    pub fn new(arrays: usize, rows: usize) -> Self {
+        NaiveScheduler { arrays, rows }
+    }
+}
+
+impl PatternScheduler for NaiveScheduler {
+    fn schedule(&self, n_patterns: usize) -> Vec<Pass> {
+        (0..n_patterns)
+            .map(|p| {
+                let mut pass = Pass::default();
+                pass.assignments.reserve(self.arrays * self.rows);
+                for a in 0..self.arrays as u32 {
+                    for r in 0..self.rows as u32 {
+                        pass.assignments.push((RowAddr { array: a, row: r }, p));
+                    }
+                }
+                pass
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "Naive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_pass_per_pattern_full_broadcast() {
+        let s = NaiveScheduler::new(3, 8);
+        let passes = s.schedule(5);
+        assert_eq!(passes.len(), 5);
+        for (p, pass) in passes.iter().enumerate() {
+            assert_eq!(pass.assignments.len(), 24);
+            assert!(pass.assignments.iter().all(|&(_, pat)| pat == p));
+            assert_eq!(pass.distinct_patterns(), 1);
+        }
+    }
+
+    #[test]
+    fn every_row_occupied_exactly_once_per_pass() {
+        let s = NaiveScheduler::new(2, 4);
+        for pass in s.schedule(2) {
+            let mut rows: Vec<RowAddr> = pass.assignments.iter().map(|&(r, _)| r).collect();
+            rows.sort_unstable();
+            let before = rows.len();
+            rows.dedup();
+            assert_eq!(rows.len(), before, "duplicate row assignment");
+            assert_eq!(rows.len(), 8);
+        }
+    }
+}

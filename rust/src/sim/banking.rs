@@ -1,0 +1,132 @@
+//! Banked array organization (paper §4 "Array Size & Organization").
+//!
+//! Fabricating a 24 Mb monolithic CRAM-PM array may exceed process
+//! maturity; commercial MRAM (the paper cites EverSpin's 256 Mb part =
+//! 8 × 32 Mb banks) distributes capacity across banks. For CRAM-PM:
+//!
+//! * each bank is an independent array holding a shorter slice of the
+//!   reference, activated **in parallel** — "a clever data layout,
+//!   operation scheduling and parallel activation of banks can mask
+//!   the time overhead";
+//! * the cost is replicated control hardware per bank — "the energy
+//!   and area overhead would be largely due to replication of control
+//!   hardware across banks".
+//!
+//! This module models that trade-off on top of [`DnaPassModel`].
+
+use crate::sim::{DnaPassModel, SystemConfig};
+
+/// A banked variant of a system configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BankedConfig {
+    /// The underlying (monolithic) configuration.
+    pub base: SystemConfig,
+    /// Banks per array (1 = monolithic).
+    pub banks: usize,
+    /// Fractional energy overhead of replicating the SMC/periphery
+    /// control per extra bank (EverSpin-style parts sit in the few-%
+    /// per bank range).
+    pub control_energy_overhead: f64,
+}
+
+/// Outcome of the banking trade-off for one configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BankedCost {
+    /// Banks evaluated.
+    pub banks: usize,
+    /// Whole-pass latency with all banks active in parallel, s.
+    pub latency: f64,
+    /// Whole-pass energy across banks (incl. control replication), J.
+    pub energy: f64,
+}
+
+impl BankedConfig {
+    /// Monolithic baseline.
+    pub fn monolithic(base: SystemConfig) -> Self {
+        BankedConfig { base, banks: 1, control_energy_overhead: 0.03 }
+    }
+
+    /// With a given bank count.
+    pub fn with_banks(base: SystemConfig, banks: usize) -> Self {
+        assert!(banks >= 1 && base.rows % banks == 0, "banks must divide rows");
+        BankedConfig { base, banks, control_energy_overhead: 0.03 }
+    }
+
+    /// Cost one full pass over the same resident data, distributed
+    /// across `banks` parallel banks of `rows/banks` rows each.
+    ///
+    /// Latency: banks run in lock-step in parallel, so pass latency is
+    /// a *single bank's* latency — row-serial operations (standard
+    /// presets, score-buffer drains) get `banks`× shorter, which is
+    /// the §4 "mask the time overhead" effect. Energy: the same cell
+    /// work plus control replication.
+    pub fn pass_cost(&self) -> BankedCost {
+        let mut bank_cfg = self.base;
+        bank_cfg.rows = self.base.rows / self.banks;
+        let per_bank = DnaPassModel::new(bank_cfg).pass_cost();
+        let replication = 1.0 + self.control_energy_overhead * (self.banks as f64 - 1.0);
+        BankedCost {
+            banks: self.banks,
+            latency: per_bank.masked_latency,
+            energy: per_bank.energy * self.banks as f64 * replication,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::PresetMode;
+    use crate::tech::Technology;
+
+    fn base() -> SystemConfig {
+        let mut cfg = SystemConfig::small(Technology::NearTerm, PresetMode::Standard);
+        cfg.rows = 4096;
+        cfg
+    }
+
+    #[test]
+    fn banking_masks_row_serial_latency() {
+        // Unoptimized designs are dominated by row-serial presets:
+        // 8 banks ⇒ ≈8× faster passes.
+        let mono = BankedConfig::monolithic(base()).pass_cost();
+        let banked = BankedConfig::with_banks(base(), 8).pass_cost();
+        let speedup = mono.latency / banked.latency;
+        assert!((6.0..9.0).contains(&speedup), "banked speedup {speedup}");
+    }
+
+    #[test]
+    fn banking_costs_control_replication_energy() {
+        let mono = BankedConfig::monolithic(base()).pass_cost();
+        let banked = BankedConfig::with_banks(base(), 8).pass_cost();
+        let overhead = banked.energy / mono.energy;
+        assert!(overhead > 1.1, "8 banks must pay replication energy ({overhead})");
+        assert!(overhead < 1.6, "replication overhead {overhead} implausible");
+    }
+
+    #[test]
+    fn gang_mode_gains_less_from_banking() {
+        // With gang presets the pass is no longer row-serial-bound, so
+        // banking's latency win shrinks — the ablation Fig. in
+        // `experiments::ablation` shows the crossover.
+        let mut gang = base();
+        gang.preset_mode = PresetMode::Gang;
+        let mono = BankedConfig::monolithic(gang).pass_cost();
+        let banked = BankedConfig::with_banks(gang, 8).pass_cost();
+        let gang_speedup = mono.latency / banked.latency;
+
+        let std_mono = BankedConfig::monolithic(base()).pass_cost();
+        let std_banked = BankedConfig::with_banks(base(), 8).pass_cost();
+        let std_speedup = std_mono.latency / std_banked.latency;
+        assert!(
+            gang_speedup < std_speedup,
+            "gang {gang_speedup} should gain less than standard {std_speedup}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "banks must divide rows")]
+    fn banks_must_divide_rows() {
+        BankedConfig::with_banks(base(), 3);
+    }
+}

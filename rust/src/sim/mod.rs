@@ -1,0 +1,21 @@
+//! Step-accurate simulation (paper §4 "Simulation Infrastructure").
+//!
+//! Mirrors the paper's C++ step-accurate simulator: every
+//! micro-instruction of the pattern-matching pipeline is allocated its
+//! latency and energy (device + periphery + SMC), accumulated per
+//! stage (1)–(8) so that the Fig. 6 breakdowns, the Fig. 5/7/8
+//! throughput-energy characterizations, and the Fig. 9/10 cross-substrate
+//! comparisons can all be regenerated from the same engine.
+//!
+//! Because every row computes in lock-step, the execution time of a
+//! pass on an array equals the execution time of any single row's
+//! program, while energy sums over rows — exactly the paper's
+//! accounting. The engine therefore costs the (row-level) program once
+//! per alignment and scales energy by geometry.
+
+pub mod banking;
+pub mod engine;
+pub mod stats;
+
+pub use engine::{DnaPassModel, PassCost, Simulator, SystemConfig};
+pub use stats::StageBreakdown;

@@ -1,0 +1,163 @@
+//! Per-stage latency/energy accounting (paper Fig. 6).
+
+use crate::isa::Stage;
+use crate::smc::CostItem;
+
+/// Accumulated latency and energy per paper stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageBreakdown {
+    lat: [f64; 8],
+    en: [f64; 8],
+}
+
+impl StageBreakdown {
+    /// Empty breakdown.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one cost item.
+    pub fn add(&mut self, item: CostItem) {
+        let i = item.stage.number() - 1;
+        self.lat[i] += item.latency;
+        self.en[i] += item.energy;
+    }
+
+    /// Add another breakdown.
+    pub fn merge(&mut self, other: &StageBreakdown) {
+        for i in 0..8 {
+            self.lat[i] += other.lat[i];
+            self.en[i] += other.en[i];
+        }
+    }
+
+    /// Add another breakdown `n` times (e.g. per-alignment cost
+    /// repeated over all alignments).
+    pub fn merge_scaled(&mut self, other: &StageBreakdown, n: f64) {
+        for i in 0..8 {
+            self.lat[i] += other.lat[i] * n;
+            self.en[i] += other.en[i] * n;
+        }
+    }
+
+    /// Latency of one stage, s.
+    pub fn latency(&self, stage: Stage) -> f64 {
+        self.lat[stage.number() - 1]
+    }
+
+    /// Energy of one stage, J.
+    pub fn energy(&self, stage: Stage) -> f64 {
+        self.en[stage.number() - 1]
+    }
+
+    /// Total latency, s.
+    pub fn total_latency(&self) -> f64 {
+        self.lat.iter().sum()
+    }
+
+    /// Total energy, J.
+    pub fn total_energy(&self) -> f64 {
+        self.en.iter().sum()
+    }
+
+    /// Preset share of total latency (paper §5.1: 97.25 % for the
+    /// unoptimized design).
+    pub fn preset_latency_share(&self) -> f64 {
+        let p: f64 = Stage::ALL.iter().filter(|s| s.is_preset()).map(|&s| self.latency(s)).sum();
+        p / self.total_latency()
+    }
+
+    /// Preset share of total energy (paper §5.1: 43.86 %).
+    pub fn preset_energy_share(&self) -> f64 {
+        let p: f64 = Stage::ALL.iter().filter(|s| s.is_preset()).map(|&s| self.energy(s)).sum();
+        p / self.total_energy()
+    }
+
+    /// Bit-line driver share of total latency (paper: ≈2.7 %).
+    pub fn bitline_latency_share(&self) -> f64 {
+        let p: f64 = Stage::ALL.iter().filter(|s| s.is_bitline()).map(|&s| self.latency(s)).sum();
+        p / self.total_latency()
+    }
+
+    /// Bit-line driver share of total energy (paper: <1 %).
+    pub fn bitline_energy_share(&self) -> f64 {
+        let p: f64 = Stage::ALL.iter().filter(|s| s.is_bitline()).map(|&s| self.energy(s)).sum();
+        p / self.total_energy()
+    }
+
+    /// The Fig. 6 view: per-stage shares **excluding** preset and
+    /// bit-line stages ("The breakdowns in Fig.6 do not contain preset
+    /// and BL driver related overheads"). Returns `(stage, latency
+    /// share, energy share)` rows.
+    pub fn fig6_view(&self) -> Vec<(Stage, f64, f64)> {
+        let stages: Vec<Stage> = Stage::ALL
+            .iter()
+            .copied()
+            .filter(|s| !s.is_preset() && !s.is_bitline())
+            .collect();
+        let tot_l: f64 = stages.iter().map(|&s| self.latency(s)).sum();
+        let tot_e: f64 = stages.iter().map(|&s| self.energy(s)).sum();
+        stages
+            .iter()
+            .map(|&s| {
+                (
+                    s,
+                    if tot_l > 0.0 { self.latency(s) / tot_l } else { 0.0 },
+                    if tot_e > 0.0 { self.energy(s) / tot_e } else { 0.0 },
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(stage: Stage, lat: f64, en: f64) -> CostItem {
+        CostItem { stage, latency: lat, energy: en }
+    }
+
+    #[test]
+    fn accumulates_per_stage() {
+        let mut b = StageBreakdown::new();
+        b.add(item(Stage::Match, 1e-9, 2e-12));
+        b.add(item(Stage::Match, 1e-9, 2e-12));
+        b.add(item(Stage::ReadOut, 5e-9, 1e-12));
+        assert!((b.latency(Stage::Match) - 2e-9).abs() < 1e-18);
+        assert!((b.total_energy() - 5e-12).abs() < 1e-20);
+    }
+
+    #[test]
+    fn merge_scaled_multiplies() {
+        let mut per_iter = StageBreakdown::new();
+        per_iter.add(item(Stage::ComputeScore, 1e-9, 1e-12));
+        let mut total = StageBreakdown::new();
+        total.merge_scaled(&per_iter, 100.0);
+        assert!((total.latency(Stage::ComputeScore) - 1e-7).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fig6_view_excludes_presets_and_bitlines() {
+        let mut b = StageBreakdown::new();
+        b.add(item(Stage::PresetMatch, 100e-9, 100e-12));
+        b.add(item(Stage::ActivateBitlinesMatch, 1e-9, 1e-12));
+        b.add(item(Stage::Match, 3e-9, 3e-12));
+        b.add(item(Stage::ComputeScore, 6e-9, 6e-12));
+        let rows = b.fig6_view();
+        assert!(rows.iter().all(|(s, _, _)| !s.is_preset() && !s.is_bitline()));
+        let match_row = rows.iter().find(|(s, _, _)| *s == Stage::Match).unwrap();
+        assert!((match_row.1 - 3.0 / 9.0).abs() < 1e-12);
+        // Shares sum to 1 over the included stages.
+        let sum: f64 = rows.iter().map(|r| r.1).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn preset_share_computation() {
+        let mut b = StageBreakdown::new();
+        b.add(item(Stage::PresetMatch, 97e-9, 0.0));
+        b.add(item(Stage::Match, 3e-9, 0.0));
+        assert!((b.preset_latency_share() - 0.97).abs() < 1e-9);
+    }
+}

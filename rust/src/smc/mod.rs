@@ -1,0 +1,14 @@
+//! The CRAM-PM memory controller, SMC (paper §3.3).
+//!
+//! The SMC orchestrates computation in the substrate: it decodes
+//! micro-instructions through a look-up table that maps each bit-level
+//! operation to its bias voltage `V_gate` and output pre-set value,
+//! drives the column periphery, and allocates each micro-instruction a
+//! cycle budget that covers the operation itself plus peripheral and
+//! scheduling overheads. This module is the *cost* side of the SMC —
+//! the functional side is [`crate::array::CramArray`]; both consume the
+//! same [`crate::isa::Program`] streams.
+
+pub mod controller;
+
+pub use controller::{ArrayGeometry, CostItem, DecodeLut, LutEntry, SmcConfig, SmcController};

@@ -1,0 +1,26 @@
+//! Technology models: MTJ devices, array periphery, logic-line
+//! interconnect, and process variation (paper §4 Table 3, §3.4, §5.5).
+//!
+//! All electrical quantities are SI (`V`, `A`, `Ω`, `s`, `J`) internally;
+//! constructors and display helpers accept/emit the paper's units
+//! (µA, kΩ, ns, pJ) to stay cross-checkable against Table 3.
+
+pub mod interconnect;
+pub mod mtj;
+pub mod periphery;
+pub mod variation;
+
+pub use interconnect::{InterconnectModel, RowWidthAnalysis};
+pub use mtj::{MtjParams, Technology};
+pub use periphery::PeripheryModel;
+pub use variation::{VariationAnalysis, VariationReport};
+
+/// Seconds → nanoseconds.
+pub fn s_to_ns(s: f64) -> f64 {
+    s * 1e9
+}
+
+/// Joules → picojoules.
+pub fn j_to_pj(j: f64) -> f64 {
+    j * 1e12
+}

@@ -1,0 +1,196 @@
+//! Process-variation analysis (paper §5.5).
+//!
+//! MTJ devices being a young technology, the critical switching current
+//! varies die-to-die and device-to-device. Variation in `I_crit`
+//! translates directly into variation of the feasible bias windows: a
+//! gate configured at its nominal `V_gate` might misfire, or two gates
+//! with nearby windows might become indistinguishable. The paper
+//! validates that CRAM-PM gates stay functional for ±5 %, ±10 % and
+//! ±20 % switching-current variation; this module reproduces that
+//! validation, both analytically (worst-case corners) and by Monte
+//! Carlo sampling.
+
+use crate::gates::{solve_window, GateKind};
+use crate::tech::MtjParams;
+use crate::util::Rng;
+
+/// Variation levels evaluated by the paper.
+pub const PAPER_VARIATION_LEVELS: [f64; 3] = [0.05, 0.10, 0.20];
+
+/// Outcome of the variation check for one gate at one variation level.
+#[derive(Debug, Clone)]
+pub struct GateVariationResult {
+    /// Gate under test.
+    pub gate: String,
+    /// Fractional `I_crit` variation applied (e.g. 0.10 = ±10 %).
+    pub variation: f64,
+    /// Whether the gate still realises its truth table at nominal
+    /// `V_gate` across the *worst-case corners* of the variation range.
+    pub functional_worst_case: bool,
+    /// Fraction of Monte Carlo samples where the gate stays functional.
+    pub mc_yield: f64,
+    /// Nominal relative margin of the gate's window.
+    pub nominal_margin: f64,
+}
+
+/// Full §5.5 report: every gate × every variation level, plus the
+/// window-distinguishability check.
+#[derive(Debug, Clone)]
+pub struct VariationReport {
+    /// Per-gate results.
+    pub gates: Vec<GateVariationResult>,
+    /// Pairs of gates whose windows overlap *and* that are not already
+    /// distinguished by pre-set value or input count — the ambiguity
+    /// the paper argues is unlikely. Empty means "validated".
+    pub ambiguous_pairs: Vec<(String, String)>,
+}
+
+/// Analysis driver for §5.5.
+pub struct VariationAnalysis {
+    mtj: MtjParams,
+    samples: usize,
+    seed: u64,
+}
+
+impl VariationAnalysis {
+    /// New analysis on a technology corner. `samples` Monte Carlo draws
+    /// per (gate, level).
+    pub fn new(mtj: MtjParams, samples: usize, seed: u64) -> Self {
+        VariationAnalysis { mtj, samples, seed }
+    }
+
+    /// A gate stays functional at scaled critical current `i_c` iff its
+    /// nominal bias still sits strictly inside the window implied by
+    /// `i_c`: `v_min(i_c) < V_nominal < v_max(i_c)`. Windows scale
+    /// linearly with `I_crit`, so this is exact.
+    fn functional_at(&self, kind: GateKind, v_nominal: f64, i_scale: f64) -> bool {
+        let w = solve_window(&self.mtj, kind, 0.0);
+        v_nominal > w.v_min * i_scale && v_nominal < w.v_max * i_scale
+    }
+
+    /// Check one gate at one variation level.
+    pub fn check_gate(&self, kind: GateKind, variation: f64) -> GateVariationResult {
+        let w = solve_window(&self.mtj, kind, 0.0);
+        let v_nom = w.midpoint();
+
+        // Worst case: I_crit at both extremes of the range.
+        let functional_worst_case = self.functional_at(kind, v_nom, 1.0 - variation)
+            && self.functional_at(kind, v_nom, 1.0 + variation);
+
+        // Monte Carlo: uniform draw over the variation range (the paper
+        // does not state a distribution; uniform over ±v is the
+        // conservative choice — it loads the corners more than a
+        // truncated Gaussian would).
+        let mut rng = Rng::new(self.seed ^ kind as u64);
+        let mut ok = 0usize;
+        for _ in 0..self.samples {
+            let scale = 1.0 + rng.range_f64(-variation, variation);
+            if self.functional_at(kind, v_nom, scale) {
+                ok += 1;
+            }
+        }
+        GateVariationResult {
+            gate: kind.name().to_string(),
+            variation,
+            functional_worst_case,
+            mc_yield: ok as f64 / self.samples as f64,
+            nominal_margin: w.margin(),
+        }
+    }
+
+    /// Run the full §5.5 sweep.
+    pub fn run(&self) -> VariationReport {
+        let mut gates = Vec::new();
+        for kind in GateKind::ALL {
+            for &level in &PAPER_VARIATION_LEVELS {
+                gates.push(self.check_gate(kind, level));
+            }
+        }
+
+        // Distinguishability: overlapping windows are only a problem if
+        // the two gates share pre-set value AND input count (otherwise
+        // the SMC already tells them apart, §5.5).
+        let mut ambiguous_pairs = Vec::new();
+        for (i, a) in GateKind::ALL.iter().enumerate() {
+            for b in GateKind::ALL.iter().skip(i + 1) {
+                if a.preset() == b.preset() && a.n_inputs() == b.n_inputs() {
+                    let wa = solve_window(&self.mtj, *a, 0.0);
+                    let wb = solve_window(&self.mtj, *b, 0.0);
+                    if wa.overlaps(&wb) {
+                        ambiguous_pairs.push((a.name().to_string(), b.name().to_string()));
+                    }
+                }
+            }
+        }
+        VariationReport { gates, ambiguous_pairs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::Technology;
+
+    #[test]
+    fn no_ambiguous_gate_pairs_on_either_corner() {
+        // §5.5's claim: gates with close V_gate are distinguished by
+        // pre-set or input count, so variation cannot make gate
+        // functions overlap.
+        for tech in Technology::ALL {
+            let a = VariationAnalysis::new(MtjParams::for_technology(tech), 200, 7);
+            let report = a.run();
+            assert!(
+                report.ambiguous_pairs.is_empty(),
+                "{tech}: ambiguous pairs {:?}",
+                report.ambiguous_pairs
+            );
+        }
+    }
+
+    #[test]
+    fn small_variation_keeps_wide_window_gates_functional() {
+        let a = VariationAnalysis::new(MtjParams::near_term(), 500, 11);
+        // INV and COPY have the widest windows; ±5 % must be safe.
+        for kind in [GateKind::Inv, GateKind::Copy] {
+            let r = a.check_gate(kind, 0.05);
+            assert!(r.functional_worst_case, "{kind} failed at ±5 %");
+            assert_eq!(r.mc_yield, 1.0);
+        }
+    }
+
+    #[test]
+    fn yield_monotone_in_variation() {
+        let a = VariationAnalysis::new(MtjParams::near_term(), 2000, 13);
+        for kind in GateKind::ALL {
+            let y5 = a.check_gate(kind, 0.05).mc_yield;
+            let y20 = a.check_gate(kind, 0.20).mc_yield;
+            assert!(y5 >= y20, "{kind}: yield not monotone ({y5} < {y20})");
+        }
+    }
+
+    #[test]
+    fn margin_predicts_worst_case_functionality() {
+        // First-order: the gate survives ±v at nominal bias iff its
+        // relative window margin exceeds v.
+        let a = VariationAnalysis::new(MtjParams::near_term(), 100, 17);
+        for kind in GateKind::ALL {
+            let w = solve_window(&MtjParams::near_term(), kind, 0.0);
+            for &level in &PAPER_VARIATION_LEVELS {
+                let r = a.check_gate(kind, level);
+                let predicted = w.margin() > level;
+                assert_eq!(
+                    r.functional_worst_case, predicted,
+                    "{kind} at ±{level}: margin {} predicted {predicted}",
+                    w.margin()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn report_covers_all_gates_and_levels() {
+        let a = VariationAnalysis::new(MtjParams::long_term(), 50, 19);
+        let report = a.run();
+        assert_eq!(report.gates.len(), GateKind::ALL.len() * PAPER_VARIATION_LEVELS.len());
+    }
+}

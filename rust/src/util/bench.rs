@@ -1,0 +1,108 @@
+//! Minimal benchmark harness (offline substitute for criterion).
+//!
+//! `cargo bench` runs each `harness = false` bench binary's `main`;
+//! this module provides warm-up, repetition, and robust (median / p10 /
+//! p90) reporting so the paper-figure benches print stable numbers.
+
+use std::time::Instant;
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Case label.
+    pub name: String,
+    /// Median wall time per iteration, seconds.
+    pub median: f64,
+    /// 10th percentile, seconds.
+    pub p10: f64,
+    /// 90th percentile, seconds.
+    pub p90: f64,
+    /// Number of timed iterations.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Iterations per second at the median.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.median
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} median {:>12} (p10 {:>12}, p90 {:>12}, n={})",
+            self.name,
+            fmt_time(self.median),
+            fmt_time(self.p10),
+            fmt_time(self.p90),
+            self.iters
+        )
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+/// Time `f`, auto-scaling iteration count to fill ~`budget_secs`.
+/// The closure's return value is black-boxed to keep the optimizer
+/// honest.
+pub fn bench<T>(name: &str, budget_secs: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warm-up + calibration: find an iteration cost estimate.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let target_iters = ((budget_secs / once) as usize).clamp(5, 10_000);
+    let mut samples = Vec::with_capacity(target_iters);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(f64::total_cmp);
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        median: q(0.5),
+        p10: q(0.1),
+        p90: q(0.9),
+        iters: samples.len(),
+    }
+}
+
+/// Print a section header in the bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordered_quantiles() {
+        let r = bench("noop", 0.01, || 1 + 1);
+        assert!(r.p10 <= r.median && r.median <= r.p90);
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+        assert!(fmt_time(2.5e-6).ends_with("µs"));
+        assert!(fmt_time(2.5e-3).ends_with("ms"));
+        assert!(fmt_time(2.5).ends_with("s"));
+    }
+}

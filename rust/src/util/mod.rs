@@ -1,0 +1,14 @@
+//! Small in-tree utilities.
+//!
+//! The build image is offline and only vendors the `xla`/`anyhow`
+//! dependency closure, so the crate carries its own deterministic PRNG
+//! ([`rng`]), property-testing loop ([`rng::Rng::check`] users), and
+//! bench harness ([`bench`]) instead of `rand`, `proptest` and
+//! `criterion`.
+
+pub mod bench;
+pub mod fxhash;
+pub mod rng;
+
+pub use fxhash::FxHashMap;
+pub use rng::Rng;

@@ -1,0 +1,88 @@
+//! Failure injection: malformed inputs must produce errors, not
+//! panics or silent corruption.
+
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::runtime::{Manifest, Runtime};
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("crampm-fail-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn corrupt_hlo_artifact_is_an_error_not_a_crash() {
+    let dir = tmpdir("corrupt");
+    std::fs::write(dir.join("manifest.txt"), "bad 256 64 16 bad.hlo.txt\n").unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule this is not hlo {").unwrap();
+    let err = Runtime::load(&dir);
+    assert!(err.is_err(), "corrupt artifact must fail to load");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_artifact_file_is_an_error() {
+    let dir = tmpdir("missing");
+    std::fs::write(dir.join("manifest.txt"), "ghost 256 64 16 ghost.hlo.txt\n").unwrap();
+    assert!(Runtime::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_with_zero_rows_rejected() {
+    let dir = tmpdir("zerorows");
+    std::fs::write(dir.join("manifest.txt"), "z 0 64 16 z.hlo.txt\n").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn coordinator_rejects_ragged_fragments() {
+    let cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+    let mut frags = vec![vec![0u8; 64]; 4];
+    frags[2].pop();
+    assert!(Coordinator::new(cfg, frags).is_err());
+}
+
+#[test]
+fn coordinator_rejects_empty_fragment_set() {
+    let cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+    assert!(Coordinator::new(cfg, vec![]).is_err());
+}
+
+#[test]
+fn xla_engine_surfaces_missing_artifacts_as_error() {
+    let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+    cfg.engine = EngineKind::Xla;
+    cfg.artifacts_dir = PathBuf::from("/nonexistent/artifacts");
+    let coord = Coordinator::new(cfg, vec![vec![0u8; 64]; 4]).unwrap();
+    let err = coord.run(&[vec![0u8; 16]]);
+    assert!(err.is_err(), "missing artifacts must error through the pipeline");
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("artifacts") || msg.contains("XLA"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn pattern_codes_out_of_alphabet_do_not_crash_bitsim() {
+    // 2-bit codes are masked by construction; Encoded::from_bits
+    // asserts even lengths. Feed the coordinator a pattern with a
+    // (masked-out) high code — must either work or error, not panic.
+    let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+    cfg.engine = EngineKind::Bitsim;
+    let coord = Coordinator::new(cfg, vec![vec![1u8; 64]; 2]).unwrap();
+    let _ = coord.run(&[vec![3u8; 16]]).unwrap();
+}
+
+#[test]
+fn oversized_fragment_buffer_rejected_by_runtime() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(&dir).unwrap();
+    let v = rt.variant("dna_small").unwrap().clone();
+    let too_big = vec![0i32; v.rows * v.frag_chars + 1];
+    assert!(rt.execute("dna_small", &too_big, &vec![0i32; v.pat_chars]).is_err());
+}

