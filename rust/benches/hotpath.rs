@@ -67,6 +67,38 @@ fn main() {
     println!("{r}");
     println!("  → {:.2} M lookups/s", 1.0 / r.median / 1e6);
 
+    // Lane sweep (EXPERIMENTS.md §Lane sweep): the sharded execute
+    // stage on the DNA workload, CPU oracle engine so it runs with no
+    // artifacts. Naive broadcast makes the execute stage the bottleneck
+    // — exactly what the lanes parallelize.
+    section("coordinator lane sweep (DNA workload, CPU engine)");
+    {
+        let w = DnaWorkload::generate(1 << 16, 64, 16, 0.0, 11);
+        let frags = w.fragments(64, 16);
+        let n_pats = w.patterns.len();
+        let mut base_rate = 0.0;
+        for lanes in [1usize, 2, 4, 8] {
+            let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+            cfg.engine = EngineKind::Cpu;
+            cfg.oracular = None;
+            cfg.lanes = lanes;
+            let coord = Coordinator::new(cfg, frags.clone()).unwrap();
+            let r = bench(&format!("{n_pats} patterns broadcast, lanes={lanes}"), 3.0, || {
+                coord.run(&w.patterns).unwrap()
+            });
+            println!("{r}");
+            let rate = n_pats as f64 / r.median;
+            if lanes == 1 {
+                base_rate = rate;
+            }
+            println!(
+                "  → {:.0} patterns/s host throughput ({:.2}× vs lanes=1)",
+                rate,
+                rate / base_rate
+            );
+        }
+    }
+
     if std::path::Path::new("artifacts/manifest.txt").exists() {
         section("XLA artifact execution (dna_small: 256×64, pat 16)");
         let rt = cram_pm::runtime::Runtime::load(std::path::Path::new("artifacts")).unwrap();

@@ -129,15 +129,26 @@ impl MatchEngine for BitsimEngine {
             arr.broadcast_encoded(self.layout.pat_col() as usize, &pattern);
 
             let mut cg = CodeGen::new(self.layout, self.mode);
+            // Per-row best over all alignments first (strict > keeps
+            // the lowest loc), then fold rows in ascending order — the
+            // same row-major tie-breaking the CPU oracle and the XLA
+            // artifact use, so per-shard partials merge identically
+            // across coordinator lane counts.
+            let mut row_best: Vec<(u64, usize)> = vec![(0, 0); rows];
             for loc in 0..self.layout.n_alignments() as u32 {
                 let prog = cg.alignment_program(loc, true);
                 let out = arr.execute(&prog)?;
                 let scores = &out.scores[0];
                 for (r, &s) in scores.iter().enumerate() {
-                    let rid = item.row_ids[block_i * self.rows_per_block + r] as usize;
-                    if best.map_or(true, |b| (s as usize) > b.score) {
-                        best = Some(BestAlignment { row: rid, loc: loc as usize, score: s as usize });
+                    if s > row_best[r].0 {
+                        row_best[r] = (s, loc as usize);
                     }
+                }
+            }
+            for (r, &(s, loc)) in row_best.iter().enumerate() {
+                let rid = item.row_ids[block_i * self.rows_per_block + r] as usize;
+                if best.map_or(true, |b| (s as usize) > b.score) {
+                    best = Some(BestAlignment { row: rid, loc, score: s as usize });
                 }
             }
         }
@@ -189,6 +200,20 @@ mod tests {
             let bs = bitsim.run(&it).unwrap();
             assert_eq!(bs.best.unwrap().score, cpu.best.unwrap().score, "seed {seed}");
             assert!(bs.passes == 3);
+        }
+    }
+
+    /// Tie-breaking: both engines must report the same (row, loc) —
+    /// not just the same score. The coordinator's multi-lane merge
+    /// relies on row-major tie-break order being engine-invariant.
+    #[test]
+    fn bitsim_tie_breaks_row_major_like_cpu() {
+        for seed in [4, 8, 15] {
+            let it = item(seed, 6, 24, 6);
+            let cpu = CpuEngine.run(&it).unwrap().best.unwrap();
+            let mut bitsim = BitsimEngine::new(24, 6, 2, PresetMode::Gang);
+            let bs = bitsim.run(&it).unwrap().best.unwrap();
+            assert_eq!((bs.row, bs.loc, bs.score), (cpu.row, cpu.loc, cpu.score), "seed {seed}");
         }
     }
 

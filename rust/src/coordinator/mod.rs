@@ -10,12 +10,20 @@
 //! the structure is the same — see Cargo.toml):
 //!
 //! ```text
-//!   scheduler ──(WorkItem: pattern + gathered candidate fragments)──▶
-//!   executor  ──(XLA artifact / bit-level array pass)──▶
-//!   reducer   ──(best alignment per pattern + metrics)
+//!              ┌─(WorkItem: shard-local candidate fragments)─▶ lane 0 ─┐
+//!   scheduler ─┼─────────────────────────────────────────────▶ lane 1 ─┼─▶ reducer
+//!              └─────────────────────────────────────────────▶ lane N ─┘
 //! ```
 //!
-//! Backpressure is the bounded channel between stages: a slow executor
+//! The execute stage is **sharded** ([`CoordinatorConfig::lanes`]):
+//! resident fragment rows partition into contiguous substrate shards,
+//! one persistent engine thread per shard, and the reducer merges the
+//! per-shard `BestAlignment` partials under the single-lane
+//! tie-breaking order — per-pattern best alignments are bit-identical
+//! for any lane count while host throughput scales with cores, the
+//! way the modeled substrate scales with arrays (§2.5, §5).
+//!
+//! Backpressure is the bounded channel between stages: a slow lane
 //! stalls the scheduler instead of ballooning memory — the same role
 //! the paper's "all rows must have their patterns ready" lock-step
 //! plays at array level.
@@ -30,4 +38,4 @@ pub mod engine;
 pub mod pipeline;
 
 pub use engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngine, WorkItem, WorkResult};
-pub use pipeline::{Coordinator, CoordinatorConfig, RunMetrics};
+pub use pipeline::{Coordinator, CoordinatorConfig, LaneStats, RunMetrics};

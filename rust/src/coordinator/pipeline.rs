@@ -1,17 +1,33 @@
 //! The three-stage serving pipeline: schedule → execute → reduce.
+//!
+//! The execute stage is **sharded**: the resident fragment rows are
+//! partitioned into `N` contiguous substrate shards ([`ShardMap`]) and
+//! each shard is owned by one persistent executor *lane* — a thread
+//! with its own engine instance and bounded work queue. The scheduler
+//! emits per-shard work items, and a merge reduce folds the per-shard
+//! `BestAlignment` partials back into per-pattern results under the
+//! single-lane tie-breaking order, so every pattern's `BestAlignment`
+//! (score, row, loc) is bit-identical for any lane count. (Operational
+//! counters — `WorkResult::passes`, `RunMetrics::passes` — do scale
+//! with the lane count: sharding really does run more, smaller engine
+//! passes.) This is the host-side mirror of the bank/vault-level
+//! parallelism PIM substrates win with (paper §2.5, §5; cf.
+//! [`crate::sim::banking`] and [`crate::sim::sharding`]).
 
 use crate::baselines::cpu_ref::BestAlignment;
 use crate::coordinator::engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngine, WorkItem, WorkResult};
 use crate::isa::PresetMode;
 use crate::runtime::Runtime;
-use crate::scheduler::{OracularScheduler, RowAddr};
+use crate::scheduler::{OracularScheduler, RowAddr, ShardMap};
 use crate::sim::SystemConfig;
 use crate::tech::Technology;
 use crate::Result;
 use anyhow::anyhow;
+use std::panic::AssertUnwindSafe;
 use std::path::PathBuf;
-use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -29,8 +45,13 @@ pub struct CoordinatorConfig {
     /// Oracular routing: `Some((k, max_rows_per_pattern))` enables the
     /// k-mer candidate index; `None` broadcasts (Naive).
     pub oracular: Option<(usize, usize)>,
-    /// Bounded queue depth between pipeline stages (backpressure).
+    /// Bounded queue depth per executor lane (backpressure).
     pub queue_depth: usize,
+    /// Executor lanes: the resident rows are partitioned into this many
+    /// substrate shards, each executed by its own engine thread. `1`
+    /// reproduces the original single-lane coordinator exactly; the
+    /// effective count is clamped so every lane owns at least one row.
+    pub lanes: usize,
     /// Preset scheduling assumed for the hardware cost projection (and
     /// used by the bit-level engine).
     pub preset_mode: PresetMode,
@@ -39,6 +60,12 @@ pub struct CoordinatorConfig {
 }
 
 impl CoordinatorConfig {
+    /// Default executor lane count: the host's available parallelism,
+    /// capped at 8 to bound per-lane queue memory.
+    pub fn default_lanes() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 8)
+    }
+
     /// Sensible defaults around one artifact variant.
     pub fn xla(variant: &str, frag_chars: usize, pat_chars: usize) -> Self {
         CoordinatorConfig {
@@ -49,9 +76,37 @@ impl CoordinatorConfig {
             pat_chars,
             oracular: Some((8, 64)),
             queue_depth: 64,
+            lanes: Self::default_lanes(),
             preset_mode: PresetMode::Gang,
             tech: Technology::NearTerm,
         }
+    }
+}
+
+/// Per-lane accounting for one coordinator run — the Fig. 9/10-style
+/// scaling experiments report these.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaneStats {
+    /// Lane index (shard id).
+    pub lane: usize,
+    /// Work items executed.
+    pub items: usize,
+    /// Engine passes consumed.
+    pub passes: usize,
+    /// Seconds spent inside the engine.
+    pub busy_seconds: f64,
+    /// `busy_seconds` / run wall-clock (1.0 = the lane never idled).
+    pub occupancy: f64,
+}
+
+impl LaneStats {
+    fn idle(lane: usize) -> Self {
+        LaneStats { lane, items: 0, passes: 0, busy_seconds: 0.0, occupancy: 0.0 }
+    }
+
+    /// Item rate of this lane over the run, items/s.
+    pub fn rate(&self, wall_seconds: f64) -> f64 {
+        self.items as f64 / wall_seconds.max(1e-12)
     }
 }
 
@@ -73,7 +128,12 @@ pub struct RunMetrics {
     pub host_rate: f64,
     /// Engine label.
     pub engine: String,
-    /// Projected time on the CRAM-PM substrate, s.
+    /// Effective executor lane count.
+    pub lanes: usize,
+    /// Per-lane occupancy/rate accounting.
+    pub lane_stats: Vec<LaneStats>,
+    /// Projected time on the CRAM-PM substrate, s (aggregated across
+    /// the matching shard split).
     pub hw_seconds: f64,
     /// Projected substrate energy, J.
     pub hw_energy: f64,
@@ -81,7 +141,7 @@ pub struct RunMetrics {
     pub hw_match_rate: f64,
 }
 
-/// XLA-backed engine (constructed inside the executor thread — PJRT
+/// XLA-backed engine (constructed inside its executor lane — PJRT
 /// handles never cross threads).
 struct XlaEngine {
     rt: Runtime,
@@ -140,43 +200,91 @@ impl MatchEngine for XlaEngine {
     }
 }
 
-/// The coordinator: resident fragments + config + a **persistent**
-/// executor stage.
+/// One executor lane: a persistent thread owning one substrate shard's
+/// engine, fed through a bounded work queue.
+struct Lane {
+    /// Work sender; `take()`n on shutdown so the real sender drops and
+    /// the executor loop exits deterministically.
+    work_tx: Option<mpsc::SyncSender<WorkItem>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The lanes plus the shared result channel, behind one mutex (one run
+/// at a time through the persistent executors). Every run — normal or
+/// aborted — drains exactly the items its feeder sent, so the channel
+/// is empty between runs.
+struct LaneSet {
+    lanes: Vec<Lane>,
+    shard: ShardMap,
+    res_rx: mpsc::Receiver<LaneResult>,
+}
+
+/// One lane→reducer message.
+struct LaneResult {
+    lane: usize,
+    busy_seconds: f64,
+    result: Result<WorkResult>,
+}
+
+/// Merge order for per-shard partials: higher score wins; ties break to
+/// the lowest row, then the lowest loc — exactly the order a single
+/// lane visits rows, so the fold is lane-count-invariant.
+fn is_better(candidate: &Option<BestAlignment>, incumbent: &Option<BestAlignment>) -> bool {
+    match (candidate, incumbent) {
+        (None, _) => false,
+        (Some(_), None) => true,
+        (Some(c), Some(i)) => {
+            (c.score, std::cmp::Reverse(c.row), std::cmp::Reverse(c.loc))
+                > (i.score, std::cmp::Reverse(i.row), std::cmp::Reverse(i.loc))
+        }
+    }
+}
+
+/// The coordinator: resident fragments + config + a set of
+/// **persistent** executor lanes.
 ///
-/// §Perf: the executor thread (and with it the PJRT client and the
-/// compiled executables) is created once at construction and reused
-/// across [`Coordinator::run`] calls — engine warm-up (XLA compilation
-/// in particular) was the dominant cost of short runs before this
-/// change (see EXPERIMENTS.md §Perf).
+/// §Perf: each lane's thread (and with it its engine — the PJRT client
+/// and compiled executables in particular) is created once at
+/// construction and reused across [`Coordinator::run`] calls — engine
+/// warm-up was the dominant cost of short runs before this change, and
+/// the multi-lane execute stage is what makes host throughput scale
+/// with cores (see EXPERIMENTS.md §Perf and §Lane sweep).
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     fragments: Vec<Vec<u8>>,
-    /// Work/result channels to the persistent executor, serialized by
-    /// a mutex (one run at a time).
-    lanes: std::sync::Mutex<(mpsc::SyncSender<WorkItem>, mpsc::Receiver<Result<WorkResult>>)>,
-    executor: Option<std::thread::JoinHandle<()>>,
+    /// Effective lane count (immutable after construction; kept outside
+    /// the mutex so introspection never waits on an in-flight run).
+    n_lanes: usize,
+    inner: Mutex<LaneSet>,
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        // Swap the live channels for closed dummies: dropping the real
-        // work sender ends the executor's receive loop, after which the
-        // thread can be joined.
-        {
-            let mut guard = self.lanes.lock().unwrap_or_else(|p| p.into_inner());
-            let (dead_tx, _) = mpsc::sync_channel(1);
-            let (_, dead_rx) = mpsc::sync_channel(1);
-            *guard = (dead_tx, dead_rx);
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        // Drop every lane's real work sender first: each executor loop
+        // ends when its queue disconnects, so the joins cannot hang.
+        for lane in &mut inner.lanes {
+            lane.work_tx.take();
         }
-        if let Some(h) = self.executor.take() {
-            let _ = h.join();
+        // Unpark any lane blocked on a full result queue (possible
+        // after an aborted run) and wait for the loops to flush their
+        // queued items: recv errors only once every lane has exited
+        // and dropped its result sender.
+        while inner.res_rx.recv().is_ok() {}
+        for lane in &mut inner.lanes {
+            if let Some(h) = lane.handle.take() {
+                let _ = h.join();
+            }
         }
     }
 }
 
 impl Coordinator {
     /// New coordinator over resident reference fragments (2-bit codes,
-    /// one per substrate row). Spawns the persistent executor stage.
+    /// one per substrate row). Spawns one persistent executor lane per
+    /// shard and waits for every lane's engine to report construction
+    /// success — a broken engine (e.g. missing XLA artifacts) surfaces
+    /// here, not on the first `run`.
     pub fn new(cfg: CoordinatorConfig, fragments: Vec<Vec<u8>>) -> Result<Self> {
         anyhow::ensure!(!fragments.is_empty(), "no fragments resident");
         for (i, f) in fragments.iter().enumerate() {
@@ -187,51 +295,124 @@ impl Coordinator {
                 cfg.frag_chars
             );
         }
-        let (work_tx, work_rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth);
-        let (res_tx, res_rx) = mpsc::sync_channel::<Result<WorkResult>>(cfg.queue_depth);
-        let thread_cfg = cfg.clone();
-        let executor = std::thread::Builder::new()
-            .name("crampm-executor".into())
-            .spawn(move || {
-                // The engine lives on this thread for the coordinator's
-                // whole lifetime (PJRT handles never cross threads).
-                let mut engine: Box<dyn MatchEngine> = match thread_cfg.engine {
-                    EngineKind::Cpu => Box::new(CpuEngine),
-                    EngineKind::Bitsim => Box::new(BitsimEngine::new(
-                        thread_cfg.frag_chars,
-                        thread_cfg.pat_chars,
-                        256,
-                        thread_cfg.preset_mode,
-                    )),
-                    EngineKind::Xla => {
-                        match XlaEngine::new(&thread_cfg.artifacts_dir, &thread_cfg.variant) {
-                            Ok(e) => Box::new(e),
-                            Err(e) => {
-                                let _ = res_tx.send(Err(e.context("loading XLA engine")));
-                                return;
-                            }
+        let shard = ShardMap::new(fragments.len(), cfg.lanes.max(1));
+        let n_lanes = shard.shards();
+        // Ample result buffering: covers every item the lanes can hold
+        // at once (queued + in flight) so lanes rarely block on the
+        // reducer; emptiness between runs is guaranteed by the
+        // reducer's drains, not by this capacity.
+        let (res_tx, res_rx) =
+            mpsc::sync_channel::<LaneResult>((cfg.queue_depth.max(1) + 2) * n_lanes);
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<(usize, Result<()>)>(n_lanes);
+
+        let mut lanes = Vec::with_capacity(n_lanes);
+        for lane_id in 0..n_lanes {
+            let (work_tx, work_rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth.max(1));
+            let thread_cfg = cfg.clone();
+            let res_tx = res_tx.clone();
+            let ready_tx = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("crampm-lane{lane_id}"))
+                .spawn(move || {
+                    // The engine lives on this thread for the lane's
+                    // whole lifetime (PJRT handles never cross threads).
+                    let built: Result<Box<dyn MatchEngine>> = match thread_cfg.engine {
+                        EngineKind::Cpu => Ok(Box::new(CpuEngine) as Box<dyn MatchEngine>),
+                        EngineKind::Bitsim => Ok(Box::new(BitsimEngine::new(
+                            thread_cfg.frag_chars,
+                            thread_cfg.pat_chars,
+                            256,
+                            thread_cfg.preset_mode,
+                        )) as Box<dyn MatchEngine>),
+                        EngineKind::Xla => {
+                            XlaEngine::new(&thread_cfg.artifacts_dir, &thread_cfg.variant)
+                                .map(|e| Box::new(e) as Box<dyn MatchEngine>)
+                                .map_err(|e| e.context("loading XLA engine"))
+                        }
+                    };
+                    // Startup handshake: report construction before
+                    // accepting any work.
+                    let mut engine = match built {
+                        Ok(engine) => {
+                            let _ = ready_tx.send((lane_id, Ok(())));
+                            engine
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send((lane_id, Err(e)));
+                            return;
+                        }
+                    };
+                    for item in work_rx {
+                        let t = Instant::now();
+                        // A panicking engine must not strand the
+                        // reducer waiting on this item forever: convert
+                        // the panic into an item error and keep the
+                        // lane alive. Every received item therefore
+                        // produces exactly one result message.
+                        let result =
+                            std::panic::catch_unwind(AssertUnwindSafe(|| engine.run(&item)))
+                                .unwrap_or_else(|_| {
+                                    Err(anyhow!(
+                                        "executor lane {lane_id} panicked scoring pattern {}",
+                                        item.pattern_id
+                                    ))
+                                });
+                        let busy_seconds = t.elapsed().as_secs_f64();
+                        if res_tx.send(LaneResult { lane: lane_id, busy_seconds, result }).is_err()
+                        {
+                            break; // coordinator gone
                         }
                     }
-                };
-                for item in work_rx {
-                    let r = engine.run(&item);
-                    if res_tx.send(r).is_err() {
-                        break;
+                })
+                .map_err(|e| anyhow!("spawning executor lane {lane_id}: {e}"))?;
+            lanes.push(Lane { work_tx: Some(work_tx), handle: Some(handle) });
+        }
+        drop(ready_tx);
+
+        let mut startup_err: Option<anyhow::Error> = None;
+        for _ in 0..n_lanes {
+            match ready_rx.recv() {
+                Ok((_, Ok(()))) => {}
+                Ok((lane_id, Err(e))) => {
+                    if startup_err.is_none() {
+                        startup_err = Some(e.context(format!("executor lane {lane_id} startup")));
                     }
                 }
-            })
-            .expect("spawn executor");
+                Err(_) => {
+                    if startup_err.is_none() {
+                        startup_err = Some(anyhow!("executor lane exited before handshake"));
+                    }
+                    break;
+                }
+            }
+        }
+        if let Some(e) = startup_err {
+            for lane in &mut lanes {
+                lane.work_tx.take();
+            }
+            for lane in &mut lanes {
+                if let Some(h) = lane.handle.take() {
+                    let _ = h.join();
+                }
+            }
+            return Err(e);
+        }
         Ok(Coordinator {
             cfg,
             fragments,
-            lanes: std::sync::Mutex::new((work_tx, res_rx)),
-            executor: Some(executor),
+            n_lanes,
+            inner: Mutex::new(LaneSet { lanes, shard, res_rx }),
         })
     }
 
     /// Number of resident fragments.
     pub fn rows(&self) -> usize {
         self.fragments.len()
+    }
+
+    /// Effective executor lane count.
+    pub fn lanes(&self) -> usize {
+        self.n_lanes
     }
 
     /// Run a pattern pool through the pipeline. Returns per-pattern
@@ -254,89 +435,191 @@ impl Coordinator {
             OracularScheduler::build(&self.fragments, rows, patterns.to_vec(), k, max_rows)
         });
 
-        let mut results: Vec<WorkResult> = Vec::with_capacity(patterns.len());
-        let mut total_candidates = 0usize;
+        // One run at a time through the persistent lanes.
+        let inner = self.inner.lock().map_err(|_| anyhow!("coordinator lanes poisoned"))?;
+        let lanes = &inner.lanes;
+        let n_lanes = lanes.len();
 
-        // One run at a time through the persistent executor.
-        let lanes = self.lanes.lock().map_err(|_| anyhow!("coordinator lanes poisoned"))?;
-        let (work_tx, res_rx) = &*lanes;
+        // Per-pattern candidate routes (ascending row ids), split into
+        // per-shard runs. Oracular routes are bounded by
+        // max_rows_per_pattern, so materializing them up front is cheap
+        // and reusable for the occupancy stats; Naive broadcast routes
+        // are the whole substrate per pattern and are synthesized
+        // lazily in the feeder (in-flight memory stays bounded by the
+        // lane queues). Patterns with no candidates anywhere never
+        // enter a lane and keep `best: None` (the paper's
+        // "ill-schedules").
+        let oracular_plan: Option<Vec<Vec<(usize, Vec<u32>)>>> = oracular
+            .as_ref()
+            .map(|idx| patterns.iter().map(|p| inner.shard.split(&idx.candidates(p))).collect());
+        let (expected, total_candidates): (usize, usize) = match &oracular_plan {
+            Some(plan) => (
+                plan.iter().map(|per| per.len()).sum(),
+                plan.iter().flat_map(|per| per.iter().map(|(_, rows)| rows.len())).sum(),
+            ),
+            None => (patterns.len() * n_lanes, patterns.len() * self.fragments.len()),
+        };
+        let stop = AtomicBool::new(false);
+        // Items the feeder has actually handed to a lane — the abort
+        // path drains to exactly this count so the shared channel is
+        // empty again for the next run.
+        let sent = AtomicUsize::new(0);
 
-        std::thread::scope(|scope| -> Result<()> {
+        let mut results: Vec<WorkResult> = (0..patterns.len())
+            .map(|pid| WorkResult { pattern_id: pid, best: None, passes: 0 })
+            .collect();
+        let mut lane_stats: Vec<LaneStats> = (0..n_lanes).map(LaneStats::idle).collect();
+        let mut run_err: Option<anyhow::Error> = None;
+
+        std::thread::scope(|scope| {
             // --- Stage 1: scheduler/feeder thread; the reducer below
-            // drains results concurrently — the bounded channels
-            // provide backpressure in both directions. ----------------
+            // drains the shared result channel concurrently — bounded
+            // queues give backpressure in both directions. ------------
             let feeder = scope.spawn({
                 let fragments = &self.fragments;
-                let oracular = &oracular;
-                let work_tx = work_tx.clone();
+                let oracular_plan = &oracular_plan;
+                let shard = &inner.shard;
+                let stop = &stop;
+                let sent = &sent;
                 move || {
-                    for (pid, pattern) in patterns.iter().enumerate() {
-                        let (row_ids, frags): (Vec<u32>, Vec<Vec<u8>>) = match oracular {
-                            Some(idx) => {
-                                let cands = idx.candidates(pattern);
-                                let frags =
-                                    cands.iter().map(|&r| fragments[r as usize].clone()).collect();
-                                (cands, frags)
+                    let send = |lane: usize, item: WorkItem| -> bool {
+                        let Some(tx) = lanes[lane].work_tx.as_ref() else { return false };
+                        let ok = tx.send(item).is_ok();
+                        if ok {
+                            sent.fetch_add(1, Ordering::SeqCst);
+                        }
+                        ok
+                    };
+                    for pid in 0..patterns.len() {
+                        match oracular_plan {
+                            Some(plan) => {
+                                for (lane, rows) in &plan[pid] {
+                                    if stop.load(Ordering::Relaxed) {
+                                        return;
+                                    }
+                                    let frags: Vec<Vec<u8>> = rows
+                                        .iter()
+                                        .map(|&r| fragments[r as usize].clone())
+                                        .collect();
+                                    let item = WorkItem {
+                                        pattern_id: pid,
+                                        pattern: patterns[pid].clone(),
+                                        fragments: frags,
+                                        row_ids: rows.clone(),
+                                    };
+                                    if !send(*lane, item) {
+                                        return; // lane gone; the reducer sees it
+                                    }
+                                }
                             }
-                            None => (
-                                (0..fragments.len() as u32).collect(),
-                                fragments.clone(),
-                            ),
-                        };
-                        let item = WorkItem {
-                            pattern_id: pid,
-                            pattern: pattern.clone(),
-                            fragments: frags,
-                            row_ids,
-                        };
-                        if work_tx.send(item).is_err() {
-                            break; // executor gone (e.g. load error)
+                            None => {
+                                for lane in 0..shard.shards() {
+                                    if stop.load(Ordering::Relaxed) {
+                                        return;
+                                    }
+                                    let r = shard.range(lane);
+                                    let item = WorkItem {
+                                        pattern_id: pid,
+                                        pattern: patterns[pid].clone(),
+                                        fragments: fragments[r.clone()].to_vec(),
+                                        row_ids: (r.start as u32..r.end as u32).collect(),
+                                    };
+                                    if !send(lane, item) {
+                                        return;
+                                    }
+                                }
+                            }
                         }
                     }
                 }
             });
 
-            // --- Stage 3: reducer — exactly one result per pattern ---
-            for _ in 0..patterns.len() {
-                match res_rx.recv() {
-                    Ok(r) => results.push(r?),
-                    Err(_) => break, // executor exited (error already sent or gone)
+            // --- Stage 3: merge reduce — per-shard partials fold into
+            // per-pattern results, preserving single-lane tie-breaking
+            // (score desc, then row asc, then loc asc). ---------------
+            let mut received = 0usize;
+            let mut aborted = false;
+            while received < expected {
+                match inner.res_rx.recv() {
+                    Ok(msg) => {
+                        received += 1;
+                        let stats = &mut lane_stats[msg.lane];
+                        stats.items += 1;
+                        stats.busy_seconds += msg.busy_seconds;
+                        match msg.result {
+                            Ok(partial) => {
+                                stats.passes += partial.passes;
+                                let r = &mut results[partial.pattern_id];
+                                r.passes += partial.passes;
+                                if is_better(&partial.best, &r.best) {
+                                    r.best = partial.best;
+                                }
+                            }
+                            // A failed item fails the run but not the
+                            // lanes: stop the feeder and fall through
+                            // to the drain below.
+                            Err(e) => {
+                                if run_err.is_none() {
+                                    run_err = Some(e);
+                                }
+                                stop.store(true, Ordering::Relaxed);
+                                aborted = true;
+                                break;
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        if run_err.is_none() {
+                            run_err = Some(anyhow!("executor lanes exited mid-run"));
+                        }
+                        break;
+                    }
                 }
             }
-            feeder.join().map_err(|_| anyhow!("scheduler thread panicked"))?;
-            Ok(())
-        })?;
-
-        anyhow::ensure!(
-            results.len() == patterns.len(),
-            "executor returned {} results for {} patterns",
-            results.len(),
-            patterns.len()
-        );
-        results.sort_by_key(|r| r.pattern_id);
-
-        // Occupancy statistics for the hardware projection.
-        if let Some(idx) = &oracular {
-            for p in patterns {
-                total_candidates += idx.candidates(p).len();
+            if aborted {
+                // Drain every item the feeder managed to send before it
+                // observed `stop`, so the lanes come back idle and the
+                // shared channel is empty for the next run. The timeout
+                // covers the window where the feeder is between sends:
+                // once it has finished and all sent items are in,
+                // nothing more can arrive. Draining concurrently also
+                // unblocks a feeder parked on a full lane queue.
+                loop {
+                    if feeder.is_finished() && received >= sent.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match inner.res_rx.recv_timeout(Duration::from_millis(10)) {
+                        Ok(_) => received += 1,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
             }
-        } else {
-            total_candidates = patterns.len() * self.fragments.len();
+            let _ = feeder.join();
+        });
+        if let Some(e) = run_err {
+            return Err(e);
         }
-        let mean_candidates = total_candidates as f64 / patterns.len().max(1) as f64;
 
         let wall = t0.elapsed().as_secs_f64();
-        let metrics = self.project_hardware(patterns.len(), mean_candidates, wall, &results);
+        for s in &mut lane_stats {
+            s.occupancy = if wall > 0.0 { s.busy_seconds / wall } else { 0.0 };
+        }
+        let mean_candidates = total_candidates as f64 / patterns.len().max(1) as f64;
+        let metrics =
+            self.project_hardware(patterns.len(), mean_candidates, wall, &results, lane_stats);
         Ok((results, metrics))
     }
 
-    /// Step-accurate projection of this run onto the substrate.
+    /// Step-accurate projection of this run onto the substrate,
+    /// aggregated across the shard split that mirrors the lane split.
     fn project_hardware(
         &self,
         n_patterns: usize,
         mean_candidates: f64,
         wall: f64,
         results: &[WorkResult],
+        lane_stats: Vec<LaneStats>,
     ) -> RunMetrics {
         let rows = self.fragments.len().min(10_240).max(1);
         let arrays = self.fragments.len().div_ceil(rows);
@@ -351,11 +634,8 @@ impl Coordinator {
             mask_readout: true,
         };
         let model = crate::scheduler::ThroughputModel::new(cfg);
-        let report = if self.cfg.oracular.is_some() {
-            model.oracular(mean_candidates.max(1.0), n_patterns.max(1))
-        } else {
-            model.naive(n_patterns.max(1))
-        };
+        let rpp = self.cfg.oracular.map(|_| mean_candidates.max(1.0));
+        let sharded = model.sharded(lane_stats.len().max(1), rpp, n_patterns.max(1));
         RunMetrics {
             patterns: n_patterns,
             matched: results.iter().filter(|r| r.best.is_some()).count(),
@@ -364,9 +644,11 @@ impl Coordinator {
             wall_seconds: wall,
             host_rate: n_patterns as f64 / wall.max(1e-12),
             engine: format!("{:?}", self.cfg.engine),
-            hw_seconds: report.pool_time,
-            hw_energy: report.pool_energy,
-            hw_match_rate: report.match_rate,
+            lanes: lane_stats.len(),
+            lane_stats,
+            hw_seconds: sharded.pool_time,
+            hw_energy: sharded.pool_energy,
+            hw_match_rate: sharded.match_rate,
         }
     }
 }
@@ -421,6 +703,102 @@ mod tests {
     fn pattern_length_mismatch_rejected() {
         let (c, _) = coordinator(EngineKind::Cpu, None);
         assert!(c.run(&[vec![0u8; 5]]).is_err());
+    }
+
+    /// The tentpole invariant: results are bit-identical for any lane
+    /// count, for both routing modes, including on erroneous reads
+    /// where ties and near-ties are common.
+    #[test]
+    fn lanes_one_and_many_agree_bitwise() {
+        let w = DnaWorkload::generate(8192, 40, 16, 0.08, 13);
+        let frags = w.fragments(64, 16);
+        for oracular in [Some((8, 32)), None] {
+            let run_with = |lanes: usize| {
+                let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+                cfg.engine = EngineKind::Cpu;
+                cfg.oracular = oracular;
+                cfg.lanes = lanes;
+                let c = Coordinator::new(cfg, frags.clone()).unwrap();
+                c.run(&w.patterns).unwrap().0
+            };
+            let single = run_with(1);
+            for lanes in [2, 4] {
+                let multi = run_with(lanes);
+                assert_eq!(single.len(), multi.len());
+                for (a, b) in single.iter().zip(&multi) {
+                    assert_eq!(a.pattern_id, b.pattern_id);
+                    assert_eq!(
+                        a.best.map(|x| (x.score, x.row, x.loc)),
+                        b.best.map(|x| (x.score, x.row, x.loc)),
+                        "lanes={lanes} oracular={oracular:?} pattern {}",
+                        a.pattern_id
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tie_breaking_is_lane_count_invariant() {
+        // Identical fragments: every row ties at the same best score;
+        // the merged winner must be the lowest row and loc regardless
+        // of how rows shard across lanes.
+        let frags = vec![vec![1u8; 64]; 8];
+        for lanes in [1, 2, 4, 8] {
+            let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+            cfg.engine = EngineKind::Cpu;
+            cfg.oracular = None;
+            cfg.lanes = lanes;
+            let c = Coordinator::new(cfg, frags.clone()).unwrap();
+            let (res, _) = c.run(&[vec![1u8; 16]]).unwrap();
+            let best = res[0].best.unwrap();
+            assert_eq!((best.row, best.loc, best.score), (0, 0, 16), "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn lane_stats_cover_the_run() {
+        let w = DnaWorkload::generate(2048, 16, 16, 0.0, 5);
+        let frags = w.fragments(64, 16);
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.engine = EngineKind::Cpu;
+        cfg.oracular = None;
+        cfg.lanes = 3;
+        let c = Coordinator::new(cfg, frags).unwrap();
+        let (_, m) = c.run(&w.patterns).unwrap();
+        assert_eq!(m.lanes, 3);
+        assert_eq!(m.lane_stats.len(), 3);
+        // Naive broadcast: every pattern visits every lane.
+        for s in &m.lane_stats {
+            assert_eq!(s.items, 16, "lane {}", s.lane);
+            assert!(s.passes >= 16);
+            assert!(s.busy_seconds >= 0.0 && s.occupancy >= 0.0);
+        }
+        assert_eq!(m.passes, m.lane_stats.iter().map(|s| s.passes).sum::<usize>());
+    }
+
+    #[test]
+    fn lanes_clamp_to_fragment_count() {
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.engine = EngineKind::Cpu;
+        cfg.lanes = 64;
+        let c = Coordinator::new(cfg, vec![vec![0u8; 64]; 3]).unwrap();
+        assert_eq!(c.lanes(), 3);
+        let (res, m) = c.run(&[vec![0u8; 16]]).unwrap();
+        assert_eq!(m.lanes, 3);
+        assert_eq!(res.len(), 1);
+    }
+
+    #[test]
+    fn coordinator_survives_many_runs_on_the_same_lanes() {
+        // Lanes are persistent; the shared result channel must come
+        // back clean between runs.
+        let (c, w) = coordinator(EngineKind::Cpu, Some((8, 32)));
+        for _ in 0..3 {
+            let (results, m) = c.run(&w.patterns).unwrap();
+            assert_eq!(results.len(), w.patterns.len());
+            assert_eq!(m.patterns, w.patterns.len());
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@ pub mod fig6_breakdown;
 pub mod fig7_pattern_length;
 pub mod fig8_technology;
 pub mod fig9_10_nmp;
+pub mod lane_scaling;
 pub mod row_width;
 pub mod scheduling;
 pub mod tables;
@@ -42,4 +43,5 @@ pub fn run_all() {
     variation::run();
     ablation::run();
     scheduling::run();
+    lane_scaling::run();
 }

@@ -1,9 +1,9 @@
 //! `cram-pm` — command-line interface to the CRAM-PM reproduction.
 //!
 //! ```text
-//! cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|tables|all>
+//! cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|tables|all>
 //! cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N]
-//!             [--pat-chars N] [--naive] [--seed S] [--error-rate F]
+//!             [--pat-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F]
 //! cram-pm info
 //! ```
 //!
@@ -16,7 +16,7 @@ use std::collections::HashMap;
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|tables|all>\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n  cram-pm info"
+        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|tables|all>\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n  cram-pm info"
     );
     std::process::exit(2);
 }
@@ -57,6 +57,7 @@ fn cmd_experiment(which: &str) {
         "variation" => experiments::variation::run(),
         "ablation" => experiments::ablation::run(),
         "scheduling" => experiments::scheduling::run(),
+        "lanes" | "lane-scaling" => experiments::lane_scaling::run(),
         "all" => experiments::run_all(),
         other => {
             eprintln!("unknown experiment: {other}");
@@ -97,6 +98,15 @@ fn cmd_run(kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
     if naive {
         cfg.oracular = None;
     }
+    if let Some(v) = kv.get("lanes") {
+        match v.parse::<usize>() {
+            Ok(n) if n >= 1 => cfg.lanes = n,
+            _ => {
+                eprintln!("--lanes must be an integer >= 1, got {v}");
+                usage();
+            }
+        }
+    }
     if let Some(dir) = kv.get("artifacts") {
         cfg.artifacts_dir = dir.into();
     }
@@ -113,6 +123,17 @@ fn cmd_run(kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
     println!("matched           {} ({} with perfect score)", metrics.matched, perfect);
     println!("engine passes     {}", metrics.passes);
     println!("mean candidates   {:.1} rows/pattern", metrics.mean_candidates);
+    println!("executor lanes    {}", metrics.lanes);
+    for s in &metrics.lane_stats {
+        println!(
+            "  lane {:<2}         {} items, {} passes, occupancy {:.2}, {:.0} items/s",
+            s.lane,
+            s.items,
+            s.passes,
+            s.occupancy,
+            s.rate(metrics.wall_seconds)
+        );
+    }
     println!(
         "host wall         {:.3} s ({:.0} patterns/s)",
         metrics.wall_seconds, metrics.host_rate

@@ -7,6 +7,11 @@ use anyhow::{anyhow, Context};
 use std::collections::HashMap;
 use std::path::Path;
 
+// The offline build image vendors no PJRT crate; `xla_stub` mirrors the
+// API slice used below. Point this alias at the real `xla` crate to
+// re-enable the PJRT hot path.
+use crate::runtime::xla_stub as xla;
+
 /// Output of one executable invocation (one array pass).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PassOutput {

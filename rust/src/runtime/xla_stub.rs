@@ -1,0 +1,162 @@
+//! Offline stand-in for the `xla` (PJRT) bindings.
+//!
+//! The build image vendors no PJRT/XLA crate, so this module mirrors
+//! the small slice of the `xla` API that [`crate::runtime::engine`]
+//! consumes and fails — with an actionable message — at the first
+//! operation that would need the real runtime ([`PjRtClient::cpu`]).
+//!
+//! Every artifact-gated test, bench, and example checks for
+//! `artifacts/manifest.txt` before exercising the XLA path and skips
+//! (or falls back to [`crate::coordinator::EngineKind::Bitsim`]) when
+//! it is absent, so the default build stays green end to end. Swapping
+//! the real bindings back in is one line: re-point the `xla` alias at
+//! the top of `runtime/engine.rs` from this module to the crate.
+
+use std::fmt;
+
+/// Displayable error mirroring `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn stub() -> Self {
+        Error(
+            "PJRT/XLA bindings are not vendored in this build; score with \
+             EngineKind::Cpu or EngineKind::Bitsim instead (see README.md)"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias used by the stub API.
+pub type XlaResult<T> = std::result::Result<T, Error>;
+
+/// Stub PJRT client — construction always fails, so no other stub
+/// method is reachable on the hot path.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The real binding constructs a CPU PJRT client; the stub reports
+    /// that the runtime is unavailable.
+    pub fn cpu() -> XlaResult<Self> {
+        Err(Error::stub())
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile an HLO computation onto the client.
+    pub fn compile(&self, _comp: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
+        Err(Error::stub())
+    }
+}
+
+/// Stub compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments, returning per-device output
+    /// buffers.
+    pub fn execute<T>(&self, _args: &[T]) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub())
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Fetch the buffer contents as a literal.
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        Err(Error::stub())
+    }
+}
+
+/// Stub HLO module proto (text-parsed in the real binding).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: &str) -> XlaResult<Self> {
+        Err(Error::stub())
+    }
+}
+
+/// Stub XLA computation handle.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Stub host literal.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(_data: &[i32]) -> Self {
+        Literal { _private: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> XlaResult<Literal> {
+        Err(Error::stub())
+    }
+
+    /// Destructure a 3-tuple literal.
+    pub fn to_tuple3(&self) -> XlaResult<(Literal, Literal, Literal)> {
+        Err(Error::stub())
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T>(&self) -> XlaResult<Vec<T>> {
+        Err(Error::stub())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_client_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().err().expect("stub client must not construct");
+        let msg = err.to_string();
+        assert!(msg.contains("not vendored"), "unhelpful stub error: {msg}");
+        assert!(msg.contains("Bitsim"), "stub error must point at a working engine: {msg}");
+    }
+
+    #[test]
+    fn stub_literals_construct_but_do_not_execute() {
+        let lit = Literal::vec1(&[1, 2, 3]);
+        assert!(lit.reshape(&[3, 1]).is_err());
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

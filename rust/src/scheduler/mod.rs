@@ -24,7 +24,7 @@ pub mod throughput;
 
 pub use naive::NaiveScheduler;
 pub use oracular::{OracularScheduler, OracularStats};
-pub use throughput::{RateReport, ThroughputModel};
+pub use throughput::{RateReport, ShardedReport, ThroughputModel};
 
 /// A row address across the substrate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -60,6 +60,161 @@ pub trait PatternScheduler {
     /// substrate. Every pattern must appear in at least one pass.
     fn schedule(&self, n_patterns: usize) -> Vec<Pass>;
 
+    /// Shard-aware pass emission: split every pass's assignments into
+    /// per-shard sub-passes, one per executor lane. `linear` maps a
+    /// [`RowAddr`] to its linearized substrate row index (the domain of
+    /// `shard`). Pass structure is preserved — which patterns share a
+    /// pass does not change — so sub-passes of the same index can fire
+    /// on their shards concurrently without violating the per-pass row
+    /// exclusivity invariant.
+    fn schedule_sharded(
+        &self,
+        n_patterns: usize,
+        shard: &ShardMap,
+        linear: &dyn Fn(RowAddr) -> usize,
+    ) -> Vec<Vec<Pass>> {
+        self.schedule(n_patterns)
+            .into_iter()
+            .map(|pass| {
+                let mut per: Vec<Pass> = vec![Pass::default(); shard.shards()];
+                for (row, pid) in pass.assignments {
+                    per[shard.shard_of(linear(row))].assignments.push((row, pid));
+                }
+                per
+            })
+            .collect()
+    }
+
     /// Scheduler name for reports.
     fn name(&self) -> &'static str;
+}
+
+/// Maps linearized substrate row indices onto contiguous, non-empty
+/// shards — the unit of host-side execute parallelism (one coordinator
+/// lane per shard) and of the aggregate hardware projection
+/// ([`crate::sim::sharding`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardMap {
+    total_rows: usize,
+    shards: usize,
+    /// Rows per shard (the last shard may be short).
+    chunk: usize,
+}
+
+impl ShardMap {
+    /// Shard `total_rows` rows into (up to) `shards` contiguous chunks.
+    /// The effective shard count is clamped so that every shard owns at
+    /// least one row; `shards = 1` reproduces the unsharded substrate.
+    pub fn new(total_rows: usize, shards: usize) -> Self {
+        assert!(total_rows > 0, "cannot shard an empty substrate");
+        let chunk = total_rows.div_ceil(shards.clamp(1, total_rows));
+        let shards = total_rows.div_ceil(chunk);
+        ShardMap { total_rows, shards, chunk }
+    }
+
+    /// Effective shard count (every shard non-empty).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Rows across the whole substrate.
+    pub fn total_rows(&self) -> usize {
+        self.total_rows
+    }
+
+    /// Which shard owns a linearized row index.
+    pub fn shard_of(&self, row: usize) -> usize {
+        assert!(row < self.total_rows, "row {row} out of {} substrate rows", self.total_rows);
+        row / self.chunk
+    }
+
+    /// The row range a shard owns.
+    pub fn range(&self, shard: usize) -> std::ops::Range<usize> {
+        assert!(shard < self.shards, "shard {shard} out of {}", self.shards);
+        shard * self.chunk..((shard + 1) * self.chunk).min(self.total_rows)
+    }
+
+    /// Split an ascending list of row ids into per-shard runs,
+    /// preserving order — the coordinator's per-pattern dispatch shape.
+    pub fn split(&self, rows: &[u32]) -> Vec<(usize, Vec<u32>)> {
+        let mut out: Vec<(usize, Vec<u32>)> = Vec::new();
+        for &r in rows {
+            let s = self.shard_of(r as usize);
+            match out.last_mut() {
+                Some((last, run)) if *last == s => run.push(r),
+                _ => out.push((s, vec![r])),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_map_covers_every_row_exactly_once() {
+        for (rows, shards) in [(10, 4), (9, 4), (1, 8), (4096, 3), (7, 7), (7, 1)] {
+            let m = ShardMap::new(rows, shards);
+            assert!(m.shards() >= 1 && m.shards() <= shards.max(1));
+            let mut covered = 0usize;
+            for s in 0..m.shards() {
+                let r = m.range(s);
+                assert!(!r.is_empty(), "shard {s} empty for rows={rows} shards={shards}");
+                for row in r.clone() {
+                    assert_eq!(m.shard_of(row), s);
+                }
+                covered += r.len();
+            }
+            assert_eq!(covered, rows, "rows={rows} shards={shards}");
+        }
+    }
+
+    #[test]
+    fn shard_map_split_preserves_rows_and_order() {
+        let m = ShardMap::new(100, 4);
+        let rows: Vec<u32> = vec![0, 3, 24, 25, 26, 60, 99];
+        let split = m.split(&rows);
+        let rejoined: Vec<u32> = split.iter().flat_map(|(_, r)| r.clone()).collect();
+        assert_eq!(rejoined, rows);
+        for (s, run) in &split {
+            for &r in run {
+                assert_eq!(m.shard_of(r as usize), *s);
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_reproduces_unsharded_substrate() {
+        let m = ShardMap::new(42, 1);
+        assert_eq!(m.shards(), 1);
+        assert_eq!(m.range(0), 0..42);
+    }
+
+    #[test]
+    fn sharded_emission_partitions_each_pass() {
+        let sched = NaiveScheduler::new(2, 8); // 16 substrate rows
+        let shard = ShardMap::new(16, 4);
+        let linear = |r: RowAddr| r.array as usize * 8 + r.row as usize;
+        let flat = sched.schedule(3);
+        let sharded = sched.schedule_sharded(3, &shard, &linear);
+        assert_eq!(sharded.len(), flat.len());
+        for (pass, per_shard) in flat.iter().zip(&sharded) {
+            assert_eq!(per_shard.len(), shard.shards());
+            // Union of sub-passes == the original pass (as multisets).
+            let mut got: Vec<(RowAddr, usize)> =
+                per_shard.iter().flat_map(|p| p.assignments.clone()).collect();
+            let mut want = pass.assignments.clone();
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want);
+            // Each sub-pass holds only rows its shard owns.
+            for (s, sub) in per_shard.iter().enumerate() {
+                for &(row, _) in &sub.assignments {
+                    assert_eq!(shard.shard_of(linear(row)), s);
+                }
+            }
+        }
+    }
 }

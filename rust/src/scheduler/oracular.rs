@@ -245,6 +245,28 @@ mod tests {
     }
 
     #[test]
+    fn sharded_emission_assignments_stay_within_candidates() {
+        use crate::scheduler::ShardMap;
+        let s = setup(48, 192, 24, 8);
+        let shard = ShardMap::new(48, 4);
+        let linear = |r: RowAddr| r.array as usize * 8 + r.row as usize;
+        let sharded = s.schedule_sharded(64, &shard, &linear);
+        for per_shard in &sharded {
+            assert_eq!(per_shard.len(), shard.shards());
+            for (sh, pass) in per_shard.iter().enumerate() {
+                for &(row, pid) in &pass.assignments {
+                    let ri = linear(row);
+                    assert_eq!(shard.shard_of(ri), sh, "assignment leaked across shards");
+                    assert!(
+                        s.candidates(&s.patterns[pid]).contains(&(ri as u32)),
+                        "sharded assignment outside the k-mer candidate set"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn candidates_capped() {
         let mut s = setup(64, 256, 24, 6);
         s.max_rows_per_pattern = 3;

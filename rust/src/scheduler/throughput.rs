@@ -5,7 +5,7 @@
 //! **match rate** (patterns/second) and **compute efficiency** (match
 //! rate per mW).
 
-use crate::sim::{DnaPassModel, PassCost, SystemConfig};
+use crate::sim::{DnaPassModel, PassCost, ShardPlan, SystemConfig};
 
 /// Throughput/energy report for one design point.
 #[derive(Debug, Clone)]
@@ -24,6 +24,27 @@ pub struct RateReport {
     pub pool_energy: f64,
     /// Patterns per pass achieved by the scheduler.
     pub patterns_per_pass: f64,
+}
+
+/// Aggregate throughput/energy projection across substrate shards
+/// (see [`ThroughputModel::sharded`]).
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    /// Effective shard count (clamped to the substrate).
+    pub shards: usize,
+    /// Wall-clock to stream the pool through every shard, s (slowest
+    /// shard — shards fire in lock-step on the same pattern stream).
+    pub pool_time: f64,
+    /// Pool energy summed across shards, J.
+    pub pool_energy: f64,
+    /// Substrate power summed across shards, W.
+    pub power: f64,
+    /// Sustained match rate, patterns/s (gated by the slowest shard).
+    pub match_rate: f64,
+    /// Match rate per mW across the sharded substrate.
+    pub efficiency: f64,
+    /// Per-shard reports.
+    pub per_shard: Vec<RateReport>,
 }
 
 /// Match-rate model parameterized by scheduler selectivity.
@@ -60,6 +81,62 @@ impl ThroughputModel {
     pub fn oracular(&self, rows_per_pattern: f64, pool_size: usize) -> RateReport {
         let ppp = (self.config.total_rows() as f64 / rows_per_pattern).max(1.0);
         self.report("Oracular", ppp, pool_size)
+    }
+
+    /// Aggregate projection across `shards` substrate shards — the
+    /// hardware mirror of the coordinator's multi-lane execute stage.
+    ///
+    /// Fragments are partitioned across shards; patterns are not: the
+    /// whole pool streams through every shard in lock-step, each shard
+    /// matching its share of the rows. Pattern packing carries over
+    /// unchanged (`rows_per_pattern` candidates also split 1/N per
+    /// shard, so patterns-per-pass is shard-invariant); pass `None`
+    /// for Naive broadcast. Aggregation: pool time is the slowest
+    /// shard (lock-step), match rate the slowest shard's rate, energy
+    /// and power sum.
+    pub fn sharded(
+        &self,
+        shards: usize,
+        rows_per_pattern: Option<f64>,
+        pool_size: usize,
+    ) -> ShardedReport {
+        let plan = ShardPlan::new(self.config, shards);
+        let ppp_mono = match rows_per_pattern {
+            Some(rpp) => (self.config.total_rows() as f64 / rpp.max(1.0)).max(1.0),
+            None => 1.0,
+        };
+        let label = if rows_per_pattern.is_some() { "Oracular" } else { "Naive" };
+        let mut per_shard = Vec::with_capacity(plan.shards());
+        for s in 0..plan.shards() {
+            let cfg = plan.config_for(s);
+            let model = ThroughputModel::new(cfg);
+            // Patterns-per-pass is the substrate-wide packing and is
+            // deliberately NOT re-clamped per shard: a shard holds 1/N
+            // of the rows and 1/N of a pattern's candidate rows, and a
+            // pattern whose candidates miss a shard simply does not
+            // occupy it that pass — so pass count (and with it the
+            // projection) is shard-invariant, matching the coordinator
+            // whose results do not depend on the lane count.
+            per_shard.push(model.report(
+                &format!("{label}[shard {s}/{}]", plan.shards()),
+                ppp_mono,
+                pool_size,
+            ));
+        }
+        let pool_time = per_shard.iter().map(|r| r.pool_time).fold(0.0_f64, f64::max);
+        let pool_energy: f64 = per_shard.iter().map(|r| r.pool_energy).sum();
+        let power: f64 = per_shard.iter().map(|r| r.power).sum();
+        let match_rate =
+            per_shard.iter().map(|r| r.match_rate).fold(f64::INFINITY, f64::min);
+        ShardedReport {
+            shards: plan.shards(),
+            pool_time,
+            pool_energy,
+            power,
+            match_rate,
+            efficiency: match_rate / (power * 1e3).max(1e-30),
+            per_shard,
+        }
     }
 
     /// Report for an explicit patterns-per-pass packing.
@@ -135,6 +212,45 @@ mod tests {
         assert!(opt_rate.match_rate > 10.0 * std_rate.match_rate);
         let e_ratio = opt_rate.pool_energy / std_rate.pool_energy;
         assert!((0.8..1.2).contains(&e_ratio), "pool energy ratio {e_ratio}");
+    }
+
+    /// The sharded projection is a consistency transform, not a free
+    /// speedup: the substrate's arrays already fire in parallel, so
+    /// splitting them into lock-step shards must leave pool time and
+    /// energy (nearly) unchanged while partitioning power.
+    #[test]
+    fn sharded_projection_conserves_monolithic_costs() {
+        let mut cfg = SystemConfig::small(Technology::NearTerm, PresetMode::Gang);
+        cfg.arrays = 8;
+        let model = ThroughputModel::new(cfg);
+        // rpp = 2.0 < shards exercises the case where a pattern's
+        // candidates occupy fewer rows than there are shards — the
+        // projection must stay lane-invariant there too.
+        for rpp in [None, Some(16.0), Some(2.0)] {
+            let mono = model.sharded(1, rpp, 1000);
+            let quad = model.sharded(4, rpp, 1000);
+            assert_eq!(mono.shards, 1);
+            assert_eq!(quad.shards, 4);
+            let t_ratio = quad.pool_time / mono.pool_time;
+            assert!((0.9..1.5).contains(&t_ratio), "pool time drifted: {t_ratio} ({rpp:?})");
+            let e_ratio = quad.pool_energy / mono.pool_energy;
+            assert!((0.9..1.5).contains(&e_ratio), "pool energy drifted: {e_ratio} ({rpp:?})");
+            let p_ratio = quad.power / mono.power;
+            assert!((0.999..1.001).contains(&p_ratio), "power not partitioned: {p_ratio}");
+        }
+    }
+
+    #[test]
+    fn single_shard_matches_flat_reports() {
+        let cfg = SystemConfig::small(Technology::NearTerm, PresetMode::Gang);
+        let model = ThroughputModel::new(cfg);
+        let naive = model.naive(500);
+        let sharded = model.sharded(1, None, 500);
+        assert!((sharded.pool_time - naive.pool_time).abs() / naive.pool_time < 1e-9);
+        assert!((sharded.match_rate - naive.match_rate).abs() / naive.match_rate < 1e-9);
+        let orac = model.oracular(8.0, 500);
+        let sharded = model.sharded(1, Some(8.0), 500);
+        assert!((sharded.pool_energy - orac.pool_energy).abs() / orac.pool_energy < 1e-9);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 
 pub mod banking;
 pub mod engine;
+pub mod sharding;
 pub mod stats;
 
 pub use engine::{DnaPassModel, PassCost, Simulator, SystemConfig};
+pub use sharding::ShardPlan;
 pub use stats::StageBreakdown;

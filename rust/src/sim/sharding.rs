@@ -1,0 +1,135 @@
+//! Substrate sharding for the aggregate hardware projection.
+//!
+//! The multi-lane coordinator (see [`crate::coordinator`]) partitions
+//! the resident fragment rows into `N` shards, one executor lane per
+//! shard. This module mirrors that split on the modeled hardware:
+//! a [`ShardPlan`] divides a [`SystemConfig`]'s substrate into `N`
+//! sub-substrates whose per-shard pass costs can be aggregated
+//! (latency = slowest shard, since shards fire in lock-step on the
+//! same pattern stream; energy and power sum). It is the §4
+//! bank-level-parallelism story ([`crate::sim::banking`]) lifted from
+//! one array to the whole substrate.
+
+use crate::sim::SystemConfig;
+
+/// A partition of a system configuration's substrate into shards.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPlan {
+    base: SystemConfig,
+    shards: usize,
+    /// Whether shards divide whole arrays (preferred) or rows within
+    /// the array dimension (when there are fewer arrays than shards).
+    by_arrays: bool,
+}
+
+impl ShardPlan {
+    /// Plan (up to) `shards` shards over `base`. The effective count is
+    /// clamped so every shard owns at least one array (or one row);
+    /// `shards = 1` reproduces the monolithic substrate.
+    pub fn new(base: SystemConfig, shards: usize) -> Self {
+        let want = shards.max(1);
+        let by_arrays = base.arrays >= want;
+        let cap = if by_arrays { base.arrays } else { base.rows };
+        ShardPlan { base, shards: want.min(cap.max(1)), by_arrays }
+    }
+
+    /// Effective shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Even share of `total` for shard `s` (remainder spread over the
+    /// leading shards).
+    fn share(total: usize, shards: usize, s: usize) -> usize {
+        total / shards + usize::from(s < total % shards)
+    }
+
+    /// The sub-substrate configuration of shard `s`.
+    pub fn config_for(&self, s: usize) -> SystemConfig {
+        assert!(s < self.shards, "shard {s} out of {}", self.shards);
+        let mut cfg = self.base;
+        if self.by_arrays {
+            cfg.arrays = Self::share(self.base.arrays, self.shards, s).max(1);
+        } else {
+            cfg.rows = Self::share(self.base.rows, self.shards, s).max(1);
+        }
+        cfg
+    }
+
+    /// Rows across all shards — conserved from the base substrate.
+    pub fn total_rows(&self) -> usize {
+        (0..self.shards).map(|s| self.config_for(s).total_rows()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::PresetMode;
+    use crate::sim::DnaPassModel;
+    use crate::tech::Technology;
+
+    fn base() -> SystemConfig {
+        let mut cfg = SystemConfig::small(Technology::NearTerm, PresetMode::Gang);
+        cfg.arrays = 8;
+        cfg
+    }
+
+    #[test]
+    fn plan_conserves_substrate_rows() {
+        for shards in [1, 2, 3, 4, 8, 16] {
+            let plan = ShardPlan::new(base(), shards);
+            assert_eq!(plan.total_rows(), base().total_rows(), "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn splits_by_rows_when_arrays_are_scarce() {
+        let mut cfg = base();
+        cfg.arrays = 1;
+        cfg.rows = 10;
+        let plan = ShardPlan::new(cfg, 4);
+        assert_eq!(plan.shards(), 4);
+        assert_eq!(plan.total_rows(), 10);
+        for s in 0..plan.shards() {
+            assert!(plan.config_for(s).rows >= 1);
+        }
+    }
+
+    #[test]
+    fn single_shard_is_the_monolithic_config() {
+        let plan = ShardPlan::new(base(), 1);
+        let cfg = plan.config_for(0);
+        assert_eq!(cfg.arrays, base().arrays);
+        assert_eq!(cfg.rows, base().rows);
+    }
+
+    #[test]
+    fn shard_count_clamped_to_substrate() {
+        let mut cfg = base();
+        cfg.arrays = 1;
+        cfg.rows = 3;
+        assert_eq!(ShardPlan::new(cfg, 100).shards(), 3);
+    }
+
+    /// Lock-step shards: splitting by arrays leaves pass latency
+    /// untouched (latency is a property of one array's program) while
+    /// per-shard energy scales with the shard's array share — the
+    /// invariant the aggregate projection in
+    /// [`crate::scheduler::ThroughputModel::sharded`] relies on.
+    #[test]
+    fn array_split_preserves_latency_and_partitions_energy() {
+        let mono = DnaPassModel::new(base()).pass_cost();
+        let plan = ShardPlan::new(base(), 4);
+        let mut energy_arrays = 0.0;
+        for s in 0..plan.shards() {
+            let cfg = plan.config_for(s);
+            let cost = DnaPassModel::new(cfg).pass_cost();
+            let lat_ratio = cost.masked_latency / mono.masked_latency;
+            assert!((0.999..1.001).contains(&lat_ratio), "shard {s} latency ratio {lat_ratio}");
+            energy_arrays += cost.energy * cfg.arrays as f64;
+        }
+        let e_ratio = energy_arrays / (mono.energy * base().arrays as f64);
+        assert!((0.999..1.001).contains(&e_ratio), "energy not conserved: {e_ratio}");
+    }
+}

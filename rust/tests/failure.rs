@@ -52,15 +52,30 @@ fn coordinator_rejects_empty_fragment_set() {
 }
 
 #[test]
-fn xla_engine_surfaces_missing_artifacts_as_error() {
+fn xla_engine_surfaces_missing_artifacts_from_new() {
+    // The startup handshake: engine construction failures inside the
+    // executor lanes must fail `Coordinator::new`, not the first run.
     let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
     cfg.engine = EngineKind::Xla;
     cfg.artifacts_dir = PathBuf::from("/nonexistent/artifacts");
-    let coord = Coordinator::new(cfg, vec![vec![0u8; 64]; 4]).unwrap();
-    let err = coord.run(&[vec![0u8; 16]]);
-    assert!(err.is_err(), "missing artifacts must error through the pipeline");
-    let msg = format!("{:#}", err.unwrap_err());
+    let res = Coordinator::new(cfg, vec![vec![0u8; 64]; 4]);
+    let err = res.err().expect("missing artifacts must fail the startup handshake");
+    let msg = format!("{err:#}");
     assert!(msg.contains("artifacts") || msg.contains("XLA"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn broken_engine_fails_construction_for_every_lane_count() {
+    for lanes in [1usize, 2, 4] {
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.engine = EngineKind::Xla;
+        cfg.artifacts_dir = PathBuf::from("/nonexistent/artifacts");
+        cfg.lanes = lanes;
+        assert!(
+            Coordinator::new(cfg, vec![vec![0u8; 64]; 8]).is_err(),
+            "lanes={lanes}: broken engine must fail new()"
+        );
+    }
 }
 
 #[test]

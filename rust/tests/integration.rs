@@ -50,6 +50,38 @@ fn three_engines_agree_end_to_end() {
     }
 }
 
+/// Multi-lane execute is bit-identical to single-lane, across engines
+/// and routing modes — the sharding refactor's keystone: lanes change
+/// wall-clock, never answers.
+#[test]
+fn multi_lane_pipeline_is_bit_identical_to_single_lane() {
+    let w = DnaWorkload::generate(4_096, 16, 16, 0.05, 55);
+    let fragments = w.fragments(64, 16);
+    for engine in [EngineKind::Cpu, EngineKind::Bitsim] {
+        for oracular in [Some((8, 24)), None] {
+            let run_with = |lanes: usize| {
+                let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+                cfg.engine = engine;
+                cfg.oracular = oracular;
+                cfg.lanes = lanes;
+                Coordinator::new(cfg, fragments.clone()).unwrap().run(&w.patterns).unwrap().0
+            };
+            let single = run_with(1);
+            let multi = run_with(4);
+            assert_eq!(single.len(), multi.len());
+            for (a, b) in single.iter().zip(&multi) {
+                assert_eq!(a.pattern_id, b.pattern_id);
+                assert_eq!(
+                    a.best.map(|x| (x.score, x.row, x.loc)),
+                    b.best.map(|x| (x.score, x.row, x.loc)),
+                    "{engine:?} oracular={oracular:?} pattern {}",
+                    a.pattern_id
+                );
+            }
+        }
+    }
+}
+
 /// Naive broadcast finds the global best (matches the unrestricted
 /// oracle), and Oracular never reports a better score than Naive.
 #[test]

@@ -8,16 +8,19 @@
 //!   mode-invariant — for random geometries;
 //! * array semantics: Algorithm 1 equals the character-level oracle for
 //!   random fragments/patterns/geometries; compute is non-destructive;
-//! * scheduler: passes never double-book a row, all seedable patterns
-//!   get scheduled, candidates are sound (candidate rows really share a
-//!   k-mer);
+//! * scheduler: passes never double-book a row, every seedable pattern
+//!   appears in ≥1 pass, candidates are sound (candidate rows really
+//!   share a k-mer), and pass assignments are a subset of the k-mer
+//!   candidate set;
 //! * coordinator: result ordering and count invariants under random
-//!   pool sizes.
+//!   pool sizes, and lane-count invariance of the merged results.
 
 use cram_pm::array::{CramArray, RowLayout};
+use cram_pm::bench_apps::dna::DnaWorkload;
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
 use cram_pm::dna::{encode, score_profile, Encoded};
 use cram_pm::isa::{CodeGen, MicroInstr, PresetMode};
-use cram_pm::scheduler::{OracularScheduler, PatternScheduler, RowAddr};
+use cram_pm::scheduler::{OracularScheduler, PatternScheduler, RowAddr, ShardMap};
 use cram_pm::util::Rng;
 use std::collections::HashSet;
 
@@ -165,6 +168,94 @@ fn prop_oracular_candidates_sound_and_schedules_complete() {
             if !sched.candidates(p).is_empty() {
                 assert!(scheduled.contains(&pid), "seedable pattern {pid} never scheduled");
             }
+        }
+    }
+}
+
+#[test]
+fn prop_pass_assignments_subset_of_candidate_set() {
+    // Every (row, pattern) assignment the oracular scheduler emits —
+    // flat or shard-split — must come from that pattern's k-mer
+    // candidate set; the scheduler may drop candidates (caps, packing)
+    // but never invent rows.
+    let mut rng = Rng::new(0xACED);
+    for iter in 0..8 {
+        let n_rows = rng.range(8, 48);
+        let frag_chars = rng.range(40, 100);
+        let pat_chars = rng.range(12, 20);
+        let k = rng.range(4, 9);
+        let fragments: Vec<Vec<u8>> = (0..n_rows).map(|_| encode(&rng.dna(frag_chars))).collect();
+        let patterns: Vec<Vec<u8>> = (0..rng.range(4, 24))
+            .map(|_| {
+                let f = rng.below(n_rows);
+                let s = rng.below(frag_chars - pat_chars + 1);
+                fragments[f][s..s + pat_chars].to_vec()
+            })
+            .collect();
+        let rows: Vec<RowAddr> =
+            (0..n_rows).map(|i| RowAddr { array: 0, row: i as u32 }).collect();
+        let sched = OracularScheduler::build(&fragments, rows, patterns.clone(), k, 24);
+
+        for pass in sched.schedule(patterns.len()) {
+            for (row, pid) in pass.assignments {
+                assert!(
+                    sched.candidates(&patterns[pid]).contains(&row.row),
+                    "iter {iter}: pass assignment ({}, {pid}) outside the candidate set",
+                    row.row
+                );
+            }
+        }
+        // Shard-split emission preserves the same invariant per shard.
+        let shard = ShardMap::new(n_rows, 4);
+        let linear = |r: RowAddr| r.row as usize;
+        for per_shard in sched.schedule_sharded(patterns.len(), &shard, &linear) {
+            for (s, pass) in per_shard.iter().enumerate() {
+                for &(row, pid) in &pass.assignments {
+                    assert_eq!(shard.shard_of(row.row as usize), s, "iter {iter}: shard leak");
+                    assert!(
+                        sched.candidates(&patterns[pid]).contains(&row.row),
+                        "iter {iter}: sharded assignment outside the candidate set"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_multi_lane_results_invariant_random_pools() {
+    // Random pool sizes, lane counts and error rates: the coordinator's
+    // merged (score, row, loc) answers must not depend on the lane
+    // count, and exactly one result per pattern comes back, in order.
+    let mut rng = Rng::new(0x1A4E5);
+    for iter in 0..6 {
+        let n_pats = rng.range(1, 12);
+        let ref_chars = 1usize << rng.range(10, 13);
+        let lanes = rng.range(2, 6);
+        let error_rate = if rng.bool() { 0.05 } else { 0.0 };
+        let seed = rng.below(10_000) as u64;
+        let w = DnaWorkload::generate(ref_chars, n_pats, 16, error_rate, seed);
+        let fragments = w.fragments(64, 16);
+
+        let run_with = |l: usize| {
+            let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+            cfg.engine = EngineKind::Cpu;
+            cfg.oracular = Some((8, 16));
+            cfg.lanes = l;
+            Coordinator::new(cfg, fragments.clone()).unwrap().run(&w.patterns).unwrap().0
+        };
+        let single = run_with(1);
+        let multi = run_with(lanes);
+        assert_eq!(single.len(), n_pats, "iter {iter}");
+        assert_eq!(multi.len(), n_pats, "iter {iter}");
+        for (pid, (a, b)) in single.iter().zip(&multi).enumerate() {
+            assert_eq!(a.pattern_id, pid, "iter {iter}: results out of order");
+            assert_eq!(b.pattern_id, pid, "iter {iter}: results out of order");
+            assert_eq!(
+                a.best.map(|x| (x.score, x.row, x.loc)),
+                b.best.map(|x| (x.score, x.row, x.loc)),
+                "iter {iter}: lanes={lanes} diverged on pattern {pid}"
+            );
         }
     }
 }
