@@ -33,9 +33,14 @@
 //! energy for the run come from the step-accurate model, so a pipeline
 //! run reports both "what matched where" and "what it would cost on
 //! the spintronic substrate".
+//!
+//! Above this module sits the [`crate::serve`] layer: a `MatchServer`
+//! coalesces concurrent client requests into deduplicated micro-batches
+//! and feeds them through [`Coordinator::run_pools`], which shares one
+//! lane-mutex acquisition across a whole batch.
 
 pub mod engine;
 pub mod pipeline;
 
 pub use engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngine, WorkItem, WorkResult};
-pub use pipeline::{Coordinator, CoordinatorConfig, LaneStats, RunMetrics};
+pub use pipeline::{Coordinator, CoordinatorConfig, CoordinatorError, LaneStats, RunMetrics};

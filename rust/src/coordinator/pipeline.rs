@@ -18,7 +18,7 @@ use crate::baselines::cpu_ref::BestAlignment;
 use crate::coordinator::engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngine, WorkItem, WorkResult};
 use crate::isa::PresetMode;
 use crate::runtime::Runtime;
-use crate::scheduler::{OracularScheduler, RowAddr, ShardMap};
+use crate::scheduler::{OracularIndex, ShardMap};
 use crate::sim::SystemConfig;
 use crate::tech::Technology;
 use crate::Result;
@@ -28,6 +28,30 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Typed coordinator failures callers may want to match on (everything
+/// else flows through `anyhow` contexts). Retrieve with
+/// `err.downcast_ref::<CoordinatorError>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoordinatorError {
+    /// The lane mutex is poisoned: a previous run panicked while
+    /// holding the executor lanes. The coordinator must be rebuilt —
+    /// retrying the call cannot succeed.
+    LanesPoisoned,
+}
+
+impl std::fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoordinatorError::LanesPoisoned => write!(
+                f,
+                "coordinator lanes poisoned by a previous panic; rebuild the coordinator"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CoordinatorError {}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -255,6 +279,11 @@ pub struct Coordinator {
     /// Effective lane count (immutable after construction; kept outside
     /// the mutex so introspection never waits on an in-flight run).
     n_lanes: usize,
+    /// §Perf: the k-mer candidate index is built once here, over the
+    /// immutable resident fragments, and reused by every run and every
+    /// serving micro-batch — it was rebuilt per `run` call before,
+    /// which dominated short pools.
+    oracular_index: Option<OracularIndex>,
     inner: Mutex<LaneSet>,
 }
 
@@ -295,6 +324,8 @@ impl Coordinator {
                 cfg.frag_chars
             );
         }
+        let oracular_index =
+            cfg.oracular.map(|(k, max_rows)| OracularIndex::build(&fragments, k, max_rows));
         let shard = ShardMap::new(fragments.len(), cfg.lanes.max(1));
         let n_lanes = shard.shards();
         // Ample result buffering: covers every item the lanes can hold
@@ -401,6 +432,7 @@ impl Coordinator {
             cfg,
             fragments,
             n_lanes,
+            oracular_index,
             inner: Mutex::new(LaneSet { lanes, shard, res_rx }),
         })
     }
@@ -415,28 +447,87 @@ impl Coordinator {
         self.n_lanes
     }
 
+    /// Pattern length this coordinator accepts
+    /// ([`CoordinatorConfig::pat_chars`]).
+    pub fn pat_chars(&self) -> usize {
+        self.cfg.pat_chars
+    }
+
     /// Run a pattern pool through the pipeline. Returns per-pattern
-    /// results (ordered by pattern id) and run metrics.
+    /// results (ordered by pattern id) and run metrics. An empty pool
+    /// short-circuits to an empty result with zeroed metrics without
+    /// touching the lanes.
     pub fn run(&self, patterns: &[Vec<u8>]) -> Result<(Vec<WorkResult>, RunMetrics)> {
-        for (i, p) in patterns.iter().enumerate() {
-            anyhow::ensure!(
-                p.len() == self.cfg.pat_chars,
-                "pattern {i} length {} != config pat_chars {}",
-                p.len(),
-                self.cfg.pat_chars
-            );
+        let mut out = self.run_pools(&[patterns])?;
+        Ok(out.pop().expect("one pool in, one pool out"))
+    }
+
+    /// Run several pattern pools back to back under **one** lane-mutex
+    /// acquisition — the serving layer's micro-batch entry point: a
+    /// batch of concurrent client requests shares a single trip through
+    /// the persistent executor lanes instead of interleaving lock
+    /// acquisitions per request. Returns one `(results, metrics)` pair
+    /// per pool, in order. Empty pools yield empty results with zeroed
+    /// metrics; an all-empty batch never locks the lanes at all.
+    pub fn run_pools(&self, pools: &[&[Vec<u8>]]) -> Result<Vec<(Vec<WorkResult>, RunMetrics)>> {
+        for (pi, pool) in pools.iter().enumerate() {
+            for (i, p) in pool.iter().enumerate() {
+                anyhow::ensure!(
+                    p.len() == self.cfg.pat_chars,
+                    "pool {pi} pattern {i} length {} != config pat_chars {}",
+                    p.len(),
+                    self.cfg.pat_chars
+                );
+            }
         }
+        if pools.iter().all(|p| p.is_empty()) {
+            return Ok(pools.iter().map(|_| self.empty_run()).collect());
+        }
+        // One batch at a time through the persistent lanes. A poisoned
+        // mutex means a previous run panicked mid-flight; surface the
+        // typed, non-retryable error.
+        let inner = self
+            .inner
+            .lock()
+            .map_err(|_| anyhow::Error::new(CoordinatorError::LanesPoisoned))?;
+        pools
+            .iter()
+            .map(|pool| {
+                if pool.is_empty() {
+                    Ok(self.empty_run())
+                } else {
+                    self.run_on(&inner, pool)
+                }
+            })
+            .collect()
+    }
+
+    /// The zero-work run: what an empty pool reports.
+    fn empty_run(&self) -> (Vec<WorkResult>, RunMetrics) {
+        let metrics = RunMetrics {
+            patterns: 0,
+            matched: 0,
+            passes: 0,
+            mean_candidates: 0.0,
+            wall_seconds: 0.0,
+            host_rate: 0.0,
+            engine: format!("{:?}", self.cfg.engine),
+            lanes: self.n_lanes,
+            lane_stats: (0..self.n_lanes).map(LaneStats::idle).collect(),
+            hw_seconds: 0.0,
+            hw_energy: 0.0,
+            hw_match_rate: 0.0,
+        };
+        (Vec::new(), metrics)
+    }
+
+    /// One non-empty pool through the lanes the caller already holds.
+    fn run_on(
+        &self,
+        inner: &LaneSet,
+        patterns: &[Vec<u8>],
+    ) -> Result<(Vec<WorkResult>, RunMetrics)> {
         let t0 = Instant::now();
-
-        // --- Stage 1 state: candidate routing ------------------------
-        let oracular = self.cfg.oracular.map(|(k, max_rows)| {
-            let rows: Vec<RowAddr> =
-                (0..self.fragments.len()).map(|i| RowAddr { array: 0, row: i as u32 }).collect();
-            OracularScheduler::build(&self.fragments, rows, patterns.to_vec(), k, max_rows)
-        });
-
-        // One run at a time through the persistent lanes.
-        let inner = self.inner.lock().map_err(|_| anyhow!("coordinator lanes poisoned"))?;
         let lanes = &inner.lanes;
         let n_lanes = lanes.len();
 
@@ -448,8 +539,10 @@ impl Coordinator {
         // lazily in the feeder (in-flight memory stays bounded by the
         // lane queues). Patterns with no candidates anywhere never
         // enter a lane and keep `best: None` (the paper's
-        // "ill-schedules").
-        let oracular_plan: Option<Vec<Vec<(usize, Vec<u32>)>>> = oracular
+        // "ill-schedules"). The k-mer index itself is the one cached at
+        // construction — candidate routing is pure lookup here.
+        let oracular_plan: Option<Vec<Vec<(usize, Vec<u32>)>>> = self
+            .oracular_index
             .as_ref()
             .map(|idx| patterns.iter().map(|p| inner.shard.split(&idx.candidates(p))).collect());
         let (expected, total_candidates): (usize, usize) = match &oracular_plan {
@@ -799,6 +892,49 @@ mod tests {
             assert_eq!(results.len(), w.patterns.len());
             assert_eq!(m.patterns, w.patterns.len());
         }
+    }
+
+    #[test]
+    fn empty_pool_short_circuits_with_zeroed_metrics() {
+        let (c, _) = coordinator(EngineKind::Cpu, Some((8, 32)));
+        let (results, m) = c.run(&[]).unwrap();
+        assert!(results.is_empty());
+        assert_eq!((m.patterns, m.matched, m.passes), (0, 0, 0));
+        assert_eq!(m.host_rate, 0.0);
+        assert_eq!(m.hw_energy, 0.0);
+        assert_eq!(m.lane_stats.len(), c.lanes());
+        assert!(m.lane_stats.iter().all(|s| s.items == 0));
+    }
+
+    /// The serving layer's micro-batch entry point: a batch of pools
+    /// under one lock acquisition answers exactly like separate runs.
+    #[test]
+    fn run_pools_matches_separate_runs_per_pool() {
+        let (c, w) = coordinator(EngineKind::Cpu, Some((8, 32)));
+        let a = &w.patterns[..8];
+        let b = &w.patterns[8..20];
+        let batched = c.run_pools(&[a, &[], b]).unwrap();
+        assert_eq!(batched.len(), 3);
+        assert!(batched[1].0.is_empty());
+        assert_eq!(batched[1].1.patterns, 0);
+        let (ra, _) = c.run(a).unwrap();
+        let (rb, _) = c.run(b).unwrap();
+        for (batch, direct) in [(&batched[0].0, &ra), (&batched[2].0, &rb)] {
+            assert_eq!(batch.len(), direct.len());
+            for (x, y) in batch.iter().zip(direct.iter()) {
+                assert_eq!(x.pattern_id, y.pattern_id);
+                assert_eq!(
+                    x.best.map(|v| (v.score, v.row, v.loc)),
+                    y.best.map(|v| (v.score, v.row, v.loc))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pat_chars_exposed_for_admission_validation() {
+        let (c, _) = coordinator(EngineKind::Cpu, None);
+        assert_eq!(c.pat_chars(), 16);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::bench_apps::dna::DnaWorkload;
 use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
 use crate::experiments::rule;
 use crate::scheduler::{OracularScheduler, PatternScheduler, RowAddr, ShardMap};
+use crate::util::Json;
 
 /// One lane-sweep point.
 #[derive(Debug, Clone)]
@@ -98,30 +99,80 @@ pub fn shard_balance(
     per_shard
 }
 
-/// Print the lane-scaling study.
+/// The `BENCH_lane_scaling.json` document the CI perf-smoke lane
+/// archives.
+fn to_json(points: &[LanePoint], smoke: bool, ref_chars: usize, n_patterns: usize) -> Json {
+    Json::obj(vec![
+        ("experiment", Json::str("lane_scaling")),
+        ("smoke", Json::Bool(smoke)),
+        ("ref_chars", Json::int(ref_chars)),
+        ("patterns", Json::int(n_patterns)),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("lanes", Json::int(p.lanes)),
+                            ("host_rate", Json::num(p.host_rate)),
+                            ("speedup", Json::num(p.speedup)),
+                            ("mean_occupancy", Json::num(p.mean_occupancy)),
+                            ("hw_match_rate", Json::num(p.hw_match_rate)),
+                            ("hw_energy", Json::num(p.hw_energy)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Print the lane-scaling study at the default scale.
 pub fn run() {
+    if let Err(e) = run_with(false, None) {
+        println!("  lane scaling failed: {e:#}");
+    }
+}
+
+/// Print the lane-scaling study; `smoke` shrinks it to CI size and
+/// `json` writes the machine-readable report. Errors propagate (the CI
+/// bench-smoke step must fail loudly rather than upload no artifact).
+pub fn run_with(smoke: bool, json: Option<&std::path::Path>) -> crate::Result<()> {
     rule("Lane scaling — multi-lane execute stage vs the substrate projection");
-    match sweep(1 << 16, 64, &[1, 2, 4, 8], 2025) {
-        Ok(points) => {
-            println!(
-                "  {:>5} {:>14} {:>9} {:>11} {:>16} {:>12}",
-                "lanes", "host pat/s", "speedup", "occupancy", "hw match rate", "hw energy"
-            );
-            for p in &points {
-                println!(
-                    "  {:>5} {:>14.0} {:>8.2}× {:>10.2} {:>16.3e} {:>12.3e}",
-                    p.lanes, p.host_rate, p.speedup, p.mean_occupancy, p.hw_match_rate, p.hw_energy
-                );
-            }
-            println!(
-                "\n  host throughput scales with lanes (execute-stage parallelism); the\n  \
-                 substrate projection stays put — its arrays were already parallel (§5)."
-            );
-        }
-        Err(e) => println!("  lane sweep failed: {e:#}"),
+    let (ref_chars, n_patterns): (usize, usize) = if smoke {
+        (1 << 13, 16)
+    } else {
+        (1 << 16, 64)
+    };
+    let lanes_list: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let points = sweep(ref_chars, n_patterns, lanes_list, 2025)?;
+    println!(
+        "  {:>5} {:>14} {:>9} {:>11} {:>16} {:>12}",
+        "lanes", "host pat/s", "speedup", "occupancy", "hw match rate", "hw energy"
+    );
+    for p in &points {
+        println!(
+            "  {:>5} {:>14.0} {:>8.2}× {:>10.2} {:>16.3e} {:>12.3e}",
+            p.lanes, p.host_rate, p.speedup, p.mean_occupancy, p.hw_match_rate, p.hw_energy
+        );
+    }
+    println!(
+        "\n  host throughput scales with lanes (execute-stage parallelism); the\n  \
+         substrate projection stays put — its arrays were already parallel (§5)."
+    );
+    if let Some(path) = json {
+        to_json(&points, smoke, ref_chars, n_patterns)
+            .write_file(path)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        println!("\n  wrote {}", path.display());
     }
 
-    let balance = shard_balance(1 << 16, 256, 4, 4242);
+    let balance = if smoke {
+        shard_balance(1 << 13, 64, 4, 4242)
+    } else {
+        shard_balance(1 << 16, 256, 4, 4242)
+    };
     let total: usize = balance.iter().sum();
     println!("\n  oracular shard-aware emission, 4 shards: {balance:?} assignments");
     if let (Some(&hi), Some(&lo)) = (balance.iter().max(), balance.iter().min()) {
@@ -131,6 +182,7 @@ pub fn run() {
             lo as f64 / hi.max(1) as f64
         );
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -154,6 +206,15 @@ mod tests {
         let pts = sweep(1 << 12, 8, &[1, 4], 9).unwrap();
         let e_ratio = pts[1].hw_energy / pts[0].hw_energy;
         assert!((0.8..1.6).contains(&e_ratio), "hw energy drifted with lanes: {e_ratio}");
+    }
+
+    #[test]
+    fn json_report_lists_every_point() {
+        let pts = sweep(1 << 11, 4, &[1, 2], 5).unwrap();
+        let doc = to_json(&pts, true, 1 << 11, 4).render();
+        assert!(doc.contains("\"experiment\": \"lane_scaling\""));
+        assert!(doc.contains("\"smoke\": true"));
+        assert!(doc.contains("\"lanes\": 1") && doc.contains("\"lanes\": 2"));
     }
 
     #[test]

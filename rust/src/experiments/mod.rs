@@ -20,6 +20,7 @@ pub mod fig9_10_nmp;
 pub mod lane_scaling;
 pub mod row_width;
 pub mod scheduling;
+pub mod serving;
 pub mod tables;
 pub mod variation;
 
@@ -44,4 +45,5 @@ pub fn run_all() {
     ablation::run();
     scheduling::run();
     lane_scaling::run();
+    serving::run();
 }

@@ -1,0 +1,407 @@
+//! Serving-layer load study (ROADMAP: heavy traffic from millions of
+//! users) — aggregate throughput and latency of the [`crate::serve`]
+//! micro-batching server over the sharded coordinator, vs. per-request
+//! dispatch, on a Zipfian pattern mix.
+//!
+//! Three closed-loop configurations isolate the two serving wins:
+//! `batch=1` (every request dispatches alone — the pre-serving-layer
+//! behavior, concurrent clients serializing on the lane mutex),
+//! `batched` (micro-batches share one lock acquisition via
+//! `Coordinator::run_pools`), and `batched+dedup` (identical patterns
+//! across a batch collapse to one execution). An open-loop sweep then
+//! offers fixed request rates at the batched+dedup server under
+//! `Backpressure::Reject` to expose latency and shed rate vs. load.
+//! This is the `serve-bench` CLI's engine; `--json` emits the
+//! `BENCH_serving.json` report the CI perf-smoke lane archives.
+
+use crate::bench_apps::dna::DnaWorkload;
+use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use crate::experiments::rule;
+use crate::isa::PresetMode;
+use crate::scheduler::ThroughputModel;
+use crate::serve::load::{closed_loop, open_loop, LoadReport};
+use crate::serve::{Backpressure, MatchServer, ServeConfig};
+use crate::sim::SystemConfig;
+use crate::tech::Technology;
+use crate::util::Json;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// All the knobs of one serve-bench run (CLI-overridable).
+#[derive(Debug, Clone)]
+pub struct ServingKnobs {
+    /// Synthetic reference length, chars.
+    pub ref_chars: usize,
+    /// Catalog size: distinct patterns clients draw from.
+    pub catalog: usize,
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Requests each client issues.
+    pub requests_per_client: usize,
+    /// Patterns per request.
+    pub patterns_per_request: usize,
+    /// Zipf exponent of pattern popularity.
+    pub zipf_s: f64,
+    /// Micro-batch size cap, offered patterns.
+    pub max_batch: usize,
+    /// Micro-batch deadline, µs.
+    pub max_delay_us: u64,
+    /// Admission queue depth, requests.
+    pub queue_depth: usize,
+    /// Coordinator executor lanes.
+    pub lanes: usize,
+    /// Workload + load-generator seed.
+    pub seed: u64,
+}
+
+impl ServingKnobs {
+    /// Default (paper-adjacent) scale.
+    pub fn standard() -> Self {
+        ServingKnobs {
+            ref_chars: 1 << 16,
+            catalog: 512,
+            clients: 8,
+            requests_per_client: 64,
+            patterns_per_request: 8,
+            zipf_s: 1.1,
+            max_batch: 64,
+            max_delay_us: 500,
+            queue_depth: 256,
+            lanes: 4,
+            seed: 2026,
+        }
+    }
+
+    /// Tiny sizes for the CI perf-smoke lane: seconds, not minutes.
+    /// `max_batch = clients × patterns_per_request` so steady-state
+    /// closed-loop batches close by size, not by deadline — a batch cap
+    /// above the possible in-flight pattern count would idle every
+    /// batch for the full `max_delay`.
+    pub fn smoke() -> Self {
+        ServingKnobs {
+            ref_chars: 1 << 13,
+            catalog: 64,
+            clients: 4,
+            requests_per_client: 12,
+            patterns_per_request: 8,
+            zipf_s: 1.1,
+            max_batch: 32,
+            max_delay_us: 200,
+            queue_depth: 64,
+            lanes: 2,
+            seed: 2026,
+        }
+    }
+}
+
+/// One closed-loop configuration's outcome.
+#[derive(Debug, Clone)]
+pub struct ServePoint {
+    /// Configuration label.
+    pub label: String,
+    /// Micro-batch size cap used.
+    pub max_batch: usize,
+    /// Dedup enabled?
+    pub dedup: bool,
+    /// The load-generator report.
+    pub report: LoadReport,
+    /// Lifetime offered/unique ratio the server measured.
+    pub dedup_factor: f64,
+    /// Mean offered patterns per dispatched micro-batch.
+    pub mean_batch_patterns: f64,
+    /// `ThroughputModel::serving` projection of served QPS on the
+    /// modeled substrate under this batching/dedup profile.
+    pub projected_served_qps: f64,
+}
+
+/// Build the shared workload + coordinator for a knob set.
+fn build(knobs: &ServingKnobs) -> crate::Result<(Arc<Coordinator>, Vec<Vec<u8>>)> {
+    let w = DnaWorkload::generate(knobs.ref_chars, knobs.catalog, 16, 0.0, knobs.seed);
+    let fragments = w.fragments(64, 16);
+    let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+    cfg.engine = EngineKind::Cpu;
+    cfg.lanes = knobs.lanes;
+    Ok((Arc::new(Coordinator::new(cfg, fragments)?), w.patterns))
+}
+
+/// Closed-loop sweep over the three serving configurations.
+pub fn sweep(knobs: &ServingKnobs) -> crate::Result<Vec<ServePoint>> {
+    let (coordinator, catalog) = build(knobs)?;
+    let model =
+        ThroughputModel::new(SystemConfig::small(Technology::NearTerm, PresetMode::Gang));
+    let configs: [(&str, usize, bool); 3] = [
+        ("batch=1", 1, false),
+        ("batched", knobs.max_batch, false),
+        ("batched+dedup", knobs.max_batch, true),
+    ];
+    let mut out = Vec::with_capacity(configs.len());
+    for (label, max_batch, dedup) in configs {
+        let server = MatchServer::start(
+            Arc::clone(&coordinator),
+            ServeConfig {
+                max_batch,
+                max_delay: Duration::from_micros(knobs.max_delay_us),
+                queue_depth: knobs.queue_depth,
+                backpressure: Backpressure::Block,
+                dedup,
+            },
+        )?;
+        let report = closed_loop(
+            &server,
+            &catalog,
+            knobs.clients,
+            knobs.requests_per_client,
+            knobs.patterns_per_request,
+            knobs.zipf_s,
+            knobs.seed,
+        )?;
+        let totals = server.shutdown();
+        let projection = model.serving(
+            knobs.lanes,
+            Some(16.0),
+            totals.mean_batch_patterns(),
+            totals.dedup_factor(),
+        );
+        out.push(ServePoint {
+            label: label.to_string(),
+            max_batch,
+            dedup,
+            report,
+            dedup_factor: totals.dedup_factor(),
+            mean_batch_patterns: totals.mean_batch_patterns(),
+            projected_served_qps: projection.served_qps,
+        });
+    }
+    Ok(out)
+}
+
+/// Open-loop sweep: fixed offered rates at the batched+dedup server,
+/// `Reject` backpressure (overload sheds instead of queueing forever).
+pub fn open_loop_sweep(knobs: &ServingKnobs, smoke: bool) -> crate::Result<Vec<LoadReport>> {
+    let (coordinator, catalog) = build(knobs)?;
+    let server = MatchServer::start(
+        coordinator,
+        ServeConfig {
+            max_batch: knobs.max_batch,
+            max_delay: Duration::from_micros(knobs.max_delay_us),
+            queue_depth: knobs.queue_depth,
+            backpressure: Backpressure::Reject,
+            dedup: true,
+        },
+    )?;
+    let rates: &[f64] = if smoke { &[200.0, 800.0] } else { &[500.0, 2000.0, 8000.0] };
+    let mut out = Vec::with_capacity(rates.len());
+    for &qps in rates {
+        // ~0.4 s of offered traffic per point, at least 20 requests.
+        let n_requests = ((qps * 0.4) as usize).max(20);
+        out.push(open_loop(
+            &server,
+            &catalog,
+            qps,
+            n_requests,
+            knobs.patterns_per_request,
+            knobs.zipf_s,
+            knobs.seed ^ qps as u64,
+        )?);
+    }
+    server.shutdown();
+    Ok(out)
+}
+
+/// The `BENCH_serving.json` document.
+fn to_json(knobs: &ServingKnobs, smoke: bool, points: &[ServePoint], open: &[LoadReport]) -> Json {
+    let load_json = |r: &LoadReport| {
+        Json::obj(vec![
+            ("label", Json::str(r.label.clone())),
+            ("requests", Json::int(r.requests)),
+            ("rejected", Json::int(r.rejected)),
+            ("wall_seconds", Json::num(r.wall_seconds)),
+            ("request_rate", Json::num(r.request_rate)),
+            ("pattern_rate", Json::num(r.pattern_rate)),
+            ("p50_s", Json::num(r.latency.p50)),
+            ("p95_s", Json::num(r.latency.p95)),
+            ("p99_s", Json::num(r.latency.p99)),
+            ("mean_s", Json::num(r.latency.mean)),
+            ("max_s", Json::num(r.latency.max)),
+        ])
+    };
+    Json::obj(vec![
+        ("experiment", Json::str("serving")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "config",
+            Json::obj(vec![
+                ("ref_chars", Json::int(knobs.ref_chars)),
+                ("catalog", Json::int(knobs.catalog)),
+                ("clients", Json::int(knobs.clients)),
+                ("requests_per_client", Json::int(knobs.requests_per_client)),
+                ("patterns_per_request", Json::int(knobs.patterns_per_request)),
+                ("zipf_s", Json::num(knobs.zipf_s)),
+                ("max_batch", Json::int(knobs.max_batch)),
+                ("max_delay_us", Json::int(knobs.max_delay_us as usize)),
+                ("queue_depth", Json::int(knobs.queue_depth)),
+                ("lanes", Json::int(knobs.lanes)),
+                ("seed", Json::int(knobs.seed as usize)),
+            ]),
+        ),
+        (
+            "closed_loop",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("config", Json::str(p.label.clone())),
+                            ("max_batch", Json::int(p.max_batch)),
+                            ("dedup", Json::Bool(p.dedup)),
+                            ("dedup_factor", Json::num(p.dedup_factor)),
+                            ("mean_batch_patterns", Json::num(p.mean_batch_patterns)),
+                            ("projected_served_qps", Json::num(p.projected_served_qps)),
+                            ("load", load_json(&p.report)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("open_loop", Json::Arr(open.iter().map(load_json).collect())),
+    ])
+}
+
+/// The full serve-bench: closed-loop comparison, open-loop sweep,
+/// optional JSON report.
+pub fn serve_bench(knobs: &ServingKnobs, smoke: bool, json: Option<&Path>) -> crate::Result<()> {
+    rule("Serving layer — micro-batching + dedup over the sharded coordinator");
+    println!(
+        "  {} clients × {} requests × {} patterns/request, Zipf s={}, catalog {}, {} lanes",
+        knobs.clients,
+        knobs.requests_per_client,
+        knobs.patterns_per_request,
+        knobs.zipf_s,
+        knobs.catalog,
+        knobs.lanes
+    );
+
+    let points = sweep(knobs)?;
+    println!(
+        "\n  {:<16} {:>10} {:>12} {:>9} {:>9} {:>9} {:>8} {:>14}",
+        "config", "req/s", "patterns/s", "p50 ms", "p95 ms", "p99 ms", "dedup×", "proj QPS"
+    );
+    for p in &points {
+        println!(
+            "  {:<16} {:>10.0} {:>12.0} {:>9.2} {:>9.2} {:>9.2} {:>8.2} {:>14.3e}",
+            p.label,
+            p.report.request_rate,
+            p.report.pattern_rate,
+            p.report.latency.p50 * 1e3,
+            p.report.latency.p95 * 1e3,
+            p.report.latency.p99 * 1e3,
+            p.dedup_factor,
+            p.projected_served_qps
+        );
+    }
+    let base = points.first().map(|p| p.report.pattern_rate).unwrap_or(0.0);
+    if let Some(best) = points.last() {
+        println!(
+            "\n  batched+dedup vs batch=1: {:.2}× aggregate pattern throughput \
+             ({} concurrent clients)",
+            best.report.pattern_rate / base.max(1e-12),
+            knobs.clients
+        );
+    }
+
+    let open = open_loop_sweep(knobs, smoke)?;
+    println!("\n  open loop (batched+dedup, Reject backpressure):");
+    println!(
+        "  {:<20} {:>10} {:>10} {:>9} {:>9} {:>9}",
+        "offered", "served/s", "shed", "p50 ms", "p95 ms", "p99 ms"
+    );
+    for r in &open {
+        println!(
+            "  {:<20} {:>10.0} {:>10} {:>9.2} {:>9.2} {:>9.2}",
+            r.label,
+            r.request_rate,
+            r.rejected,
+            r.latency.p50 * 1e3,
+            r.latency.p95 * 1e3,
+            r.latency.p99 * 1e3
+        );
+    }
+
+    if let Some(path) = json {
+        to_json(knobs, smoke, &points, &open)
+            .write_file(path)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        println!("\n  wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// Experiment-driver entry point. Errors propagate (the CI bench-smoke
+/// step must fail loudly rather than upload no artifact).
+pub fn run_with(smoke: bool, json: Option<&Path>) -> crate::Result<()> {
+    let knobs = if smoke { ServingKnobs::smoke() } else { ServingKnobs::standard() };
+    serve_bench(&knobs, smoke, json)
+}
+
+/// Default-scale run (the `experiment serving` / `experiment all` path).
+pub fn run() {
+    if let Err(e) = run_with(false, None) {
+        println!("  serving experiment failed: {e:#}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance shape at smoke scale: every configuration serves
+    /// every request, dedup actually collapses Zipfian duplicates, and
+    /// batching+dedup does not lose to per-request dispatch.
+    #[test]
+    fn smoke_sweep_serves_everything_and_dedups() {
+        let mut knobs = ServingKnobs::smoke();
+        knobs.clients = 4;
+        knobs.requests_per_client = 6;
+        let points = sweep(&knobs).unwrap();
+        assert_eq!(points.len(), 3);
+        let expected = knobs.clients * knobs.requests_per_client;
+        for p in &points {
+            assert_eq!(p.report.requests, expected, "{}", p.label);
+            assert!(p.report.pattern_rate > 0.0, "{}", p.label);
+            assert!(p.projected_served_qps > 0.0, "{}", p.label);
+        }
+        assert!((points[0].dedup_factor - 1.0).abs() < 1e-9, "batch=1 must not dedup");
+        assert!(
+            points[2].dedup_factor > 1.0,
+            "Zipfian traffic must produce cross-request duplicates"
+        );
+        // Dedup means strictly fewer unique executions for the same
+        // offered work; the projection must credit that.
+        assert!(points[2].projected_served_qps >= points[1].projected_served_qps);
+    }
+
+    #[test]
+    fn open_loop_smoke_completes_without_losing_admitted_requests() {
+        let knobs = ServingKnobs::smoke();
+        let reports = open_loop_sweep(&knobs, true).unwrap();
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            assert!(r.requests > 0, "{}: every admitted request must complete", r.label);
+            assert!(r.latency.p99 >= r.latency.p50);
+        }
+    }
+
+    #[test]
+    fn json_report_carries_all_sections() {
+        let knobs = ServingKnobs::smoke();
+        let points = Vec::new();
+        let open = Vec::new();
+        let doc = to_json(&knobs, true, &points, &open).render();
+        assert!(doc.contains("\"experiment\": \"serving\""));
+        assert!(doc.contains("\"smoke\": true"));
+        assert!(doc.contains("\"closed_loop\": []"));
+        assert!(doc.contains("\"open_loop\": []"));
+        assert!(doc.contains("\"max_batch\": 32"));
+    }
+}

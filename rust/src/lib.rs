@@ -37,6 +37,7 @@
 //! | [`bench_apps`] | §4 Table 4 | DNA, BitCount, StringMatch, RC4, WordCount workloads |
 //! | [`runtime`] | — | PJRT client: load + execute `artifacts/*.hlo.txt` |
 //! | [`coordinator`] | §2.5 | async serving loop: pattern pool → arrays → scores |
+//! | [`serve`] | — | concurrent batching serving layer: admission queue, micro-batch dedup, load generators |
 //! | [`experiments`] | §5 | one driver per paper table/figure |
 
 pub mod array;
@@ -49,6 +50,7 @@ pub mod gates;
 pub mod isa;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod sim;
 pub mod smc;
 pub mod tech;

@@ -1,9 +1,13 @@
 //! `cram-pm` — command-line interface to the CRAM-PM reproduction.
 //!
 //! ```text
-//! cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|tables|all>
+//! cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|tables|all>
+//!                    [--smoke] [--json FILE]
 //! cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N]
 //!             [--pat-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F]
+//! cram-pm serve-bench [--smoke] [--json FILE] [--clients N] [--requests N] [--ppr N]
+//!                     [--catalog N] [--zipf S] [--batch N] [--delay-us N] [--queue N]
+//!                     [--lanes N] [--seed S]
 //! cram-pm info
 //! ```
 //!
@@ -11,12 +15,14 @@
 
 use cram_pm::bench_apps::dna::DnaWorkload;
 use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::experiments::serving::ServingKnobs;
 use cram_pm::{experiments, Result};
 use std::collections::HashMap;
+use std::path::PathBuf;
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|tables|all>\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n  cram-pm info"
+        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|tables|all> [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n  cram-pm serve-bench [--smoke] [--json FILE] [--clients N] [--requests N] [--ppr N]\n              [--catalog N] [--zipf S] [--batch N] [--delay-us N] [--queue N] [--lanes N] [--seed S]\n  cram-pm info"
     );
     std::process::exit(2);
 }
@@ -44,7 +50,9 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     (kv, flags)
 }
 
-fn cmd_experiment(which: &str) {
+fn cmd_experiment(which: &str, kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
+    let smoke = flags.iter().any(|f| f == "smoke");
+    let json = kv.get("json").map(PathBuf::from);
     match which {
         "tables" => experiments::tables::run(),
         "fig5" => experiments::fig5_designs::run(),
@@ -57,13 +65,39 @@ fn cmd_experiment(which: &str) {
         "variation" => experiments::variation::run(),
         "ablation" => experiments::ablation::run(),
         "scheduling" => experiments::scheduling::run(),
-        "lanes" | "lane-scaling" => experiments::lane_scaling::run(),
+        // These two back the CI bench-smoke artifacts: a failure (or an
+        // unwritable --json path) must reach the exit code.
+        "lanes" | "lane-scaling" => experiments::lane_scaling::run_with(smoke, json.as_deref())?,
+        "serving" | "serve" => experiments::serving::run_with(smoke, json.as_deref())?,
         "all" => experiments::run_all(),
         other => {
             eprintln!("unknown experiment: {other}");
             usage();
         }
     }
+    Ok(())
+}
+
+/// The `serve-bench` subcommand: the serving experiment with every knob
+/// CLI-overridable.
+fn cmd_serve_bench(kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
+    let smoke = flags.iter().any(|f| f == "smoke");
+    let mut knobs = if smoke { ServingKnobs::smoke() } else { ServingKnobs::standard() };
+    let get = |k: &str, d: usize| kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
+    knobs.clients = get("clients", knobs.clients).max(1);
+    knobs.requests_per_client = get("requests", knobs.requests_per_client).max(1);
+    knobs.patterns_per_request = get("ppr", knobs.patterns_per_request).max(1);
+    knobs.catalog = get("catalog", knobs.catalog).max(1);
+    knobs.max_batch = get("batch", knobs.max_batch).max(1);
+    knobs.queue_depth = get("queue", knobs.queue_depth).max(1);
+    knobs.lanes = get("lanes", knobs.lanes).max(1);
+    knobs.max_delay_us = get("delay-us", knobs.max_delay_us as usize) as u64;
+    knobs.seed = get("seed", knobs.seed as usize) as u64;
+    if let Some(z) = kv.get("zipf") {
+        knobs.zipf_s = z.parse().unwrap_or(knobs.zipf_s);
+    }
+    let json = kv.get("json").map(PathBuf::from);
+    experiments::serving::serve_bench(&knobs, smoke, json.as_deref())
 }
 
 fn cmd_run(kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
@@ -176,11 +210,16 @@ fn main() -> Result<()> {
     match args.first().map(|s| s.as_str()) {
         Some("experiment") => {
             let which = args.get(1).map(|s| s.as_str()).unwrap_or("all");
-            cmd_experiment(which);
+            let (kv, flags) = parse_flags(args.get(2..).unwrap_or(&[]));
+            cmd_experiment(which, &kv, &flags)?;
         }
         Some("run") => {
             let (kv, flags) = parse_flags(&args[1..]);
             cmd_run(&kv, &flags)?;
+        }
+        Some("serve-bench") => {
+            let (kv, flags) = parse_flags(&args[1..]);
+            cmd_serve_bench(&kv, &flags)?;
         }
         Some("info") => cmd_info(),
         _ => usage(),

@@ -23,8 +23,8 @@ pub mod oracular;
 pub mod throughput;
 
 pub use naive::NaiveScheduler;
-pub use oracular::{OracularScheduler, OracularStats};
-pub use throughput::{RateReport, ShardedReport, ThroughputModel};
+pub use oracular::{OracularIndex, OracularScheduler, OracularStats};
+pub use throughput::{RateReport, ServingProjection, ShardedReport, ThroughputModel};
 
 /// A row address across the substrate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

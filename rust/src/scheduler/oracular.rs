@@ -15,15 +15,20 @@
 use crate::scheduler::{Pass, PatternScheduler, RowAddr};
 use crate::util::FxHashMap;
 
-/// K-mer-index-based oracular scheduler.
+/// The reusable k-mer candidate index over a fixed fragment set —
+/// built once, queried per pattern. [`OracularScheduler`] layers the
+/// pass-packing policy (and a pattern pool) on top; the coordinator
+/// holds a bare index for the lifetime of its resident fragments and
+/// reuses it across every run and micro-batch.
 ///
 /// §Perf: k-mers are packed into `u64` keys (2 bits per character,
 /// k ≤ 31) with a rolling update per fragment — no per-window
 /// allocation. This cut index-build time ~30× on megabase references
-/// (EXPERIMENTS.md §Perf).
+/// (EXPERIMENTS.md §Perf). Splitting the index out of the scheduler
+/// removed the per-run rebuild entirely: candidate routing is now a
+/// lookup, amortizing the build over the coordinator's lifetime.
 #[derive(Debug)]
-pub struct OracularScheduler {
-    rows: Vec<RowAddr>,
+pub struct OracularIndex {
     /// packed k-mer → rows whose fragment contains it.
     index: FxHashMap<u64, Vec<u32>>,
     /// Seed length.
@@ -32,6 +37,15 @@ pub struct OracularScheduler {
     /// feed a given pattern to multiple rows"; the cap bounds
     /// redundancy).
     pub max_rows_per_pattern: usize,
+}
+
+/// K-mer-index-based oracular scheduler: an [`OracularIndex`] plus the
+/// row addressing and pattern pool the pass packing needs.
+#[derive(Debug)]
+pub struct OracularScheduler {
+    rows: Vec<RowAddr>,
+    /// The underlying candidate index (shareable across pools).
+    pub index: OracularIndex,
     patterns: Vec<Vec<u8>>,
 }
 
@@ -58,17 +72,10 @@ pub struct OracularStats {
     pub total_rows: usize,
 }
 
-impl OracularScheduler {
-    /// Build the index over per-row fragments (2-bit codes). `rows`
-    /// lists the row addresses in fragment order.
-    pub fn build(
-        fragments: &[Vec<u8>],
-        rows: Vec<RowAddr>,
-        patterns: Vec<Vec<u8>>,
-        k: usize,
-        max_rows_per_pattern: usize,
-    ) -> Self {
-        assert_eq!(fragments.len(), rows.len(), "one fragment per row");
+impl OracularIndex {
+    /// Build the index over per-row fragments (2-bit codes). Row ids
+    /// are indices into the fragment order.
+    pub fn build(fragments: &[Vec<u8>], k: usize, max_rows_per_pattern: usize) -> Self {
         assert!((1..=31).contains(&k), "seed length must be in 1..=31 (u64 packing)");
         let mut index: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
         let mask = if k == 31 { (1u64 << 62) - 1 } else { (1u64 << (2 * k)) - 1 };
@@ -88,7 +95,7 @@ impl OracularScheduler {
                 }
             }
         }
-        OracularScheduler { rows, index, k, max_rows_per_pattern, patterns }
+        OracularIndex { index, k, max_rows_per_pattern }
     }
 
     /// Candidate row indices (into the fragment order) for a pattern.
@@ -108,6 +115,27 @@ impl OracularScheduler {
         hits.dedup();
         hits.truncate(self.max_rows_per_pattern);
         hits
+    }
+}
+
+impl OracularScheduler {
+    /// Build the index over per-row fragments (2-bit codes). `rows`
+    /// lists the row addresses in fragment order.
+    pub fn build(
+        fragments: &[Vec<u8>],
+        rows: Vec<RowAddr>,
+        patterns: Vec<Vec<u8>>,
+        k: usize,
+        max_rows_per_pattern: usize,
+    ) -> Self {
+        assert_eq!(fragments.len(), rows.len(), "one fragment per row");
+        let index = OracularIndex::build(fragments, k, max_rows_per_pattern);
+        OracularScheduler { rows, index, patterns }
+    }
+
+    /// Candidate row indices (into the fragment order) for a pattern.
+    pub fn candidates(&self, pattern: &[u8]) -> Vec<u32> {
+        self.index.candidates(pattern)
     }
 
     /// Index selectivity over the pattern pool.
@@ -269,9 +297,35 @@ mod tests {
     #[test]
     fn candidates_capped() {
         let mut s = setup(64, 256, 24, 6);
-        s.max_rows_per_pattern = 3;
+        s.index.max_rows_per_pattern = 3;
         for p in s.patterns.clone() {
             assert!(s.candidates(&p).len() <= 3);
+        }
+    }
+
+    #[test]
+    fn bare_index_agrees_with_scheduler_candidates() {
+        // The coordinator reuses a bare OracularIndex across runs and
+        // micro-batches; its routing must equal the scheduler's.
+        let mut rng = Rng::new(42);
+        let fragments: Vec<Vec<u8>> = (0..32).map(|_| encode(&rng.dna(128))).collect();
+        let patterns: Vec<Vec<u8>> = (0..64)
+            .map(|_| {
+                let f = rng.below(32);
+                let start = rng.below(128 - 24);
+                fragments[f][start..start + 24].to_vec()
+            })
+            .collect();
+        let sched = OracularScheduler::build(
+            &fragments,
+            (0..32).map(addr).collect(),
+            patterns.clone(),
+            8,
+            64,
+        );
+        let bare = OracularIndex::build(&fragments, 8, 64);
+        for p in &patterns {
+            assert_eq!(bare.candidates(p), sched.candidates(p));
         }
     }
 }

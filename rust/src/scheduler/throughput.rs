@@ -47,6 +47,27 @@ pub struct ShardedReport {
     pub per_shard: Vec<RateReport>,
 }
 
+/// Projected serving capacity of the sharded substrate under host-side
+/// micro-batching with cross-request pattern dedup (see
+/// [`ThroughputModel::serving`] and the `serve` module).
+#[derive(Debug, Clone)]
+pub struct ServingProjection {
+    /// Offered patterns per micro-batch (pre-dedup).
+    pub batch_patterns: f64,
+    /// Unique patterns per micro-batch (post-dedup).
+    pub unique_patterns: f64,
+    /// `batch_patterns / unique_patterns` (≥ 1).
+    pub dedup_factor: f64,
+    /// Unique-pattern rate through the sharded substrate, patterns/s.
+    pub substrate_rate: f64,
+    /// Served (offered) pattern rate, patterns/s: every duplicate rides
+    /// the one substrate execution of its unique pattern.
+    pub served_qps: f64,
+    /// Substrate time to drain one micro-batch of uniques, s — the
+    /// execute component of a request's batch latency.
+    pub batch_seconds: f64,
+}
+
 /// Match-rate model parameterized by scheduler selectivity.
 #[derive(Debug, Clone)]
 pub struct ThroughputModel {
@@ -136,6 +157,33 @@ impl ThroughputModel {
             match_rate,
             efficiency: match_rate / (power * 1e3).max(1e-30),
             per_shard,
+        }
+    }
+
+    /// Projected served-QPS when a host-side serving layer coalesces
+    /// client requests into micro-batches of `batch_patterns` offered
+    /// patterns and dedups identical patterns (`dedup_factor` =
+    /// offered/unique, ≥ 1) before dispatching to the sharded
+    /// substrate. The substrate only executes uniques, so the offered
+    /// rate it sustains is the sharded match rate multiplied by the
+    /// dedup factor.
+    pub fn serving(
+        &self,
+        shards: usize,
+        rows_per_pattern: Option<f64>,
+        batch_patterns: f64,
+        dedup_factor: f64,
+    ) -> ServingProjection {
+        let dedup = dedup_factor.max(1.0);
+        let unique = (batch_patterns / dedup).max(1.0);
+        let sharded = self.sharded(shards, rows_per_pattern, unique.ceil() as usize);
+        ServingProjection {
+            batch_patterns,
+            unique_patterns: unique,
+            dedup_factor: dedup,
+            substrate_rate: sharded.match_rate,
+            served_qps: sharded.match_rate * dedup,
+            batch_seconds: sharded.pool_time,
         }
     }
 
@@ -251,6 +299,36 @@ mod tests {
         let orac = model.oracular(8.0, 500);
         let sharded = model.sharded(1, Some(8.0), 500);
         assert!((sharded.pool_energy - orac.pool_energy).abs() / orac.pool_energy < 1e-9);
+    }
+
+    /// Serving projection: dedup multiplies served QPS over the
+    /// substrate's unique-pattern rate; with no duplicates it reduces
+    /// to the plain sharded match rate.
+    #[test]
+    fn serving_projection_scales_with_dedup_factor() {
+        let cfg = SystemConfig::small(Technology::NearTerm, PresetMode::Gang);
+        let model = ThroughputModel::new(cfg);
+        let plain = model.serving(4, Some(16.0), 64.0, 1.0);
+        let deduped = model.serving(4, Some(16.0), 64.0, 2.0);
+        assert!((plain.served_qps - plain.substrate_rate).abs() / plain.substrate_rate < 1e-9);
+        assert!(
+            (deduped.served_qps - 2.0 * deduped.substrate_rate).abs() / deduped.substrate_rate
+                < 1e-9
+        );
+        assert!((deduped.unique_patterns - 32.0).abs() < 1e-9);
+        assert!(deduped.batch_seconds > 0.0);
+        // Fewer uniques per batch → a batch drains no slower.
+        assert!(deduped.batch_seconds <= plain.batch_seconds + 1e-12);
+    }
+
+    #[test]
+    fn serving_projection_clamps_degenerate_dedup() {
+        let cfg = SystemConfig::small(Technology::NearTerm, PresetMode::Gang);
+        let model = ThroughputModel::new(cfg);
+        // dedup < 1 is impossible in reality; the projection clamps.
+        let p = model.serving(1, None, 8.0, 0.5);
+        assert!((p.dedup_factor - 1.0).abs() < 1e-9);
+        assert!((p.served_qps - p.substrate_rate).abs() / p.substrate_rate < 1e-9);
     }
 
     #[test]

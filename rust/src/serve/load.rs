@@ -1,0 +1,269 @@
+//! Load generation for the serving layer: Zipfian pattern popularity,
+//! closed-loop (N clients, think-time-free) and open-loop (fixed
+//! offered rate) drivers, and latency summarization.
+//!
+//! Pattern popularity is Zipfian because real query streams are: a few
+//! hot patterns dominate, which is exactly when cross-request dedup
+//! pays. The closed-loop driver measures sustainable throughput under
+//! concurrency; the open-loop driver measures latency and shed rate at
+//! a fixed offered load (requests arrive on a clock, not on
+//! completion, so queueing delay is visible instead of self-throttled).
+
+use crate::serve::{MatchServer, ServeError};
+use crate::util::Rng;
+use std::time::{Duration, Instant};
+
+/// Zipf(s) sampler over ranks `0..n` (rank 0 most popular) via inverse
+/// CDF lookup.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build the CDF for `n` ranks with exponent `s` (`s = 0` is
+    /// uniform; `s ≈ 1` is the classic web-traffic skew).
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "empty catalog");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Draw a rank.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+/// Robust latency summary, seconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    /// Median.
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// Mean.
+    pub mean: f64,
+    /// Maximum.
+    pub max: f64,
+}
+
+/// Summarize a latency sample (sorts in place).
+pub fn summarize(latencies: &mut [f64]) -> LatencySummary {
+    if latencies.is_empty() {
+        return LatencySummary::default();
+    }
+    latencies.sort_by(f64::total_cmp);
+    let q = |p: f64| latencies[(((latencies.len() - 1) as f64) * p).round() as usize];
+    LatencySummary {
+        p50: q(0.50),
+        p95: q(0.95),
+        p99: q(0.99),
+        mean: latencies.iter().sum::<f64>() / latencies.len() as f64,
+        max: *latencies.last().unwrap(),
+    }
+}
+
+/// One load-generator run's report.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Driver label ("closed-loop c8", "open-loop 2000 rps", …).
+    pub label: String,
+    /// Requests completed.
+    pub requests: usize,
+    /// Admissions refused with [`ServeError::Overloaded`] (closed loop
+    /// retries them; open loop sheds them).
+    pub rejected: usize,
+    /// Driver wall-clock, s.
+    pub wall_seconds: f64,
+    /// Completed requests per second.
+    pub request_rate: f64,
+    /// Offered patterns served per second (requests × patterns).
+    pub pattern_rate: f64,
+    /// Per-request end-to-end latency (admission → response).
+    pub latency: LatencySummary,
+}
+
+/// Closed loop: `clients` threads each issue `requests_per_client`
+/// requests of `patterns_per_request` Zipf-sampled catalog patterns,
+/// back to back; [`ServeError::Overloaded`] retries after a short
+/// backoff (reject-with-retry contract).
+pub fn closed_loop(
+    server: &MatchServer,
+    catalog: &[Vec<u8>],
+    clients: usize,
+    requests_per_client: usize,
+    patterns_per_request: usize,
+    zipf_s: f64,
+    seed: u64,
+) -> crate::Result<LoadReport> {
+    assert!(clients > 0, "closed loop needs at least one client");
+    let zipf = Zipf::new(catalog.len(), zipf_s);
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut rejected = 0usize;
+    let mut served_patterns = 0usize;
+    std::thread::scope(|scope| -> crate::Result<()> {
+        let mut handles = Vec::with_capacity(clients);
+        for cid in 0..clients {
+            let zipf = &zipf;
+            handles.push(scope.spawn(move || {
+                let mut rng = Rng::new(seed ^ (cid as u64 + 1).wrapping_mul(0x9E37_79B9));
+                let mut lats = Vec::with_capacity(requests_per_client);
+                let mut rej = 0usize;
+                let mut pats = 0usize;
+                for _ in 0..requests_per_client {
+                    let req: Vec<Vec<u8>> = (0..patterns_per_request)
+                        .map(|_| catalog[zipf.sample(&mut rng)].clone())
+                        .collect();
+                    loop {
+                        match server.match_patterns(req.clone()) {
+                            Ok(resp) => {
+                                lats.push(resp.timing.total);
+                                pats += resp.results.len();
+                                break;
+                            }
+                            Err(ServeError::Overloaded) => {
+                                rej += 1;
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    }
+                }
+                Ok((lats, rej, pats))
+            }));
+        }
+        for h in handles {
+            let (lats, rej, pats) = h
+                .join()
+                .map_err(|_| anyhow::anyhow!("load client panicked"))?
+                .map_err(|e| anyhow::anyhow!("load client failed: {e}"))?;
+            latencies.extend(lats);
+            rejected += rej;
+            served_patterns += pats;
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    let requests = latencies.len();
+    Ok(LoadReport {
+        label: format!("closed-loop c{clients}"),
+        requests,
+        rejected,
+        wall_seconds: wall,
+        request_rate: requests as f64 / wall.max(1e-12),
+        pattern_rate: served_patterns as f64 / wall.max(1e-12),
+        latency: summarize(&mut latencies),
+    })
+}
+
+/// Open loop: submit `n_requests` on a fixed-rate clock
+/// (`offered_qps`), never waiting for completions; overload rejections
+/// are shed (counted, not retried). Latency comes from the server-side
+/// admission→response timing of the requests that completed.
+pub fn open_loop(
+    server: &MatchServer,
+    catalog: &[Vec<u8>],
+    offered_qps: f64,
+    n_requests: usize,
+    patterns_per_request: usize,
+    zipf_s: f64,
+    seed: u64,
+) -> crate::Result<LoadReport> {
+    assert!(offered_qps > 0.0, "offered rate must be positive");
+    let zipf = Zipf::new(catalog.len(), zipf_s);
+    let mut rng = Rng::new(seed);
+    let interval = Duration::from_secs_f64(1.0 / offered_qps);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    let mut rejected = 0usize;
+    for i in 0..n_requests {
+        let due = t0 + interval.mul_f64(i as f64);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let req: Vec<Vec<u8>> = (0..patterns_per_request)
+            .map(|_| catalog[zipf.sample(&mut rng)].clone())
+            .collect();
+        match server.submit(req) {
+            Ok(p) => pending.push(p),
+            Err(ServeError::Overloaded) => rejected += 1,
+            Err(e) => anyhow::bail!("open-loop submit failed: {e}"),
+        }
+    }
+    let mut latencies = Vec::with_capacity(pending.len());
+    let mut served_patterns = 0usize;
+    for p in pending {
+        let resp = p.wait().map_err(|e| anyhow::anyhow!("open-loop request failed: {e}"))?;
+        latencies.push(resp.timing.total);
+        served_patterns += resp.results.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let requests = latencies.len();
+    Ok(LoadReport {
+        label: format!("open-loop {offered_qps:.0} rps"),
+        requests,
+        rejected,
+        wall_seconds: wall,
+        request_rate: requests as f64 / wall.max(1e-12),
+        pattern_rate: served_patterns as f64 / wall.max(1e-12),
+        latency: summarize(&mut latencies),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_is_skewed_toward_low_ranks() {
+        let zipf = Zipf::new(64, 1.1);
+        let mut rng = Rng::new(7);
+        let mut counts = vec![0usize; 64];
+        for _ in 0..20_000 {
+            counts[zipf.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[32] * 4, "rank 0 not dominant: {counts:?}");
+        // Every draw lands in range (implicitly by the indexing) and
+        // the tail still gets some traffic.
+        assert!(counts.iter().sum::<usize>() == 20_000);
+    }
+
+    #[test]
+    fn zipf_zero_exponent_is_roughly_uniform() {
+        let zipf = Zipf::new(16, 0.0);
+        let mut rng = Rng::new(11);
+        let mut counts = vec![0usize; 16];
+        for _ in 0..16_000 {
+            counts[zipf.sample(&mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((600..1400).contains(&c), "rank {i}: {c} draws far from uniform");
+        }
+    }
+
+    #[test]
+    fn summarize_orders_quantiles() {
+        let mut lats: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = summarize(&mut lats);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert_eq!(s.max, 100.0);
+        let empty = summarize(&mut []);
+        assert_eq!((empty.p50, empty.mean, empty.max), (0.0, 0.0, 0.0));
+    }
+}

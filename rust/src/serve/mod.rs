@@ -1,0 +1,45 @@
+//! The concurrent serving layer over the sharded [`crate::coordinator`].
+//!
+//! The substrate only pays off when the host keeps it saturated with
+//! pattern traffic, but [`crate::coordinator::Coordinator::run`] admits
+//! one pool at a time behind the lane mutex — concurrent clients would
+//! serialize and the executor lanes idle between runs. This module is
+//! the host-side answer (ROADMAP north star: serve heavy traffic from
+//! millions of users; cf. the in-storage batching of "In-Storage
+//! Embedded Accelerator for Sparse Pattern Processing" and the
+//! host-orchestration framing of "A Modern Primer on
+//! Processing-In-Memory"):
+//!
+//! ```text
+//!  clients ──▶ bounded admission queue ──▶ batcher thread
+//!                (Block | Reject)             │ coalesce (max_batch /
+//!                                             │ max_delay), dedup
+//!                                             ▼
+//!                               Coordinator::run / run_pools
+//!                                 (one lock per micro-batch)
+//!                                             │
+//!  clients ◀── per-request demux + timing ◀───┘
+//! ```
+//!
+//! * [`MatchServer`] — accepts per-client requests on a bounded
+//!   admission queue, coalesces them into micro-batches (size- and
+//!   deadline-triggered), deduplicates identical patterns across
+//!   requests before dispatch, and demultiplexes per-pattern
+//!   [`crate::coordinator::WorkResult`]s back to each caller with
+//!   queue-wait / batch-wait / execute timing and per-batch occupancy.
+//! * [`ServeConfig::backpressure`] — [`Backpressure::Reject`] bounces
+//!   over-admission with a retryable [`ServeError::Overloaded`];
+//!   [`Backpressure::Block`] parks the caller on the bounded queue.
+//! * Shutdown mirrors the coordinator's lane handshake: dropping the
+//!   admission sender lets the batcher drain every queued request to a
+//!   response before it exits, so no accepted request is ever lost.
+//! * [`load`] — Zipfian closed-/open-loop load generators for the
+//!   `serve-bench` CLI and the serving experiment.
+
+pub mod load;
+pub mod server;
+
+pub use server::{
+    Backpressure, BatchStats, MatchResponse, MatchServer, PendingMatch, RequestTiming,
+    ServeConfig, ServeError, ServerTotals,
+};

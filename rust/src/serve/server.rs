@@ -1,0 +1,552 @@
+//! [`MatchServer`]: bounded admission, micro-batch coalescing,
+//! cross-request pattern dedup, per-request demux and timing.
+//!
+//! One batcher thread owns the dispatch path: it blocks on the
+//! admission queue, opens a micro-batch at the first request, and
+//! closes it when the batch holds `max_batch` offered patterns or
+//! `max_delay` has elapsed since it opened — the classic size/deadline
+//! coalescing tradeoff (throughput vs. tail latency). A closed batch
+//! makes exactly one trip through the coordinator: deduplicated into a
+//! single unique pool ([`Coordinator::run`]) when `dedup` is on, or as
+//! per-request pools sharing one lane-mutex acquisition
+//! ([`Coordinator::run_pools`]) when it is off. Either way the results
+//! demultiplex back to each caller re-indexed by the request's own
+//! pattern order, so batching and dedup are invisible to correctness —
+//! the property tests in `tests/serving.rs` hold the server to
+//! bit-identical results vs. direct coordinator runs.
+
+use crate::coordinator::{Coordinator, WorkResult};
+use crate::util::FxHashMap;
+use crate::Result;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// What happens when the admission queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backpressure {
+    /// Park the submitting thread until a slot frees (bounded-queue
+    /// flow control; no request is ever refused).
+    Block,
+    /// Refuse immediately with [`ServeError::Overloaded`] — the caller
+    /// owns the retry policy (load shedding).
+    Reject,
+}
+
+/// Serving-layer configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Close a micro-batch once it holds this many offered patterns.
+    /// `1` disables cross-request batching (every request dispatches
+    /// alone — the serve-bench baseline).
+    pub max_batch: usize,
+    /// Close a micro-batch this long after it opened even if it is not
+    /// full — bounds the batch-wait component of latency.
+    pub max_delay: Duration,
+    /// Admission queue capacity, in requests.
+    pub queue_depth: usize,
+    /// Full-queue policy.
+    pub backpressure: Backpressure,
+    /// Deduplicate identical patterns across the requests of a
+    /// micro-batch before dispatch (Zipfian traffic makes this the
+    /// main batching win).
+    pub dedup: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 64,
+            max_delay: Duration::from_micros(500),
+            queue_depth: 128,
+            backpressure: Backpressure::Block,
+            dedup: true,
+        }
+    }
+}
+
+/// Typed serving failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission queue full under [`Backpressure::Reject`] — transient;
+    /// retry after a backoff.
+    Overloaded,
+    /// The server is draining or gone; no new work is admitted.
+    ShuttingDown,
+    /// A request pattern does not match the coordinator geometry.
+    InvalidPattern {
+        /// Index of the offending pattern within the request.
+        index: usize,
+        /// Its length.
+        len: usize,
+        /// The length the coordinator accepts.
+        expected: usize,
+    },
+    /// The coordinator failed the whole micro-batch.
+    Run(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded => write!(f, "admission queue full; retry later"),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::InvalidPattern { index, len, expected } => write!(
+                f,
+                "request pattern {index} length {len} != coordinator pat_chars {expected}"
+            ),
+            ServeError::Run(msg) => write!(f, "micro-batch failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Latency breakdown of one served request, seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RequestTiming {
+    /// Admission → picked up by the batcher (time spent queued).
+    pub queue_wait: f64,
+    /// Picked up → micro-batch dispatched (time spent coalescing).
+    pub batch_wait: f64,
+    /// Dispatch → coordinator results ready (shared by the batch).
+    pub execute: f64,
+    /// Admission → response ready (end-to-end).
+    pub total: f64,
+}
+
+/// Accounting for the micro-batch a request rode in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchStats {
+    /// Requests coalesced into the batch.
+    pub requests: usize,
+    /// Offered patterns across those requests.
+    pub patterns: usize,
+    /// Patterns actually dispatched after dedup.
+    pub unique_patterns: usize,
+    /// `patterns / unique_patterns` (≥ 1; 1.0 with dedup off).
+    pub dedup_factor: f64,
+    /// `patterns / max_batch` — how full the batch closed. Can exceed
+    /// 1.0 when a single request is larger than `max_batch`.
+    pub occupancy: f64,
+}
+
+/// One served request's answer.
+#[derive(Debug, Clone)]
+pub struct MatchResponse {
+    /// Per-pattern results in the request's own order (`pattern_id` is
+    /// the index within the request). For deduplicated patterns,
+    /// `passes` counts the one shared execution.
+    pub results: Vec<WorkResult>,
+    /// Latency breakdown.
+    pub timing: RequestTiming,
+    /// The batch this request rode in.
+    pub batch: BatchStats,
+}
+
+/// Lifetime serving totals (readable via [`MatchServer::stats`],
+/// returned by [`MatchServer::shutdown`]). Only successfully served
+/// work is counted — a micro-batch whose coordinator run fails adds
+/// nothing, so the derived dedup/occupancy figures describe executed
+/// work only.
+#[derive(Debug, Clone, Default)]
+pub struct ServerTotals {
+    /// Micro-batches served.
+    pub batches: usize,
+    /// Requests answered successfully (including empty requests, which
+    /// never enter a batch).
+    pub requests: usize,
+    /// Offered patterns served.
+    pub patterns: usize,
+    /// Unique patterns executed after dedup.
+    pub unique_patterns: usize,
+    /// Requests refused with [`ServeError::Overloaded`].
+    pub rejected: usize,
+}
+
+impl ServerTotals {
+    /// Mean offered/unique ratio across the lifetime.
+    pub fn dedup_factor(&self) -> f64 {
+        self.patterns as f64 / self.unique_patterns.max(1) as f64
+    }
+
+    /// Mean offered patterns per micro-batch.
+    pub fn mean_batch_patterns(&self) -> f64 {
+        self.patterns as f64 / self.batches.max(1) as f64
+    }
+}
+
+/// One queued request.
+struct Request {
+    patterns: Vec<Vec<u8>>,
+    admitted: Instant,
+    resp: mpsc::Sender<std::result::Result<MatchResponse, ServeError>>,
+}
+
+/// Handle to an admitted request; [`PendingMatch::wait`] blocks for the
+/// response.
+#[derive(Debug)]
+pub struct PendingMatch {
+    rx: mpsc::Receiver<std::result::Result<MatchResponse, ServeError>>,
+}
+
+impl PendingMatch {
+    /// Block until the response arrives.
+    pub fn wait(self) -> std::result::Result<MatchResponse, ServeError> {
+        match self.rx.recv() {
+            Ok(response) => response,
+            Err(_) => Err(ServeError::ShuttingDown),
+        }
+    }
+}
+
+/// The concurrent batching match server (see the module docs).
+pub struct MatchServer {
+    /// `take()`n on shutdown so the batcher's queue disconnects and it
+    /// drains — the same `Option<SyncSender>` handshake the coordinator
+    /// lanes use.
+    tx: Option<mpsc::SyncSender<Request>>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    pat_chars: usize,
+    backpressure: Backpressure,
+    totals: Arc<Mutex<ServerTotals>>,
+}
+
+impl MatchServer {
+    /// Start a server over a coordinator. The batcher thread spawns
+    /// here and lives until [`MatchServer::shutdown`] (or drop).
+    pub fn start(coordinator: Arc<Coordinator>, cfg: ServeConfig) -> Result<Self> {
+        let pat_chars = coordinator.pat_chars();
+        let backpressure = cfg.backpressure;
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth.max(1));
+        let totals = Arc::new(Mutex::new(ServerTotals::default()));
+        let thread_totals = Arc::clone(&totals);
+        let batcher = std::thread::Builder::new()
+            .name("crampm-serve-batcher".to_string())
+            .spawn(move || batcher_loop(&coordinator, &cfg, rx, &thread_totals))
+            .map_err(|e| anyhow::anyhow!("spawning serve batcher: {e}"))?;
+        Ok(MatchServer {
+            tx: Some(tx),
+            batcher: Some(batcher),
+            pat_chars,
+            backpressure,
+            totals,
+        })
+    }
+
+    /// Submit a request without waiting for its response. Validation
+    /// happens here so one malformed request cannot fail a whole
+    /// micro-batch; an empty request answers immediately.
+    pub fn submit(&self, patterns: Vec<Vec<u8>>) -> std::result::Result<PendingMatch, ServeError> {
+        for (index, p) in patterns.iter().enumerate() {
+            if p.len() != self.pat_chars {
+                return Err(ServeError::InvalidPattern {
+                    index,
+                    len: p.len(),
+                    expected: self.pat_chars,
+                });
+            }
+        }
+        let (resp_tx, resp_rx) = mpsc::channel();
+        if patterns.is_empty() {
+            if let Ok(mut t) = self.totals.lock() {
+                t.requests += 1;
+            }
+            let _ = resp_tx.send(Ok(MatchResponse {
+                results: Vec::new(),
+                timing: RequestTiming::default(),
+                batch: BatchStats {
+                    requests: 0,
+                    patterns: 0,
+                    unique_patterns: 0,
+                    dedup_factor: 1.0,
+                    occupancy: 0.0,
+                },
+            }));
+            return Ok(PendingMatch { rx: resp_rx });
+        }
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(ServeError::ShuttingDown);
+        };
+        let req = Request { patterns, admitted: Instant::now(), resp: resp_tx };
+        match self.backpressure {
+            Backpressure::Block => {
+                tx.send(req).map_err(|_| ServeError::ShuttingDown)?;
+            }
+            Backpressure::Reject => match tx.try_send(req) {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(_)) => {
+                    if let Ok(mut t) = self.totals.lock() {
+                        t.rejected += 1;
+                    }
+                    return Err(ServeError::Overloaded);
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => {
+                    return Err(ServeError::ShuttingDown);
+                }
+            },
+        }
+        Ok(PendingMatch { rx: resp_rx })
+    }
+
+    /// Submit and block for the response — the closed-loop client call.
+    pub fn match_patterns(
+        &self,
+        patterns: Vec<Vec<u8>>,
+    ) -> std::result::Result<MatchResponse, ServeError> {
+        self.submit(patterns)?.wait()
+    }
+
+    /// Snapshot of the lifetime totals.
+    pub fn stats(&self) -> ServerTotals {
+        self.totals.lock().map(|t| t.clone()).unwrap_or_default()
+    }
+
+    /// Graceful shutdown: stop admitting, drain every queued request to
+    /// a response, join the batcher, and return the lifetime totals.
+    pub fn shutdown(mut self) -> ServerTotals {
+        self.close();
+        self.stats()
+    }
+
+    fn close(&mut self) {
+        // Dropping the real sender disconnects the admission queue; the
+        // batcher keeps receiving until the queue is empty (drain), then
+        // exits — no accepted request is dropped.
+        self.tx.take();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MatchServer {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// The batcher: coalesce until full or due, then dispatch.
+fn batcher_loop(
+    coordinator: &Coordinator,
+    cfg: &ServeConfig,
+    rx: mpsc::Receiver<Request>,
+    totals: &Mutex<ServerTotals>,
+) {
+    // `recv` keeps returning queued requests after the server handle
+    // drops its sender; `Err` here means empty *and* disconnected, so
+    // the loop is also the shutdown drain.
+    while let Ok(first) = rx.recv() {
+        let opened = Instant::now();
+        let mut offered = first.patterns.len();
+        let mut batch: Vec<(Request, Instant)> = vec![(first, opened)];
+        let deadline = opened + cfg.max_delay;
+        while offered < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => {
+                    offered += req.patterns.len();
+                    batch.push((req, Instant::now()));
+                }
+                // Deadline hit, or the queue disconnected mid-batch —
+                // either way this batch is closed; disconnect ends the
+                // outer loop once the queue is empty.
+                Err(_) => break,
+            }
+        }
+        dispatch_batch(coordinator, cfg, batch, totals);
+    }
+}
+
+/// One micro-batch through the coordinator and back out to its callers.
+fn dispatch_batch(
+    coordinator: &Coordinator,
+    cfg: &ServeConfig,
+    batch: Vec<(Request, Instant)>,
+    totals: &Mutex<ServerTotals>,
+) {
+    let t_dispatch = Instant::now();
+    let offered: usize = batch.iter().map(|(r, _)| r.patterns.len()).sum();
+
+    // One coordinator trip either way. Dedup collapses identical
+    // patterns across requests into one unique pool and each request
+    // keeps slot indices into it; with dedup off, the requests' own
+    // pools share a single `run_pools` lock acquisition.
+    let (per_request, unique) = if cfg.dedup {
+        let mut seen: FxHashMap<Vec<u8>, usize> = FxHashMap::default();
+        let mut pool: Vec<Vec<u8>> = Vec::with_capacity(offered);
+        let mut slots: Vec<Vec<usize>> = Vec::with_capacity(batch.len());
+        for (req, _) in &batch {
+            let mut map = Vec::with_capacity(req.patterns.len());
+            for p in &req.patterns {
+                let slot = match seen.get(p) {
+                    Some(&s) => s,
+                    None => {
+                        pool.push(p.clone());
+                        seen.insert(p.clone(), pool.len() - 1);
+                        pool.len() - 1
+                    }
+                };
+                map.push(slot);
+            }
+            slots.push(map);
+        }
+        let unique = pool.len();
+        let per_request = match coordinator.run(&pool) {
+            Ok((results, _)) => Ok(slots
+                .iter()
+                .map(|map| {
+                    map.iter()
+                        .enumerate()
+                        .map(|(i, &slot)| WorkResult {
+                            pattern_id: i,
+                            best: results[slot].best,
+                            passes: results[slot].passes,
+                        })
+                        .collect::<Vec<WorkResult>>()
+                })
+                .collect::<Vec<_>>()),
+            Err(e) => Err(ServeError::Run(format!("{e:#}"))),
+        };
+        (per_request, unique)
+    } else {
+        let pools: Vec<&[Vec<u8>]> = batch.iter().map(|(r, _)| r.patterns.as_slice()).collect();
+        let per_request = match coordinator.run_pools(&pools) {
+            Ok(per) => Ok(per.into_iter().map(|(results, _)| results).collect::<Vec<_>>()),
+            Err(e) => Err(ServeError::Run(format!("{e:#}"))),
+        };
+        (per_request, offered)
+    };
+    let execute = t_dispatch.elapsed().as_secs_f64();
+
+    let stats = BatchStats {
+        requests: batch.len(),
+        patterns: offered,
+        unique_patterns: unique,
+        dedup_factor: offered as f64 / unique.max(1) as f64,
+        occupancy: offered as f64 / cfg.max_batch.max(1) as f64,
+    };
+
+    let done = Instant::now();
+    match per_request {
+        Ok(all) => {
+            // Count only served work: a failed batch must not inflate
+            // the totals the serving projection is derived from.
+            if let Ok(mut t) = totals.lock() {
+                t.batches += 1;
+                t.requests += batch.len();
+                t.patterns += offered;
+                t.unique_patterns += unique;
+            }
+            for ((req, picked), results) in batch.into_iter().zip(all) {
+                let timing = RequestTiming {
+                    queue_wait: picked.saturating_duration_since(req.admitted).as_secs_f64(),
+                    batch_wait: t_dispatch.saturating_duration_since(picked).as_secs_f64(),
+                    execute,
+                    total: done.saturating_duration_since(req.admitted).as_secs_f64(),
+                };
+                let _ = req.resp.send(Ok(MatchResponse { results, timing, batch: stats }));
+            }
+        }
+        Err(e) => {
+            // The whole batch shares the failure; clients see a typed
+            // error, the server stays up for the next batch.
+            for (req, _) in batch {
+                let _ = req.resp.send(Err(e.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_apps::dna::DnaWorkload;
+    use crate::coordinator::{CoordinatorConfig, EngineKind};
+
+    fn server(max_batch: usize, dedup: bool) -> (MatchServer, Vec<Vec<u8>>) {
+        let w = DnaWorkload::generate(2048, 24, 16, 0.0, 9);
+        let frags = w.fragments(64, 16);
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.engine = EngineKind::Cpu;
+        cfg.lanes = 2;
+        let coord = Arc::new(Coordinator::new(cfg, frags).unwrap());
+        let serve_cfg = ServeConfig {
+            max_batch,
+            max_delay: Duration::from_millis(1),
+            queue_depth: 16,
+            backpressure: Backpressure::Block,
+            dedup,
+        };
+        (MatchServer::start(coord, serve_cfg).unwrap(), w.patterns)
+    }
+
+    #[test]
+    fn single_request_round_trips_with_timing() {
+        let (server, patterns) = server(8, true);
+        let resp = server.match_patterns(patterns[..3].to_vec()).unwrap();
+        assert_eq!(resp.results.len(), 3);
+        for (i, r) in resp.results.iter().enumerate() {
+            assert_eq!(r.pattern_id, i);
+            assert_eq!(r.best.unwrap().score, 16);
+        }
+        assert!(resp.timing.total >= resp.timing.execute);
+        assert!(resp.timing.queue_wait >= 0.0 && resp.timing.batch_wait >= 0.0);
+        assert!(resp.batch.requests >= 1);
+        let totals = server.shutdown();
+        assert_eq!(totals.requests, 1);
+        assert_eq!(totals.patterns, 3);
+    }
+
+    #[test]
+    fn duplicate_patterns_dedup_within_one_request() {
+        let (server, patterns) = server(16, true);
+        // Same pattern four times: one unique dispatched, four answers.
+        let req = vec![patterns[0].clone(); 4];
+        let resp = server.match_patterns(req).unwrap();
+        assert_eq!(resp.results.len(), 4);
+        assert_eq!(resp.batch.unique_patterns, 1);
+        assert!((resp.batch.dedup_factor - 4.0).abs() < 1e-9);
+        let first = resp.results[0].best.unwrap();
+        for r in &resp.results {
+            assert_eq!(r.best.unwrap(), first, "duplicates must share the answer");
+        }
+        let totals = server.shutdown();
+        assert_eq!(totals.unique_patterns, 1);
+        assert_eq!(totals.patterns, 4);
+    }
+
+    #[test]
+    fn empty_request_answers_without_dispatch() {
+        let (server, _) = server(8, true);
+        let resp = server.match_patterns(Vec::new()).unwrap();
+        assert!(resp.results.is_empty());
+        let totals = server.shutdown();
+        assert_eq!(totals.batches, 0, "empty request must not open a batch");
+    }
+
+    #[test]
+    fn invalid_pattern_rejected_at_admission() {
+        let (server, patterns) = server(8, true);
+        let err = server
+            .submit(vec![patterns[0].clone(), vec![0u8; 5]])
+            .err()
+            .expect("bad length must be refused");
+        assert_eq!(err, ServeError::InvalidPattern { index: 1, len: 5, expected: 16 });
+        server.shutdown();
+    }
+
+    #[test]
+    fn no_dedup_mode_still_answers_every_pattern() {
+        let (server, patterns) = server(16, false);
+        let req = vec![patterns[1].clone(), patterns[1].clone(), patterns[2].clone()];
+        let resp = server.match_patterns(req).unwrap();
+        assert_eq!(resp.results.len(), 3);
+        assert_eq!(resp.batch.unique_patterns, resp.batch.patterns);
+        assert_eq!(resp.results[0].best, resp.results[1].best);
+        server.shutdown();
+    }
+}

@@ -8,7 +8,9 @@
 
 pub mod bench;
 pub mod fxhash;
+pub mod json;
 pub mod rng;
 
 pub use fxhash::FxHashMap;
+pub use json::Json;
 pub use rng::Rng;

@@ -1,7 +1,7 @@
 //! Failure injection: malformed inputs must produce errors, not
 //! panics or silent corruption.
 
-use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, CoordinatorError, EngineKind};
 use cram_pm::runtime::{Manifest, Runtime};
 use std::path::PathBuf;
 
@@ -76,6 +76,39 @@ fn broken_engine_fails_construction_for_every_lane_count() {
             "lanes={lanes}: broken engine must fail new()"
         );
     }
+}
+
+#[test]
+fn empty_pattern_slice_short_circuits_cleanly() {
+    // The bugfix: an empty pool must not fall through the lane
+    // machinery — it returns an empty result with zeroed metrics.
+    let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+    cfg.engine = EngineKind::Cpu;
+    cfg.lanes = 3;
+    let coord = Coordinator::new(cfg, vec![vec![0u8; 64]; 6]).unwrap();
+    let (results, m) = coord.run(&[]).unwrap();
+    assert!(results.is_empty());
+    assert_eq!((m.patterns, m.matched, m.passes), (0, 0, 0));
+    assert_eq!(m.host_rate, 0.0);
+    assert_eq!((m.hw_seconds, m.hw_energy, m.hw_match_rate), (0.0, 0.0, 0.0));
+    assert_eq!(m.lane_stats.len(), coord.lanes());
+    assert!(m.lane_stats.iter().all(|s| s.items == 0 && s.passes == 0));
+    // The coordinator still works afterwards.
+    let (r2, _) = coord.run(&[vec![0u8; 16]]).unwrap();
+    assert_eq!(r2.len(), 1);
+}
+
+#[test]
+fn poisoned_lane_error_is_typed_and_downcastable() {
+    // The mutex-poisoning path surfaces a typed error (not a bare
+    // string), so callers can distinguish "rebuild the coordinator"
+    // from transient run failures.
+    let err = anyhow::Error::new(CoordinatorError::LanesPoisoned);
+    assert_eq!(
+        err.downcast_ref::<CoordinatorError>(),
+        Some(&CoordinatorError::LanesPoisoned)
+    );
+    assert!(err.to_string().contains("poisoned"));
 }
 
 #[test]

@@ -1,0 +1,191 @@
+//! Serving-layer integration tests: concurrent clients through the
+//! `MatchServer` must get bit-identical answers to direct
+//! `Coordinator::run` calls (batching and dedup must not change
+//! tie-breaking), backpressure must reject-and-recover, and shutdown
+//! must drain every accepted request.
+
+use cram_pm::bench_apps::dna::DnaWorkload;
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::serve::{Backpressure, MatchServer, ServeConfig, ServeError};
+use cram_pm::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Coordinator over an erroneous-read workload (ties and near-ties are
+/// common, so tie-breaking is actually exercised) plus its catalog.
+fn coordinator(lanes: usize, seed: u64, catalog: usize) -> (Arc<Coordinator>, Vec<Vec<u8>>) {
+    let w = DnaWorkload::generate(4096, catalog, 16, 0.05, seed);
+    let fragments = w.fragments(64, 16);
+    let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+    cfg.engine = EngineKind::Cpu;
+    cfg.lanes = lanes;
+    (Arc::new(Coordinator::new(cfg, fragments).unwrap()), w.patterns)
+}
+
+fn serve_cfg(max_batch: usize, dedup: bool) -> ServeConfig {
+    ServeConfig {
+        max_batch,
+        max_delay: Duration::from_millis(2),
+        queue_depth: 64,
+        backpressure: Backpressure::Block,
+        dedup,
+    }
+}
+
+/// The keystone property: N concurrent clients submitting pools with
+/// heavy duplication get, per request, exactly what a direct
+/// `Coordinator::run` of the same pool returns — same (score, row,
+/// loc), same order — with dedup on and off.
+#[test]
+fn prop_concurrent_clients_bit_identical_to_direct_runs() {
+    let (coordinator, catalog) = coordinator(3, 11, 48);
+    for dedup in [true, false] {
+        let server = MatchServer::start(Arc::clone(&coordinator), serve_cfg(32, dedup)).unwrap();
+        std::thread::scope(|scope| {
+            for cid in 0..4u64 {
+                let server = &server;
+                let coordinator = &coordinator;
+                let catalog = &catalog;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(1000 + cid);
+                    for _ in 0..8 {
+                        // Duplicates within and across requests are
+                        // likely: draws come from a 48-pattern catalog.
+                        let pool: Vec<Vec<u8>> = (0..rng.range(1, 7))
+                            .map(|_| catalog[rng.below(catalog.len())].clone())
+                            .collect();
+                        let resp = server.match_patterns(pool.clone()).unwrap();
+                        let (direct, _) = coordinator.run(&pool).unwrap();
+                        assert_eq!(resp.results.len(), direct.len());
+                        for (a, b) in resp.results.iter().zip(&direct) {
+                            assert_eq!(a.pattern_id, b.pattern_id);
+                            assert_eq!(
+                                a.best.map(|x| (x.score, x.row, x.loc)),
+                                b.best.map(|x| (x.score, x.row, x.loc)),
+                                "dedup={dedup} client {cid} pattern {}",
+                                a.pattern_id
+                            );
+                        }
+                    }
+                });
+            }
+        });
+        let totals = server.shutdown();
+        assert_eq!(totals.requests, 4 * 8, "dedup={dedup}: lost requests");
+    }
+}
+
+/// Reject backpressure: a submission storm against a 1-deep admission
+/// queue must shed load with `Overloaded`, every *admitted* request
+/// must still be answered, and a retry after the storm succeeds.
+#[test]
+fn reject_backpressure_sheds_then_recovers() {
+    let (coordinator, catalog) = coordinator(2, 21, 32);
+    let server = MatchServer::start(
+        coordinator,
+        ServeConfig {
+            max_batch: 4,
+            max_delay: Duration::from_micros(100),
+            queue_depth: 1,
+            backpressure: Backpressure::Reject,
+            dedup: true,
+        },
+    )
+    .unwrap();
+    let mut pending = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..400 {
+        match server.submit(vec![catalog[i % catalog.len()].clone(); 4]) {
+            Ok(p) => pending.push(p),
+            Err(ServeError::Overloaded) => rejected += 1,
+            Err(e) => panic!("unexpected serve error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "storm never hit the bounded admission queue");
+    assert!(!pending.is_empty(), "every request was rejected");
+    for p in pending {
+        let resp = p.wait().expect("admitted request must be served");
+        assert_eq!(resp.results.len(), 4);
+    }
+    // Reject-with-retry: once the storm passes, admission succeeds.
+    let retried = server.match_patterns(vec![catalog[0].clone()]).unwrap();
+    assert_eq!(retried.results.len(), 1);
+    let totals = server.shutdown();
+    assert_eq!(totals.rejected, rejected, "server under-counted rejections");
+}
+
+/// Block backpressure never refuses: the same storm pattern completes
+/// with zero rejections (callers park on the bounded queue instead).
+#[test]
+fn block_backpressure_never_rejects() {
+    let (coordinator, catalog) = coordinator(2, 51, 16);
+    let server = MatchServer::start(
+        coordinator,
+        ServeConfig {
+            max_batch: 8,
+            max_delay: Duration::from_micros(200),
+            queue_depth: 2,
+            backpressure: Backpressure::Block,
+            dedup: true,
+        },
+    )
+    .unwrap();
+    std::thread::scope(|scope| {
+        for cid in 0..4usize {
+            let server = &server;
+            let catalog = &catalog;
+            scope.spawn(move || {
+                for i in 0..25 {
+                    let pool = vec![catalog[(cid + i) % catalog.len()].clone(); 2];
+                    server.match_patterns(pool).unwrap();
+                }
+            });
+        }
+    });
+    let totals = server.shutdown();
+    assert_eq!(totals.rejected, 0);
+    assert_eq!(totals.requests, 100);
+}
+
+/// Graceful drain: requests queued at shutdown are all answered before
+/// the batcher exits; none are dropped.
+#[test]
+fn shutdown_drains_queued_and_inflight_requests() {
+    let (coordinator, catalog) = coordinator(2, 31, 16);
+    let server = MatchServer::start(
+        coordinator,
+        ServeConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(5),
+            queue_depth: 32,
+            backpressure: Backpressure::Block,
+            dedup: true,
+        },
+    )
+    .unwrap();
+    let pending: Vec<_> = (0..20)
+        .map(|i| server.submit(vec![catalog[i % catalog.len()].clone(); 2]).unwrap())
+        .collect();
+    // Shutdown immediately: most of those requests are still queued.
+    let totals = server.shutdown();
+    assert_eq!(totals.requests, 20, "shutdown dropped queued requests");
+    for p in pending {
+        let resp = p.wait().expect("drained request must still be answered");
+        assert_eq!(resp.results.len(), 2);
+    }
+}
+
+/// Dedup accounting reaches the client: a batch of identical patterns
+/// reports one unique execution and a matching dedup factor.
+#[test]
+fn batch_stats_report_dedup_and_occupancy() {
+    let (coordinator, catalog) = coordinator(1, 61, 8);
+    let server = MatchServer::start(coordinator, serve_cfg(16, true)).unwrap();
+    let resp = server.match_patterns(vec![catalog[0].clone(); 6]).unwrap();
+    assert_eq!(resp.batch.patterns, 6);
+    assert_eq!(resp.batch.unique_patterns, 1);
+    assert!((resp.batch.dedup_factor - 6.0).abs() < 1e-9);
+    assert!((resp.batch.occupancy - 6.0 / 16.0).abs() < 1e-9);
+    assert!(resp.timing.total >= resp.timing.queue_wait + resp.timing.batch_wait);
+    server.shutdown();
+}
