@@ -1,66 +1,213 @@
 //! Bench: the L3 hot paths — codegen, the columnar bit simulator, the
-//! oracular index, the XLA artifact execution, and the full pipeline.
-//! This is the §Perf driver (EXPERIMENTS.md).
+//! gate-level engine's simulate-one-pass path (fresh-everything vs the
+//! cached/pooled hot path), the packed CPU scorer, the oracular index,
+//! the XLA artifact execution, and the full pipeline. This is the
+//! §Perf / §Hotpath driver (EXPERIMENTS.md).
 //!
-//! `cargo bench --bench hotpath`
+//! ```text
+//! cargo bench --bench hotpath                      # full scale
+//! cargo bench --bench hotpath -- --smoke           # CI size
+//! cargo bench --bench hotpath -- --json BENCH_hotpath.json
+//! ```
+//!
+//! The `--json` report is the committed perf baseline
+//! (`BENCH_hotpath.json`): the headline `bitsim.speedup` compares a
+//! fresh-everything pass (re-lower the alignment programs per pass,
+//! new array, allocating read-outs) against the cached-program +
+//! pooled-buffer engine on the same work item, inside one binary on
+//! one host. Note the fresh side still goes through the word-parallel
+//! write/read-out code (the bit-at-a-time I/O no longer exists), so
+//! the measured ratio isolates the cache + pooling amortization and
+//! *understates* the full delta vs the true pre-PR path.
 
 use cram_pm::array::{CramArray, RowLayout};
 use cram_pm::bench_apps::dna::DnaWorkload;
-use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
-use cram_pm::dna::Encoded;
-use cram_pm::isa::{CodeGen, PresetMode};
+use cram_pm::coordinator::{
+    BitsimEngine, Coordinator, CoordinatorConfig, EngineKind, MatchEngine, WorkItem,
+};
+use cram_pm::dna::{packed_best_alignment, Encoded, Packed2};
+use cram_pm::isa::{CodeGen, PresetMode, ProgramCache};
 use cram_pm::scheduler::{OracularScheduler, RowAddr};
 use cram_pm::util::bench::{bench, section};
-use cram_pm::util::Rng;
+use cram_pm::util::{Json, Rng};
+use std::sync::Arc;
+
+/// Default engine geometry (the coordinator's): 64-char fragments,
+/// 16-char patterns, 256 rows per block.
+const FRAG_CHARS: usize = 64;
+const PAT_CHARS: usize = 16;
+const ROWS_PER_BLOCK: usize = 256;
+
+/// One block-sized work item at the default geometry.
+fn default_item(rng: &mut Rng) -> WorkItem {
+    let fragments: Vec<Arc<[u8]>> = (0..ROWS_PER_BLOCK)
+        .map(|_| Arc::from(cram_pm::dna::encode(&rng.dna(FRAG_CHARS)).as_slice()))
+        .collect();
+    let pattern: Arc<[u8]> = Arc::from(&fragments[7][5..5 + PAT_CHARS]);
+    WorkItem {
+        pattern_id: 0,
+        pattern,
+        fragments,
+        row_ids: (0..ROWS_PER_BLOCK as u32).collect(),
+    }
+}
+
+/// The fresh-everything reference: re-lower every alignment program
+/// (`CodeGen::new` per pass), allocate a fresh `CramArray`, and take
+/// allocating `execute` outputs — the pre-PR *structure*, though its
+/// I/O now shares the word-parallel fast paths (see module docs).
+fn fresh_everything_pass(layout: RowLayout, mode: PresetMode, item: &WorkItem) -> u64 {
+    let mut arr = CramArray::new(item.fragments.len(), layout.total_cols());
+    for (r, frag) in item.fragments.iter().enumerate() {
+        arr.write_encoded(r, layout.frag_col() as usize, &Encoded { codes: frag.to_vec() });
+    }
+    arr.broadcast_encoded(layout.pat_col() as usize, &Encoded { codes: item.pattern.to_vec() });
+    let mut cg = CodeGen::new(layout, mode);
+    let mut best = 0u64;
+    for loc in 0..layout.n_alignments() as u32 {
+        let prog = cg.alignment_program(loc, true);
+        let out = arr.execute(&prog).unwrap();
+        for &s in &out.scores[0] {
+            best = best.max(s);
+        }
+    }
+    best
+}
+
+/// The pre-PR CPU scoring path: a `Vec<usize>` score profile per
+/// (fragment, loc) scan.
+fn profile_scan_item(item: &WorkItem) -> usize {
+    let mut best = 0usize;
+    for frag in &item.fragments {
+        for &s in &cram_pm::dna::score_profile(frag, &item.pattern) {
+            best = best.max(s);
+        }
+    }
+    best
+}
+
+/// The packed XOR+popcount scorer on the same item.
+fn packed_scan_item(item: &WorkItem) -> usize {
+    let pattern = Packed2::from_codes(&item.pattern);
+    let mut best = 0usize;
+    for frag in &item.fragments {
+        if let Some((s, _)) = packed_best_alignment(&Packed2::from_codes(frag), &pattern) {
+            best = best.max(s);
+        }
+    }
+    best
+}
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(std::path::PathBuf::from);
+    // Budgets: smoke keeps CI fast, full chases stable medians.
+    let budget = if smoke { 0.25 } else { 2.0 };
+
     let mut rng = Rng::new(1234);
+    let mode = PresetMode::Gang;
 
     section("codegen: macro → micro lowering");
     let probe = RowLayout::new(256, 100, usize::MAX / 2);
-    let mut cg = CodeGen::new(probe, PresetMode::Gang);
+    let mut cg = CodeGen::new(probe, mode);
     let scratch = {
         let _ = cg.alignment_program(0, true);
         cg.stats().scratch_high_water
     };
-    let layout = RowLayout::new(256, 100, scratch);
-    let mut cg = CodeGen::new(layout, PresetMode::Gang);
+    let layout100 = RowLayout::new(256, 100, scratch);
+    let mut cg = CodeGen::new(layout100, mode);
     let n_instr = cg.alignment_program(0, true).len();
-    let r = bench("alignment_program (100-char pattern)", 2.0, || cg.alignment_program(7, true));
-    println!("{r}");
-    println!("  → {:.1} M micro-instructions generated/s", n_instr as f64 / r.median / 1e6);
+    let r_codegen =
+        bench("alignment_program (100-char pattern)", budget, || cg.alignment_program(7, true));
+    println!("{r_codegen}");
+    println!(
+        "  → {:.1} M micro-instructions generated/s",
+        n_instr as f64 / r_codegen.median / 1e6
+    );
+    let r_cache_build = bench("ProgramCache::for_geometry (64×16 default)", budget, || {
+        ProgramCache::for_geometry(FRAG_CHARS, PAT_CHARS, mode, true)
+    });
+    println!("{r_cache_build}");
+    println!("  (amortized once per coordinator, shared by every lane)");
 
     section("columnar bit simulator: full Algorithm 1 iteration");
     let rows = 1024;
-    let mut arr = CramArray::new(rows, layout.total_cols());
+    let mut arr = CramArray::new(rows, layout100.total_cols());
     for row in 0..rows {
         let frag = Encoded::from_ascii(&rng.dna(256));
-        arr.write_encoded(row, layout.frag_col() as usize, &frag);
+        arr.write_encoded(row, layout100.frag_col() as usize, &frag);
     }
-    arr.broadcast_encoded(layout.pat_col() as usize, &Encoded::from_ascii(&rng.dna(100)));
+    arr.broadcast_encoded(layout100.pat_col() as usize, &Encoded::from_ascii(&rng.dna(100)));
     let prog = cg.alignment_program(0, true);
-    let r = bench(&format!("execute 1 alignment ({} micros, {rows} rows)", prog.len()), 2.0, || {
+    let r = bench(&format!("execute 1 alignment ({} micros, {rows} rows)", prog.len()), budget, || {
         arr.execute(&prog).unwrap()
     });
     println!("{r}");
+    println!("  → {:.2} M row-gate-ops/s", (prog.len() * rows) as f64 / r.median / 1e6);
+
+    // The headline: one engine pass (256 rows × 49 alignments at the
+    // default geometry), pre-PR fresh-everything path vs the cached
+    // program + pooled array/buffer hot path.
+    section("bitsim engine: simulate one pass (default 64×16 geometry)");
+    let item = default_item(&mut rng);
+    let mut engine = BitsimEngine::new(FRAG_CHARS, PAT_CHARS, ROWS_PER_BLOCK, mode);
+    let layout = *engine.layout();
+    let n_alignments = layout.n_alignments();
+    let r_fresh = bench("fresh-everything pass (pre-PR structure)", budget, || {
+        fresh_everything_pass(layout, mode, &item)
+    });
+    println!("{r_fresh}");
+    let r_cached = bench("cached programs + pooled buffers", budget, || engine.run(&item).unwrap());
+    println!("{r_cached}");
+    let bitsim_speedup = r_fresh.median / r_cached.median;
     println!(
-        "  → {:.2} M row-gate-ops/s",
-        (prog.len() * rows) as f64 / r.median / 1e6
+        "  → {:.1} passes/s (was {:.1}) — {:.2}× ; {:.0} ns/alignment across {} rows",
+        1.0 / r_cached.median,
+        1.0 / r_fresh.median,
+        bitsim_speedup,
+        r_cached.median * 1e9 / n_alignments as f64,
+        ROWS_PER_BLOCK
     );
+    // Sanity: both paths must agree on the answer.
+    let fresh_best = fresh_everything_pass(layout, mode, &item);
+    let cached_best = engine.run(&item).unwrap().best.unwrap().score as u64;
+    assert_eq!(fresh_best, cached_best, "fresh and cached paths diverged");
+
+    section("cpu engine scorer: score_profile scan vs packed XOR+popcount");
+    let r_profile =
+        bench("score_profile scan (the pre-PR scorer)", budget, || profile_scan_item(&item));
+    println!("{r_profile}");
+    let r_packed = bench("packed 2-bit scorer", budget, || packed_scan_item(&item));
+    println!("{r_packed}");
+    let cpu_speedup = r_profile.median / r_packed.median;
+    let cpu_alignments = (ROWS_PER_BLOCK * n_alignments) as f64;
+    println!(
+        "  → {:.2}× ; {:.1} ns/alignment packed vs {:.1} ns/alignment profile",
+        cpu_speedup,
+        r_packed.median * 1e9 / cpu_alignments,
+        r_profile.median * 1e9 / cpu_alignments
+    );
+    assert_eq!(profile_scan_item(&item), packed_scan_item(&item), "cpu scorers diverged");
 
     section("oracular index");
-    let w = DnaWorkload::generate(1 << 20, 4096, 24, 0.01, 7);
+    let (ref_chars, idx_pats) = if smoke { (1 << 16, 256) } else { (1 << 20, 4096) };
+    let w = DnaWorkload::generate(ref_chars, idx_pats, 24, 0.01, 7);
     let frags = w.fragments(256, 24);
     let addrs: Vec<RowAddr> =
         (0..frags.len()).map(|i| RowAddr { array: 0, row: i as u32 }).collect();
-    let r = bench("index build (1M-char reference)", 3.0, || {
+    let r = bench(&format!("index build ({ref_chars}-char reference)"), budget.min(3.0), || {
         OracularScheduler::build(&frags, addrs.clone(), w.patterns.clone(), 12, 64)
     });
     println!("{r}");
     let idx = OracularScheduler::build(&frags, addrs, w.patterns.clone(), 12, 64);
     let pats = w.patterns.clone();
     let mut i = 0;
-    let r = bench("candidate lookup", 1.0, || {
+    let r = bench("candidate lookup", budget.min(1.0), || {
         i = (i + 1) % pats.len();
         idx.candidates(&pats[i])
     });
@@ -73,17 +220,19 @@ fn main() {
     // — exactly what the lanes parallelize.
     section("coordinator lane sweep (DNA workload, CPU engine)");
     {
-        let w = DnaWorkload::generate(1 << 16, 64, 16, 0.0, 11);
+        let (sweep_ref, lanes_list): (usize, &[usize]) =
+            if smoke { (1 << 13, &[1, 2]) } else { (1 << 16, &[1, 2, 4, 8]) };
+        let w = DnaWorkload::generate(sweep_ref, 64, 16, 0.0, 11);
         let frags = w.fragments(64, 16);
         let n_pats = w.patterns.len();
         let mut base_rate = 0.0;
-        for lanes in [1usize, 2, 4, 8] {
+        for &lanes in lanes_list {
             let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
             cfg.engine = EngineKind::Cpu;
             cfg.oracular = None;
             cfg.lanes = lanes;
             let coord = Coordinator::new(cfg, frags.clone()).unwrap();
-            let r = bench(&format!("{n_pats} patterns broadcast, lanes={lanes}"), 3.0, || {
+            let r = bench(&format!("{n_pats} patterns broadcast, lanes={lanes}"), budget.min(3.0), || {
                 coord.run(&w.patterns).unwrap()
             });
             println!("{r}");
@@ -104,7 +253,7 @@ fn main() {
         let rt = cram_pm::runtime::Runtime::load(std::path::Path::new("artifacts")).unwrap();
         let frag: Vec<i32> = (0..256 * 64).map(|_| rng.below(4) as i32).collect();
         let pat: Vec<i32> = (0..16).map(|_| rng.below(4) as i32).collect();
-        let r = bench("execute dna_small", 2.0, || rt.execute("dna_small", &frag, &pat).unwrap());
+        let r = bench("execute dna_small", budget, || rt.execute("dna_small", &frag, &pat).unwrap());
         println!("{r}");
         println!(
             "  → {:.2} M row-alignments/s through PJRT",
@@ -127,5 +276,64 @@ fn main() {
         println!("{r}");
     } else {
         eprintln!("(artifacts missing — skipping XLA benches; run `make artifacts`)");
+    }
+
+    if let Some(path) = json_path {
+        let doc = Json::obj(vec![
+            ("experiment", Json::str("hotpath")),
+            ("smoke", Json::Bool(smoke)),
+            (
+                "provenance",
+                Json::str(
+                    "measured: in-binary A/B, fresh-everything (pre-PR structure; shares the \
+                     word-parallel I/O) vs cached/pooled — understates the full pre-PR delta",
+                ),
+            ),
+            (
+                "geometry",
+                Json::obj(vec![
+                    ("frag_chars", Json::int(FRAG_CHARS)),
+                    ("pat_chars", Json::int(PAT_CHARS)),
+                    ("rows_per_block", Json::int(ROWS_PER_BLOCK)),
+                    ("alignments_per_pass", Json::int(n_alignments)),
+                    ("preset_mode", Json::str("Gang")),
+                ]),
+            ),
+            (
+                "bitsim",
+                Json::obj(vec![
+                    ("fresh_pass_s", Json::num(r_fresh.median)),
+                    ("cached_pass_s", Json::num(r_cached.median)),
+                    ("fresh_passes_per_sec", Json::num(1.0 / r_fresh.median)),
+                    ("passes_per_sec", Json::num(1.0 / r_cached.median)),
+                    ("speedup", Json::num(bitsim_speedup)),
+                    (
+                        "ns_per_alignment",
+                        Json::num(r_cached.median * 1e9 / n_alignments as f64),
+                    ),
+                ]),
+            ),
+            (
+                "cpu_scorer",
+                Json::obj(vec![
+                    ("profile_item_s", Json::num(r_profile.median)),
+                    ("packed_item_s", Json::num(r_packed.median)),
+                    ("speedup", Json::num(cpu_speedup)),
+                    (
+                        "packed_ns_per_alignment",
+                        Json::num(r_packed.median * 1e9 / cpu_alignments),
+                    ),
+                ]),
+            ),
+            (
+                "codegen",
+                Json::obj(vec![
+                    ("alignment_program_s", Json::num(r_codegen.median)),
+                    ("cache_build_s", Json::num(r_cache_build.median)),
+                ]),
+            ),
+        ]);
+        doc.write_file(&path).expect("writing hotpath JSON report");
+        println!("\nwrote {}", path.display());
     }
 }

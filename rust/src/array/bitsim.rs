@@ -20,13 +20,54 @@ pub struct CramArray {
 
 /// Data produced by executing a program: memory reads and score-buffer
 /// read-outs.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+///
+/// §Perf: the output owns two buffer pools so a caller that executes
+/// many programs through [`CramArray::execute_into`] reuses the same
+/// heap allocations pass after pass — [`ExecOutput::recycle`] retires
+/// the visible `reads`/`scores` entries into the pools instead of
+/// dropping them. Equality and the public API only see the visible
+/// entries.
+#[derive(Debug, Clone, Default)]
 pub struct ExecOutput {
     /// One entry per `ReadRow`: the bits read.
     pub reads: Vec<Vec<bool>>,
     /// One entry per `ReadScoreAllRows`: the integer score per row
     /// (LSB-first reassembly of the score bits).
     pub scores: Vec<Vec<u64>>,
+    /// Retired read buffers awaiting reuse.
+    spare_reads: Vec<Vec<bool>>,
+    /// Retired score buffers awaiting reuse.
+    spare_scores: Vec<Vec<u64>>,
+}
+
+impl PartialEq for ExecOutput {
+    fn eq(&self, other: &Self) -> bool {
+        self.reads == other.reads && self.scores == other.scores
+    }
+}
+
+impl Eq for ExecOutput {}
+
+impl ExecOutput {
+    /// Retire the current `reads`/`scores` into the reuse pools: the
+    /// visible output empties, the heap allocations stay for the next
+    /// [`CramArray::execute_into`] pass.
+    pub fn recycle(&mut self) {
+        self.spare_reads.append(&mut self.reads);
+        self.spare_scores.append(&mut self.scores);
+    }
+
+    fn take_read_buf(&mut self) -> Vec<bool> {
+        let mut buf = self.spare_reads.pop().unwrap_or_default();
+        buf.clear();
+        buf
+    }
+
+    fn take_score_buf(&mut self) -> Vec<u64> {
+        let mut buf = self.spare_scores.pop().unwrap_or_default();
+        buf.clear();
+        buf
+    }
 }
 
 impl CramArray {
@@ -35,6 +76,20 @@ impl CramArray {
         assert!(rows > 0 && cols > 0, "array must be non-empty");
         let words_per_col = rows.div_ceil(64);
         CramArray { rows, cols, words_per_col, cells: vec![0; words_per_col * cols] }
+    }
+
+    /// Clear every cell and (re)size the logical row count without
+    /// reallocating — the pooled-array path: an engine keeps one array
+    /// at its block-capacity geometry and refills it per pass. `rows`
+    /// may not exceed the word capacity the array was built with.
+    pub fn reset(&mut self, rows: usize) {
+        assert!(
+            rows > 0 && rows <= self.words_per_col * 64,
+            "reset to {rows} rows exceeds capacity {}",
+            self.words_per_col * 64
+        );
+        self.rows = rows;
+        self.cells.fill(0);
     }
 
     /// Number of rows.
@@ -81,31 +136,136 @@ impl CramArray {
         self.col_words_mut(col).fill(fill);
     }
 
-    /// Write a bit string into one row (memory mode).
+    /// Write a bit string into one row (memory mode). The row's word
+    /// index and bit mask are hoisted out of the loop, so each bit is
+    /// one masked word update instead of a bounds-checked `set()`.
     pub fn write_row_bits(&mut self, row: usize, col: usize, bits: &[bool]) {
+        assert!(row < self.rows, "row {row} out of bounds");
+        assert!(col + bits.len() <= self.cols, "row write spills past column {}", self.cols);
+        let wpc = self.words_per_col;
+        let w = row / 64;
+        let m = 1u64 << (row % 64);
         for (i, &b) in bits.iter().enumerate() {
-            self.set(row, col + i, b);
+            let idx = (col + i) * wpc + w;
+            if b {
+                self.cells[idx] |= m;
+            } else {
+                self.cells[idx] &= !m;
+            }
+        }
+    }
+
+    /// Read `len` bits from one row into a caller-owned buffer.
+    pub fn read_row_into(&self, row: usize, col: usize, len: usize, out: &mut Vec<bool>) {
+        assert!(row < self.rows, "row {row} out of bounds");
+        assert!(col + len <= self.cols, "row read spills past column {}", self.cols);
+        out.clear();
+        out.reserve(len);
+        let wpc = self.words_per_col;
+        let w = row / 64;
+        let m = 1u64 << (row % 64);
+        for i in 0..len {
+            out.push(self.cells[(col + i) * wpc + w] & m != 0);
         }
     }
 
     /// Read `len` bits from one row.
     pub fn read_row_bits(&self, row: usize, col: usize, len: usize) -> Vec<bool> {
-        (0..len).map(|i| self.get(row, col + i)).collect()
+        let mut out = Vec::new();
+        self.read_row_into(row, col, len, &mut out);
+        out
+    }
+
+    /// Write a 2-bit-code string into one row at `col`: character `i`
+    /// lands LSB-first at columns `col + 2i` (low) and `col + 2i + 1`
+    /// (high) — the layout order of [`Encoded::bits`], without
+    /// materializing the intermediate `Vec<bool>`.
+    pub fn write_codes(&mut self, row: usize, col: usize, codes: &[u8]) {
+        assert!(row < self.rows, "row {row} out of bounds");
+        assert!(col + 2 * codes.len() <= self.cols, "code write spills past column {}", self.cols);
+        let wpc = self.words_per_col;
+        let w = row / 64;
+        let m = 1u64 << (row % 64);
+        for (i, &c) in codes.iter().enumerate() {
+            let lo = (col + 2 * i) * wpc + w;
+            if c & 1 == 1 {
+                self.cells[lo] |= m;
+            } else {
+                self.cells[lo] &= !m;
+            }
+            let hi = lo + wpc;
+            if c & 2 == 2 {
+                self.cells[hi] |= m;
+            } else {
+                self.cells[hi] &= !m;
+            }
+        }
+    }
+
+    /// Write the same 2-bit-code string into **every** row at `col`
+    /// (how patterns are broadcast under the paper's second
+    /// pattern-assignment option, §3.2) — one column-parallel word fill
+    /// per bit, no intermediate `Vec<bool>`.
+    pub fn broadcast_codes(&mut self, col: usize, codes: &[u8]) {
+        assert!(
+            col + 2 * codes.len() <= self.cols,
+            "broadcast spills past column {}",
+            self.cols
+        );
+        for (i, &c) in codes.iter().enumerate() {
+            self.set_column(col + 2 * i, c & 1 == 1);
+            self.set_column(col + 2 * i + 1, c & 2 == 2);
+        }
     }
 
     /// Write a 2-bit-encoded string into a row at `col`.
     pub fn write_encoded(&mut self, row: usize, col: usize, s: &Encoded) {
-        self.write_row_bits(row, col, &s.bits());
+        self.write_codes(row, col, &s.codes);
     }
 
-    /// Write the same 2-bit-encoded string into **every** row at `col`
-    /// (how patterns are broadcast under the paper's second
-    /// pattern-assignment option, §3.2).
+    /// Broadcast a 2-bit-encoded string into every row at `col`.
     pub fn broadcast_encoded(&mut self, col: usize, s: &Encoded) {
-        let bits = s.bits();
-        for (i, &b) in bits.iter().enumerate() {
-            self.set_column(col + i, b);
+        self.broadcast_codes(col, &s.codes);
+    }
+
+    /// Word-transposed score read-out: reassemble the `len`-bit score
+    /// of **every** row from the score columns' packed words instead of
+    /// `rows × len` scattered `get()` calls. Each column word covers 64
+    /// rows; set bits are walked sparsely (scores are mostly low, so
+    /// most bits are clear). Tail bits of the last word — which gang
+    /// presets and gate steps legitimately leave as garbage past
+    /// `rows` — are masked off.
+    pub fn read_scores_into(&self, col: usize, len: usize, scores: &mut Vec<u64>) -> Result<()> {
+        ensure!(len <= 64, "score wider than 64 bits");
+        ensure!(
+            col + len <= self.cols,
+            "score read-out spills past column {}: col {col} + len {len}",
+            self.cols
+        );
+        scores.clear();
+        scores.resize(self.rows, 0);
+        let wpc = self.words_per_col;
+        for i in 0..len {
+            let base = (col + i) * wpc;
+            let bit = 1u64 << i;
+            for w in 0..wpc {
+                let lo = w * 64;
+                if lo >= self.rows {
+                    break;
+                }
+                let valid = self.rows - lo;
+                let mut word = self.cells[base + w];
+                if valid < 64 {
+                    word &= (1u64 << valid) - 1;
+                }
+                while word != 0 {
+                    let r = word.trailing_zeros() as usize;
+                    scores[lo + r] |= bit;
+                    word &= word - 1;
+                }
+            }
         }
+        Ok(())
     }
 
     /// Row-parallel gate step: fire `kind` with inputs at `ins`,
@@ -146,13 +306,23 @@ impl CramArray {
         Ok(())
     }
 
-    /// Execute a program, returning read data.
+    /// Execute a program, returning freshly-allocated read data.
     pub fn execute(&mut self, prog: &Program) -> Result<ExecOutput> {
         let mut out = ExecOutput::default();
-        for (_, instr) in &prog.instrs {
-            self.execute_instr(instr, &mut out)?;
-        }
+        self.execute_into(prog, &mut out)?;
         Ok(out)
+    }
+
+    /// Execute a program into a caller-owned output, recycling its
+    /// previous buffers — the zero-allocation steady state: an engine
+    /// that executes one program per alignment reuses the same score
+    /// buffers for every alignment of every pass.
+    pub fn execute_into(&mut self, prog: &Program, out: &mut ExecOutput) -> Result<()> {
+        out.recycle();
+        for (_, instr) in &prog.instrs {
+            self.execute_instr(instr, out)?;
+        }
+        Ok(())
     }
 
     /// Execute a single micro-instruction.
@@ -163,9 +333,12 @@ impl CramArray {
                 self.set_column(*col as usize, *val);
             }
             MicroInstr::Gate { kind, out: o, ins, n_ins } => {
-                let ins: Vec<usize> =
-                    ins[..*n_ins as usize].iter().map(|&c| c as usize).collect();
-                self.gate_step(*kind, *o as usize, &ins)?;
+                let mut cols = [0usize; 5];
+                let n = *n_ins as usize;
+                for (dst, &c) in cols[..n].iter_mut().zip(&ins[..n]) {
+                    *dst = c as usize;
+                }
+                self.gate_step(*kind, *o as usize, &cols[..n])?;
             }
             MicroInstr::WriteRow { row, col, bits } => {
                 ensure!((*row as usize) < self.rows, "row {row} out of bounds");
@@ -177,19 +350,20 @@ impl CramArray {
                 self.write_row_bits(*row as usize, *col as usize, bits);
             }
             MicroInstr::ReadRow { row, col, len } => {
-                out.reads.push(self.read_row_bits(*row as usize, *col as usize, *len as usize));
+                ensure!((*row as usize) < self.rows, "row {row} out of bounds");
+                ensure!(
+                    *col as usize + *len as usize <= self.cols,
+                    "row read spills past column {}",
+                    self.cols
+                );
+                let mut buf = out.take_read_buf();
+                self.read_row_into(*row as usize, *col as usize, *len as usize, &mut buf);
+                out.reads.push(buf);
             }
             MicroInstr::ReadScoreAllRows { col, len } => {
-                ensure!(*len <= 64, "score wider than 64 bits");
-                let mut scores = Vec::with_capacity(self.rows);
-                for r in 0..self.rows {
-                    let mut v = 0u64;
-                    for i in 0..*len {
-                        v |= (self.get(r, (*col + i) as usize) as u64) << i;
-                    }
-                    scores.push(v);
-                }
-                out.scores.push(scores);
+                let mut buf = out.take_score_buf();
+                self.read_scores_into(*col as usize, *len as usize, &mut buf)?;
+                out.scores.push(buf);
             }
         }
         Ok(())
@@ -202,7 +376,7 @@ mod tests {
     use crate::array::RowLayout;
     use crate::dna::{encode, score_profile};
     use crate::gates::GateKind;
-    use crate::isa::{CodeGen, PresetMode};
+    use crate::isa::{CodeGen, PresetMode, Stage};
 
     #[test]
     fn cell_get_set_roundtrip() {
@@ -277,6 +451,126 @@ mod tests {
             let ones = (0..5).filter(|&c| a.get(r, c)).count();
             assert_eq!(a.get(r, 5), ones >= 3, "row {r}");
         }
+    }
+
+    #[test]
+    fn write_codes_matches_bit_level_write() {
+        let codes = encode(b"GATTACA");
+        let mut a = CramArray::new(130, 20);
+        let mut b = CramArray::new(130, 20);
+        for row in [0usize, 63, 64, 129] {
+            a.write_codes(row, 3, &codes);
+            b.write_row_bits(row, 3, &Encoded { codes: codes.clone() }.bits());
+        }
+        for row in 0..130 {
+            for col in 0..20 {
+                assert_eq!(a.get(row, col), b.get(row, col), "({row},{col})");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_codes_sets_every_row() {
+        let codes = encode(b"ACGT");
+        let mut a = CramArray::new(70, 12);
+        a.broadcast_codes(2, &codes);
+        for row in 0..70 {
+            let bits = a.read_row_bits(row, 2, 8);
+            assert_eq!(Encoded::from_bits(&bits).codes, codes, "row {row}");
+        }
+    }
+
+    #[test]
+    fn reset_clears_and_resizes_within_capacity() {
+        let mut a = CramArray::new(130, 6);
+        a.set(129, 5, true);
+        a.set(0, 0, true);
+        a.reset(65);
+        assert_eq!(a.rows(), 65);
+        for r in 0..65 {
+            for c in 0..6 {
+                assert!(!a.get(r, c), "cell ({r},{c}) survived reset");
+            }
+        }
+        // Back up to the full capacity (192 = 3 words × 64).
+        a.reset(192);
+        assert_eq!(a.rows(), 192);
+        assert!(!a.get(191, 5));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds capacity")]
+    fn reset_rejects_rows_beyond_capacity() {
+        let mut a = CramArray::new(64, 4);
+        a.reset(65);
+    }
+
+    /// The word-transposed read-out must mask the garbage tail bits a
+    /// gang preset leaves past `rows` in the last word.
+    #[test]
+    fn score_readout_masks_garbage_tail_bits() {
+        for rows in [1usize, 63, 64, 65, 130] {
+            let mut a = CramArray::new(rows, 4);
+            a.set_column(1, true); // whole words, including tail garbage
+            let mut scores = Vec::new();
+            a.read_scores_into(0, 3, &mut scores).unwrap();
+            assert_eq!(scores.len(), rows, "rows={rows}");
+            for (r, &s) in scores.iter().enumerate() {
+                assert_eq!(s, 0b010, "rows={rows} row {r}");
+            }
+        }
+    }
+
+    /// Satellite: an out-of-range score read-out is a typed `Err`, not
+    /// a panic through `get()`'s assert.
+    #[test]
+    fn score_readout_out_of_bounds_is_an_error() {
+        let mut a = CramArray::new(8, 4);
+        let mut prog = Program::new();
+        prog.push(Stage::ReadOut, MicroInstr::ReadScoreAllRows { col: 2, len: 3 });
+        let err = a.execute(&prog).unwrap_err();
+        assert!(err.to_string().contains("spills past"), "unexpected error: {err:#}");
+        // In-bounds read at the same width succeeds.
+        let mut prog = Program::new();
+        prog.push(Stage::ReadOut, MicroInstr::ReadScoreAllRows { col: 1, len: 3 });
+        assert!(a.execute(&prog).is_ok());
+        // Score wider than the 64-bit reassembly window is also typed.
+        let mut scores = Vec::new();
+        assert!(a.read_scores_into(0, 65, &mut scores).is_err());
+        // ReadRow shares the typed-error contract.
+        let mut prog = Program::new();
+        prog.push(Stage::ReadOut, MicroInstr::ReadRow { row: 99, col: 0, len: 2 });
+        assert!(a.execute(&prog).is_err());
+        let mut prog = Program::new();
+        prog.push(Stage::ReadOut, MicroInstr::ReadRow { row: 0, col: 3, len: 2 });
+        assert!(a.execute(&prog).is_err());
+    }
+
+    /// `execute_into` reuses buffers across passes and stays equal to
+    /// the allocating `execute`.
+    #[test]
+    fn execute_into_recycles_and_matches_execute() {
+        let layout = RowLayout::new(16, 4, 200);
+        let cache =
+            crate::isa::ProgramCache::build(layout, PresetMode::Gang, true);
+        let mut arr = CramArray::new(130, layout.total_cols());
+        let mut rng = crate::util::Rng::new(99);
+        for r in 0..130 {
+            arr.write_codes(r, layout.frag_col() as usize, &encode(&rng.dna(16)));
+        }
+        arr.broadcast_codes(layout.pat_col() as usize, &encode(b"ACGT"));
+
+        let mut pooled = ExecOutput::default();
+        for loc in 0..layout.n_alignments() as u32 {
+            let fresh = arr.execute(cache.program(loc)).unwrap();
+            arr.execute_into(cache.program(loc), &mut pooled).unwrap();
+            assert_eq!(pooled, fresh, "loc {loc}");
+            assert_eq!(pooled.scores.len(), 1);
+        }
+        // The pool really retires buffers instead of dropping them.
+        pooled.recycle();
+        assert!(pooled.scores.is_empty() && pooled.reads.is_empty());
+        assert!(!pooled.spare_scores.is_empty());
     }
 
     /// End-to-end: the full Algorithm 1 program over the bit-level array

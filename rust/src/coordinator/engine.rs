@@ -1,29 +1,41 @@
 //! Match engines: interchangeable backends that score one pattern
 //! against a block of fragments.
 //!
-//! * [`CpuEngine`] — the software oracle (always available).
+//! * [`CpuEngine`] — the software oracle (always available), scoring
+//!   32 characters per XOR+popcount word step over 2-bit-packed codes.
 //! * [`BitsimEngine`] — the gate-level array simulator running the
-//!   actual micro-instruction programs (slow, bit-exact).
+//!   actual micro-instruction programs (bit-exact). §Perf: its
+//!   simulate-one-pass hot path is allocation-free in steady state —
+//!   alignment programs come from a shared pre-compiled
+//!   [`ProgramCache`], the [`CramArray`] is pooled and refilled per
+//!   block, and score read-outs recycle their buffers
+//!   ([`CramArray::execute_into`]).
 //! * XLA — the AOT artifact through [`crate::runtime::Runtime`]
 //!   (constructed inside the executor thread; see
 //!   [`crate::coordinator::pipeline`]).
 
-use crate::array::{CramArray, RowLayout};
+use crate::array::{CramArray, ExecOutput, RowLayout};
 use crate::baselines::cpu_ref::BestAlignment;
-use crate::dna::Encoded;
-use crate::isa::{CodeGen, PresetMode};
+use crate::dna::{packed_best_alignment, Packed2};
+use crate::isa::{PresetMode, ProgramCache};
 use crate::Result;
+use std::sync::Arc;
 
 /// One unit of coordinator work: a pattern plus the fragments it must
 /// be matched against (already gathered by the scheduler stage).
+///
+/// Pattern and fragment codes are shared `Arc<[u8]>` slices: the
+/// scheduler → lane → engine fan-out clones reference counts, never
+/// the code bytes — a pattern broadcast to N lanes used to deep-copy
+/// its codes N times (and every candidate fragment once per route).
 #[derive(Debug, Clone)]
 pub struct WorkItem {
     /// Pattern id (index into the pool).
     pub pattern_id: usize,
     /// The pattern, 2-bit codes.
-    pub pattern: Vec<u8>,
+    pub pattern: Arc<[u8]>,
     /// Candidate fragments, 2-bit codes each.
-    pub fragments: Vec<Vec<u8>>,
+    pub fragments: Vec<Arc<[u8]>>,
     /// Global row ids of the fragments (for score annotation).
     pub row_ids: Vec<u32>,
 }
@@ -59,15 +71,27 @@ pub trait MatchEngine {
     fn label(&self) -> &'static str;
 }
 
-/// Software-oracle engine.
+/// Software-oracle engine: 2-bit-packed XOR+popcount scoring
+/// ([`crate::dna::packed_similarity`]) — no per-`loc` score vector.
+/// Packing stays per item (work items are engine-agnostic raw codes),
+/// but the packed-fragment scratch buffer is pooled across rows and
+/// items.
 #[derive(Debug, Default)]
-pub struct CpuEngine;
+pub struct CpuEngine {
+    /// Scratch packed fragment, refilled in place per row.
+    frag: Packed2,
+}
 
 impl MatchEngine for CpuEngine {
     fn run(&mut self, item: &WorkItem) -> Result<WorkResult> {
+        let pattern = Packed2::from_codes(&item.pattern);
         let mut best: Option<BestAlignment> = None;
         for (frag, &rid) in item.fragments.iter().zip(&item.row_ids) {
-            for (loc, &score) in crate::dna::score_profile(frag, &item.pattern).iter().enumerate() {
+            self.frag.refill(frag);
+            // Per-row best keeps the lowest loc (strict >); folding
+            // rows in ascending order keeps the lowest row — the same
+            // row-major tie-break as scanning every (row, loc) pair.
+            if let Some((score, loc)) = packed_best_alignment(&self.frag, &pattern) {
                 if best.map_or(true, |b| score > b.score) {
                     best = Some(BestAlignment { row: rid as usize, loc, score });
                 }
@@ -81,71 +105,106 @@ impl MatchEngine for CpuEngine {
     }
 }
 
-/// Gate-level engine: lowers Algorithm 1 to micro-instructions and
-/// executes them on the columnar bit simulator, block of rows at a
-/// time — functionally identical to the hardware, step for step.
+/// Gate-level engine: executes the pre-compiled Algorithm 1
+/// micro-instruction programs on the columnar bit simulator, block of
+/// rows at a time — functionally identical to the hardware, step for
+/// step.
 pub struct BitsimEngine {
-    layout: RowLayout,
+    /// Compiled alignment programs, shared across engines of the same
+    /// geometry (one compile per coordinator, not per lane per block).
+    cache: Arc<ProgramCache>,
     rows_per_block: usize,
-    mode: PresetMode,
+    /// Pooled array at block capacity: cleared and refilled per pass
+    /// instead of reallocated.
+    arr: CramArray,
+    /// Pooled read-out buffers, recycled across alignments and passes.
+    out: ExecOutput,
+    /// Pooled per-row running best `(score, loc)`.
+    row_best: Vec<(u64, usize)>,
 }
 
 impl BitsimEngine {
     /// Engine for a fragment/pattern geometry. `rows_per_block` bounds
     /// the simulated array height per pass.
-    pub fn new(frag_chars: usize, pat_chars: usize, rows_per_block: usize, mode: PresetMode) -> Self {
-        // Probe scratch demand, then size the layout exactly.
-        let probe = RowLayout::new(frag_chars, pat_chars, usize::MAX / 2);
-        let mut cg = CodeGen::new(probe, mode);
-        let _ = cg.alignment_program(0, true);
-        let layout = RowLayout::new(frag_chars, pat_chars, cg.stats().scratch_high_water);
-        BitsimEngine { layout, rows_per_block, mode }
+    pub fn new(
+        frag_chars: usize,
+        pat_chars: usize,
+        rows_per_block: usize,
+        mode: PresetMode,
+    ) -> Self {
+        let cache = Arc::new(ProgramCache::for_geometry(frag_chars, pat_chars, mode, true));
+        Self::with_cache(cache, rows_per_block)
+    }
+
+    /// Engine over a shared pre-compiled program cache — what the
+    /// coordinator lanes use: one compile, N lanes.
+    pub fn with_cache(cache: Arc<ProgramCache>, rows_per_block: usize) -> Self {
+        assert!(rows_per_block > 0, "rows_per_block must be positive");
+        assert!(cache.readout(), "bitsim engine needs read-out programs");
+        let arr = CramArray::new(rows_per_block, cache.layout().total_cols());
+        BitsimEngine {
+            cache,
+            rows_per_block,
+            arr,
+            out: ExecOutput::default(),
+            row_best: Vec::new(),
+        }
     }
 
     /// The row layout in use.
     pub fn layout(&self) -> &RowLayout {
-        &self.layout
+        self.cache.layout()
+    }
+
+    /// The shared compiled-program cache.
+    pub fn cache(&self) -> &Arc<ProgramCache> {
+        &self.cache
     }
 }
 
 impl MatchEngine for BitsimEngine {
     fn run(&mut self, item: &WorkItem) -> Result<WorkResult> {
+        let layout = *self.cache.layout();
+        anyhow::ensure!(
+            item.pattern.len() == layout.pat_chars,
+            "pattern length {} != layout {}",
+            item.pattern.len(),
+            layout.pat_chars
+        );
         let mut best: Option<BestAlignment> = None;
         let mut passes = 0usize;
-        let pattern = Encoded { codes: item.pattern.clone() };
         for (block_i, block) in item.fragments.chunks(self.rows_per_block).enumerate() {
             passes += 1;
             let rows = block.len();
-            let mut arr = CramArray::new(rows, self.layout.total_cols());
+            self.arr.reset(rows);
             for (r, frag) in block.iter().enumerate() {
                 anyhow::ensure!(
-                    frag.len() == self.layout.frag_chars,
+                    frag.len() == layout.frag_chars,
                     "fragment {r} length {} != layout {}",
                     frag.len(),
-                    self.layout.frag_chars
+                    layout.frag_chars
                 );
-                arr.write_encoded(r, self.layout.frag_col() as usize, &Encoded { codes: frag.clone() });
+                self.arr.write_codes(r, layout.frag_col() as usize, frag);
             }
-            arr.broadcast_encoded(self.layout.pat_col() as usize, &pattern);
+            self.arr.broadcast_codes(layout.pat_col() as usize, &item.pattern);
 
-            let mut cg = CodeGen::new(self.layout, self.mode);
             // Per-row best over all alignments first (strict > keeps
             // the lowest loc), then fold rows in ascending order — the
             // same row-major tie-breaking the CPU oracle and the XLA
             // artifact use, so per-shard partials merge identically
             // across coordinator lane counts.
-            let mut row_best: Vec<(u64, usize)> = vec![(0, 0); rows];
-            for loc in 0..self.layout.n_alignments() as u32 {
-                let prog = cg.alignment_program(loc, true);
-                let out = arr.execute(&prog)?;
-                let scores = &out.scores[0];
+            self.row_best.clear();
+            self.row_best.resize(rows, (0u64, 0usize));
+            for loc in 0..layout.n_alignments() as u32 {
+                self.arr.execute_into(self.cache.program(loc), &mut self.out)?;
+                let scores = &self.out.scores[0];
                 for (r, &s) in scores.iter().enumerate() {
-                    if s > row_best[r].0 {
-                        row_best[r] = (s, loc as usize);
+                    if s > self.row_best[r].0 {
+                        self.row_best[r] = (s, loc as usize);
                     }
                 }
             }
-            for (r, &(s, loc)) in row_best.iter().enumerate() {
+            for (r, &(s, loc)) in self.row_best.iter().enumerate() {
                 let rid = item.row_ids[block_i * self.rows_per_block + r] as usize;
                 if best.map_or(true, |b| (s as usize) > b.score) {
                     best = Some(BestAlignment { row: rid, loc, score: s as usize });
@@ -167,10 +226,11 @@ mod tests {
 
     fn item(seed: u64, n_frags: usize, frag_chars: usize, pat_chars: usize) -> WorkItem {
         let mut rng = Rng::new(seed);
-        let fragments: Vec<Vec<u8>> =
-            (0..n_frags).map(|_| crate::dna::encode(&rng.dna(frag_chars))).collect();
+        let fragments: Vec<Arc<[u8]>> = (0..n_frags)
+            .map(|_| Arc::from(crate::dna::encode(&rng.dna(frag_chars)).as_slice()))
+            .collect();
         // Plant the pattern in fragment 1.
-        let pattern = fragments[1][3..3 + pat_chars].to_vec();
+        let pattern: Arc<[u8]> = Arc::from(&fragments[1][3..3 + pat_chars]);
         WorkItem {
             pattern_id: 7,
             pattern,
@@ -182,7 +242,7 @@ mod tests {
     #[test]
     fn cpu_engine_finds_planted_pattern() {
         let it = item(5, 4, 32, 8);
-        let r = CpuEngine.run(&it).unwrap();
+        let r = CpuEngine::default().run(&it).unwrap();
         let b = r.best.unwrap();
         assert_eq!(b.score, 8);
         assert_eq!(b.row, 101);
@@ -195,7 +255,7 @@ mod tests {
     fn bitsim_equals_cpu_engine() {
         for seed in [1, 2, 3] {
             let it = item(seed, 5, 24, 6);
-            let cpu = CpuEngine.run(&it).unwrap();
+            let cpu = CpuEngine::default().run(&it).unwrap();
             let mut bitsim = BitsimEngine::new(24, 6, 2, PresetMode::Gang); // forces 3 blocks
             let bs = bitsim.run(&it).unwrap();
             assert_eq!(bs.best.unwrap().score, cpu.best.unwrap().score, "seed {seed}");
@@ -210,24 +270,77 @@ mod tests {
     fn bitsim_tie_breaks_row_major_like_cpu() {
         for seed in [4, 8, 15] {
             let it = item(seed, 6, 24, 6);
-            let cpu = CpuEngine.run(&it).unwrap().best.unwrap();
+            let cpu = CpuEngine::default().run(&it).unwrap().best.unwrap();
             let mut bitsim = BitsimEngine::new(24, 6, 2, PresetMode::Gang);
             let bs = bitsim.run(&it).unwrap().best.unwrap();
             assert_eq!((bs.row, bs.loc, bs.score), (cpu.row, cpu.loc, cpu.score), "seed {seed}");
         }
     }
 
+    /// The pooled array/buffers must not leak state between runs: the
+    /// same engine instance answers a sequence of different items
+    /// exactly like fresh engines would.
+    #[test]
+    fn pooled_engine_state_does_not_leak_across_runs() {
+        let mut pooled = BitsimEngine::new(24, 6, 2, PresetMode::Gang);
+        for seed in [11, 12, 13, 14] {
+            let it = item(seed, 5, 24, 6);
+            let from_pooled = pooled.run(&it).unwrap();
+            let fresh = BitsimEngine::new(24, 6, 2, PresetMode::Gang).run(&it).unwrap();
+            assert_eq!(
+                from_pooled.best.map(|b| (b.score, b.row, b.loc)),
+                fresh.best.map(|b| (b.score, b.row, b.loc)),
+                "seed {seed}"
+            );
+        }
+    }
+
+    /// Lanes share one compiled-program cache; an engine built over the
+    /// shared cache equals one that compiled its own.
+    #[test]
+    fn shared_cache_engine_equals_self_compiled() {
+        let cache = Arc::new(ProgramCache::for_geometry(24, 6, PresetMode::Gang, true));
+        let mut own = BitsimEngine::new(24, 6, 4, PresetMode::Gang);
+        let mut shared = BitsimEngine::with_cache(Arc::clone(&cache), 4);
+        for seed in [21, 22] {
+            let it = item(seed, 6, 24, 6);
+            let a = own.run(&it).unwrap();
+            let b = shared.run(&it).unwrap();
+            assert_eq!(
+                a.best.map(|x| (x.score, x.row, x.loc)),
+                b.best.map(|x| (x.score, x.row, x.loc)),
+                "seed {seed}"
+            );
+        }
+        assert_eq!(Arc::strong_count(&cache), 2); // ours + the engine's
+    }
+
     #[test]
     fn bitsim_rejects_mismatched_fragment_length() {
         let mut it = item(9, 2, 24, 6);
-        it.fragments[0].pop();
+        let short: Arc<[u8]> = Arc::from(&it.fragments[0][..23]);
+        it.fragments[0] = short;
+        let mut e = BitsimEngine::new(24, 6, 8, PresetMode::Gang);
+        assert!(e.run(&it).is_err());
+    }
+
+    #[test]
+    fn bitsim_rejects_mismatched_pattern_length() {
+        let mut it = item(10, 2, 24, 6);
+        let short: Arc<[u8]> = Arc::from(&it.pattern[..5]);
+        it.pattern = short;
         let mut e = BitsimEngine::new(24, 6, 8, PresetMode::Gang);
         assert!(e.run(&it).is_err());
     }
 
     #[test]
     fn empty_candidate_set_yields_no_best() {
-        let it = WorkItem { pattern_id: 0, pattern: vec![0; 4], fragments: vec![], row_ids: vec![] };
-        assert!(CpuEngine.run(&it).unwrap().best.is_none());
+        let it = WorkItem {
+            pattern_id: 0,
+            pattern: Arc::from(&[0u8; 4][..]),
+            fragments: vec![],
+            row_ids: vec![],
+        };
+        assert!(CpuEngine::default().run(&it).unwrap().best.is_none());
     }
 }

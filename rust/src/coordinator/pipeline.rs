@@ -16,7 +16,7 @@
 
 use crate::baselines::cpu_ref::BestAlignment;
 use crate::coordinator::engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngine, WorkItem, WorkResult};
-use crate::isa::PresetMode;
+use crate::isa::{PresetMode, ProgramCache};
 use crate::runtime::Runtime;
 use crate::scheduler::{OracularIndex, ShardMap};
 use crate::sim::SystemConfig;
@@ -26,7 +26,7 @@ use anyhow::anyhow;
 use std::panic::AssertUnwindSafe;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Typed coordinator failures callers may want to match on (everything
@@ -275,7 +275,9 @@ fn is_better(candidate: &Option<BestAlignment>, incumbent: &Option<BestAlignment
 /// with cores (see EXPERIMENTS.md §Perf and §Lane sweep).
 pub struct Coordinator {
     cfg: CoordinatorConfig,
-    fragments: Vec<Vec<u8>>,
+    /// Resident fragments as shared slices: work items fan them out to
+    /// the lanes by reference count, not by deep copy.
+    fragments: Vec<Arc<[u8]>>,
     /// Effective lane count (immutable after construction; kept outside
     /// the mutex so introspection never waits on an in-flight run).
     n_lanes: usize,
@@ -326,8 +328,23 @@ impl Coordinator {
         }
         let oracular_index =
             cfg.oracular.map(|(k, max_rows)| OracularIndex::build(&fragments, k, max_rows));
+        let fragments: Vec<Arc<[u8]>> =
+            fragments.into_iter().map(|f| Arc::from(f.into_boxed_slice())).collect();
         let shard = ShardMap::new(fragments.len(), cfg.lanes.max(1));
         let n_lanes = shard.shards();
+        // §Perf: the bit-level engine's alignment programs depend only
+        // on the geometry — compile them once here and share the cache
+        // across every executor lane instead of re-lowering per lane
+        // per block per run.
+        let bitsim_cache: Option<Arc<ProgramCache>> = match cfg.engine {
+            EngineKind::Bitsim => Some(Arc::new(ProgramCache::for_geometry(
+                cfg.frag_chars,
+                cfg.pat_chars,
+                cfg.preset_mode,
+                true,
+            ))),
+            _ => None,
+        };
         // Ample result buffering: covers every item the lanes can hold
         // at once (queued + in flight) so lanes rarely block on the
         // reducer; emptiness between runs is guaranteed by the
@@ -340,6 +357,7 @@ impl Coordinator {
         for lane_id in 0..n_lanes {
             let (work_tx, work_rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth.max(1));
             let thread_cfg = cfg.clone();
+            let lane_cache = bitsim_cache.clone();
             let res_tx = res_tx.clone();
             let ready_tx = ready_tx.clone();
             let handle = std::thread::Builder::new()
@@ -348,12 +366,10 @@ impl Coordinator {
                     // The engine lives on this thread for the lane's
                     // whole lifetime (PJRT handles never cross threads).
                     let built: Result<Box<dyn MatchEngine>> = match thread_cfg.engine {
-                        EngineKind::Cpu => Ok(Box::new(CpuEngine) as Box<dyn MatchEngine>),
-                        EngineKind::Bitsim => Ok(Box::new(BitsimEngine::new(
-                            thread_cfg.frag_chars,
-                            thread_cfg.pat_chars,
+                        EngineKind::Cpu => Ok(Box::new(CpuEngine::default()) as Box<dyn MatchEngine>),
+                        EngineKind::Bitsim => Ok(Box::new(BitsimEngine::with_cache(
+                            lane_cache.expect("bitsim cache built at construction"),
                             256,
-                            thread_cfg.preset_mode,
                         )) as Box<dyn MatchEngine>),
                         EngineKind::Xla => {
                             XlaEngine::new(&thread_cfg.artifacts_dir, &thread_cfg.variant)
@@ -458,7 +474,16 @@ impl Coordinator {
     /// short-circuits to an empty result with zeroed metrics without
     /// touching the lanes.
     pub fn run(&self, patterns: &[Vec<u8>]) -> Result<(Vec<WorkResult>, RunMetrics)> {
-        let mut out = self.run_pools(&[patterns])?;
+        let shared: Vec<Arc<[u8]>> =
+            patterns.iter().map(|p| Arc::from(p.as_slice())).collect();
+        self.run_shared(&shared)
+    }
+
+    /// [`Coordinator::run`] over already-shared pattern codes — the
+    /// allocation-light entry the serving layer's dedup path uses: the
+    /// pool's `Arc`s fan out to the lanes by reference count.
+    pub fn run_shared(&self, patterns: &[Arc<[u8]>]) -> Result<(Vec<WorkResult>, RunMetrics)> {
+        let mut out = self.run_shared_pools(&[patterns])?;
         Ok(out.pop().expect("one pool in, one pool out"))
     }
 
@@ -470,6 +495,19 @@ impl Coordinator {
     /// per pool, in order. Empty pools yield empty results with zeroed
     /// metrics; an all-empty batch never locks the lanes at all.
     pub fn run_pools(&self, pools: &[&[Vec<u8>]]) -> Result<Vec<(Vec<WorkResult>, RunMetrics)>> {
+        let shared: Vec<Vec<Arc<[u8]>>> = pools
+            .iter()
+            .map(|pool| pool.iter().map(|p| Arc::from(p.as_slice())).collect())
+            .collect();
+        let views: Vec<&[Arc<[u8]>]> = shared.iter().map(|v| v.as_slice()).collect();
+        self.run_shared_pools(&views)
+    }
+
+    /// [`Coordinator::run_pools`] over already-shared pattern codes.
+    pub fn run_shared_pools(
+        &self,
+        pools: &[&[Arc<[u8]>]],
+    ) -> Result<Vec<(Vec<WorkResult>, RunMetrics)>> {
         for (pi, pool) in pools.iter().enumerate() {
             for (i, p) in pool.iter().enumerate() {
                 anyhow::ensure!(
@@ -525,7 +563,7 @@ impl Coordinator {
     fn run_on(
         &self,
         inner: &LaneSet,
-        patterns: &[Vec<u8>],
+        patterns: &[Arc<[u8]>],
     ) -> Result<(Vec<WorkResult>, RunMetrics)> {
         let t0 = Instant::now();
         let lanes = &inner.lanes;
@@ -590,13 +628,13 @@ impl Coordinator {
                                     if stop.load(Ordering::Relaxed) {
                                         return;
                                     }
-                                    let frags: Vec<Vec<u8>> = rows
+                                    let frags: Vec<Arc<[u8]>> = rows
                                         .iter()
-                                        .map(|&r| fragments[r as usize].clone())
+                                        .map(|&r| Arc::clone(&fragments[r as usize]))
                                         .collect();
                                     let item = WorkItem {
                                         pattern_id: pid,
-                                        pattern: patterns[pid].clone(),
+                                        pattern: Arc::clone(&patterns[pid]),
                                         fragments: frags,
                                         row_ids: rows.clone(),
                                     };
@@ -613,7 +651,9 @@ impl Coordinator {
                                     let r = shard.range(lane);
                                     let item = WorkItem {
                                         pattern_id: pid,
-                                        pattern: patterns[pid].clone(),
+                                        // Arc clones: shard-wide fan-out
+                                        // shares the resident codes.
+                                        pattern: Arc::clone(&patterns[pid]),
                                         fragments: fragments[r.clone()].to_vec(),
                                         row_ids: (r.start as u32..r.end as u32).collect(),
                                     };
@@ -931,6 +971,29 @@ mod tests {
         }
     }
 
+    /// `run_shared` is `run` minus the per-call conversion: same
+    /// answers, same metrics shape.
+    #[test]
+    fn run_shared_matches_run() {
+        let (c, w) = coordinator(EngineKind::Cpu, Some((8, 32)));
+        let pool = &w.patterns[..12];
+        let shared: Vec<Arc<[u8]>> = pool.iter().map(|p| Arc::from(p.as_slice())).collect();
+        let (direct, _) = c.run(pool).unwrap();
+        let (via_shared, m) = c.run_shared(&shared).unwrap();
+        assert_eq!(m.patterns, 12);
+        assert_eq!(direct.len(), via_shared.len());
+        for (a, b) in direct.iter().zip(&via_shared) {
+            assert_eq!(a.pattern_id, b.pattern_id);
+            assert_eq!(
+                a.best.map(|x| (x.score, x.row, x.loc)),
+                b.best.map(|x| (x.score, x.row, x.loc))
+            );
+        }
+        // Length validation also covers the shared entry.
+        let bad: Vec<Arc<[u8]>> = vec![Arc::from(&[0u8; 5][..])];
+        assert!(c.run_shared(&bad).is_err());
+    }
+
     #[test]
     fn pat_chars_exposed_for_admission_validation() {
         let (c, _) = coordinator(EngineKind::Cpu, None);
@@ -947,7 +1010,7 @@ mod tests {
         let (cx, w) = coordinator(EngineKind::Xla, Some((8, 32)));
         let mut cfg2 = cx.cfg.clone();
         cfg2.engine = EngineKind::Cpu;
-        let cc = Coordinator::new(cfg2, cx.fragments.clone()).unwrap();
+        let cc = Coordinator::new(cfg2, w.fragments(64, 16)).unwrap();
 
         let pats = w.patterns[..16].to_vec();
         let (rx, _) = cx.run(&pats).unwrap();

@@ -82,6 +82,107 @@ impl Encoded {
     }
 }
 
+/// A 2-bit-packed sequence: 32 characters per `u64` word, character
+/// `i` at bits `2i..2i+2` (LSB-first — the same order as
+/// [`Encoded::bits`] and the array layout).
+///
+/// §Perf: this is the host-side mirror of the substrate's word
+/// parallelism — one XOR + popcount step compares 32 characters, so
+/// the CPU oracle scores an alignment in `⌈pat/32⌉` word ops instead
+/// of a per-character loop (and without the per-`loc` `Vec<usize>` the
+/// old `score_profile` scan allocated).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Packed2 {
+    words: Vec<u64>,
+    chars: usize,
+}
+
+/// Even-bit lanes of a packed word: one bit per character slot.
+const CHAR_LANES: u64 = 0x5555_5555_5555_5555;
+
+impl Packed2 {
+    /// Pack a string of 2-bit codes (one code per byte).
+    pub fn from_codes(codes: &[u8]) -> Self {
+        let mut packed = Packed2::default();
+        packed.refill(codes);
+        packed
+    }
+
+    /// Re-pack in place, reusing the word buffer — the scratch path for
+    /// callers that pack many sequences back to back (one heap
+    /// allocation amortized over all of them).
+    pub fn refill(&mut self, codes: &[u8]) {
+        self.words.clear();
+        self.words.resize(codes.len().div_ceil(32), 0);
+        for (i, &c) in codes.iter().enumerate() {
+            self.words[i / 32] |= ((c & 0b11) as u64) << (2 * (i % 32));
+        }
+        self.chars = codes.len();
+    }
+
+    /// Character length.
+    pub fn chars(&self) -> usize {
+        self.chars
+    }
+
+    /// The 64-bit window of packed codes starting at character `start`
+    /// (up to 32 characters; callers mask off anything past the end).
+    #[inline]
+    fn window(&self, start: usize) -> u64 {
+        let bit = 2 * start;
+        let w = bit / 64;
+        let off = bit % 64;
+        let mut x = self.words.get(w).copied().unwrap_or(0) >> off;
+        if off != 0 {
+            if let Some(&hi) = self.words.get(w + 1) {
+                x |= hi << (64 - off);
+            }
+        }
+        x
+    }
+}
+
+/// Word-parallel similarity: the number of matching characters between
+/// `pattern` and the `fragment` window at alignment `loc`, 32
+/// characters per XOR+popcount step. A character matches iff both of
+/// its XORed bits are zero: `!(x | x >> 1)` restricted to the even bit
+/// lanes. Exactly equals [`similarity`] on the unpacked codes.
+pub fn packed_similarity(fragment: &Packed2, pattern: &Packed2, loc: usize) -> usize {
+    assert!(loc + pattern.chars <= fragment.chars, "alignment out of range");
+    let mut score = 0usize;
+    let mut done = 0usize;
+    while done < pattern.chars {
+        let n = (pattern.chars - done).min(32);
+        let x = fragment.window(loc + done) ^ pattern.window(done);
+        let mut m = !(x | (x >> 1)) & CHAR_LANES;
+        if n < 32 {
+            m &= (1u64 << (2 * n)) - 1;
+        }
+        score += m.count_ones() as usize;
+        done += n;
+    }
+    score
+}
+
+/// Best `(score, loc)` of `pattern` against `fragment` under the
+/// row-major tie-break (strict `>`, so the lowest `loc` wins a tie) —
+/// the packed, allocation-free replacement for scanning
+/// [`score_profile`]. `None` iff the pattern is empty or longer than
+/// the fragment (no alignments).
+pub fn packed_best_alignment(fragment: &Packed2, pattern: &Packed2) -> Option<(usize, usize)> {
+    if pattern.chars == 0 || pattern.chars > fragment.chars {
+        return None;
+    }
+    let mut best: Option<(usize, usize)> = None;
+    for loc in 0..=fragment.chars - pattern.chars {
+        let s = packed_similarity(fragment, pattern, loc);
+        if best.map_or(true, |(bs, _)| s > bs) {
+            best = Some((s, loc));
+        }
+    }
+    best
+}
+
 /// Similarity score between a pattern and a reference window at a given
 /// alignment: the number of matching characters (§3, "similarity
 /// score"). This is the scalar oracle every other engine (bit-level
@@ -153,5 +254,57 @@ mod tests {
     #[should_panic(expected = "not a DNA base")]
     fn rejects_non_dna() {
         encode(b"ACGN");
+    }
+
+    #[test]
+    fn packed_similarity_equals_scalar_across_boundaries() {
+        // Lengths straddling the 32-char word boundary and windows at
+        // every offset: the packed scorer must equal the scalar oracle.
+        let mut rng = crate::util::Rng::new(0x2B17);
+        for (frag_len, pat_len) in [(7, 3), (32, 32), (33, 17), (64, 33), (100, 64), (130, 5)] {
+            let frag = encode(&rng.dna(frag_len));
+            let pat = encode(&rng.dna(pat_len));
+            let pf = Packed2::from_codes(&frag);
+            let pp = Packed2::from_codes(&pat);
+            assert_eq!(pf.chars(), frag_len);
+            for loc in 0..=frag_len - pat_len {
+                assert_eq!(
+                    packed_similarity(&pf, &pp, loc),
+                    similarity(&frag, &pat, loc),
+                    "frag={frag_len} pat={pat_len} loc={loc}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_best_alignment_matches_profile_scan() {
+        let mut rng = crate::util::Rng::new(0xBE57);
+        for _ in 0..50 {
+            let frag_len = 1 + rng.below(90);
+            let pat_len = 1 + rng.below(frag_len);
+            let frag = encode(&rng.dna(frag_len));
+            let pat = encode(&rng.dna(pat_len));
+            // The scan the CPU engine used to do: strict > over the
+            // profile keeps the lowest loc.
+            let mut want: Option<(usize, usize)> = None;
+            for (loc, &s) in score_profile(&frag, &pat).iter().enumerate() {
+                if want.map_or(true, |(bs, _)| s > bs) {
+                    want = Some((s, loc));
+                }
+            }
+            let got =
+                packed_best_alignment(&Packed2::from_codes(&frag), &Packed2::from_codes(&pat));
+            assert_eq!(got, want, "frag={frag_len} pat={pat_len}");
+        }
+    }
+
+    #[test]
+    fn packed_best_alignment_empty_cases() {
+        let frag = Packed2::from_codes(&encode(b"ACGT"));
+        let empty = Packed2::from_codes(&[]);
+        assert_eq!(packed_best_alignment(&frag, &empty), None);
+        let long = Packed2::from_codes(&encode(b"ACGTA"));
+        assert_eq!(packed_best_alignment(&frag, &long), None);
     }
 }

@@ -1,0 +1,130 @@
+//! Compiled-program cache: the alignment programs of Algorithm 1
+//! depend only on `(layout, preset mode, loc, readout)` — they are
+//! pure functions of the geometry, not of the data resident in the
+//! array. Re-lowering them per block per work item (what
+//! `BitsimEngine` did before this cache) put macro→micro code
+//! generation on the simulate-one-pass critical path; the PIM
+//! literature's throughput claims assume instruction delivery is
+//! amortized across row-parallel steps, so the simulator must amortize
+//! it too. One [`ProgramCache`] is compiled per engine geometry and
+//! shared (via `Arc`) across every coordinator executor lane.
+
+use crate::array::RowLayout;
+use crate::isa::{CodeGen, CodegenStats, PresetMode, Program};
+
+/// Immutable cache of the lowered alignment programs for one
+/// `(layout, mode, readout)` configuration — one compiled [`Program`]
+/// per alignment `loc`. Build once, execute forever.
+#[derive(Debug)]
+pub struct ProgramCache {
+    layout: RowLayout,
+    mode: PresetMode,
+    readout: bool,
+    programs: Vec<Program>,
+    stats: CodegenStats,
+}
+
+impl ProgramCache {
+    /// Compile every alignment program of `layout` up front.
+    pub fn build(layout: RowLayout, mode: PresetMode, readout: bool) -> Self {
+        let mut cg = CodeGen::new(layout, mode);
+        let programs: Vec<Program> = (0..layout.n_alignments() as u32)
+            .map(|loc| cg.alignment_program(loc, readout))
+            .collect();
+        ProgramCache { layout, mode, readout, programs, stats: cg.stats() }
+    }
+
+    /// Probe the scratch demand of a `(frag_chars, pat_chars)` geometry,
+    /// size the layout exactly, and build the cache over it — the
+    /// sizing dance every engine used to repeat per instance.
+    pub fn for_geometry(
+        frag_chars: usize,
+        pat_chars: usize,
+        mode: PresetMode,
+        readout: bool,
+    ) -> Self {
+        let probe = RowLayout::new(frag_chars, pat_chars, usize::MAX / 2);
+        let mut cg = CodeGen::new(probe, mode);
+        let _ = cg.alignment_program(0, true);
+        let layout = RowLayout::new(frag_chars, pat_chars, cg.stats().scratch_high_water);
+        ProgramCache::build(layout, mode, readout)
+    }
+
+    /// The layout the programs were lowered against.
+    pub fn layout(&self) -> &RowLayout {
+        &self.layout
+    }
+
+    /// The preset schedule the programs were lowered under.
+    pub fn mode(&self) -> PresetMode {
+        self.mode
+    }
+
+    /// Whether the cached programs end in a score read-out.
+    pub fn readout(&self) -> bool {
+        self.readout
+    }
+
+    /// Number of cached programs (= the layout's alignment count).
+    pub fn len(&self) -> usize {
+        self.programs.len()
+    }
+
+    /// Whether the cache is empty (never: every layout has ≥ 1
+    /// alignment).
+    pub fn is_empty(&self) -> bool {
+        self.programs.is_empty()
+    }
+
+    /// The compiled program for alignment `loc`.
+    pub fn program(&self, loc: u32) -> &Program {
+        &self.programs[loc as usize]
+    }
+
+    /// Aggregate lowering statistics across all cached programs.
+    pub fn stats(&self) -> CodegenStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_holds_one_program_per_alignment() {
+        let cache = ProgramCache::for_geometry(24, 6, PresetMode::Gang, true);
+        assert_eq!(cache.len(), cache.layout().n_alignments());
+        assert!(!cache.is_empty());
+        assert!(cache.readout());
+        assert_eq!(cache.mode(), PresetMode::Gang);
+    }
+
+    /// Cached programs must be instruction-for-instruction identical to
+    /// a fresh lowering — the cache is memoization, not a new lowering.
+    #[test]
+    fn cached_programs_equal_fresh_lowering() {
+        for mode in [PresetMode::Standard, PresetMode::Gang] {
+            for readout in [false, true] {
+                let cache = ProgramCache::for_geometry(20, 5, mode, readout);
+                let mut cg = CodeGen::new(*cache.layout(), mode);
+                for loc in 0..cache.layout().n_alignments() as u32 {
+                    assert_eq!(
+                        *cache.program(loc),
+                        cg.alignment_program(loc, readout),
+                        "{mode:?} readout={readout} loc={loc}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_layout_is_exactly_sized() {
+        let cache = ProgramCache::for_geometry(32, 8, PresetMode::Gang, true);
+        for loc in 0..cache.layout().n_alignments() as u32 {
+            let max = cache.program(loc).max_column().unwrap() as usize;
+            assert!(max < cache.layout().total_cols(), "loc {loc} overflows the layout");
+        }
+    }
+}

@@ -13,10 +13,12 @@
 //!   into micro sequences, including the spatio-temporal scheduling of
 //!   the `add_pm` reduction tree and of output-cell presets (§2.6).
 
+pub mod cache;
 pub mod codegen;
 pub mod macro_;
 pub mod micro;
 
+pub use cache::ProgramCache;
 pub use codegen::{CodeGen, CodegenStats, PresetMode};
 pub use macro_::MacroInstr;
 pub use micro::{MicroInstr, Program, Stage};

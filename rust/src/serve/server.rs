@@ -7,7 +7,8 @@
 //! `max_delay` has elapsed since it opened — the classic size/deadline
 //! coalescing tradeoff (throughput vs. tail latency). A closed batch
 //! makes exactly one trip through the coordinator: deduplicated into a
-//! single unique pool ([`Coordinator::run`]) when `dedup` is on, or as
+//! single unique pool of shared pattern codes
+//! ([`Coordinator::run_shared`]) when `dedup` is on, or as
 //! per-request pools sharing one lane-mutex acquisition
 //! ([`Coordinator::run_pools`]) when it is off. Either way the results
 //! demultiplex back to each caller re-indexed by the request's own
@@ -372,21 +373,24 @@ fn dispatch_batch(
     let offered: usize = batch.iter().map(|(r, _)| r.patterns.len()).sum();
 
     // One coordinator trip either way. Dedup collapses identical
-    // patterns across requests into one unique pool and each request
-    // keeps slot indices into it; with dedup off, the requests' own
-    // pools share a single `run_pools` lock acquisition.
+    // patterns across requests into one unique pool of shared
+    // `Arc<[u8]>` codes (cloned off the requests once, fanned out to
+    // the lanes by reference count via `Coordinator::run_shared`) and
+    // each request keeps slot indices into it; with dedup off, the
+    // requests' own pools share a single `run_pools` lock acquisition.
     let (per_request, unique) = if cfg.dedup {
-        let mut seen: FxHashMap<Vec<u8>, usize> = FxHashMap::default();
-        let mut pool: Vec<Vec<u8>> = Vec::with_capacity(offered);
+        let mut seen: FxHashMap<Arc<[u8]>, usize> = FxHashMap::default();
+        let mut pool: Vec<Arc<[u8]>> = Vec::with_capacity(offered);
         let mut slots: Vec<Vec<usize>> = Vec::with_capacity(batch.len());
         for (req, _) in &batch {
             let mut map = Vec::with_capacity(req.patterns.len());
             for p in &req.patterns {
-                let slot = match seen.get(p) {
+                let slot = match seen.get(p.as_slice()) {
                     Some(&s) => s,
                     None => {
-                        pool.push(p.clone());
-                        seen.insert(p.clone(), pool.len() - 1);
+                        let shared: Arc<[u8]> = Arc::from(p.as_slice());
+                        pool.push(Arc::clone(&shared));
+                        seen.insert(shared, pool.len() - 1);
                         pool.len() - 1
                     }
                 };
@@ -395,7 +399,7 @@ fn dispatch_batch(
             slots.push(map);
         }
         let unique = pool.len();
-        let per_request = match coordinator.run(&pool) {
+        let per_request = match coordinator.run_shared(&pool) {
             Ok((results, _)) => Ok(slots
                 .iter()
                 .map(|map| {

@@ -260,6 +260,182 @@ fn prop_multi_lane_results_invariant_random_pools() {
     }
 }
 
+/// Fresh-everything bitsim reference: new array, re-lowered programs,
+/// allocating read-outs — the pre-cache/pre-pool path, reproduced via
+/// the public API. Returns the merged best as `(score, row, loc)`.
+#[allow(clippy::too_many_arguments)]
+fn fresh_bitsim_best(
+    frag_chars: usize,
+    pat_chars: usize,
+    mode: PresetMode,
+    rows_per_block: usize,
+    fragments: &[Vec<u8>],
+    row_ids: &[u32],
+    pattern: &[u8],
+) -> Option<(usize, usize, usize)> {
+    let layout = sized_layout(frag_chars, pat_chars, mode);
+    let mut best: Option<(usize, usize, usize)> = None;
+    for (bi, block) in fragments.chunks(rows_per_block).enumerate() {
+        let rows = block.len();
+        let mut arr = CramArray::new(rows, layout.total_cols());
+        for (r, f) in block.iter().enumerate() {
+            arr.write_encoded(r, layout.frag_col() as usize, &Encoded { codes: f.clone() });
+        }
+        arr.broadcast_encoded(layout.pat_col() as usize, &Encoded { codes: pattern.to_vec() });
+        let mut cg = CodeGen::new(layout, mode);
+        let mut row_best = vec![(0u64, 0usize); rows];
+        for loc in 0..layout.n_alignments() as u32 {
+            let out = arr.execute(&cg.alignment_program(loc, true)).unwrap();
+            for (r, &s) in out.scores[0].iter().enumerate() {
+                if s > row_best[r].0 {
+                    row_best[r] = (s, loc as usize);
+                }
+            }
+        }
+        for (r, &(s, loc)) in row_best.iter().enumerate() {
+            let rid = row_ids[bi * rows_per_block + r] as usize;
+            if best.map_or(true, |(bs, _, _)| (s as usize) > bs) {
+                best = Some((s as usize, rid, loc));
+            }
+        }
+    }
+    best
+}
+
+/// The tentpole invariant, engine level: cached programs + pooled
+/// array/buffers are bit-identical to a fresh-everything run — across
+/// both preset modes, row counts straddling the 64-bit word boundary,
+/// and block splits (the pooled array is reset-and-refilled between
+/// blocks of different heights). The engine instance is reused across
+/// row counts, so pooled state must also not leak between items.
+#[test]
+fn prop_cached_pooled_bitsim_equals_fresh_everything() {
+    use cram_pm::coordinator::{BitsimEngine, MatchEngine, WorkItem};
+    use std::sync::Arc;
+    let mut rng = Rng::new(0x90013D);
+    let (frag_chars, pat_chars) = (24usize, 6usize);
+    for mode in [PresetMode::Standard, PresetMode::Gang] {
+        for rows_per_block in [64usize, 130] {
+            let mut engine = BitsimEngine::new(frag_chars, pat_chars, rows_per_block, mode);
+            for n_rows in [63usize, 64, 65, 130] {
+                let fragments: Vec<Vec<u8>> =
+                    (0..n_rows).map(|_| encode(&rng.dna(frag_chars))).collect();
+                // Pattern planted in a random row so ties and real hits
+                // both occur.
+                let home = rng.below(n_rows);
+                let start = rng.below(frag_chars - pat_chars + 1);
+                let pattern = fragments[home][start..start + pat_chars].to_vec();
+                let row_ids: Vec<u32> = (0..n_rows as u32).collect();
+
+                let want = fresh_bitsim_best(
+                    frag_chars,
+                    pat_chars,
+                    mode,
+                    rows_per_block,
+                    &fragments,
+                    &row_ids,
+                    &pattern,
+                );
+                let item = WorkItem {
+                    pattern_id: 0,
+                    pattern: Arc::from(pattern.as_slice()),
+                    fragments: fragments
+                        .iter()
+                        .map(|f| Arc::from(f.as_slice()))
+                        .collect(),
+                    row_ids,
+                };
+                let got = engine.run(&item).unwrap();
+                assert_eq!(
+                    got.best.map(|b| (b.score, b.row, b.loc)),
+                    want,
+                    "{mode:?} rows_per_block={rows_per_block} n_rows={n_rows}"
+                );
+                assert_eq!(got.passes, n_rows.div_ceil(rows_per_block));
+            }
+        }
+    }
+}
+
+/// The tentpole invariant, coordinator level: with the bit-level
+/// engine behind 1–4 executor lanes (each lane sharing one compiled
+/// program cache), merged results are bit-identical to single-lane —
+/// for both preset modes, both routing modes, and substrate heights
+/// that straddle the 64-bit word boundary.
+#[test]
+fn prop_bitsim_coordinator_lane_count_invariant() {
+    let mut rng = Rng::new(0x1A9E5B);
+    for &n_frags in &[63usize, 65, 130] {
+        let fragments: Vec<Vec<u8>> = (0..n_frags).map(|_| encode(&rng.dna(64))).collect();
+        let patterns: Vec<Vec<u8>> = (0..4)
+            .map(|_| {
+                let f = rng.below(n_frags);
+                let s = rng.below(64 - 16 + 1);
+                fragments[f][s..s + 16].to_vec()
+            })
+            .collect();
+        for mode in [PresetMode::Standard, PresetMode::Gang] {
+            for oracular in [None, Some((8usize, 32usize))] {
+                let run_with = |lanes: usize| {
+                    let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+                    cfg.engine = EngineKind::Bitsim;
+                    cfg.preset_mode = mode;
+                    cfg.oracular = oracular;
+                    cfg.lanes = lanes;
+                    Coordinator::new(cfg, fragments.clone())
+                        .unwrap()
+                        .run(&patterns)
+                        .unwrap()
+                        .0
+                };
+                let single = run_with(1);
+                for lanes in [2usize, 3, 4] {
+                    let multi = run_with(lanes);
+                    assert_eq!(single.len(), multi.len());
+                    for (a, b) in single.iter().zip(&multi) {
+                        assert_eq!(
+                            a.best.map(|x| (x.score, x.row, x.loc)),
+                            b.best.map(|x| (x.score, x.row, x.loc)),
+                            "n_frags={n_frags} {mode:?} lanes={lanes} \
+                             oracular={oracular:?} pattern {}",
+                            a.pattern_id
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The packed CPU scorer is bit-identical to the score-profile scan it
+/// replaced, across random geometries straddling the 32-char packing
+/// word boundary.
+#[test]
+fn prop_packed_scorer_equals_profile_scan() {
+    use cram_pm::dna::{packed_best_alignment, Packed2};
+    let mut rng = Rng::new(0x5C0);
+    for iter in 0..60 {
+        let pat_chars = rng.range(1, 70);
+        let frag_chars = pat_chars + rng.range(0, 80);
+        let frag = encode(&rng.dna(frag_chars));
+        let pat = if rng.bool() {
+            // planted: real high-score alignments
+            let s = rng.below(frag_chars - pat_chars + 1);
+            frag[s..s + pat_chars].to_vec()
+        } else {
+            encode(&rng.dna(pat_chars))
+        };
+        let mut want: Option<(usize, usize)> = None;
+        for (loc, &s) in score_profile(&frag, &pat).iter().enumerate() {
+            if want.map_or(true, |(bs, _)| s > bs) {
+                want = Some((s, loc));
+            }
+        }
+        let got = packed_best_alignment(&Packed2::from_codes(&frag), &Packed2::from_codes(&pat));
+        assert_eq!(got, want, "iter {iter} frag={frag_chars} pat={pat_chars}");
+    }
+}
+
 #[test]
 fn prop_bitsim_gate_zoo_random_states() {
     // Every gate kind, random input columns and row counts: the
