@@ -46,6 +46,7 @@ fn default_item(rng: &mut Rng) -> WorkItem {
     let pattern: Arc<[u8]> = Arc::from(&fragments[7][5..5 + PAT_CHARS]);
     WorkItem {
         pattern_id: 0,
+        alphabet: cram_pm::alphabet::Alphabet::Dna2,
         pattern,
         fragments,
         row_ids: (0..ROWS_PER_BLOCK as u32).collect(),

@@ -1,0 +1,491 @@
+//! Symbol alphabets and the width-generic packed scorer.
+//!
+//! The paper's substrate is not DNA-specific: Table 4 spans DNA (2-bit
+//! characters), word-oriented text benchmarks, and byte-granular
+//! workloads, all on the same row-parallel compare machinery — "we
+//! simply use *b* bits to encode the characters" (§3.1). This module
+//! is that statement as a type: an [`Alphabet`] names a fixed
+//! bits-per-character encoding, and every layer — row layout, code
+//! generation, the bit-level array, the engines, the coordinator and
+//! the serving schema — is parameterized by it. DNA stays the 2-bit
+//! special case and is bit-identical to the pre-generalization path.
+//!
+//! [`PackedSeq`] is the host-side mirror of the substrate's word
+//! parallelism at any symbol width: characters pack `bits_per_char`
+//! bits each into `u64` words, and one XOR + mask-fold + popcount step
+//! compares `⌊64 / bits⌋` characters at once. [`crate::dna::Packed2`]
+//! is now a thin 2-bit wrapper over it.
+
+use crate::util::Rng;
+
+/// The 20 standard amino acids in code order (0..20).
+pub const AMINO_ACIDS: [u8; 20] = *b"ACDEFGHIKLMNPQRSTVWY";
+
+/// A fixed-width character encoding (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Alphabet {
+    /// DNA `{A, C, G, T}` at 2 bits/character — the paper's running
+    /// case study and this repository's historical default.
+    Dna2,
+    /// The 20 standard amino acids at 5 bits/character (protein
+    /// sequence search).
+    Protein5,
+    /// Raw bytes at 8 bits/character: ASCII text search (Phoenix
+    /// StringMatch/WordCount) and arbitrary binary workloads.
+    Ascii8,
+}
+
+impl Alphabet {
+    /// Every supported alphabet, widest last.
+    pub const ALL: [Alphabet; 3] = [Alphabet::Dna2, Alphabet::Protein5, Alphabet::Ascii8];
+
+    /// Bits per character — the `b` of §3.1's "b bits per character".
+    pub fn bits_per_char(self) -> usize {
+        match self {
+            Alphabet::Dna2 => 2,
+            Alphabet::Protein5 => 5,
+            Alphabet::Ascii8 => 8,
+        }
+    }
+
+    /// Mask covering one character code.
+    pub fn code_mask(self) -> u64 {
+        (1u64 << self.bits_per_char()) - 1
+    }
+
+    /// Number of valid symbols (codes are `0..symbols`).
+    pub fn symbols(self) -> usize {
+        match self {
+            Alphabet::Dna2 => 4,
+            Alphabet::Protein5 => 20,
+            Alphabet::Ascii8 => 256,
+        }
+    }
+
+    /// Characters one `u64` word step of the packed scorer compares.
+    pub fn chars_per_word(self) -> usize {
+        64 / self.bits_per_char()
+    }
+
+    /// Short CLI/JSON tag.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Alphabet::Dna2 => "dna",
+            Alphabet::Protein5 => "protein",
+            Alphabet::Ascii8 => "ascii",
+        }
+    }
+
+    /// Parse a CLI tag (`dna`, `protein`, `ascii`, `byte`).
+    pub fn parse(s: &str) -> Option<Alphabet> {
+        match s {
+            "dna" => Some(Alphabet::Dna2),
+            "protein" => Some(Alphabet::Protein5),
+            "ascii" | "byte" => Some(Alphabet::Ascii8),
+            _ => None,
+        }
+    }
+
+    /// Encode text into one code per byte. Panics on characters outside
+    /// the alphabet (same contract as [`crate::dna::encode`]).
+    pub fn encode(self, text: &[u8]) -> Vec<u8> {
+        match self {
+            Alphabet::Dna2 => crate::dna::encode(text),
+            Alphabet::Protein5 => text
+                .iter()
+                .map(|&b| {
+                    let up = b.to_ascii_uppercase();
+                    AMINO_ACIDS
+                        .iter()
+                        .position(|&aa| aa == up)
+                        .unwrap_or_else(|| panic!("not an amino acid: {:?}", b as char))
+                        as u8
+                })
+                .collect(),
+            Alphabet::Ascii8 => text.to_vec(),
+        }
+    }
+
+    /// Decode codes back to text.
+    pub fn decode(self, codes: &[u8]) -> Vec<u8> {
+        match self {
+            Alphabet::Dna2 => crate::dna::decode(codes),
+            Alphabet::Protein5 => {
+                codes.iter().map(|&c| AMINO_ACIDS[c as usize % AMINO_ACIDS.len()]).collect()
+            }
+            Alphabet::Ascii8 => codes.to_vec(),
+        }
+    }
+
+    /// Whether every code in `codes` is a valid symbol of this
+    /// alphabet — the admission check serving layers apply so that a
+    /// wider-alphabet payload cannot silently score under a narrower
+    /// symbol width.
+    pub fn codes_valid(self, codes: &[u8]) -> bool {
+        let n = self.symbols();
+        n > u8::MAX as usize || codes.iter().all(|&c| (c as usize) < n)
+    }
+
+    /// `n` uniform random symbol codes.
+    pub fn random_codes(self, rng: &mut Rng, n: usize) -> Vec<u8> {
+        let symbols = self.symbols();
+        (0..n).map(|_| rng.below(symbols) as u8).collect()
+    }
+}
+
+impl std::fmt::Display for Alphabet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.tag())
+    }
+}
+
+/// A bit-packed code sequence at any supported symbol width: character
+/// `i` occupies bits `bits·i .. bits·(i+1)` of the word stream,
+/// LSB-first — the same column order as the array layout.
+///
+/// §Perf: one XOR + fold + popcount step scores
+/// [`Alphabet::chars_per_word`] characters (32 for DNA, 12 for
+/// protein, 8 for bytes), so the CPU oracle stays word-parallel at
+/// every width instead of falling back to a per-character loop.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PackedSeq {
+    words: Vec<u64>,
+    chars: usize,
+    bits: usize,
+}
+
+impl PackedSeq {
+    /// Pack a string of codes (one code per byte) at `alphabet`'s
+    /// width.
+    pub fn from_codes(alphabet: Alphabet, codes: &[u8]) -> Self {
+        let mut packed = PackedSeq::default();
+        packed.refill(alphabet, codes);
+        packed
+    }
+
+    /// Re-pack in place, reusing the word buffer — the scratch path for
+    /// callers that pack many sequences back to back.
+    pub fn refill(&mut self, alphabet: Alphabet, codes: &[u8]) {
+        let bits = alphabet.bits_per_char();
+        let mask = alphabet.code_mask();
+        self.words.clear();
+        self.words.resize((codes.len() * bits).div_ceil(64), 0);
+        for (i, &c) in codes.iter().enumerate() {
+            let bit = i * bits;
+            let (w, off) = (bit / 64, bit % 64);
+            let code = c as u64 & mask;
+            self.words[w] |= code << off;
+            if off + bits > 64 {
+                self.words[w + 1] |= code >> (64 - off);
+            }
+        }
+        self.chars = codes.len();
+        self.bits = bits;
+    }
+
+    /// Character length.
+    pub fn chars(&self) -> usize {
+        self.chars
+    }
+
+    /// Bits per character this sequence was packed at (0 for a
+    /// default-constructed, never-filled sequence).
+    pub fn bits_per_char(&self) -> usize {
+        self.bits
+    }
+
+    /// The 64-bit window of packed codes starting at character `start`
+    /// (up to `⌊64/bits⌋` whole characters; callers mask off anything
+    /// past the end).
+    #[inline]
+    fn window(&self, start: usize) -> u64 {
+        let bit = self.bits * start;
+        let w = bit / 64;
+        let off = bit % 64;
+        let mut x = self.words.get(w).copied().unwrap_or(0) >> off;
+        if off != 0 {
+            if let Some(&hi) = self.words.get(w + 1) {
+                x |= hi << (64 - off);
+            }
+        }
+        x
+    }
+}
+
+/// One bit per character lane of a packed window: bit `j·bits` for
+/// each whole character `j`, per symbol width 1..=8. Precomputed so
+/// the per-alignment scoring path pays a table lookup, not a
+/// mask-building loop (`LANE_MASKS[2]` is the old DNA `CHAR_LANES`
+/// constant).
+const LANE_MASKS: [u64; 9] = [
+    0,
+    0xFFFF_FFFF_FFFF_FFFF,
+    0x5555_5555_5555_5555,
+    0x1249_2492_4924_9249,
+    0x1111_1111_1111_1111,
+    0x0084_2108_4210_8421,
+    0x0041_0410_4104_1041,
+    0x0102_0408_1020_4081,
+    0x0101_0101_0101_0101,
+];
+
+/// Word-parallel similarity at any symbol width: the number of
+/// matching characters between `pattern` and the `fragment` window at
+/// alignment `loc`. A character matches iff all `bits` of its XOR are
+/// zero: the per-character difference bits are OR-folded onto each
+/// character's low bit lane, complemented, masked to the lane bits,
+/// and popcounted. Exactly equals [`crate::dna::similarity`] on the
+/// unpacked codes, for every alphabet.
+pub fn packed_similarity(fragment: &PackedSeq, pattern: &PackedSeq, loc: usize) -> usize {
+    assert_eq!(
+        fragment.bits, pattern.bits,
+        "fragment and pattern were packed at different symbol widths"
+    );
+    assert!(
+        (1..=8).contains(&fragment.bits),
+        "sequences must be packed before scoring"
+    );
+    assert!(loc + pattern.chars <= fragment.chars, "alignment out of range");
+    let bits = fragment.bits;
+    let step = 64 / bits;
+    let lanes = LANE_MASKS[bits];
+    let mut score = 0usize;
+    let mut done = 0usize;
+    while done < pattern.chars {
+        let n = (pattern.chars - done).min(step);
+        let x = fragment.window(loc + done) ^ pattern.window(done);
+        let mut folded = x;
+        for k in 1..bits {
+            folded |= x >> k;
+        }
+        let mut m = !folded & lanes;
+        if n < step {
+            m &= (1u64 << (bits * n)) - 1;
+        }
+        score += m.count_ones() as usize;
+        done += n;
+    }
+    score
+}
+
+/// Best `(score, loc)` of `pattern` against `fragment` under the
+/// row-major tie-break (strict `>`, so the lowest `loc` wins a tie).
+/// `None` iff the pattern is empty or longer than the fragment.
+pub fn packed_best_alignment(fragment: &PackedSeq, pattern: &PackedSeq) -> Option<(usize, usize)> {
+    if pattern.chars == 0 || pattern.chars > fragment.chars {
+        return None;
+    }
+    let mut best: Option<(usize, usize)> = None;
+    for loc in 0..=fragment.chars - pattern.chars {
+        let s = packed_similarity(fragment, pattern, loc);
+        if best.map_or(true, |(bs, _)| s > bs) {
+            best = Some((s, loc));
+        }
+    }
+    best
+}
+
+/// A synthetic reference + sampled-pattern workload over any alphabet
+/// — the width-generic analog of
+/// [`crate::bench_apps::dna::DnaWorkload`], holding codes directly
+/// (no ASCII round trip). Patterns are windows of the reference with a
+/// per-character error rate, so Oracular routing and perfect-score
+/// assertions behave the same way they do for DNA.
+#[derive(Debug, Clone)]
+pub struct CodedWorkload {
+    /// The alphabet everything below is coded in.
+    pub alphabet: Alphabet,
+    /// Reference string, one code per byte.
+    pub reference: Vec<u8>,
+    /// Patterns sampled from the reference (with errors), codes.
+    pub patterns: Vec<Vec<u8>>,
+    /// True sampling position of each pattern (for recall checks).
+    pub truth: Vec<usize>,
+}
+
+impl CodedWorkload {
+    /// Generate a reference of `ref_chars` and `n_patterns` windows of
+    /// `pat_chars` with per-character error rate `error_rate`.
+    pub fn generate(
+        alphabet: Alphabet,
+        ref_chars: usize,
+        n_patterns: usize,
+        pat_chars: usize,
+        error_rate: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(ref_chars >= pat_chars, "reference shorter than the patterns");
+        let mut rng = Rng::new(seed);
+        let reference = alphabet.random_codes(&mut rng, ref_chars);
+        let mut patterns = Vec::with_capacity(n_patterns);
+        let mut truth = Vec::with_capacity(n_patterns);
+        for _ in 0..n_patterns {
+            let pos = rng.below(ref_chars - pat_chars + 1);
+            let mut read = reference[pos..pos + pat_chars].to_vec();
+            for c in read.iter_mut() {
+                if rng.chance(error_rate) {
+                    *c = rng.below(alphabet.symbols()) as u8;
+                }
+            }
+            patterns.push(read);
+            truth.push(pos);
+        }
+        CodedWorkload { alphabet, reference, patterns, truth }
+    }
+
+    /// Fold the reference into per-row fragments of `frag_chars` with
+    /// `overlap` characters replicated at boundaries (same policy as
+    /// [`crate::bench_apps::dna::DnaWorkload::fragments`]); the tail is
+    /// zero-code-padded to full width.
+    pub fn fragments(&self, frag_chars: usize, overlap: usize) -> Vec<Vec<u8>> {
+        assert!(overlap < frag_chars, "overlap must be smaller than the fragment");
+        let stride = frag_chars - overlap;
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < self.reference.len() {
+            let end = (start + frag_chars).min(self.reference.len());
+            let mut frag = self.reference[start..end].to_vec();
+            frag.resize(frag_chars, 0);
+            out.push(frag);
+            if end == self.reference.len() {
+                break;
+            }
+            start += stride;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dna::{score_profile, similarity};
+
+    #[test]
+    fn alphabet_constants_are_consistent() {
+        for a in Alphabet::ALL {
+            assert!(a.symbols() <= 1 << a.bits_per_char(), "{a}: symbols overflow the code");
+            assert_eq!(a.chars_per_word(), 64 / a.bits_per_char());
+            assert_eq!(Alphabet::parse(a.tag()), Some(a));
+        }
+        assert_eq!(Alphabet::parse("byte"), Some(Alphabet::Ascii8));
+        assert_eq!(Alphabet::parse("klingon"), None);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_every_alphabet() {
+        assert_eq!(Alphabet::Dna2.decode(&Alphabet::Dna2.encode(b"GATTACA")), b"GATTACA");
+        assert_eq!(
+            Alphabet::Protein5.decode(&Alphabet::Protein5.encode(b"MKVLAW")),
+            b"MKVLAW"
+        );
+        let bytes: Vec<u8> = (0..=255).collect();
+        assert_eq!(Alphabet::Ascii8.decode(&Alphabet::Ascii8.encode(&bytes)), bytes);
+    }
+
+    #[test]
+    #[should_panic(expected = "not an amino acid")]
+    fn protein_rejects_non_amino_letters() {
+        Alphabet::Protein5.encode(b"MKXB");
+    }
+
+    #[test]
+    fn codes_valid_tracks_symbol_count() {
+        assert!(Alphabet::Dna2.codes_valid(&[0, 1, 2, 3]));
+        assert!(!Alphabet::Dna2.codes_valid(&[0, 4]));
+        assert!(Alphabet::Protein5.codes_valid(&[0, 19]));
+        assert!(!Alphabet::Protein5.codes_valid(&[20]));
+        assert!(Alphabet::Ascii8.codes_valid(&[0, 255]));
+    }
+
+    #[test]
+    fn lane_mask_table_matches_definition() {
+        for bits in 1..=8usize {
+            let mut want = 0u64;
+            for j in 0..64 / bits {
+                want |= 1u64 << (j * bits);
+            }
+            assert_eq!(LANE_MASKS[bits], want, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn packed_similarity_equals_scalar_every_alphabet() {
+        // Lengths straddle each alphabet's chars-per-word boundary
+        // (32/12/8) and the shared 63/64/65 word-bit boundaries.
+        let mut rng = Rng::new(0xA1FA);
+        for alphabet in Alphabet::ALL {
+            let step = alphabet.chars_per_word();
+            let lens = [
+                (step - 1, 1),
+                (step, step),
+                (step + 1, step - 1),
+                (63, 17),
+                (64, 33),
+                (65, 64),
+                (130, 5),
+            ];
+            for (frag_len, pat_len) in lens {
+                let frag = alphabet.random_codes(&mut rng, frag_len);
+                let pat = alphabet.random_codes(&mut rng, pat_len);
+                let pf = PackedSeq::from_codes(alphabet, &frag);
+                let pp = PackedSeq::from_codes(alphabet, &pat);
+                assert_eq!(pf.chars(), frag_len);
+                assert_eq!(pf.bits_per_char(), alphabet.bits_per_char());
+                for loc in 0..=frag_len - pat_len {
+                    assert_eq!(
+                        packed_similarity(&pf, &pp, loc),
+                        similarity(&frag, &pat, loc),
+                        "{alphabet} frag={frag_len} pat={pat_len} loc={loc}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_best_alignment_matches_profile_scan_every_alphabet() {
+        let mut rng = Rng::new(0xBEEF);
+        for alphabet in Alphabet::ALL {
+            for _ in 0..25 {
+                let frag_len = 1 + rng.below(90);
+                let pat_len = 1 + rng.below(frag_len);
+                let frag = alphabet.random_codes(&mut rng, frag_len);
+                let pat = alphabet.random_codes(&mut rng, pat_len);
+                let mut want: Option<(usize, usize)> = None;
+                for (loc, &s) in score_profile(&frag, &pat).iter().enumerate() {
+                    if want.map_or(true, |(bs, _)| s > bs) {
+                        want = Some((s, loc));
+                    }
+                }
+                let got = packed_best_alignment(
+                    &PackedSeq::from_codes(alphabet, &frag),
+                    &PackedSeq::from_codes(alphabet, &pat),
+                );
+                assert_eq!(got, want, "{alphabet} frag={frag_len} pat={pat_len}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_best_alignment_empty_cases() {
+        let frag = PackedSeq::from_codes(Alphabet::Ascii8, b"abcd");
+        let empty = PackedSeq::from_codes(Alphabet::Ascii8, &[]);
+        assert_eq!(packed_best_alignment(&frag, &empty), None);
+        let long = PackedSeq::from_codes(Alphabet::Ascii8, b"abcde");
+        assert_eq!(packed_best_alignment(&frag, &long), None);
+    }
+
+    #[test]
+    fn coded_workload_errorfree_patterns_align_at_truth() {
+        for alphabet in Alphabet::ALL {
+            let w = CodedWorkload::generate(alphabet, 2048, 16, 24, 0.0, 7);
+            for (p, &pos) in w.patterns.iter().zip(&w.truth) {
+                assert_eq!(similarity(&w.reference, p, pos), 24, "{alphabet}");
+            }
+            assert!(alphabet.codes_valid(&w.reference));
+            let frags = w.fragments(64, 24);
+            assert!(frags.iter().all(|f| f.len() == 64));
+        }
+    }
+}

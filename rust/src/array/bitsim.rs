@@ -176,46 +176,64 @@ impl CramArray {
         out
     }
 
-    /// Write a 2-bit-code string into one row at `col`: character `i`
-    /// lands LSB-first at columns `col + 2i` (low) and `col + 2i + 1`
-    /// (high) — the layout order of [`Encoded::bits`], without
-    /// materializing the intermediate `Vec<bool>`.
-    pub fn write_codes(&mut self, row: usize, col: usize, codes: &[u8]) {
+    /// Write a code string of `bits` bits/character into one row at
+    /// `col`: character `i` lands LSB-first at columns
+    /// `col + bits·i .. col + bits·(i+1)` — the layout order of
+    /// [`Encoded::bits`] at any symbol width, without materializing an
+    /// intermediate `Vec<bool>`. The row's word index and bit mask are
+    /// hoisted out of the loop.
+    pub fn write_codes_bits(&mut self, row: usize, col: usize, codes: &[u8], bits: usize) {
+        assert!((1..=8).contains(&bits), "bits must be in 1..=8, got {bits}");
         assert!(row < self.rows, "row {row} out of bounds");
-        assert!(col + 2 * codes.len() <= self.cols, "code write spills past column {}", self.cols);
+        assert!(
+            col + bits * codes.len() <= self.cols,
+            "code write spills past column {}",
+            self.cols
+        );
         let wpc = self.words_per_col;
         let w = row / 64;
         let m = 1u64 << (row % 64);
         for (i, &c) in codes.iter().enumerate() {
-            let lo = (col + 2 * i) * wpc + w;
-            if c & 1 == 1 {
-                self.cells[lo] |= m;
-            } else {
-                self.cells[lo] &= !m;
-            }
-            let hi = lo + wpc;
-            if c & 2 == 2 {
-                self.cells[hi] |= m;
-            } else {
-                self.cells[hi] &= !m;
+            let base = (col + bits * i) * wpc + w;
+            for b in 0..bits {
+                let idx = base + b * wpc;
+                if c >> b & 1 == 1 {
+                    self.cells[idx] |= m;
+                } else {
+                    self.cells[idx] &= !m;
+                }
             }
         }
     }
 
-    /// Write the same 2-bit-code string into **every** row at `col`
-    /// (how patterns are broadcast under the paper's second
-    /// pattern-assignment option, §3.2) — one column-parallel word fill
-    /// per bit, no intermediate `Vec<bool>`.
-    pub fn broadcast_codes(&mut self, col: usize, codes: &[u8]) {
+    /// Write a 2-bit-code string into one row at `col` (the DNA
+    /// special case of [`CramArray::write_codes_bits`]).
+    pub fn write_codes(&mut self, row: usize, col: usize, codes: &[u8]) {
+        self.write_codes_bits(row, col, codes, 2);
+    }
+
+    /// Write the same `bits` bits/character code string into **every**
+    /// row at `col` (how patterns are broadcast under the paper's
+    /// second pattern-assignment option, §3.2) — one column-parallel
+    /// word fill per bit, no intermediate `Vec<bool>`.
+    pub fn broadcast_codes_bits(&mut self, col: usize, codes: &[u8], bits: usize) {
+        assert!((1..=8).contains(&bits), "bits must be in 1..=8, got {bits}");
         assert!(
-            col + 2 * codes.len() <= self.cols,
+            col + bits * codes.len() <= self.cols,
             "broadcast spills past column {}",
             self.cols
         );
         for (i, &c) in codes.iter().enumerate() {
-            self.set_column(col + 2 * i, c & 1 == 1);
-            self.set_column(col + 2 * i + 1, c & 2 == 2);
+            for b in 0..bits {
+                self.set_column(col + bits * i + b, c >> b & 1 == 1);
+            }
         }
+    }
+
+    /// Broadcast a 2-bit-code string (the DNA special case of
+    /// [`CramArray::broadcast_codes_bits`]).
+    pub fn broadcast_codes(&mut self, col: usize, codes: &[u8]) {
+        self.broadcast_codes_bits(col, codes, 2);
     }
 
     /// Write a 2-bit-encoded string into a row at `col`.
@@ -465,6 +483,40 @@ mod tests {
         for row in 0..130 {
             for col in 0..20 {
                 assert_eq!(a.get(row, col), b.get(row, col), "({row},{col})");
+            }
+        }
+    }
+
+    /// Width-generic writes land each character's bits LSB-first at
+    /// `bits`-strided columns, matching an explicit bit-level write.
+    #[test]
+    fn write_codes_bits_matches_bit_level_write_every_width() {
+        for bits in [1usize, 2, 5, 8] {
+            let codes: Vec<u8> =
+                (0..7u8).map(|i| i.wrapping_mul(37) & ((1 << bits) - 1) as u8).collect();
+            let expanded: Vec<bool> = codes
+                .iter()
+                .flat_map(|&c| (0..bits).map(move |b| c >> b & 1 == 1))
+                .collect();
+            let mut a = CramArray::new(130, 7 * bits + 3);
+            let mut b = CramArray::new(130, 7 * bits + 3);
+            for row in [0usize, 63, 64, 129] {
+                a.write_codes_bits(row, 3, &codes, bits);
+                b.write_row_bits(row, 3, &expanded);
+            }
+            let mut bc = CramArray::new(70, 7 * bits + 3);
+            bc.broadcast_codes_bits(3, &codes, bits);
+            for row in 0..130 {
+                for col in 0..7 * bits + 3 {
+                    assert_eq!(a.get(row, col), b.get(row, col), "bits={bits} ({row},{col})");
+                }
+            }
+            for row in 0..70 {
+                assert_eq!(
+                    bc.read_row_bits(row, 3, 7 * bits),
+                    expanded,
+                    "bits={bits} broadcast row {row}"
+                );
             }
         }
     }

@@ -6,9 +6,11 @@
 //! computation addresses the same columns everywhere.
 
 
-/// Column map of one CRAM-PM row. All strings are stored 2 bits per
-/// character (§3.1 "we simply use 2-bits to encode the four characters"),
-/// LSB first per character.
+/// Column map of one CRAM-PM row. All strings are stored
+/// `bits_per_char` bits per character (§3.1 "we simply use 2-bits to
+/// encode the four characters" for DNA; the text benchmarks use wider
+/// codes — see [`crate::alphabet::Alphabet`]), LSB first per
+/// character.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RowLayout {
     /// Reference-fragment length, characters.
@@ -18,17 +20,46 @@ pub struct RowLayout {
     /// Scratch compartment width, bits (sized from codegen's high-water
     /// mark; see [`crate::isa::CodeGen`]).
     pub scratch_cols: usize,
+    /// Bits per character — the symbol width every compartment's
+    /// column math is strided by.
+    pub bits_per_char: usize,
 }
 
 impl RowLayout {
-    /// Layout with an explicit scratch budget.
+    /// 2-bit (DNA) layout with an explicit scratch budget — the
+    /// historical constructor; every pre-generalization call site keeps
+    /// its exact column map.
     pub fn new(frag_chars: usize, pat_chars: usize, scratch_cols: usize) -> Self {
+        RowLayout::with_bits(2, frag_chars, pat_chars, scratch_cols)
+    }
+
+    /// Layout at an explicit symbol width.
+    pub fn with_bits(
+        bits_per_char: usize,
+        frag_chars: usize,
+        pat_chars: usize,
+        scratch_cols: usize,
+    ) -> Self {
+        assert!(
+            (1..=8).contains(&bits_per_char),
+            "bits_per_char must be in 1..=8, got {bits_per_char}"
+        );
         assert!(pat_chars >= 1, "pattern must be non-empty");
         assert!(
             frag_chars >= pat_chars,
             "fragment ({frag_chars}) must be at least as long as the pattern ({pat_chars}) (§3.1)"
         );
-        RowLayout { frag_chars, pat_chars, scratch_cols }
+        RowLayout { frag_chars, pat_chars, scratch_cols, bits_per_char }
+    }
+
+    /// Layout strided for `alphabet`'s symbol width.
+    pub fn for_alphabet(
+        alphabet: crate::alphabet::Alphabet,
+        frag_chars: usize,
+        pat_chars: usize,
+        scratch_cols: usize,
+    ) -> Self {
+        RowLayout::with_bits(alphabet.bits_per_char(), frag_chars, pat_chars, scratch_cols)
     }
 
     /// First column of the fragment compartment.
@@ -38,7 +69,7 @@ impl RowLayout {
 
     /// First column of the pattern compartment.
     pub fn pat_col(&self) -> u32 {
-        (2 * self.frag_chars) as u32
+        (self.bits_per_char * self.frag_chars) as u32
     }
 
     /// Width of the similarity score, bits:
@@ -49,7 +80,7 @@ impl RowLayout {
 
     /// First column of the score compartment.
     pub fn score_col(&self) -> u32 {
-        self.pat_col() + (2 * self.pat_chars) as u32
+        self.pat_col() + (self.bits_per_char * self.pat_chars) as u32
     }
 
     /// First column of the scratch compartment. The per-character match
@@ -77,13 +108,13 @@ impl RowLayout {
     /// Column of the fragment character at index `i`, low bit.
     pub fn frag_char_col(&self, i: usize) -> u32 {
         assert!(i < self.frag_chars, "fragment index {i} out of range");
-        self.frag_col() + (2 * i) as u32
+        self.frag_col() + (self.bits_per_char * i) as u32
     }
 
     /// Column of the pattern character at index `i`, low bit.
     pub fn pat_char_col(&self, i: usize) -> u32 {
         assert!(i < self.pat_chars, "pattern index {i} out of range");
-        self.pat_col() + (2 * i) as u32
+        self.pat_col() + (self.bits_per_char * i) as u32
     }
 
     /// Column of match-string bit `i`.
@@ -131,8 +162,36 @@ mod tests {
     #[test]
     fn char_columns_are_2bit_strided() {
         let l = RowLayout::new(50, 10, 0);
+        assert_eq!(l.bits_per_char, 2);
         assert_eq!(l.frag_char_col(0), 0);
         assert_eq!(l.frag_char_col(3), 6);
         assert_eq!(l.pat_char_col(1), l.pat_col() + 2);
+    }
+
+    #[test]
+    fn wider_alphabets_stride_every_compartment() {
+        use crate::alphabet::Alphabet;
+        for alphabet in Alphabet::ALL {
+            let bits = alphabet.bits_per_char();
+            let l = RowLayout::for_alphabet(alphabet, 40, 10, 16);
+            assert_eq!(l.bits_per_char, bits);
+            assert_eq!(l.pat_col() as usize, 40 * bits);
+            assert_eq!(l.score_col() as usize, 50 * bits);
+            assert_eq!(l.frag_char_col(3) as usize, 3 * bits);
+            assert_eq!(l.pat_char_col(2) as usize, 40 * bits + 2 * bits);
+            // Score width depends on the pattern length only, not the
+            // symbol width.
+            assert_eq!(l.score_bits(), 4);
+            assert_eq!(l.n_alignments(), 31);
+            assert!(l.frag_col() < l.pat_col());
+            assert!(l.pat_col() < l.score_col());
+            assert!(l.score_col() < l.scratch_col());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bits_per_char")]
+    fn zero_width_rejected() {
+        RowLayout::with_bits(0, 8, 4, 0);
     }
 }

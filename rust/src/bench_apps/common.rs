@@ -1,5 +1,6 @@
 //! Shared machinery for mapping data-parallel benchmarks onto CRAM-PM.
 
+use crate::alphabet::Alphabet;
 use crate::array::RowLayout;
 use crate::baselines::WorkProfile;
 use crate::isa::{CodeGen, PresetMode, Program, Stage};
@@ -78,6 +79,52 @@ pub trait Benchmark {
 
     /// Per-item instruction/byte trace for the NMP baseline.
     fn nmp_profile(&self) -> WorkProfile;
+}
+
+/// Scalar reference scorer: best `(score, row, loc)` of `pattern` over
+/// a set of resident rows under the row-major tie-break (strict `>`,
+/// rows then alignments in ascending order) — the oracle every
+/// functional serving run is verified against, at any alphabet (codes
+/// compare as plain bytes).
+pub fn reference_best(rows: &[Vec<u8>], pattern: &[u8]) -> Option<(usize, usize, usize)> {
+    let mut best: Option<(usize, usize, usize)> = None;
+    for (row, frag) in rows.iter().enumerate() {
+        for (loc, &s) in crate::dna::score_profile(frag, pattern).iter().enumerate() {
+            if best.map_or(true, |(bs, _, _)| s > bs) {
+                best = Some((s, row, loc));
+            }
+        }
+    }
+    best
+}
+
+/// Outcome of a **functional** end-to-end serving run of a Table 4
+/// benchmark: real queries through `MatchServer` → `Coordinator` →
+/// engine, answers checked against [`reference_best`] — not a cost
+/// model. The geometry fields record how the alphabet's symbol width
+/// shapes the substrate (row width in columns, alignments per pass).
+#[derive(Debug, Clone)]
+pub struct FunctionalReport {
+    /// Benchmark name (Table 4 row).
+    pub name: String,
+    /// Alphabet the run was coded in.
+    pub alphabet: Alphabet,
+    /// Queries served.
+    pub patterns: usize,
+    /// Queries answered with a perfect (full-length) score.
+    pub matched: usize,
+    /// Whether every answer was bit-identical to [`reference_best`].
+    pub verified: bool,
+    /// Served queries per second, host wall clock.
+    pub host_rate: f64,
+    /// Resident rows (segments/words).
+    pub rows: usize,
+    /// Row width implied by the alphabet, columns.
+    pub layout_cols: usize,
+    /// Alignment iterations per pass.
+    pub alignments_per_pass: usize,
+    /// Projected substrate match rate, patterns/s.
+    pub hw_match_rate: f64,
 }
 
 /// Standard data-parallel report: the whole problem is resident, one

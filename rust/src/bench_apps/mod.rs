@@ -24,10 +24,10 @@ pub mod stringmatch;
 pub mod wordcount;
 
 pub use bitcount::BitCount;
-pub use common::{AppReport, Benchmark, PassSpec};
+pub use common::{reference_best, AppReport, Benchmark, FunctionalReport, PassSpec};
 pub use dna::DnaBench;
 pub use rc4::Rc4Bench;
-pub use stringmatch::StringMatchBench;
+pub use stringmatch::{StringMatchBench, TextWorkload};
 pub use wordcount::WordCountBench;
 
 use crate::isa::PresetMode;

@@ -9,12 +9,17 @@
 //! for every benchmark ("we simply stick to a straight-forward 2-bit
 //! representation for each character").
 
+use crate::alphabet::Alphabet;
 use crate::baselines::WorkProfile;
-use crate::bench_apps::common::{AppReport, Benchmark};
+use crate::bench_apps::common::{reference_best, AppReport, Benchmark, FunctionalReport};
+use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
 use crate::isa::PresetMode;
+use crate::serve::{Backpressure, MatchRequest, MatchServer, ServeConfig};
 use crate::sim::{DnaPassModel, SystemConfig};
 use crate::tech::Technology;
 use crate::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// String-match benchmark.
 #[derive(Debug, Clone, Copy)]
@@ -60,6 +65,110 @@ impl StringMatchBench {
     }
 }
 
+impl StringMatchBench {
+    /// A **functional** end-to-end serving run (not a cost model): a
+    /// [`TextWorkload`] at `alphabet` becomes the resident segment
+    /// rows of a real `Coordinator`, the planted needles are served as
+    /// alphabet-tagged requests through a `MatchServer`, and every
+    /// answer is checked against the scalar [`reference_best`] oracle.
+    /// Broadcast (Naive) routing so the reference scan and the served
+    /// scan cover the same rows.
+    pub fn functional(
+        &self,
+        alphabet: Alphabet,
+        engine: EngineKind,
+        n_segments: usize,
+        n_needles: usize,
+        seed: u64,
+    ) -> crate::Result<FunctionalReport> {
+        let w = TextWorkload::generate(
+            alphabet,
+            n_segments,
+            self.frag_chars,
+            n_needles,
+            self.pat_chars,
+            seed,
+        );
+        let mut cfg =
+            CoordinatorConfig::for_alphabet(alphabet, engine, self.frag_chars, self.pat_chars);
+        cfg.oracular = None;
+        let coordinator = Arc::new(Coordinator::new(cfg, w.segments.clone())?);
+        serve_and_verify(
+            "SM",
+            alphabet,
+            coordinator,
+            &w.segments,
+            &w.needles,
+            self.pat_chars,
+        )
+    }
+}
+
+/// Shared tail of the functional benchmark runs: start a server over
+/// `coordinator`, serve `queries` in tagged requests, verify every
+/// answer against [`reference_best`] over `rows`, and assemble the
+/// report (host rate measured, substrate rate projected from a direct
+/// coordinator run of the same pool).
+pub(crate) fn serve_and_verify(
+    name: &str,
+    alphabet: Alphabet,
+    coordinator: Arc<Coordinator>,
+    rows: &[Vec<u8>],
+    queries: &[Vec<u8>],
+    pat_chars: usize,
+) -> crate::Result<FunctionalReport> {
+    let server = MatchServer::start(
+        Arc::clone(&coordinator),
+        ServeConfig {
+            max_batch: 16,
+            max_delay: Duration::from_micros(200),
+            queue_depth: 64,
+            backpressure: Backpressure::Block,
+            dedup: true,
+        },
+    )?;
+    let t0 = Instant::now();
+    let mut matched = 0usize;
+    let mut verified = true;
+    for chunk in queries.chunks(4) {
+        let resp = server
+            .match_request(MatchRequest::new(alphabet, chunk.to_vec()))
+            .map_err(|e| anyhow::anyhow!("serving {name}/{alphabet}: {e}"))?;
+        for (q, r) in chunk.iter().zip(&resp.results) {
+            if r.best.map(|b| (b.score, b.row, b.loc)) != reference_best(rows, q) {
+                verified = false;
+            }
+            if r.best.map_or(false, |b| b.score == pat_chars) {
+                matched += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    // Substrate projection + layout geometry from a direct run of the
+    // same pool (the serving trip above measured the host side).
+    let (_, metrics) = coordinator.run(queries)?;
+    let layout = crate::isa::ProgramCache::for_alphabet(
+        alphabet,
+        rows[0].len(),
+        pat_chars,
+        PresetMode::Gang,
+        true,
+    );
+    Ok(FunctionalReport {
+        name: name.to_string(),
+        alphabet,
+        patterns: queries.len(),
+        matched,
+        verified,
+        host_rate: queries.len() as f64 / wall.max(1e-12),
+        rows: rows.len(),
+        layout_cols: layout.layout().total_cols(),
+        alignments_per_pass: layout.layout().n_alignments(),
+        hw_match_rate: metrics.hw_match_rate,
+    })
+}
+
 impl Benchmark for StringMatchBench {
     fn name(&self) -> &'static str {
         "SM"
@@ -94,6 +203,61 @@ impl Benchmark for StringMatchBench {
             instrs_per_item: 60.0 * self.pat_chars as f64,
             bytes_per_item: self.mean_word_chars,
         }
+    }
+}
+
+/// Alphabet-generic segment corpus for the functional serving run:
+/// `n_segments` rows of random codes with every needle planted in at
+/// least one segment — so an error-free run must answer every needle
+/// with a perfect score, deterministically.
+#[derive(Debug, Clone)]
+pub struct TextWorkload {
+    /// The alphabet all codes below are in.
+    pub alphabet: Alphabet,
+    /// Per-row segments, one code per byte.
+    pub segments: Vec<Vec<u8>>,
+    /// Search strings, one per query; needle `i` is planted in segment
+    /// `planted[i]`.
+    pub needles: Vec<Vec<u8>>,
+    /// Home segment of each needle.
+    pub planted: Vec<usize>,
+}
+
+impl TextWorkload {
+    /// Generate `n_segments` segments of `frag_chars` codes and
+    /// `n_needles` needles of `pat_chars`, planting needle `i` into
+    /// segment `i % n_segments` at a random offset. With
+    /// `n_needles ≤ n_segments` every needle survives intact (homes
+    /// are distinct), which is what makes the functional run's
+    /// perfect-hit count deterministic.
+    pub fn generate(
+        alphabet: Alphabet,
+        n_segments: usize,
+        frag_chars: usize,
+        n_needles: usize,
+        pat_chars: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(n_segments > 0 && frag_chars >= pat_chars, "segments must fit the needles");
+        assert!(
+            n_needles <= n_segments,
+            "needles ({n_needles}) must not exceed segments ({n_segments}): a shared home \
+             segment could overwrite an earlier needle and break the deterministic hit count"
+        );
+        let mut rng = Rng::new(seed);
+        let mut segments: Vec<Vec<u8>> =
+            (0..n_segments).map(|_| alphabet.random_codes(&mut rng, frag_chars)).collect();
+        let mut needles = Vec::with_capacity(n_needles);
+        let mut planted = Vec::with_capacity(n_needles);
+        for i in 0..n_needles {
+            let needle = alphabet.random_codes(&mut rng, pat_chars);
+            let home = i % n_segments;
+            let pos = rng.below(frag_chars - pat_chars + 1);
+            segments[home][pos..pos + pat_chars].copy_from_slice(&needle);
+            needles.push(needle);
+            planted.push(home);
+        }
+        TextWorkload { alphabet, segments, needles, planted }
     }
 }
 
@@ -151,6 +315,48 @@ mod tests {
             let prof = m.profile(seg, &encode(&w.needle));
             assert!(prof.iter().any(|&s| s == 10), "needle lost in segment {seg}");
         }
+    }
+
+    /// The functional serving run: every planted needle answered with
+    /// a perfect score, every answer verified against the scalar
+    /// reference, for all three alphabets — and the wider alphabets
+    /// really widen the rows.
+    #[test]
+    fn functional_serving_verified_across_alphabets() {
+        let bench = StringMatchBench {
+            words: 0,
+            pat_chars: 10,
+            frag_chars: 60,
+            mean_word_chars: 7.5,
+            rows: 512,
+        };
+        let mut cols = Vec::new();
+        for alphabet in Alphabet::ALL {
+            let r = bench.functional(alphabet, EngineKind::Cpu, 48, 12, 77).unwrap();
+            assert!(r.verified, "{alphabet}: served answers diverged from the reference");
+            assert_eq!(r.matched, 12, "{alphabet}: planted needles must all hit");
+            assert_eq!(r.patterns, 12);
+            assert_eq!(r.rows, 48);
+            assert_eq!(r.alignments_per_pass, 51);
+            assert!(r.host_rate > 0.0 && r.hw_match_rate > 0.0, "{alphabet}");
+            cols.push(r.layout_cols);
+        }
+        assert!(cols[0] < cols[1] && cols[1] < cols[2], "row width must grow with symbol width");
+    }
+
+    /// Same run, gate-level engine, small scale: the serving answers
+    /// still verify — the generic lowering works end to end.
+    #[test]
+    fn functional_serving_bitsim_protein() {
+        let bench = StringMatchBench {
+            words: 0,
+            pat_chars: 6,
+            frag_chars: 24,
+            mean_word_chars: 7.5,
+            rows: 512,
+        };
+        let r = bench.functional(Alphabet::Protein5, EngineKind::Bitsim, 12, 6, 5).unwrap();
+        assert!(r.verified && r.matched == 6, "bitsim protein run diverged: {r:?}");
     }
 
     #[test]

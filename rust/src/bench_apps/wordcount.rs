@@ -7,10 +7,17 @@
 //! word length iff the word matches, and the host tallies the
 //! occurrence count from the per-row scores.
 
+use crate::alphabet::Alphabet;
 use crate::baselines::WorkProfile;
-use crate::bench_apps::common::{data_parallel_report, AppReport, Benchmark, PassSpec};
+use crate::bench_apps::common::{
+    data_parallel_report, AppReport, Benchmark, FunctionalReport, PassSpec,
+};
+use crate::bench_apps::stringmatch::serve_and_verify;
+use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
 use crate::isa::PresetMode;
 use crate::tech::Technology;
+use crate::util::Rng;
+use std::sync::Arc;
 
 /// Word-count benchmark.
 #[derive(Debug, Clone, Copy)]
@@ -33,6 +40,67 @@ impl WordCountBench {
     pub fn pass_spec(&self, mode: PresetMode) -> PassSpec {
         let chars = self.word_bits / 2; // 2-bit folded characters
         PassSpec::build(chars, chars, mode, 1.0, move |cg| cg.alignment_program(0, true))
+    }
+
+    /// Characters one `word_bits`-wide entry folds into at `alphabet`'s
+    /// symbol width (the paper folds 32-bit entries into 16 DNA-width
+    /// characters; ASCII keeps them as 4 bytes).
+    pub fn word_chars(&self, alphabet: Alphabet) -> usize {
+        (self.word_bits / alphabet.bits_per_char()).max(1)
+    }
+
+    /// A **functional** end-to-end serving run of the WC mapping: one
+    /// word per row, `frag_chars == pat_chars` so a pass is the
+    /// single-alignment word-aligned equality of §4, queries served as
+    /// alphabet-tagged requests through a real `MatchServer`. Half the
+    /// queries (the even-indexed ones) are words resident in the
+    /// corpus and must answer with a perfect score; the odd-indexed
+    /// ones are drawn to be absent and must not. Every answer is also
+    /// checked against the scalar reference oracle.
+    pub fn functional(
+        &self,
+        alphabet: Alphabet,
+        engine: EngineKind,
+        n_rows: usize,
+        n_queries: usize,
+        seed: u64,
+    ) -> crate::Result<FunctionalReport> {
+        let chars = self.word_chars(alphabet);
+        // The absent-query redraws below terminate only while absent
+        // words exist; require real headroom so they terminate fast.
+        let space = (alphabet.symbols() as u128)
+            .checked_pow(chars as u32)
+            .unwrap_or(u128::MAX);
+        anyhow::ensure!(
+            space >= 2 * n_rows as u128,
+            "word space {}^{chars} is too small to draw absent queries among {n_rows} \
+             resident words",
+            alphabet.symbols()
+        );
+        let mut rng = Rng::new(seed);
+        let words: Vec<Vec<u8>> =
+            (0..n_rows).map(|_| alphabet.random_codes(&mut rng, chars)).collect();
+        let queries: Vec<Vec<u8>> = (0..n_queries)
+            .map(|i| {
+                if i % 2 == 0 {
+                    words[rng.below(n_rows)].clone()
+                } else {
+                    // Re-draw until absent so the perfect-hit count is
+                    // deterministic (collisions are ~n_rows/symbols^chars
+                    // to begin with).
+                    loop {
+                        let q = alphabet.random_codes(&mut rng, chars);
+                        if !words.contains(&q) {
+                            break q;
+                        }
+                    }
+                }
+            })
+            .collect();
+        let mut cfg = CoordinatorConfig::for_alphabet(alphabet, engine, chars, chars);
+        cfg.oracular = None;
+        let coordinator = Arc::new(Coordinator::new(cfg, words.clone())?);
+        serve_and_verify("WC", alphabet, coordinator, &words, &queries, chars)
     }
 }
 
@@ -97,6 +165,23 @@ mod tests {
         let out = arr.execute(&spec.program).unwrap();
         let hits = out.scores[0].iter().filter(|&&s| s as usize == chars).count();
         assert_eq!(hits, expect_hits);
+    }
+
+    /// The WC functional serving run: present words hit perfectly,
+    /// absent words don't, every answer verified — at every alphabet.
+    #[test]
+    fn functional_serving_counts_presence_across_alphabets() {
+        let wc = WordCountBench { words: 0, word_bits: 32, rows: 512 };
+        for alphabet in Alphabet::ALL {
+            let r = wc.functional(alphabet, EngineKind::Cpu, 40, 10, 19).unwrap();
+            assert!(r.verified, "{alphabet}: answers diverged from the reference");
+            // Even-indexed queries are resident: exactly 5 of 10 hit.
+            assert_eq!(r.matched, 5, "{alphabet}");
+            assert_eq!(r.patterns, 10);
+            // WC is single-alignment word equality.
+            assert_eq!(r.alignments_per_pass, 1, "{alphabet}");
+            assert_eq!(r.rows, 40);
+        }
     }
 
     #[test]

@@ -14,9 +14,9 @@
 //!   (constructed inside the executor thread; see
 //!   [`crate::coordinator::pipeline`]).
 
+use crate::alphabet::{packed_best_alignment, Alphabet, PackedSeq};
 use crate::array::{CramArray, ExecOutput, RowLayout};
 use crate::baselines::cpu_ref::BestAlignment;
-use crate::dna::{packed_best_alignment, Packed2};
 use crate::isa::{PresetMode, ProgramCache};
 use crate::Result;
 use std::sync::Arc;
@@ -32,9 +32,13 @@ use std::sync::Arc;
 pub struct WorkItem {
     /// Pattern id (index into the pool).
     pub pattern_id: usize,
-    /// The pattern, 2-bit codes.
+    /// The alphabet `pattern` and `fragments` are coded in — engines
+    /// refuse an item whose symbol width does not match their geometry
+    /// rather than silently scoring at the wrong width.
+    pub alphabet: Alphabet,
+    /// The pattern, one [`Alphabet`] code per byte.
     pub pattern: Arc<[u8]>,
-    /// Candidate fragments, 2-bit codes each.
+    /// Candidate fragments, one code per byte each.
     pub fragments: Vec<Arc<[u8]>>,
     /// Global row ids of the fragments (for score annotation).
     pub row_ids: Vec<u32>,
@@ -71,27 +75,57 @@ pub trait MatchEngine {
     fn label(&self) -> &'static str;
 }
 
-/// Software-oracle engine: 2-bit-packed XOR+popcount scoring
-/// ([`crate::dna::packed_similarity`]) — no per-`loc` score vector.
-/// Packing stays per item (work items are engine-agnostic raw codes),
-/// but the packed-fragment scratch buffer is pooled across rows and
+/// Software-oracle engine: width-generic packed XOR+popcount scoring
+/// ([`crate::alphabet::packed_similarity`]) — no per-`loc` score
+/// vector. Packing stays per item (work items are engine-agnostic raw
+/// codes), but the packed scratch buffers are pooled across rows and
 /// items.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct CpuEngine {
+    /// The alphabet this engine scores (items must match).
+    alphabet: Alphabet,
     /// Scratch packed fragment, refilled in place per row.
-    frag: Packed2,
+    frag: PackedSeq,
+    /// Scratch packed pattern, refilled per item.
+    pat: PackedSeq,
+}
+
+impl CpuEngine {
+    /// Engine for one alphabet.
+    pub fn new(alphabet: Alphabet) -> Self {
+        CpuEngine { alphabet, frag: PackedSeq::default(), pat: PackedSeq::default() }
+    }
+
+    /// The alphabet this engine accepts.
+    pub fn alphabet(&self) -> Alphabet {
+        self.alphabet
+    }
+}
+
+impl Default for CpuEngine {
+    /// The historical default: the 2-bit DNA engine.
+    fn default() -> Self {
+        CpuEngine::new(Alphabet::Dna2)
+    }
 }
 
 impl MatchEngine for CpuEngine {
     fn run(&mut self, item: &WorkItem) -> Result<WorkResult> {
-        let pattern = Packed2::from_codes(&item.pattern);
+        anyhow::ensure!(
+            item.alphabet == self.alphabet,
+            "work item alphabet {} != engine alphabet {}",
+            item.alphabet,
+            self.alphabet
+        );
+        self.pat.refill(self.alphabet, &item.pattern);
+        let pattern = &self.pat;
         let mut best: Option<BestAlignment> = None;
         for (frag, &rid) in item.fragments.iter().zip(&item.row_ids) {
-            self.frag.refill(frag);
+            self.frag.refill(self.alphabet, frag);
             // Per-row best keeps the lowest loc (strict >); folding
             // rows in ascending order keeps the lowest row — the same
             // row-major tie-break as scanning every (row, loc) pair.
-            if let Some((score, loc)) = packed_best_alignment(&self.frag, &pattern) {
+            if let Some((score, loc)) = packed_best_alignment(&self.frag, pattern) {
                 if best.map_or(true, |b| score > b.score) {
                     best = Some(BestAlignment { row: rid as usize, loc, score });
                 }
@@ -124,15 +158,29 @@ pub struct BitsimEngine {
 }
 
 impl BitsimEngine {
-    /// Engine for a fragment/pattern geometry. `rows_per_block` bounds
-    /// the simulated array height per pass.
+    /// Engine for a 2-bit DNA fragment/pattern geometry.
+    /// `rows_per_block` bounds the simulated array height per pass.
     pub fn new(
         frag_chars: usize,
         pat_chars: usize,
         rows_per_block: usize,
         mode: PresetMode,
     ) -> Self {
-        let cache = Arc::new(ProgramCache::for_geometry(frag_chars, pat_chars, mode, true));
+        Self::new_alphabet(Alphabet::Dna2, frag_chars, pat_chars, rows_per_block, mode)
+    }
+
+    /// Engine for a geometry at an explicit alphabet: the compiled
+    /// programs, row width, and item validation all follow the
+    /// alphabet's symbol width.
+    pub fn new_alphabet(
+        alphabet: Alphabet,
+        frag_chars: usize,
+        pat_chars: usize,
+        rows_per_block: usize,
+        mode: PresetMode,
+    ) -> Self {
+        let cache =
+            Arc::new(ProgramCache::for_alphabet(alphabet, frag_chars, pat_chars, mode, true));
         Self::with_cache(cache, rows_per_block)
     }
 
@@ -166,6 +214,13 @@ impl MatchEngine for BitsimEngine {
     fn run(&mut self, item: &WorkItem) -> Result<WorkResult> {
         let layout = *self.cache.layout();
         anyhow::ensure!(
+            item.alphabet.bits_per_char() == layout.bits_per_char,
+            "work item alphabet {} ({} bits/char) != engine symbol width ({} bits/char)",
+            item.alphabet,
+            item.alphabet.bits_per_char(),
+            layout.bits_per_char
+        );
+        anyhow::ensure!(
             item.pattern.len() == layout.pat_chars,
             "pattern length {} != layout {}",
             item.pattern.len(),
@@ -184,9 +239,14 @@ impl MatchEngine for BitsimEngine {
                     frag.len(),
                     layout.frag_chars
                 );
-                self.arr.write_codes(r, layout.frag_col() as usize, frag);
+                let frag_col = layout.frag_col() as usize;
+                self.arr.write_codes_bits(r, frag_col, frag, layout.bits_per_char);
             }
-            self.arr.broadcast_codes(layout.pat_col() as usize, &item.pattern);
+            self.arr.broadcast_codes_bits(
+                layout.pat_col() as usize,
+                &item.pattern,
+                layout.bits_per_char,
+            );
 
             // Per-row best over all alignments first (strict > keeps
             // the lowest loc), then fold rows in ascending order — the
@@ -225,14 +285,25 @@ mod tests {
     use crate::util::Rng;
 
     fn item(seed: u64, n_frags: usize, frag_chars: usize, pat_chars: usize) -> WorkItem {
+        item_coded(Alphabet::Dna2, seed, n_frags, frag_chars, pat_chars)
+    }
+
+    fn item_coded(
+        alphabet: Alphabet,
+        seed: u64,
+        n_frags: usize,
+        frag_chars: usize,
+        pat_chars: usize,
+    ) -> WorkItem {
         let mut rng = Rng::new(seed);
         let fragments: Vec<Arc<[u8]>> = (0..n_frags)
-            .map(|_| Arc::from(crate::dna::encode(&rng.dna(frag_chars)).as_slice()))
+            .map(|_| Arc::from(alphabet.random_codes(&mut rng, frag_chars).as_slice()))
             .collect();
         // Plant the pattern in fragment 1.
         let pattern: Arc<[u8]> = Arc::from(&fragments[1][3..3 + pat_chars]);
         WorkItem {
             pattern_id: 7,
+            alphabet,
             pattern,
             fragments,
             row_ids: (100..100 + n_frags as u32).collect(),
@@ -337,10 +408,49 @@ mod tests {
     fn empty_candidate_set_yields_no_best() {
         let it = WorkItem {
             pattern_id: 0,
+            alphabet: Alphabet::Dna2,
             pattern: Arc::from(&[0u8; 4][..]),
             fragments: vec![],
             row_ids: vec![],
         };
         assert!(CpuEngine::default().run(&it).unwrap().best.is_none());
+    }
+
+    /// Tentpole: both engines handle every alphabet, agree with each
+    /// other, and find the planted pattern at full score.
+    #[test]
+    fn engines_agree_on_wider_alphabets() {
+        for alphabet in Alphabet::ALL {
+            for seed in [31u64, 32] {
+                let it = item_coded(alphabet, seed, 5, 24, 6);
+                let cpu = CpuEngine::new(alphabet).run(&it).unwrap();
+                let b = cpu.best.unwrap();
+                assert_eq!(b.score, 6, "{alphabet} seed {seed}");
+                let mut bitsim =
+                    BitsimEngine::new_alphabet(alphabet, 24, 6, 2, PresetMode::Gang);
+                let bs = bitsim.run(&it).unwrap();
+                assert_eq!(
+                    bs.best.map(|x| (x.score, x.row, x.loc)),
+                    cpu.best.map(|x| (x.score, x.row, x.loc)),
+                    "{alphabet} seed {seed}"
+                );
+                assert_eq!(bs.passes, 3);
+            }
+        }
+    }
+
+    /// An item coded in a different alphabet than the engine must be a
+    /// typed error, not a silent wrong-width scoring.
+    #[test]
+    fn engines_reject_alphabet_mismatch() {
+        let it = item_coded(Alphabet::Protein5, 5, 3, 24, 6);
+        let err = CpuEngine::default().run(&it).unwrap_err();
+        assert!(err.to_string().contains("alphabet"), "unexpected: {err:#}");
+        let mut bitsim = BitsimEngine::new(24, 6, 4, PresetMode::Gang);
+        let err = bitsim.run(&it).unwrap_err();
+        assert!(err.to_string().contains("symbol width"), "unexpected: {err:#}");
+        // Same-width items still pass through the width check.
+        let ok = item_coded(Alphabet::Dna2, 5, 3, 24, 6);
+        assert!(CpuEngine::default().run(&ok).is_ok());
     }
 }

@@ -14,6 +14,7 @@
 //! parallelism PIM substrates win with (paper §2.5, §5; cf.
 //! [`crate::sim::banking`] and [`crate::sim::sharding`]).
 
+use crate::alphabet::Alphabet;
 use crate::baselines::cpu_ref::BestAlignment;
 use crate::coordinator::engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngine, WorkItem, WorkResult};
 use crate::isa::{PresetMode, ProgramCache};
@@ -66,6 +67,12 @@ pub struct CoordinatorConfig {
     pub frag_chars: usize,
     /// Pattern length, characters.
     pub pat_chars: usize,
+    /// The alphabet the resident fragments and every submitted pattern
+    /// are coded in. Sets the symbol width of the compiled program
+    /// cache, the engines, the k-mer index packing, and the hardware
+    /// projection; work items carry it so a mismatched payload is a
+    /// typed refusal instead of a wrong-width score.
+    pub alphabet: Alphabet,
     /// Oracular routing: `Some((k, max_rows_per_pattern))` enables the
     /// k-mer candidate index; `None` broadcasts (Naive).
     pub oracular: Option<(usize, usize)>,
@@ -98,12 +105,28 @@ impl CoordinatorConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             frag_chars,
             pat_chars,
+            alphabet: Alphabet::Dna2,
             oracular: Some((8, 64)),
             queue_depth: 64,
             lanes: Self::default_lanes(),
             preset_mode: PresetMode::Gang,
             tech: Technology::NearTerm,
         }
+    }
+
+    /// Sensible defaults for a non-XLA engine over any alphabet — the
+    /// entry the alphabet-generic serving scenarios use (the XLA
+    /// artifacts are 2-bit DNA only).
+    pub fn for_alphabet(
+        alphabet: Alphabet,
+        engine: EngineKind,
+        frag_chars: usize,
+        pat_chars: usize,
+    ) -> Self {
+        let mut cfg = CoordinatorConfig::xla("dna_small", frag_chars, pat_chars);
+        cfg.engine = engine;
+        cfg.alphabet = alphabet;
+        cfg
     }
 }
 
@@ -318,6 +341,11 @@ impl Coordinator {
     /// here, not on the first `run`.
     pub fn new(cfg: CoordinatorConfig, fragments: Vec<Vec<u8>>) -> Result<Self> {
         anyhow::ensure!(!fragments.is_empty(), "no fragments resident");
+        anyhow::ensure!(
+            cfg.engine != EngineKind::Xla || cfg.alphabet == Alphabet::Dna2,
+            "the XLA artifacts are lowered for 2-bit DNA; use the cpu or bitsim engine for {}",
+            cfg.alphabet
+        );
         for (i, f) in fragments.iter().enumerate() {
             anyhow::ensure!(
                 f.len() == cfg.frag_chars,
@@ -325,9 +353,15 @@ impl Coordinator {
                 f.len(),
                 cfg.frag_chars
             );
+            anyhow::ensure!(
+                cfg.alphabet.codes_valid(f),
+                "fragment {i} holds codes outside the {} alphabet",
+                cfg.alphabet
+            );
         }
-        let oracular_index =
-            cfg.oracular.map(|(k, max_rows)| OracularIndex::build(&fragments, k, max_rows));
+        let oracular_index = cfg.oracular.map(|(k, max_rows)| {
+            OracularIndex::build_bits(&fragments, k, max_rows, cfg.alphabet.bits_per_char())
+        });
         let fragments: Vec<Arc<[u8]>> =
             fragments.into_iter().map(|f| Arc::from(f.into_boxed_slice())).collect();
         let shard = ShardMap::new(fragments.len(), cfg.lanes.max(1));
@@ -337,7 +371,8 @@ impl Coordinator {
         // across every executor lane instead of re-lowering per lane
         // per block per run.
         let bitsim_cache: Option<Arc<ProgramCache>> = match cfg.engine {
-            EngineKind::Bitsim => Some(Arc::new(ProgramCache::for_geometry(
+            EngineKind::Bitsim => Some(Arc::new(ProgramCache::for_alphabet(
+                cfg.alphabet,
                 cfg.frag_chars,
                 cfg.pat_chars,
                 cfg.preset_mode,
@@ -366,7 +401,10 @@ impl Coordinator {
                     // The engine lives on this thread for the lane's
                     // whole lifetime (PJRT handles never cross threads).
                     let built: Result<Box<dyn MatchEngine>> = match thread_cfg.engine {
-                        EngineKind::Cpu => Ok(Box::new(CpuEngine::default()) as Box<dyn MatchEngine>),
+                        EngineKind::Cpu => {
+                            let cpu = CpuEngine::new(thread_cfg.alphabet);
+                            Ok(Box::new(cpu) as Box<dyn MatchEngine>)
+                        }
                         EngineKind::Bitsim => Ok(Box::new(BitsimEngine::with_cache(
                             lane_cache.expect("bitsim cache built at construction"),
                             256,
@@ -469,6 +507,12 @@ impl Coordinator {
         self.cfg.pat_chars
     }
 
+    /// The alphabet this coordinator serves
+    /// ([`CoordinatorConfig::alphabet`]).
+    pub fn alphabet(&self) -> Alphabet {
+        self.cfg.alphabet
+    }
+
     /// Run a pattern pool through the pipeline. Returns per-pattern
     /// results (ordered by pattern id) and run metrics. An empty pool
     /// short-circuits to an empty result with zeroed metrics without
@@ -515,6 +559,11 @@ impl Coordinator {
                     "pool {pi} pattern {i} length {} != config pat_chars {}",
                     p.len(),
                     self.cfg.pat_chars
+                );
+                anyhow::ensure!(
+                    self.cfg.alphabet.codes_valid(p),
+                    "pool {pi} pattern {i} holds codes outside the {} alphabet",
+                    self.cfg.alphabet
                 );
             }
         }
@@ -612,6 +661,7 @@ impl Coordinator {
                 let shard = &inner.shard;
                 let stop = &stop;
                 let sent = &sent;
+                let alphabet = self.cfg.alphabet;
                 move || {
                     let send = |lane: usize, item: WorkItem| -> bool {
                         let Some(tx) = lanes[lane].work_tx.as_ref() else { return false };
@@ -634,6 +684,7 @@ impl Coordinator {
                                         .collect();
                                     let item = WorkItem {
                                         pattern_id: pid,
+                                        alphabet,
                                         pattern: Arc::clone(&patterns[pid]),
                                         fragments: frags,
                                         row_ids: rows.clone(),
@@ -651,6 +702,7 @@ impl Coordinator {
                                     let r = shard.range(lane);
                                     let item = WorkItem {
                                         pattern_id: pid,
+                                        alphabet,
                                         // Arc clones: shard-wide fan-out
                                         // shares the resident codes.
                                         pattern: Arc::clone(&patterns[pid]),
@@ -762,6 +814,7 @@ impl Coordinator {
             arrays,
             frag_chars: self.cfg.frag_chars,
             pat_chars: self.cfg.pat_chars,
+            bits_per_char: self.cfg.alphabet.bits_per_char(),
             preset_mode: self.cfg.preset_mode,
             readout: true,
             mask_readout: true,
@@ -998,6 +1051,66 @@ mod tests {
     fn pat_chars_exposed_for_admission_validation() {
         let (c, _) = coordinator(EngineKind::Cpu, None);
         assert_eq!(c.pat_chars(), 16);
+    }
+
+    /// Tentpole acceptance at the pipeline level: ASCII and protein
+    /// pools run end-to-end (both engines, multiple lane counts) and
+    /// every merged answer equals the scalar reference scorer over all
+    /// resident rows.
+    #[test]
+    fn wider_alphabet_pools_match_scalar_reference() {
+        use crate::alphabet::CodedWorkload;
+        for alphabet in [Alphabet::Ascii8, Alphabet::Protein5] {
+            let w = CodedWorkload::generate(alphabet, 1 << 11, 12, 16, 0.0, 23);
+            let frags = w.fragments(64, 16);
+            // Scalar reference: best (score, row, loc) under the
+            // row-major tie-break, scanning every row and alignment.
+            let reference: Vec<Option<(usize, usize, usize)>> = w
+                .patterns
+                .iter()
+                .map(|p| crate::bench_apps::common::reference_best(&frags, p))
+                .collect();
+            for engine in [EngineKind::Cpu, EngineKind::Bitsim] {
+                for lanes in [1usize, 3] {
+                    let mut cfg = CoordinatorConfig::for_alphabet(alphabet, engine, 64, 16);
+                    cfg.oracular = None; // broadcast: the reference scans every row
+                    cfg.lanes = lanes;
+                    let c = Coordinator::new(cfg, frags.clone()).unwrap();
+                    let (results, m) = c.run(&w.patterns).unwrap();
+                    assert_eq!(m.patterns, 12);
+                    for (r, want) in results.iter().zip(&reference) {
+                        assert_eq!(
+                            r.best.map(|b| (b.score, b.row, b.loc)),
+                            *want,
+                            "{alphabet} {engine:?} lanes={lanes} pattern {}",
+                            r.pattern_id
+                        );
+                        // Error-free sampled patterns must hit 16/16.
+                        assert_eq!(r.best.unwrap().score, 16);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xla_engine_refuses_non_dna_alphabets() {
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.alphabet = Alphabet::Ascii8;
+        let err = Coordinator::new(cfg, vec![vec![0u8; 64]; 4]).unwrap_err();
+        assert!(err.to_string().contains("2-bit DNA"), "unexpected: {err:#}");
+    }
+
+    #[test]
+    fn out_of_alphabet_codes_rejected() {
+        // Fragment code 4 is outside DNA's 4 symbols.
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.engine = EngineKind::Cpu;
+        let err = Coordinator::new(cfg.clone(), vec![vec![4u8; 64]; 2]).unwrap_err();
+        assert!(err.to_string().contains("alphabet"), "unexpected: {err:#}");
+        // Pattern codes are checked at run time.
+        let c = Coordinator::new(cfg, vec![vec![1u8; 64]; 2]).unwrap();
+        assert!(c.run(&[vec![9u8; 16]]).is_err());
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Character encoding for pattern matching (paper §3.1).
 //!
 //! CRAM-PM stores strings with a fixed-width binary code — 2 bits per
-//! character for the DNA alphabet {A, C, G, T}, and byte-width codes for
-//! the text benchmarks. One character-level comparison therefore costs
+//! character for the DNA alphabet {A, C, G, T}, and wider codes for
+//! the text benchmarks (see [`crate::alphabet`] for the width-generic
+//! machinery). One character-level comparison therefore costs
 //! `bits_per_char` bit-level XORs plus one NOR-reduction (§3.2).
 
+use crate::alphabet::{Alphabet, PackedSeq};
 
 /// The four DNA bases in code order: `A=00, C=01, G=10, T=11`.
 pub const BASES: [u8; 4] = [b'A', b'C', b'G', b'T'];
@@ -89,79 +91,42 @@ impl Encoded {
 /// §Perf: this is the host-side mirror of the substrate's word
 /// parallelism — one XOR + popcount step compares 32 characters, so
 /// the CPU oracle scores an alignment in `⌈pat/32⌉` word ops instead
-/// of a per-character loop (and without the per-`loc` `Vec<usize>` the
-/// old `score_profile` scan allocated).
+/// of a per-character loop. Since the alphabet generalization it is a
+/// thin DNA-width wrapper over [`crate::alphabet::PackedSeq`], so the
+/// 2-bit path and the width-generic path are one implementation.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
-pub struct Packed2 {
-    words: Vec<u64>,
-    chars: usize,
-}
-
-/// Even-bit lanes of a packed word: one bit per character slot.
-const CHAR_LANES: u64 = 0x5555_5555_5555_5555;
+pub struct Packed2(PackedSeq);
 
 impl Packed2 {
     /// Pack a string of 2-bit codes (one code per byte).
     pub fn from_codes(codes: &[u8]) -> Self {
-        let mut packed = Packed2::default();
-        packed.refill(codes);
-        packed
+        Packed2(PackedSeq::from_codes(Alphabet::Dna2, codes))
     }
 
     /// Re-pack in place, reusing the word buffer — the scratch path for
     /// callers that pack many sequences back to back (one heap
     /// allocation amortized over all of them).
     pub fn refill(&mut self, codes: &[u8]) {
-        self.words.clear();
-        self.words.resize(codes.len().div_ceil(32), 0);
-        for (i, &c) in codes.iter().enumerate() {
-            self.words[i / 32] |= ((c & 0b11) as u64) << (2 * (i % 32));
-        }
-        self.chars = codes.len();
+        self.0.refill(Alphabet::Dna2, codes);
     }
 
     /// Character length.
     pub fn chars(&self) -> usize {
-        self.chars
+        self.0.chars()
     }
 
-    /// The 64-bit window of packed codes starting at character `start`
-    /// (up to 32 characters; callers mask off anything past the end).
-    #[inline]
-    fn window(&self, start: usize) -> u64 {
-        let bit = 2 * start;
-        let w = bit / 64;
-        let off = bit % 64;
-        let mut x = self.words.get(w).copied().unwrap_or(0) >> off;
-        if off != 0 {
-            if let Some(&hi) = self.words.get(w + 1) {
-                x |= hi << (64 - off);
-            }
-        }
-        x
+    /// The underlying width-generic packed sequence.
+    pub fn as_seq(&self) -> &PackedSeq {
+        &self.0
     }
 }
 
 /// Word-parallel similarity: the number of matching characters between
 /// `pattern` and the `fragment` window at alignment `loc`, 32
-/// characters per XOR+popcount step. A character matches iff both of
-/// its XORed bits are zero: `!(x | x >> 1)` restricted to the even bit
-/// lanes. Exactly equals [`similarity`] on the unpacked codes.
+/// characters per XOR+popcount step. Exactly equals [`similarity`] on
+/// the unpacked codes (see [`crate::alphabet::packed_similarity`]).
 pub fn packed_similarity(fragment: &Packed2, pattern: &Packed2, loc: usize) -> usize {
-    assert!(loc + pattern.chars <= fragment.chars, "alignment out of range");
-    let mut score = 0usize;
-    let mut done = 0usize;
-    while done < pattern.chars {
-        let n = (pattern.chars - done).min(32);
-        let x = fragment.window(loc + done) ^ pattern.window(done);
-        let mut m = !(x | (x >> 1)) & CHAR_LANES;
-        if n < 32 {
-            m &= (1u64 << (2 * n)) - 1;
-        }
-        score += m.count_ones() as usize;
-        done += n;
-    }
-    score
+    crate::alphabet::packed_similarity(&fragment.0, &pattern.0, loc)
 }
 
 /// Best `(score, loc)` of `pattern` against `fragment` under the
@@ -170,17 +135,7 @@ pub fn packed_similarity(fragment: &Packed2, pattern: &Packed2, loc: usize) -> u
 /// [`score_profile`]. `None` iff the pattern is empty or longer than
 /// the fragment (no alignments).
 pub fn packed_best_alignment(fragment: &Packed2, pattern: &Packed2) -> Option<(usize, usize)> {
-    if pattern.chars == 0 || pattern.chars > fragment.chars {
-        return None;
-    }
-    let mut best: Option<(usize, usize)> = None;
-    for loc in 0..=fragment.chars - pattern.chars {
-        let s = packed_similarity(fragment, pattern, loc);
-        if best.map_or(true, |(bs, _)| s > bs) {
-            best = Some((s, loc));
-        }
-    }
-    best
+    crate::alphabet::packed_best_alignment(&fragment.0, &pattern.0)
 }
 
 /// Similarity score between a pattern and a reference window at a given

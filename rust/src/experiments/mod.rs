@@ -23,6 +23,7 @@ pub mod scheduling;
 pub mod serving;
 pub mod tables;
 pub mod variation;
+pub mod workloads;
 
 /// Pretty horizontal rule for experiment output.
 pub fn rule(title: &str) {
@@ -46,4 +47,5 @@ pub fn run_all() {
     scheduling::run();
     lane_scaling::run();
     serving::run();
+    workloads::run();
 }

@@ -14,6 +14,7 @@
 //! This is the `serve-bench` CLI's engine; `--json` emits the
 //! `BENCH_serving.json` report the CI perf-smoke lane archives.
 
+use crate::alphabet::{Alphabet, CodedWorkload};
 use crate::bench_apps::dna::DnaWorkload;
 use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
 use crate::experiments::rule;
@@ -53,6 +54,11 @@ pub struct ServingKnobs {
     pub lanes: usize,
     /// Workload + load-generator seed.
     pub seed: u64,
+    /// Workload alphabet (`--workload {dna,ascii,protein}`): the
+    /// catalog, resident fragments, and every request are coded at
+    /// this symbol width. DNA reproduces the historical benchmark
+    /// bit-for-bit.
+    pub alphabet: Alphabet,
 }
 
 impl ServingKnobs {
@@ -70,6 +76,7 @@ impl ServingKnobs {
             queue_depth: 256,
             lanes: 4,
             seed: 2026,
+            alphabet: Alphabet::Dna2,
         }
     }
 
@@ -91,6 +98,7 @@ impl ServingKnobs {
             queue_depth: 64,
             lanes: 2,
             seed: 2026,
+            alphabet: Alphabet::Dna2,
         }
     }
 }
@@ -115,14 +123,24 @@ pub struct ServePoint {
     pub projected_served_qps: f64,
 }
 
-/// Build the shared workload + coordinator for a knob set.
+/// Build the shared workload + coordinator for a knob set. DNA keeps
+/// the historical `DnaWorkload` path (bit-identical catalogs across
+/// PRs); the wider alphabets generate coded workloads directly.
 fn build(knobs: &ServingKnobs) -> crate::Result<(Arc<Coordinator>, Vec<Vec<u8>>)> {
-    let w = DnaWorkload::generate(knobs.ref_chars, knobs.catalog, 16, 0.0, knobs.seed);
-    let fragments = w.fragments(64, 16);
-    let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-    cfg.engine = EngineKind::Cpu;
+    let (fragments, patterns) = match knobs.alphabet {
+        Alphabet::Dna2 => {
+            let w = DnaWorkload::generate(knobs.ref_chars, knobs.catalog, 16, 0.0, knobs.seed);
+            (w.fragments(64, 16), w.patterns)
+        }
+        other => {
+            let w =
+                CodedWorkload::generate(other, knobs.ref_chars, knobs.catalog, 16, 0.0, knobs.seed);
+            (w.fragments(64, 16), w.patterns)
+        }
+    };
+    let mut cfg = CoordinatorConfig::for_alphabet(knobs.alphabet, EngineKind::Cpu, 64, 16);
     cfg.lanes = knobs.lanes;
-    Ok((Arc::new(Coordinator::new(cfg, fragments)?), w.patterns))
+    Ok((Arc::new(Coordinator::new(cfg, fragments)?), patterns))
 }
 
 /// Closed-loop sweep over the three serving configurations.
@@ -232,6 +250,8 @@ fn to_json(knobs: &ServingKnobs, smoke: bool, points: &[ServePoint], open: &[Loa
         (
             "config",
             Json::obj(vec![
+                ("workload", Json::str(knobs.alphabet.tag())),
+                ("bits_per_char", Json::int(knobs.alphabet.bits_per_char())),
                 ("ref_chars", Json::int(knobs.ref_chars)),
                 ("catalog", Json::int(knobs.catalog)),
                 ("clients", Json::int(knobs.clients)),
@@ -273,13 +293,16 @@ fn to_json(knobs: &ServingKnobs, smoke: bool, points: &[ServePoint], open: &[Loa
 pub fn serve_bench(knobs: &ServingKnobs, smoke: bool, json: Option<&Path>) -> crate::Result<()> {
     rule("Serving layer — micro-batching + dedup over the sharded coordinator");
     println!(
-        "  {} clients × {} requests × {} patterns/request, Zipf s={}, catalog {}, {} lanes",
+        "  {} clients × {} requests × {} patterns/request, Zipf s={}, catalog {}, {} lanes, \
+         {} workload ({} bits/char)",
         knobs.clients,
         knobs.requests_per_client,
         knobs.patterns_per_request,
         knobs.zipf_s,
         knobs.catalog,
-        knobs.lanes
+        knobs.lanes,
+        knobs.alphabet,
+        knobs.alphabet.bits_per_char()
     );
 
     let points = sweep(knobs)?;
@@ -379,6 +402,26 @@ mod tests {
         // Dedup means strictly fewer unique executions for the same
         // offered work; the projection must credit that.
         assert!(points[2].projected_served_qps >= points[1].projected_served_qps);
+    }
+
+    /// Tentpole: the full serving benchmark runs unchanged on the
+    /// wider alphabets — every request served, dedup intact.
+    #[test]
+    fn smoke_sweep_serves_every_alphabet() {
+        for alphabet in [Alphabet::Protein5, Alphabet::Ascii8] {
+            let mut knobs = ServingKnobs::smoke();
+            knobs.alphabet = alphabet;
+            knobs.clients = 2;
+            knobs.requests_per_client = 4;
+            let points = sweep(&knobs).unwrap();
+            assert_eq!(points.len(), 3, "{alphabet}");
+            let expected = knobs.clients * knobs.requests_per_client;
+            for p in &points {
+                assert_eq!(p.report.requests, expected, "{alphabet} {}", p.label);
+                assert!(p.report.pattern_rate > 0.0, "{alphabet} {}", p.label);
+            }
+            assert!(points[2].dedup_factor >= 1.0, "{alphabet}");
+        }
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Cross-alphabet workload sweep (ROADMAP: scenario diversity; paper
+//! Table 4): run the StringMatch and WordCount mappings **functionally
+//! end to end** — real queries through `MatchServer` → `Coordinator` →
+//! engine — at every supported alphabet (2-bit DNA, 5-bit protein,
+//! 8-bit bytes), verify each answer against the scalar reference
+//! scorer, and report how the symbol width reshapes the substrate (row
+//! width in columns, alignments per pass) alongside measured host
+//! throughput and the projected substrate rate.
+//!
+//! `--json` emits `BENCH_workloads.json`; the committed copy at the
+//! repository root is a CI anchor: the `bench-gate` step compares each
+//! push's measured smoke report against it and fails on a throughput
+//! regression or on any deterministic field (matched counts,
+//! verification flags, geometry) drifting. A verification failure
+//! fails this driver directly — the sweep is its own correctness gate.
+
+use crate::alphabet::Alphabet;
+use crate::bench_apps::{FunctionalReport, StringMatchBench, WordCountBench};
+use crate::coordinator::EngineKind;
+use crate::experiments::rule;
+use crate::util::Json;
+use std::path::Path;
+
+/// Sizes of one sweep (per alphabet, per benchmark).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadKnobs {
+    /// Resident segments for the SM run.
+    pub sm_segments: usize,
+    /// Needles served in the SM run.
+    pub sm_needles: usize,
+    /// Segment length, characters.
+    pub sm_frag_chars: usize,
+    /// Needle length, characters.
+    pub sm_pat_chars: usize,
+    /// Resident words for the WC run.
+    pub wc_rows: usize,
+    /// Queries served in the WC run.
+    pub wc_queries: usize,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+impl WorkloadKnobs {
+    /// Default scale.
+    pub fn standard() -> Self {
+        WorkloadKnobs {
+            sm_segments: 512,
+            sm_needles: 128,
+            sm_frag_chars: 60,
+            sm_pat_chars: 10,
+            wc_rows: 512,
+            wc_queries: 128,
+            seed: 2026,
+        }
+    }
+
+    /// CI perf-smoke scale: seconds, not minutes.
+    pub fn smoke() -> Self {
+        WorkloadKnobs {
+            sm_segments: 96,
+            sm_needles: 24,
+            sm_frag_chars: 60,
+            sm_pat_chars: 10,
+            wc_rows: 96,
+            wc_queries: 24,
+            seed: 2026,
+        }
+    }
+}
+
+/// One alphabet's pair of functional runs.
+#[derive(Debug, Clone)]
+pub struct AlphabetPoint {
+    /// The alphabet swept.
+    pub alphabet: Alphabet,
+    /// StringMatch functional report.
+    pub sm: FunctionalReport,
+    /// WordCount functional report.
+    pub wc: FunctionalReport,
+}
+
+/// Run the sweep. Fails (exit-code-visibly, for CI) if any served
+/// answer diverges from the scalar reference.
+pub fn sweep(knobs: &WorkloadKnobs) -> crate::Result<Vec<AlphabetPoint>> {
+    let sm_bench = StringMatchBench {
+        words: 0,
+        pat_chars: knobs.sm_pat_chars,
+        frag_chars: knobs.sm_frag_chars,
+        mean_word_chars: 7.5,
+        rows: 512,
+    };
+    let wc_bench = WordCountBench { words: 0, word_bits: 32, rows: 512 };
+    let mut out = Vec::with_capacity(Alphabet::ALL.len());
+    for alphabet in Alphabet::ALL {
+        let sm = sm_bench.functional(
+            alphabet,
+            EngineKind::Cpu,
+            knobs.sm_segments,
+            knobs.sm_needles,
+            knobs.seed,
+        )?;
+        let wc = wc_bench.functional(
+            alphabet,
+            EngineKind::Cpu,
+            knobs.wc_rows,
+            knobs.wc_queries,
+            knobs.seed ^ 0x5743, // "WC": decorrelate from the SM workload
+        )?;
+        anyhow::ensure!(
+            sm.verified && wc.verified,
+            "{alphabet}: served answers diverged from the scalar reference (SM {} WC {})",
+            sm.verified,
+            wc.verified
+        );
+        out.push(AlphabetPoint { alphabet, sm, wc });
+    }
+    Ok(out)
+}
+
+/// The `BENCH_workloads.json` document.
+fn to_json(knobs: &WorkloadKnobs, smoke: bool, points: &[AlphabetPoint]) -> Json {
+    let report_json = |r: &FunctionalReport| {
+        Json::obj(vec![
+            ("patterns", Json::int(r.patterns)),
+            ("matched", Json::int(r.matched)),
+            ("verified", Json::Bool(r.verified)),
+            ("rows", Json::int(r.rows)),
+            ("layout_cols", Json::int(r.layout_cols)),
+            ("alignments_per_pass", Json::int(r.alignments_per_pass)),
+            ("host_rate", Json::num(r.host_rate)),
+            ("hw_match_rate", Json::num(r.hw_match_rate)),
+        ])
+    };
+    Json::obj(vec![
+        ("experiment", Json::str("workloads")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "config",
+            Json::obj(vec![
+                ("sm_segments", Json::int(knobs.sm_segments)),
+                ("sm_needles", Json::int(knobs.sm_needles)),
+                ("wc_rows", Json::int(knobs.wc_rows)),
+                ("wc_queries", Json::int(knobs.wc_queries)),
+                ("seed", Json::int(knobs.seed as usize)),
+            ]),
+        ),
+        (
+            "alphabets",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("alphabet", Json::str(p.alphabet.tag())),
+                            ("bits_per_char", Json::int(p.alphabet.bits_per_char())),
+                            ("stringmatch", report_json(&p.sm)),
+                            ("wordcount", report_json(&p.wc)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Experiment-driver entry point. Errors propagate so the CI step
+/// fails loudly.
+pub fn run_with(smoke: bool, json: Option<&Path>) -> crate::Result<()> {
+    let knobs = if smoke { WorkloadKnobs::smoke() } else { WorkloadKnobs::standard() };
+    rule("Cross-alphabet workloads — functional serving at every symbol width");
+    println!(
+        "  SM: {} segments × {} chars, {} needles; WC: {} words, {} queries",
+        knobs.sm_segments, knobs.sm_frag_chars, knobs.sm_needles, knobs.wc_rows, knobs.wc_queries
+    );
+    let points = sweep(&knobs)?;
+    println!(
+        "\n  {:<9} {:>5} {:>5} {:>10} {:>7} {:>8} {:>12} {:>12} {:>9}",
+        "alphabet", "bits", "bench", "row cols", "aligns", "matched", "host q/s", "hw q/s",
+        "verified"
+    );
+    for p in &points {
+        for r in [&p.sm, &p.wc] {
+            println!(
+                "  {:<9} {:>5} {:>5} {:>10} {:>7} {:>8} {:>12.0} {:>12.3e} {:>9}",
+                p.alphabet.tag(),
+                p.alphabet.bits_per_char(),
+                r.name,
+                r.layout_cols,
+                r.alignments_per_pass,
+                format!("{}/{}", r.matched, r.patterns),
+                r.host_rate,
+                r.hw_match_rate,
+                r.verified
+            );
+        }
+    }
+    println!(
+        "\n  row width grows with the symbol width (same character geometry): \
+         {} → {} → {} columns for SM",
+        points[0].sm.layout_cols, points[1].sm.layout_cols, points[2].sm.layout_cols
+    );
+    if let Some(path) = json {
+        to_json(&knobs, smoke, &points)
+            .write_file(path)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        println!("\n  wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// Default-scale run (the `experiment workloads` / `experiment all`
+/// path).
+pub fn run() {
+    if let Err(e) = run_with(false, None) {
+        println!("  workloads experiment failed: {e:#}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance shape at smoke scale: every alphabet verifies,
+    /// the deterministic fields the CI anchor pins are what the anchor
+    /// says, and the JSON report carries them.
+    #[test]
+    fn smoke_sweep_verifies_and_pins_deterministic_fields() {
+        let knobs = WorkloadKnobs::smoke();
+        let points = sweep(&knobs).unwrap();
+        assert_eq!(points.len(), 3);
+        for p in &points {
+            assert!(p.sm.verified && p.wc.verified, "{}", p.alphabet);
+            // Every SM needle is planted; exactly half the WC queries
+            // are resident.
+            assert_eq!(p.sm.matched, knobs.sm_needles, "{}", p.alphabet);
+            assert_eq!(p.wc.matched, knobs.wc_queries / 2, "{}", p.alphabet);
+            assert_eq!(p.wc.alignments_per_pass, 1, "{}", p.alphabet);
+        }
+        let doc = to_json(&knobs, true, &points).render();
+        assert!(doc.contains("\"experiment\": \"workloads\""));
+        assert!(doc.contains("\"alphabet\": \"protein\""));
+        assert!(doc.contains("\"verified\": true"));
+    }
+}

@@ -34,20 +34,41 @@ impl ProgramCache {
         ProgramCache { layout, mode, readout, programs, stats: cg.stats() }
     }
 
-    /// Probe the scratch demand of a `(frag_chars, pat_chars)` geometry,
-    /// size the layout exactly, and build the cache over it — the
-    /// sizing dance every engine used to repeat per instance.
+    /// Probe the scratch demand of a 2-bit `(frag_chars, pat_chars)`
+    /// geometry, size the layout exactly, and build the cache over it —
+    /// the sizing dance every engine used to repeat per instance.
     pub fn for_geometry(
         frag_chars: usize,
         pat_chars: usize,
         mode: PresetMode,
         readout: bool,
     ) -> Self {
-        let probe = RowLayout::new(frag_chars, pat_chars, usize::MAX / 2);
+        let dna = crate::alphabet::Alphabet::Dna2;
+        ProgramCache::for_alphabet(dna, frag_chars, pat_chars, mode, readout)
+    }
+
+    /// [`ProgramCache::for_geometry`] at an explicit symbol width: the
+    /// cache key is the full `(bits_per_char, frag_chars, pat_chars,
+    /// mode, readout)` geometry (carried by the layout), so caches for
+    /// different alphabets never alias even at equal character counts.
+    pub fn for_alphabet(
+        alphabet: crate::alphabet::Alphabet,
+        frag_chars: usize,
+        pat_chars: usize,
+        mode: PresetMode,
+        readout: bool,
+    ) -> Self {
+        let probe = RowLayout::for_alphabet(alphabet, frag_chars, pat_chars, usize::MAX / 2);
         let mut cg = CodeGen::new(probe, mode);
         let _ = cg.alignment_program(0, true);
-        let layout = RowLayout::new(frag_chars, pat_chars, cg.stats().scratch_high_water);
+        let layout =
+            RowLayout::for_alphabet(alphabet, frag_chars, pat_chars, cg.stats().scratch_high_water);
         ProgramCache::build(layout, mode, readout)
+    }
+
+    /// Bits per character the cached programs were lowered for.
+    pub fn bits_per_char(&self) -> usize {
+        self.layout.bits_per_char
     }
 
     /// The layout the programs were lowered against.
@@ -117,6 +138,27 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn alphabet_caches_carry_their_width_and_never_alias() {
+        use crate::alphabet::Alphabet;
+        let caches: Vec<ProgramCache> = Alphabet::ALL
+            .iter()
+            .map(|&a| ProgramCache::for_alphabet(a, 24, 6, PresetMode::Gang, true))
+            .collect();
+        for (a, cache) in Alphabet::ALL.iter().zip(&caches) {
+            assert_eq!(cache.bits_per_char(), a.bits_per_char());
+            assert_eq!(cache.len(), cache.layout().n_alignments());
+            for loc in 0..cache.len() as u32 {
+                let max = cache.program(loc).max_column().unwrap() as usize;
+                assert!(max < cache.layout().total_cols(), "{a} loc {loc}");
+            }
+        }
+        // Same character geometry, different widths ⇒ different layouts
+        // (the cache key) and different program streams.
+        assert_ne!(caches[0].layout(), caches[1].layout());
+        assert_ne!(caches[0].program(0), caches[1].program(0));
     }
 
     #[test]

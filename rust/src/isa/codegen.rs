@@ -283,10 +283,15 @@ impl CodeGen {
     }
 
     /// Lower Phase 1 of Algorithm 1 for alignment `loc`: per character,
-    /// two bit-level XORs (low/high bit) and a NOR that reduces the
-    /// 2-bit comparison to the match bit (Fig. 4a).
+    /// one bit-level XOR per symbol bit plane and a NOR-reduction of
+    /// the per-bit differences into the match bit (Fig. 4a — the
+    /// character matches iff every XOR output is 0). At the 2-bit DNA
+    /// width this is exactly the paper's two XORs + one NOR; wider
+    /// alphabets OR-chain the extra difference bits into the final NOR
+    /// (a 1-bit alphabet needs only an INV).
     fn lower_match_pm(&mut self, prog: &mut Program, loc: u32) {
         let pat_chars = self.layout.pat_chars;
+        let bits = self.layout.bits_per_char as u32;
         assert!(
             (loc as usize) < self.layout.n_alignments(),
             "alignment loc {loc} out of range"
@@ -294,10 +299,27 @@ impl CodeGen {
         for c in 0..pat_chars {
             let f = self.layout.frag_char_col(loc as usize + c);
             let p = self.layout.pat_char_col(c);
-            let x_lo = self.lower_xor_bit(Stage::PresetMatch, Stage::Match, f, p);
-            let x_hi = self.lower_xor_bit(Stage::PresetMatch, Stage::Match, f + 1, p + 1);
+            let xs: Vec<u32> = (0..bits)
+                .map(|b| self.lower_xor_bit(Stage::PresetMatch, Stage::Match, f + b, p + b))
+                .collect();
             let m = self.layout.match_bit_col(c);
-            self.emit_gate(Stage::PresetMatch, Stage::Match, GateKind::Nor2, m, &[x_lo, x_hi]);
+            if let [x] = xs.as_slice() {
+                self.emit_gate(Stage::PresetMatch, Stage::Match, GateKind::Inv, m, &[*x]);
+            } else {
+                let mut acc = xs[0];
+                for &x in &xs[1..xs.len() - 1] {
+                    let t = self.alloc();
+                    self.emit_gate(Stage::PresetMatch, Stage::Match, GateKind::Or2, t, &[acc, x]);
+                    acc = t;
+                }
+                self.emit_gate(
+                    Stage::PresetMatch,
+                    Stage::Match,
+                    GateKind::Nor2,
+                    m,
+                    &[acc, xs[xs.len() - 1]],
+                );
+            }
         }
         self.flush(prog);
     }
@@ -393,6 +415,40 @@ mod tests {
         cg.lower(&mut prog, &MacroInstr::MatchPm { loc: 0 });
         assert_eq!(cg.stats().gates, 7 * 8);
         assert_eq!(cg.stats().presets, 7 * 8);
+    }
+
+    #[test]
+    fn match_pm_gate_budget_scales_with_symbol_width() {
+        // Per character: `bits` XORs (3 gates each) plus the
+        // NOR-reduction — an INV at width 1, a NOR at width 2 (the
+        // paper's DNA case), and an OR-chain + NOR beyond.
+        for (bits, per_char) in [(1usize, 4usize), (2, 7), (5, 19), (8, 31)] {
+            let l = RowLayout::with_bits(bits, 32, 8, 48 * 8 + 64);
+            let mut cg = CodeGen::new(l, PresetMode::Standard);
+            let mut prog = Program::new();
+            cg.lower(&mut prog, &MacroInstr::MatchPm { loc: 0 });
+            assert_eq!(cg.stats().gates, per_char * 8, "bits={bits}");
+            assert_eq!(cg.stats().presets, per_char * 8, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn wide_alphabet_programs_fit_and_hoist_cleanly() {
+        // Gang hoisting requires distinct output cells per flush (the
+        // flush asserts it); wide-symbol programs must also fit their
+        // probed scratch budget at every alignment.
+        for bits in [1usize, 5, 8] {
+            let probe = RowLayout::with_bits(bits, 16, 4, usize::MAX / 2);
+            let mut cg = CodeGen::new(probe, PresetMode::Gang);
+            let _ = cg.alignment_program(0, true);
+            let l = RowLayout::with_bits(bits, 16, 4, cg.stats().scratch_high_water);
+            let mut cg = CodeGen::new(l, PresetMode::Gang);
+            for loc in 0..l.n_alignments() as u32 {
+                let prog = cg.alignment_program(loc, true);
+                let max = prog.max_column().unwrap() as usize;
+                assert!(max < l.total_cols(), "bits={bits} loc={loc} overflows");
+            }
+        }
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //!
 //! | module | paper section | contents |
 //! |---|---|---|
+//! | [`alphabet`] | §3.1, §4 Table 4 | symbol alphabets (2-bit DNA, 5-bit protein, 8-bit bytes), width-generic packed scorer, coded workloads |
 //! | [`tech`] | §4 Table 3, §3.4, §5.5 | MTJ device + periphery + interconnect models, process variation |
 //! | [`gates`] | §2.1–2.2 | resistive-divider gate formation, V_gate windows, compound XOR/adder sequences |
 //! | [`isa`] | §3.3 | micro/macro instructions and code generation |
@@ -40,6 +41,7 @@
 //! | [`serve`] | — | concurrent batching serving layer: admission queue, micro-batch dedup, load generators |
 //! | [`experiments`] | §5 | one driver per paper table/figure |
 
+pub mod alphabet;
 pub mod array;
 pub mod baselines;
 pub mod bench_apps;

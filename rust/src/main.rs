@@ -1,28 +1,32 @@
 //! `cram-pm` — command-line interface to the CRAM-PM reproduction.
 //!
 //! ```text
-//! cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|tables|all>
+//! cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|tables|all>
 //!                    [--smoke] [--json FILE]
 //! cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N]
 //!             [--pat-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F]
-//! cram-pm serve-bench [--smoke] [--json FILE] [--clients N] [--requests N] [--ppr N]
+//! cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein]
+//!                     [--clients N] [--requests N] [--ppr N]
 //!                     [--catalog N] [--zipf S] [--batch N] [--delay-us N] [--queue N]
 //!                     [--lanes N] [--seed S]
+//! cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]
 //! cram-pm info
 //! ```
 //!
 //! (Arguments are hand-parsed: the offline build image vendors no clap.)
 
+use cram_pm::alphabet::Alphabet;
 use cram_pm::bench_apps::dna::DnaWorkload;
 use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
 use cram_pm::experiments::serving::ServingKnobs;
+use cram_pm::util::{gate, Json};
 use cram_pm::{experiments, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|tables|all> [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n  cram-pm serve-bench [--smoke] [--json FILE] [--clients N] [--requests N] [--ppr N]\n              [--catalog N] [--zipf S] [--batch N] [--delay-us N] [--queue N] [--lanes N] [--seed S]\n  cram-pm info"
+        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|tables|all> [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm info"
     );
     std::process::exit(2);
 }
@@ -65,10 +69,11 @@ fn cmd_experiment(which: &str, kv: &HashMap<String, String>, flags: &[String]) -
         "variation" => experiments::variation::run(),
         "ablation" => experiments::ablation::run(),
         "scheduling" => experiments::scheduling::run(),
-        // These two back the CI bench-smoke artifacts: a failure (or an
+        // These back the CI bench-smoke artifacts: a failure (or an
         // unwritable --json path) must reach the exit code.
         "lanes" | "lane-scaling" => experiments::lane_scaling::run_with(smoke, json.as_deref())?,
         "serving" | "serve" => experiments::serving::run_with(smoke, json.as_deref())?,
+        "workloads" | "alphabets" => experiments::workloads::run_with(smoke, json.as_deref())?,
         "all" => experiments::run_all(),
         other => {
             eprintln!("unknown experiment: {other}");
@@ -96,8 +101,72 @@ fn cmd_serve_bench(kv: &HashMap<String, String>, flags: &[String]) -> Result<()>
     if let Some(z) = kv.get("zipf") {
         knobs.zipf_s = z.parse().unwrap_or(knobs.zipf_s);
     }
+    if let Some(w) = kv.get("workload") {
+        match Alphabet::parse(w) {
+            Some(a) => knobs.alphabet = a,
+            None => {
+                eprintln!("unknown workload alphabet: {w} (expected dna|ascii|protein|byte)");
+                usage();
+            }
+        }
+    }
     let json = kv.get("json").map(PathBuf::from);
     experiments::serving::serve_bench(&knobs, smoke, json.as_deref())
+}
+
+/// The `bench-gate` subcommand: fail (exit 1) when a measured report
+/// regresses past tolerance against a committed baseline anchor.
+fn cmd_bench_gate(kv: &HashMap<String, String>) -> Result<()> {
+    let (Some(baseline_path), Some(measured_path)) = (kv.get("baseline"), kv.get("measured"))
+    else {
+        eprintln!("bench-gate needs --baseline FILE and --measured FILE");
+        usage();
+    };
+    let tolerance: f64 = kv.get("tolerance").and_then(|t| t.parse().ok()).unwrap_or(0.25);
+    let read = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+    };
+    let baseline = read(baseline_path)?;
+    let measured = read(measured_path)?;
+    let report = gate::compare(&baseline, &measured, tolerance);
+
+    println!(
+        "bench-gate: {} vs {} (tolerance {:.0}%)",
+        measured_path,
+        baseline_path,
+        tolerance * 100.0
+    );
+    println!("  {:<44} {:>14} {:>14}  verdict", "metric", "baseline", "measured");
+    for c in &report.compared {
+        println!(
+            "  {:<44} {:>14.4} {:>14.4}  {}",
+            c.path,
+            c.baseline,
+            c.measured,
+            match c.verdict {
+                gate::Verdict::Pass => "ok",
+                gate::Verdict::Fail =>
+                    if c.exact {
+                        "FAIL (must match baseline exactly)"
+                    } else {
+                        "FAIL (regressed past tolerance)"
+                    },
+                gate::Verdict::Missing => "FAIL (missing from measured report)",
+            }
+        );
+    }
+    let failures = report.failures();
+    anyhow::ensure!(
+        failures.is_empty(),
+        "bench-gate: {} of {} gated metrics failed against {}",
+        failures.len(),
+        report.compared.len(),
+        baseline_path
+    );
+    println!("bench-gate: all {} gated metrics pass", report.compared.len());
+    Ok(())
 }
 
 fn cmd_run(kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
@@ -220,6 +289,10 @@ fn main() -> Result<()> {
         Some("serve-bench") => {
             let (kv, flags) = parse_flags(&args[1..]);
             cmd_serve_bench(&kv, &flags)?;
+        }
+        Some("bench-gate") => {
+            let (kv, _) = parse_flags(&args[1..]);
+            cmd_bench_gate(&kv)?;
         }
         Some("info") => cmd_info(),
         _ => usage(),

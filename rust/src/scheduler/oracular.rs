@@ -37,6 +37,9 @@ pub struct OracularIndex {
     /// feed a given pattern to multiple rows"; the cap bounds
     /// redundancy).
     pub max_rows_per_pattern: usize,
+    /// Bits per code used for seed packing (2 for DNA; wider for the
+    /// text alphabets).
+    bits: usize,
 }
 
 /// K-mer-index-based oracular scheduler: an [`OracularIndex`] plus the
@@ -49,12 +52,13 @@ pub struct OracularScheduler {
     patterns: Vec<Vec<u8>>,
 }
 
-/// Pack `k` 2-bit codes into a u64 key.
+/// Pack a window of codes into a u64 key at `bits` bits per code.
 #[inline]
-fn pack(window: &[u8]) -> u64 {
+fn pack(window: &[u8], bits: usize) -> u64 {
+    let mask = (1u64 << bits) - 1;
     let mut key = 0u64;
     for &c in window {
-        key = key << 2 | (c & 0b11) as u64;
+        key = key << bits | (c as u64 & mask);
     }
     key
 }
@@ -73,20 +77,34 @@ pub struct OracularStats {
 }
 
 impl OracularIndex {
-    /// Build the index over per-row fragments (2-bit codes). Row ids
-    /// are indices into the fragment order.
+    /// Build the index over per-row fragments of 2-bit (DNA) codes.
+    /// Row ids are indices into the fragment order.
     pub fn build(fragments: &[Vec<u8>], k: usize, max_rows_per_pattern: usize) -> Self {
-        assert!((1..=31).contains(&k), "seed length must be in 1..=31 (u64 packing)");
+        OracularIndex::build_bits(fragments, k, max_rows_per_pattern, 2)
+    }
+
+    /// [`OracularIndex::build`] at an explicit symbol width: seed keys
+    /// pack `k` codes at `bits` bits each, so k-mers of different
+    /// alphabets (or of codes that collide modulo 2 bits) never alias.
+    pub fn build_bits(
+        fragments: &[Vec<u8>],
+        k: usize,
+        max_rows_per_pattern: usize,
+        bits: usize,
+    ) -> Self {
+        assert!((1..=8).contains(&bits), "bits must be in 1..=8, got {bits}");
+        assert!(k >= 1 && k * bits <= 64, "seed must pack into a u64: k={k} × bits={bits}");
         let mut index: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
-        let mask = if k == 31 { (1u64 << 62) - 1 } else { (1u64 << (2 * k)) - 1 };
+        let mask = if k * bits == 64 { u64::MAX } else { (1u64 << (k * bits)) - 1 };
+        let code_mask = (1u64 << bits) - 1;
         for (ri, frag) in fragments.iter().enumerate() {
             if frag.len() < k {
                 continue;
             }
-            // Rolling 2-bit pack over the fragment.
-            let mut key = pack(&frag[..k - 1]);
+            // Rolling pack over the fragment.
+            let mut key = pack(&frag[..k - 1], bits);
             for &c in &frag[k - 1..] {
-                key = (key << 2 | (c & 0b11) as u64) & mask;
+                key = (key << bits | (c as u64 & code_mask)) & mask;
                 let e = index.entry(key).or_default();
                 // Dedup: rows are visited in order, so a repeated k-mer
                 // within this fragment is always the last entry.
@@ -95,7 +113,7 @@ impl OracularIndex {
                 }
             }
         }
-        OracularIndex { index, k, max_rows_per_pattern }
+        OracularIndex { index, k, max_rows_per_pattern, bits }
     }
 
     /// Candidate row indices (into the fragment order) for a pattern.
@@ -107,7 +125,7 @@ impl OracularIndex {
             if w.len() < self.k {
                 break;
             }
-            if let Some(rows) = self.index.get(&pack(w)) {
+            if let Some(rows) = self.index.get(&pack(w, self.bits)) {
                 hits.extend_from_slice(rows);
             }
         }
@@ -216,6 +234,23 @@ mod tests {
             })
             .collect();
         OracularScheduler::build(&fragments, (0..n_rows).map(addr).collect(), patterns, 8, 64)
+    }
+
+    /// Width-aware seeding: at 8 bits per code, k-mers whose codes
+    /// collide modulo 4 (as they would under the old 2-bit pack) stay
+    /// distinct, and patterns sampled from fragments still seed.
+    #[test]
+    fn wide_alphabet_index_does_not_alias_seeds() {
+        // Two fragments whose codes are congruent mod 4 character by
+        // character but differ at full byte width.
+        let a: Vec<u8> = (0..16u8).collect();
+        let b: Vec<u8> = (0..16u8).map(|c| c + 64).collect();
+        let idx = OracularIndex::build_bits(&[a.clone(), b.clone()], 8, 16, 8);
+        assert_eq!(idx.candidates(&a[..8]), vec![0]);
+        assert_eq!(idx.candidates(&b[..8]), vec![1]);
+        // The 2-bit pack would have merged them.
+        let idx2 = OracularIndex::build_bits(&[a.clone(), b], 8, 16, 2);
+        assert_eq!(idx2.candidates(&a[..8]), vec![0, 1]);
     }
 
     #[test]

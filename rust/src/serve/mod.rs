@@ -40,6 +40,6 @@ pub mod load;
 pub mod server;
 
 pub use server::{
-    Backpressure, BatchStats, MatchResponse, MatchServer, PendingMatch, RequestTiming,
-    ServeConfig, ServeError, ServerTotals,
+    Backpressure, BatchStats, MatchRequest, MatchResponse, MatchServer, PendingMatch,
+    RequestTiming, ServeConfig, ServeError, ServerTotals,
 };

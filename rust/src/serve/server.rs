@@ -16,6 +16,7 @@
 //! the property tests in `tests/serving.rs` hold the server to
 //! bit-identical results vs. direct coordinator runs.
 
+use crate::alphabet::Alphabet;
 use crate::coordinator::{Coordinator, WorkResult};
 use crate::util::FxHashMap;
 use crate::Result;
@@ -83,6 +84,24 @@ pub enum ServeError {
         /// The length the coordinator accepts.
         expected: usize,
     },
+    /// The request is coded in a different alphabet than this server's
+    /// coordinator serves. Mixing alphabets in one batch would let a
+    /// payload score at the wrong symbol width (and let dedup collapse
+    /// byte-equal patterns of different alphabets), so admission
+    /// refuses the request instead — batches stay alphabet-homogeneous
+    /// by construction.
+    AlphabetMismatch {
+        /// The alphabet the request declared.
+        requested: Alphabet,
+        /// The alphabet the coordinator serves.
+        serving: Alphabet,
+    },
+    /// A request pattern holds codes outside the serving alphabet
+    /// (e.g. code 4 in a 4-symbol DNA pool).
+    InvalidSymbol {
+        /// Index of the offending pattern within the request.
+        index: usize,
+    },
     /// The coordinator failed the whole micro-batch.
     Run(String),
 }
@@ -96,6 +115,13 @@ impl std::fmt::Display for ServeError {
                 f,
                 "request pattern {index} length {len} != coordinator pat_chars {expected}"
             ),
+            ServeError::AlphabetMismatch { requested, serving } => write!(
+                f,
+                "request is coded in the {requested} alphabet but this server serves {serving}"
+            ),
+            ServeError::InvalidSymbol { index } => {
+                write!(f, "request pattern {index} holds codes outside the serving alphabet")
+            }
             ServeError::Run(msg) => write!(f, "micro-batch failed: {msg}"),
         }
     }
@@ -177,6 +203,26 @@ impl ServerTotals {
     }
 }
 
+/// A client request: a pattern pool tagged with the alphabet its codes
+/// are in. The tag is what keeps micro-batches alphabet-homogeneous —
+/// admission compares it against the serving coordinator's alphabet,
+/// so cross-request dedup and the shared program cache are always
+/// comparing codes of one symbol width.
+#[derive(Debug, Clone)]
+pub struct MatchRequest {
+    /// The alphabet `patterns` is coded in.
+    pub alphabet: Alphabet,
+    /// The pattern pool, one code per byte.
+    pub patterns: Vec<Vec<u8>>,
+}
+
+impl MatchRequest {
+    /// Tagged request over pre-encoded codes.
+    pub fn new(alphabet: Alphabet, patterns: Vec<Vec<u8>>) -> Self {
+        MatchRequest { alphabet, patterns }
+    }
+}
+
 /// One queued request.
 struct Request {
     patterns: Vec<Vec<u8>>,
@@ -209,6 +255,7 @@ pub struct MatchServer {
     tx: Option<mpsc::SyncSender<Request>>,
     batcher: Option<std::thread::JoinHandle<()>>,
     pat_chars: usize,
+    alphabet: Alphabet,
     backpressure: Backpressure,
     totals: Arc<Mutex<ServerTotals>>,
 }
@@ -218,6 +265,7 @@ impl MatchServer {
     /// here and lives until [`MatchServer::shutdown`] (or drop).
     pub fn start(coordinator: Arc<Coordinator>, cfg: ServeConfig) -> Result<Self> {
         let pat_chars = coordinator.pat_chars();
+        let alphabet = coordinator.alphabet();
         let backpressure = cfg.backpressure;
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth.max(1));
         let totals = Arc::new(Mutex::new(ServerTotals::default()));
@@ -230,15 +278,41 @@ impl MatchServer {
             tx: Some(tx),
             batcher: Some(batcher),
             pat_chars,
+            alphabet,
             backpressure,
             totals,
         })
     }
 
-    /// Submit a request without waiting for its response. Validation
-    /// happens here so one malformed request cannot fail a whole
-    /// micro-batch; an empty request answers immediately.
+    /// The alphabet this server's coordinator serves.
+    pub fn alphabet(&self) -> Alphabet {
+        self.alphabet
+    }
+
+    /// Submit an untagged pool, assumed coded in the server's own
+    /// alphabet ([`MatchServer::alphabet`]) — the pre-generalization
+    /// call shape. Validation happens at admission so one malformed
+    /// request cannot fail a whole micro-batch; an empty request
+    /// answers immediately.
     pub fn submit(&self, patterns: Vec<Vec<u8>>) -> std::result::Result<PendingMatch, ServeError> {
+        self.submit_request(MatchRequest { alphabet: self.alphabet, patterns })
+    }
+
+    /// Submit an alphabet-tagged request without waiting for its
+    /// response. A request whose alphabet differs from the serving
+    /// coordinator's is refused with [`ServeError::AlphabetMismatch`]
+    /// before it can join (and corrupt) a micro-batch.
+    pub fn submit_request(
+        &self,
+        request: MatchRequest,
+    ) -> std::result::Result<PendingMatch, ServeError> {
+        if request.alphabet != self.alphabet {
+            return Err(ServeError::AlphabetMismatch {
+                requested: request.alphabet,
+                serving: self.alphabet,
+            });
+        }
+        let patterns = request.patterns;
         for (index, p) in patterns.iter().enumerate() {
             if p.len() != self.pat_chars {
                 return Err(ServeError::InvalidPattern {
@@ -246,6 +320,9 @@ impl MatchServer {
                     len: p.len(),
                     expected: self.pat_chars,
                 });
+            }
+            if !self.alphabet.codes_valid(p) {
+                return Err(ServeError::InvalidSymbol { index });
             }
         }
         let (resp_tx, resp_rx) = mpsc::channel();
@@ -290,12 +367,21 @@ impl MatchServer {
         Ok(PendingMatch { rx: resp_rx })
     }
 
-    /// Submit and block for the response — the closed-loop client call.
+    /// Submit and block for the response — the closed-loop client call
+    /// (untagged; the pool is assumed coded in the server's alphabet).
     pub fn match_patterns(
         &self,
         patterns: Vec<Vec<u8>>,
     ) -> std::result::Result<MatchResponse, ServeError> {
         self.submit(patterns)?.wait()
+    }
+
+    /// Submit a tagged request and block for the response.
+    pub fn match_request(
+        &self,
+        request: MatchRequest,
+    ) -> std::result::Result<MatchResponse, ServeError> {
+        self.submit_request(request)?.wait()
     }
 
     /// Snapshot of the lifetime totals.
@@ -540,6 +626,41 @@ mod tests {
             .err()
             .expect("bad length must be refused");
         assert_eq!(err, ServeError::InvalidPattern { index: 1, len: 5, expected: 16 });
+        server.shutdown();
+    }
+
+    /// Satellite bugfix regression: a pool tagged with a different
+    /// alphabet than the server's must be a typed refusal — before the
+    /// tag existed, a 16-code protein pattern would silently score as
+    /// 2-bit DNA.
+    #[test]
+    fn mismatched_alphabet_request_refused_with_typed_error() {
+        use crate::alphabet::Alphabet;
+        let (server, patterns) = server(8, true);
+        assert_eq!(server.alphabet(), Alphabet::Dna2);
+        let err = server
+            .submit_request(MatchRequest::new(Alphabet::Protein5, vec![patterns[0].clone()]))
+            .err()
+            .expect("cross-alphabet request must be refused");
+        assert_eq!(
+            err,
+            ServeError::AlphabetMismatch {
+                requested: Alphabet::Protein5,
+                serving: Alphabet::Dna2
+            }
+        );
+        // Out-of-alphabet codes inside a correctly-tagged request are
+        // also refused at admission.
+        let err = server
+            .submit_request(MatchRequest::new(Alphabet::Dna2, vec![vec![7u8; 16]]))
+            .err()
+            .expect("out-of-alphabet codes must be refused");
+        assert_eq!(err, ServeError::InvalidSymbol { index: 0 });
+        // The server stays healthy for well-formed traffic.
+        let resp = server
+            .match_request(MatchRequest::new(Alphabet::Dna2, vec![patterns[0].clone()]))
+            .unwrap();
+        assert_eq!(resp.results.len(), 1);
         server.shutdown();
     }
 

@@ -47,6 +47,9 @@ pub struct SystemConfig {
     pub frag_chars: usize,
     /// Pattern length, characters.
     pub pat_chars: usize,
+    /// Bits per character (2 for DNA; wider for the text alphabets —
+    /// widens every compartment and with it the modeled pass cost).
+    pub bits_per_char: usize,
     /// Preset scheduling (§5.1: plain vs *Opt designs).
     pub preset_mode: PresetMode,
     /// Whether each iteration reads scores out through the score
@@ -68,6 +71,7 @@ impl SystemConfig {
             arrays: 300,
             frag_chars: 1000,
             pat_chars: 100,
+            bits_per_char: 2,
             preset_mode,
             readout: true,
             mask_readout: true,
@@ -82,6 +86,7 @@ impl SystemConfig {
             arrays: 4,
             frag_chars: 64,
             pat_chars: 16,
+            bits_per_char: 2,
             preset_mode,
             readout: true,
             mask_readout: true,
@@ -92,10 +97,20 @@ impl SystemConfig {
     /// probe lowering (code generation is deterministic, so the
     /// high-water mark of one alignment is the true demand).
     pub fn layout(&self) -> RowLayout {
-        let probe = RowLayout::new(self.frag_chars, self.pat_chars, usize::MAX / 2);
+        let probe = RowLayout::with_bits(
+            self.bits_per_char,
+            self.frag_chars,
+            self.pat_chars,
+            usize::MAX / 2,
+        );
         let mut cg = CodeGen::new(probe, self.preset_mode);
         let _ = cg.alignment_program(0, self.readout);
-        RowLayout::new(self.frag_chars, self.pat_chars, cg.stats().scratch_high_water)
+        RowLayout::with_bits(
+            self.bits_per_char,
+            self.frag_chars,
+            self.pat_chars,
+            cg.stats().scratch_high_water,
+        )
     }
 
     /// Array geometry implied by the layout.
@@ -178,7 +193,7 @@ impl DnaPassModel {
     /// of one array (stage 1; one row written at a time, §3.3).
     fn pattern_write_cost(&self) -> StageBreakdown {
         let mut prog = Program::new();
-        let bits = vec![false; 2 * self.config.pat_chars];
+        let bits = vec![false; self.layout.bits_per_char * self.config.pat_chars];
         for r in 0..self.config.rows {
             prog.push(
                 Stage::WritePatterns,

@@ -1,0 +1,282 @@
+//! `bench-gate`: tolerance-aware comparison of a measured `BENCH_*.json`
+//! report against a committed baseline anchor — the CI perf-regression
+//! gate.
+//!
+//! The comparator walks the baseline tree (the anchor defines the
+//! contract; extra fields in the measured report are ignored) and
+//! classifies every leaf by key:
+//!
+//! * **throughput keys** (`*_rate`, `*_per_sec`, `*_qps`, `speedup`,
+//!   `*_factor`) — higher is better; fail when
+//!   `measured < baseline × (1 − tolerance)`.
+//! * **exact keys** (counts and geometry: `patterns`, `matched`,
+//!   `bits_per_char`, `alignments_per_pass`, …) and **booleans**
+//!   (e.g. `verified`) — must be equal; these pin the deterministic
+//!   functional results, not just performance.
+//! * **skipped keys** — absolute seconds (`*_s`, `wall_seconds`,
+//!   `ns_per_*`), the `smoke` flag, and strings: latency on shared CI
+//!   runners is too noisy to gate, and provenance text differs by
+//!   construction.
+//!
+//! A throughput anchor is a *floor to ratchet*: CI uploads each push's
+//! measured reports as artifacts, and maintainers promote them over
+//! the committed anchors when the floor is safely below runner
+//! reality (see EXPERIMENTS.md §Bench gate).
+
+use crate::util::Json;
+
+/// Keys whose values must match exactly (deterministic counts and
+/// geometry).
+const EXACT_KEYS: [&str; 10] = [
+    "patterns",
+    "matched",
+    "unique_patterns",
+    "bits_per_char",
+    "alignments_per_pass",
+    "frag_chars",
+    "pat_chars",
+    "rows_per_block",
+    "rows",
+    "arrays",
+];
+
+/// How one compared leaf fared.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within tolerance (throughput) or equal (exact/boolean).
+    Pass,
+    /// Regressed past tolerance or unequal.
+    Fail,
+    /// Present in the baseline but absent from the measured report.
+    Missing,
+}
+
+/// One compared metric.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    /// Dotted path of the leaf (e.g. `bitsim.passes_per_sec`).
+    pub path: String,
+    /// Baseline value.
+    pub baseline: f64,
+    /// Measured value (`NaN` when missing).
+    pub measured: f64,
+    /// Outcome.
+    pub verdict: Verdict,
+    /// Whether the leaf was gated as exact (vs throughput-floor).
+    pub exact: bool,
+}
+
+/// Outcome of one gate run.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    /// Every gated leaf, in baseline order.
+    pub compared: Vec<Comparison>,
+}
+
+impl GateReport {
+    /// Leaves that failed (regression or missing).
+    pub fn failures(&self) -> Vec<&Comparison> {
+        self.compared.iter().filter(|c| c.verdict != Verdict::Pass).collect()
+    }
+
+    /// Whether the gate passes.
+    pub fn passed(&self) -> bool {
+        self.compared.iter().all(|c| c.verdict == Verdict::Pass)
+    }
+}
+
+/// Whether `key` names a higher-is-better throughput metric.
+fn is_throughput_key(key: &str) -> bool {
+    key.ends_with("_rate")
+        || key.ends_with("per_sec")
+        || key.ends_with("_qps")
+        || key.ends_with("_factor")
+        || key == "speedup"
+}
+
+/// Whether `key` is excluded from gating (noisy or descriptive).
+fn is_skipped_key(key: &str) -> bool {
+    key == "smoke" || key == "wall_seconds" || key.ends_with("_s") || key.starts_with("ns_per")
+}
+
+/// Compare `measured` against `baseline` with a relative `tolerance`
+/// on throughput floors (0.25 = fail below 75 % of the anchor).
+pub fn compare(baseline: &Json, measured: &Json, tolerance: f64) -> GateReport {
+    let mut report = GateReport::default();
+    walk(baseline, Some(measured), "", tolerance, &mut report);
+    report
+}
+
+fn walk(baseline: &Json, measured: Option<&Json>, path: &str, tol: f64, out: &mut GateReport) {
+    let join = |key: &str| {
+        if path.is_empty() {
+            key.to_string()
+        } else {
+            format!("{path}.{key}")
+        }
+    };
+    match baseline {
+        Json::Obj(fields) => {
+            for (key, b) in fields {
+                if is_skipped_key(key) {
+                    continue;
+                }
+                let m = measured.and_then(|m| m.get(key));
+                walk_leaf_or_recurse(b, m, &join(key), key, tol, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, b) in items.iter().enumerate() {
+                let m = measured.and_then(|m| match m {
+                    Json::Arr(ms) => ms.get(i),
+                    _ => None,
+                });
+                walk(b, m, &join(&i.to_string()), tol, out);
+            }
+        }
+        // A bare scalar at the root has no key to classify; nothing to
+        // gate.
+        _ => {}
+    }
+}
+
+fn walk_leaf_or_recurse(
+    baseline: &Json,
+    measured: Option<&Json>,
+    path: &str,
+    key: &str,
+    tol: f64,
+    out: &mut GateReport,
+) {
+    match baseline {
+        Json::Obj(_) | Json::Arr(_) => walk(baseline, measured, path, tol, out),
+        Json::Bool(b) => {
+            let as_f = |v: bool| if v { 1.0 } else { 0.0 };
+            let (verdict, got) = match measured {
+                Some(Json::Bool(m)) => {
+                    (if m == b { Verdict::Pass } else { Verdict::Fail }, as_f(*m))
+                }
+                _ => (Verdict::Missing, f64::NAN),
+            };
+            out.compared.push(Comparison {
+                path: path.to_string(),
+                baseline: as_f(*b),
+                measured: got,
+                verdict,
+                exact: true,
+            });
+        }
+        Json::Num(b) => {
+            let exact = EXACT_KEYS.contains(&key);
+            let throughput = is_throughput_key(key);
+            if !exact && !throughput {
+                return; // informational field
+            }
+            let (verdict, got) = match measured.and_then(Json::as_num) {
+                Some(m) => {
+                    let ok = if exact { m == *b } else { m >= b * (1.0 - tol) };
+                    (if ok { Verdict::Pass } else { Verdict::Fail }, m)
+                }
+                None => (Verdict::Missing, f64::NAN),
+            };
+            out.compared.push(Comparison {
+                path: path.to_string(),
+                baseline: *b,
+                measured: got,
+                verdict,
+                exact,
+            });
+        }
+        // Strings and nulls are descriptive (provenance, labels).
+        Json::Str(_) | Json::Null => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(rate: f64, matched: usize, verified: bool) -> Json {
+        Json::obj(vec![
+            ("experiment", Json::str("workloads")),
+            ("smoke", Json::Bool(false)),
+            (
+                "inner",
+                Json::obj(vec![
+                    ("host_rate", Json::num(rate)),
+                    ("matched", Json::int(matched)),
+                    ("verified", Json::Bool(verified)),
+                    ("wall_seconds", Json::num(9.9)),
+                    ("cached_pass_s", Json::num(0.5)),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn within_tolerance_passes_and_noise_is_skipped() {
+        let report = compare(&doc(100.0, 5, true), &doc(80.0, 5, true), 0.25);
+        assert!(report.passed(), "{:?}", report.failures());
+        // Only host_rate, matched, verified are gated; smoke,
+        // wall_seconds, *_s, and strings are skipped.
+        assert_eq!(report.compared.len(), 3);
+    }
+
+    #[test]
+    fn throughput_regression_fails() {
+        let report = compare(&doc(100.0, 5, true), &doc(74.0, 5, true), 0.25);
+        let failures = report.failures();
+        assert_eq!(failures.len(), 1);
+        assert_eq!(failures[0].path, "inner.host_rate");
+        assert_eq!(failures[0].verdict, Verdict::Fail);
+        assert!(!failures[0].exact);
+    }
+
+    #[test]
+    fn exact_and_boolean_drift_fails() {
+        let report = compare(&doc(100.0, 5, true), &doc(100.0, 4, true), 0.25);
+        assert_eq!(report.failures()[0].path, "inner.matched");
+        let report = compare(&doc(100.0, 5, true), &doc(100.0, 5, false), 0.25);
+        assert_eq!(report.failures()[0].path, "inner.verified");
+    }
+
+    #[test]
+    fn missing_baseline_metric_fails() {
+        let measured = Json::obj(vec![("experiment", Json::str("workloads"))]);
+        let report = compare(&doc(100.0, 5, true), &measured, 0.25);
+        assert!(report.compared.iter().all(|c| c.verdict == Verdict::Missing));
+        assert!(!report.passed());
+    }
+
+    #[test]
+    fn arrays_compare_elementwise() {
+        let base = Json::obj(vec![(
+            "alphabets",
+            Json::Arr(vec![
+                Json::obj(vec![("bits_per_char", Json::int(2))]),
+                Json::obj(vec![("bits_per_char", Json::int(5))]),
+            ]),
+        )]);
+        let measured = Json::obj(vec![(
+            "alphabets",
+            Json::Arr(vec![Json::obj(vec![("bits_per_char", Json::int(2))])]),
+        )]);
+        let report = compare(&base, &measured, 0.25);
+        assert_eq!(report.compared.len(), 2);
+        assert_eq!(report.compared[0].verdict, Verdict::Pass);
+        assert_eq!(report.compared[1].verdict, Verdict::Missing);
+        assert_eq!(report.compared[1].path, "alphabets.1.bits_per_char");
+    }
+
+    #[test]
+    fn key_classifiers() {
+        for k in ["host_rate", "passes_per_sec", "served_qps", "speedup", "dedup_factor"] {
+            assert!(is_throughput_key(k), "{k}");
+        }
+        for k in ["smoke", "wall_seconds", "cached_pass_s", "ns_per_alignment"] {
+            assert!(is_skipped_key(k), "{k}");
+        }
+        assert!(!is_throughput_key("layout_cols"));
+        assert!(!is_skipped_key("host_rate"));
+    }
+}

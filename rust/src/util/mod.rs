@@ -8,6 +8,7 @@
 
 pub mod bench;
 pub mod fxhash;
+pub mod gate;
 pub mod json;
 pub mod rng;
 

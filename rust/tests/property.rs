@@ -338,6 +338,7 @@ fn prop_cached_pooled_bitsim_equals_fresh_everything() {
                 );
                 let item = WorkItem {
                     pattern_id: 0,
+                    alphabet: cram_pm::alphabet::Alphabet::Dna2,
                     pattern: Arc::from(pattern.as_slice()),
                     fragments: fragments
                         .iter()
@@ -433,6 +434,129 @@ fn prop_packed_scorer_equals_profile_scan() {
         }
         let got = packed_best_alignment(&Packed2::from_codes(&frag), &Packed2::from_codes(&pat));
         assert_eq!(got, want, "iter {iter} frag={frag_chars} pat={pat_chars}");
+    }
+}
+
+/// Satellite: alphabet round-trips — encode∘decode is the identity on
+/// valid text, decode∘encode is the identity on valid codes, for all
+/// three alphabets, at lengths straddling the packing word boundaries.
+#[test]
+fn prop_alphabet_roundtrips() {
+    use cram_pm::alphabet::Alphabet;
+    let mut rng = Rng::new(0xA1B2);
+    for alphabet in Alphabet::ALL {
+        for len in [0usize, 1, 63, 64, 65, 130] {
+            let codes = alphabet.random_codes(&mut rng, len);
+            assert!(alphabet.codes_valid(&codes), "{alphabet} len={len}");
+            let text = alphabet.decode(&codes);
+            assert_eq!(alphabet.encode(&text), codes, "{alphabet} len={len}");
+        }
+    }
+}
+
+/// Satellite: the width-generic packed scorer is bit-identical to the
+/// scalar `score_profile` scan for all three alphabets, across the
+/// 63/64/65-character word boundaries (and each alphabet's own
+/// chars-per-word boundary), on planted and random patterns.
+#[test]
+fn prop_generic_packed_scorer_equals_profile_scan_all_alphabets() {
+    use cram_pm::alphabet::{packed_best_alignment, Alphabet, PackedSeq};
+    let mut rng = Rng::new(0x6E4E51C);
+    for alphabet in Alphabet::ALL {
+        let step = alphabet.chars_per_word();
+        let frag_lens = [63usize, 64, 65, step, step + 1, 130];
+        for (iter, &frag_chars) in frag_lens.iter().enumerate() {
+            for planted in [false, true] {
+                let pat_chars = 1 + rng.below(frag_chars.min(70));
+                let frag = alphabet.random_codes(&mut rng, frag_chars);
+                let pat = if planted {
+                    let s = rng.below(frag_chars - pat_chars + 1);
+                    frag[s..s + pat_chars].to_vec()
+                } else {
+                    alphabet.random_codes(&mut rng, pat_chars)
+                };
+                let mut want: Option<(usize, usize)> = None;
+                for (loc, &s) in score_profile(&frag, &pat).iter().enumerate() {
+                    if want.map_or(true, |(bs, _)| s > bs) {
+                        want = Some((s, loc));
+                    }
+                }
+                let got = packed_best_alignment(
+                    &PackedSeq::from_codes(alphabet, &frag),
+                    &PackedSeq::from_codes(alphabet, &pat),
+                );
+                assert_eq!(
+                    got, want,
+                    "{alphabet} iter={iter} frag={frag_chars} pat={pat_chars} planted={planted}"
+                );
+            }
+        }
+    }
+}
+
+/// Satellite: DNA results are unchanged by the generalization — the
+/// generic scorer at `Dna2` answers exactly what `Packed2` answers
+/// (which `prop_packed_scorer_equals_profile_scan` in turn pins to the
+/// pre-refactor profile scan).
+#[test]
+fn prop_generic_scorer_dna_identical_to_packed2() {
+    use cram_pm::alphabet::{packed_best_alignment, Alphabet, PackedSeq};
+    use cram_pm::dna::{packed_best_alignment as p2_best, Packed2};
+    let mut rng = Rng::new(0xD2A2);
+    for _ in 0..40 {
+        let pat_chars = rng.range(1, 70);
+        let frag_chars = pat_chars + rng.range(0, 80);
+        let frag = encode(&rng.dna(frag_chars));
+        let pat = encode(&rng.dna(pat_chars));
+        let generic = packed_best_alignment(
+            &PackedSeq::from_codes(Alphabet::Dna2, &frag),
+            &PackedSeq::from_codes(Alphabet::Dna2, &pat),
+        );
+        let dna = p2_best(&Packed2::from_codes(&frag), &Packed2::from_codes(&pat));
+        assert_eq!(generic, dna, "frag={frag_chars} pat={pat_chars}");
+    }
+}
+
+/// Satellite + tentpole: the gate-level array executing the
+/// width-generic Algorithm 1 lowering equals the character-level
+/// oracle for every alphabet, random geometries, both preset modes.
+#[test]
+fn prop_bitsim_generic_alphabets_equal_oracle() {
+    use cram_pm::alphabet::Alphabet;
+    use cram_pm::isa::ProgramCache;
+    let mut rng = Rng::new(0x5EED5);
+    for alphabet in Alphabet::ALL {
+        for iter in 0..6 {
+            let pat_chars = rng.range(1, 10);
+            let frag_chars = pat_chars + rng.range(0, 24);
+            let rows = rng.range(1, 70);
+            let mode = if rng.bool() { PresetMode::Gang } else { PresetMode::Standard };
+            let cache = ProgramCache::for_alphabet(alphabet, frag_chars, pat_chars, mode, true);
+            let layout = *cache.layout();
+
+            let fragments: Vec<Vec<u8>> =
+                (0..rows).map(|_| alphabet.random_codes(&mut rng, frag_chars)).collect();
+            let pattern = alphabet.random_codes(&mut rng, pat_chars);
+
+            let mut arr = CramArray::new(rows, layout.total_cols());
+            for (r, f) in fragments.iter().enumerate() {
+                arr.write_codes_bits(r, layout.frag_col() as usize, f, layout.bits_per_char);
+            }
+            arr.broadcast_codes_bits(layout.pat_col() as usize, &pattern, layout.bits_per_char);
+
+            for _ in 0..3.min(layout.n_alignments()) {
+                let loc = rng.below(layout.n_alignments()) as u32;
+                let out = arr.execute(cache.program(loc)).unwrap();
+                for (r, f) in fragments.iter().enumerate() {
+                    let want = score_profile(f, &pattern)[loc as usize] as u64;
+                    assert_eq!(
+                        out.scores[0][r], want,
+                        "{alphabet} iter={iter} {mode:?} frag={frag_chars} pat={pat_chars} \
+                         rows={rows} loc={loc} row {r}"
+                    );
+                }
+            }
+        }
     }
 }
 

@@ -4,9 +4,11 @@
 //! tie-breaking), backpressure must reject-and-recover, and shutdown
 //! must drain every accepted request.
 
+use cram_pm::alphabet::{Alphabet, CodedWorkload};
 use cram_pm::bench_apps::dna::DnaWorkload;
+use cram_pm::bench_apps::reference_best;
 use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
-use cram_pm::serve::{Backpressure, MatchServer, ServeConfig, ServeError};
+use cram_pm::serve::{Backpressure, MatchRequest, MatchServer, ServeConfig, ServeError};
 use cram_pm::util::Rng;
 use std::sync::Arc;
 use std::time::Duration;
@@ -173,6 +175,82 @@ fn shutdown_drains_queued_and_inflight_requests() {
         let resp = p.wait().expect("drained request must still be answered");
         assert_eq!(resp.results.len(), 2);
     }
+}
+
+/// Acceptance criterion: an ASCII StringMatch pool and a protein pool
+/// run end-to-end through `MatchServer` — concurrent tagged clients,
+/// batching and dedup on — and every answer is bit-identical to the
+/// scalar reference scorer over the resident rows.
+#[test]
+fn ascii_and_protein_pools_serve_end_to_end_matching_scalar_reference() {
+    for alphabet in [Alphabet::Ascii8, Alphabet::Protein5] {
+        let w = CodedWorkload::generate(alphabet, 4096, 32, 16, 0.05, 42);
+        let fragments = w.fragments(64, 16);
+        let mut cfg = CoordinatorConfig::for_alphabet(alphabet, EngineKind::Cpu, 64, 16);
+        cfg.oracular = None; // broadcast: the reference scans every row
+        cfg.lanes = 3;
+        let coordinator = Arc::new(Coordinator::new(cfg, fragments.clone()).unwrap());
+        let server = MatchServer::start(Arc::clone(&coordinator), serve_cfg(32, true)).unwrap();
+        std::thread::scope(|scope| {
+            for cid in 0..3u64 {
+                let server = &server;
+                let catalog = &w.patterns;
+                let fragments = &fragments;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(900 + cid);
+                    for _ in 0..4 {
+                        let pool: Vec<Vec<u8>> = (0..rng.range(1, 5))
+                            .map(|_| catalog[rng.below(catalog.len())].clone())
+                            .collect();
+                        let resp = server
+                            .match_request(MatchRequest::new(alphabet, pool.clone()))
+                            .unwrap();
+                        assert_eq!(resp.results.len(), pool.len());
+                        for (q, r) in pool.iter().zip(&resp.results) {
+                            assert_eq!(
+                                r.best.map(|b| (b.score, b.row, b.loc)),
+                                reference_best(fragments, q),
+                                "{alphabet} client {cid}"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+        let totals = server.shutdown();
+        assert_eq!(totals.requests, 3 * 4, "{alphabet}: lost requests");
+    }
+}
+
+/// Satellite bugfix regression: a request coded in a different
+/// alphabet than the serving coordinator must come back as a typed
+/// error — never silently scored at the wrong symbol width. (A 16-code
+/// protein pattern has exactly the byte length a DNA server expects,
+/// so before the alphabet tag this would have been accepted.)
+#[test]
+fn mixed_alphabet_batch_refused_with_typed_error() {
+    let (coordinator, catalog) = coordinator(2, 91, 8);
+    let server = MatchServer::start(coordinator, serve_cfg(16, true)).unwrap();
+    let protein_pool = vec![Alphabet::Protein5.encode(b"MKVLAWHEDNCHPRFYQSTG")[..16].to_vec()];
+    let err = server
+        .submit_request(MatchRequest::new(Alphabet::Protein5, protein_pool))
+        .err()
+        .expect("cross-alphabet request must be refused");
+    assert_eq!(
+        err,
+        ServeError::AlphabetMismatch { requested: Alphabet::Protein5, serving: Alphabet::Dna2 }
+    );
+    // Out-of-alphabet codes under the correct tag are refused too.
+    let err = server
+        .submit_request(MatchRequest::new(Alphabet::Dna2, vec![vec![5u8; 16]]))
+        .err()
+        .expect("invalid symbols must be refused");
+    assert_eq!(err, ServeError::InvalidSymbol { index: 0 });
+    // Well-formed traffic is unaffected before and after the refusals.
+    let resp = server.match_patterns(vec![catalog[0].clone()]).unwrap();
+    assert_eq!(resp.results.len(), 1);
+    let totals = server.shutdown();
+    assert_eq!(totals.requests, 1, "refused requests must not be counted as served");
 }
 
 /// Dedup accounting reaches the client: a batch of identical patterns
