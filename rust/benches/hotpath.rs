@@ -47,6 +47,7 @@ fn default_item(rng: &mut Rng) -> WorkItem {
     WorkItem {
         pattern_id: 0,
         alphabet: cram_pm::alphabet::Alphabet::Dna2,
+        semantics: cram_pm::semantics::MatchSemantics::BestOf,
         pattern,
         fragments,
         row_ids: (0..ROWS_PER_BLOCK as u32).collect(),

@@ -35,6 +35,7 @@ fn main() {
                 queue_depth: 256,
                 backpressure: Backpressure::Block,
                 dedup,
+                max_hits: 4096,
             },
         )
         .unwrap();

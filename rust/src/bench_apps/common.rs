@@ -4,6 +4,7 @@ use crate::alphabet::Alphabet;
 use crate::array::RowLayout;
 use crate::baselines::WorkProfile;
 use crate::isa::{CodeGen, PresetMode, Program, Stage};
+use crate::semantics::{Hit, MatchSemantics};
 use crate::sim::Simulator;
 use crate::smc::ArrayGeometry;
 use crate::tech::Technology;
@@ -96,6 +97,40 @@ pub fn reference_best(rows: &[Vec<u8>], pattern: &[u8]) -> Option<(usize, usize,
         }
     }
     best
+}
+
+/// Scalar reference **hit enumerator**: the canonical hit list of
+/// `pattern` over a set of resident rows, computed the slow, obvious
+/// way — a full `(row, loc)` scan with a plain sort — independently of
+/// the engines' shared [`crate::semantics::HitAccumulator`] core. Both
+/// engines' hit lists are proven equal to this oracle by the property
+/// suite (the same role [`reference_best`] plays for best-of answers).
+pub fn reference_hits(rows: &[Vec<u8>], pattern: &[u8], semantics: MatchSemantics) -> Vec<Hit> {
+    match semantics {
+        MatchSemantics::BestOf => Vec::new(),
+        MatchSemantics::Threshold { min_score } => {
+            let mut out = Vec::new();
+            for (row, frag) in rows.iter().enumerate() {
+                for (loc, &score) in crate::dna::score_profile(frag, pattern).iter().enumerate() {
+                    if score >= min_score {
+                        out.push(Hit { row, loc, score });
+                    }
+                }
+            }
+            out // the scan order *is* row-major (row, loc) order
+        }
+        MatchSemantics::TopK { k } => {
+            let mut all = Vec::new();
+            for (row, frag) in rows.iter().enumerate() {
+                for (loc, &score) in crate::dna::score_profile(frag, pattern).iter().enumerate() {
+                    all.push(Hit { row, loc, score });
+                }
+            }
+            all.sort_by_key(|h| (std::cmp::Reverse(h.score), h.row, h.loc));
+            all.truncate(k);
+            all
+        }
+    }
 }
 
 /// Outcome of a **functional** end-to-end serving run of a Table 4

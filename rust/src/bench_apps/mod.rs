@@ -24,7 +24,7 @@ pub mod stringmatch;
 pub mod wordcount;
 
 pub use bitcount::BitCount;
-pub use common::{reference_best, AppReport, Benchmark, FunctionalReport, PassSpec};
+pub use common::{reference_best, reference_hits, AppReport, Benchmark, FunctionalReport, PassSpec};
 pub use dna::DnaBench;
 pub use rc4::Rc4Bench;
 pub use stringmatch::{StringMatchBench, TextWorkload};

@@ -125,6 +125,7 @@ pub(crate) fn serve_and_verify(
             queue_depth: 64,
             backpressure: Backpressure::Block,
             dedup: true,
+            max_hits: 4096,
         },
     )?;
     let t0 = Instant::now();

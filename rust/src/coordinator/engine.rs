@@ -14,10 +14,11 @@
 //!   (constructed inside the executor thread; see
 //!   [`crate::coordinator::pipeline`]).
 
-use crate::alphabet::{packed_best_alignment, Alphabet, PackedSeq};
+use crate::alphabet::{packed_best_alignment, packed_similarity, Alphabet, PackedSeq};
 use crate::array::{CramArray, ExecOutput, RowLayout};
 use crate::baselines::cpu_ref::BestAlignment;
 use crate::isa::{PresetMode, ProgramCache};
+use crate::semantics::{Hit, HitAccumulator, MatchSemantics};
 use crate::Result;
 use std::sync::Arc;
 
@@ -36,6 +37,11 @@ pub struct WorkItem {
     /// refuse an item whose symbol width does not match their geometry
     /// rather than silently scoring at the wrong width.
     pub alphabet: Alphabet,
+    /// What answer this item wants: the single best alignment
+    /// (`BestOf`, the historical default — bit-identical, no hit
+    /// enumeration runs at all), every alignment above a score floor,
+    /// or the K best. Engines enumerate accordingly.
+    pub semantics: MatchSemantics,
     /// The pattern, one [`Alphabet`] code per byte.
     pub pattern: Arc<[u8]>,
     /// Candidate fragments, one code per byte each.
@@ -44,13 +50,20 @@ pub struct WorkItem {
     pub row_ids: Vec<u32>,
 }
 
-/// Result of one work item: the best alignment over the candidates.
+/// Result of one work item: the best alignment over the candidates,
+/// plus — under enumerating semantics — the canonical hit list.
 #[derive(Debug, Clone)]
 pub struct WorkResult {
     /// Pattern id.
     pub pattern_id: usize,
     /// Best alignment (global row id, loc, score), if any candidate.
+    /// Computed identically under every semantics.
     pub best: Option<BestAlignment>,
+    /// Enumerated hits per [`WorkItem::semantics`]: empty under
+    /// `BestOf`; every qualifying alignment in row-major `(row, loc)`
+    /// order under `Threshold`; the K best, best-first, under `TopK`
+    /// (bounded at `k` per partial, so lane fan-out stays bounded).
+    pub hits: Vec<Hit>,
     /// Executable/array passes consumed.
     pub passes: usize,
 }
@@ -120,18 +133,41 @@ impl MatchEngine for CpuEngine {
         self.pat.refill(self.alphabet, &item.pattern);
         let pattern = &self.pat;
         let mut best: Option<BestAlignment> = None;
-        for (frag, &rid) in item.fragments.iter().zip(&item.row_ids) {
-            self.frag.refill(self.alphabet, frag);
-            // Per-row best keeps the lowest loc (strict >); folding
-            // rows in ascending order keeps the lowest row — the same
-            // row-major tie-break as scanning every (row, loc) pair.
-            if let Some((score, loc)) = packed_best_alignment(&self.frag, pattern) {
-                if best.map_or(true, |b| score > b.score) {
-                    best = Some(BestAlignment { row: rid as usize, loc, score });
+        let mut hits: Vec<Hit> = Vec::new();
+        if item.semantics.enumerates() {
+            // Enumerating path: every (row, loc) score feeds the shared
+            // accumulator; `best` is folded in the same strict-> scan
+            // order (rows ascending, locs ascending), which is exactly
+            // what `packed_best_alignment` + the row fold compute.
+            let mut acc = HitAccumulator::new(item.semantics);
+            for (frag, &rid) in item.fragments.iter().zip(&item.row_ids) {
+                self.frag.refill(self.alphabet, frag);
+                if pattern.chars() == 0 || pattern.chars() > self.frag.chars() {
+                    continue; // no alignments, same as the best-of path
+                }
+                for loc in 0..=self.frag.chars() - pattern.chars() {
+                    let score = packed_similarity(&self.frag, pattern, loc);
+                    acc.push(rid as usize, loc, score);
+                    if best.map_or(true, |b| score > b.score) {
+                        best = Some(BestAlignment { row: rid as usize, loc, score });
+                    }
+                }
+            }
+            hits = acc.finish();
+        } else {
+            for (frag, &rid) in item.fragments.iter().zip(&item.row_ids) {
+                self.frag.refill(self.alphabet, frag);
+                // Per-row best keeps the lowest loc (strict >); folding
+                // rows in ascending order keeps the lowest row — the same
+                // row-major tie-break as scanning every (row, loc) pair.
+                if let Some((score, loc)) = packed_best_alignment(&self.frag, pattern) {
+                    if best.map_or(true, |b| score > b.score) {
+                        best = Some(BestAlignment { row: rid as usize, loc, score });
+                    }
                 }
             }
         }
-        Ok(WorkResult { pattern_id: item.pattern_id, best, passes: 1 })
+        Ok(WorkResult { pattern_id: item.pattern_id, best, hits, passes: 1 })
     }
 
     fn label(&self) -> &'static str {
@@ -227,6 +263,12 @@ impl MatchEngine for BitsimEngine {
             layout.pat_chars
         );
         let mut best: Option<BestAlignment> = None;
+        // Enumerating semantics tap the same word-transposed
+        // `ReadScoreAllRows` readout the best-of fold consumes — every
+        // (row, loc) score is already materialized per alignment
+        // program, so enumeration adds accumulator pushes, not array
+        // work.
+        let mut acc = item.semantics.enumerates().then(|| HitAccumulator::new(item.semantics));
         let mut passes = 0usize;
         for (block_i, block) in item.fragments.chunks(self.rows_per_block).enumerate() {
             passes += 1;
@@ -262,6 +304,10 @@ impl MatchEngine for BitsimEngine {
                     if s > self.row_best[r].0 {
                         self.row_best[r] = (s, loc as usize);
                     }
+                    if let Some(acc) = acc.as_mut() {
+                        let rid = item.row_ids[block_i * self.rows_per_block + r] as usize;
+                        acc.push(rid, loc as usize, s as usize);
+                    }
                 }
             }
             for (r, &(s, loc)) in self.row_best.iter().enumerate() {
@@ -271,7 +317,8 @@ impl MatchEngine for BitsimEngine {
                 }
             }
         }
-        Ok(WorkResult { pattern_id: item.pattern_id, best, passes })
+        let hits = acc.map(HitAccumulator::finish).unwrap_or_default();
+        Ok(WorkResult { pattern_id: item.pattern_id, best, hits, passes })
     }
 
     fn label(&self) -> &'static str {
@@ -304,6 +351,7 @@ mod tests {
         WorkItem {
             pattern_id: 7,
             alphabet,
+            semantics: MatchSemantics::BestOf,
             pattern,
             fragments,
             row_ids: (100..100 + n_frags as u32).collect(),
@@ -409,11 +457,63 @@ mod tests {
         let it = WorkItem {
             pattern_id: 0,
             alphabet: Alphabet::Dna2,
+            semantics: MatchSemantics::BestOf,
             pattern: Arc::from(&[0u8; 4][..]),
             fragments: vec![],
             row_ids: vec![],
         };
         assert!(CpuEngine::default().run(&it).unwrap().best.is_none());
+    }
+
+    /// Tentpole, engine level: both engines enumerate the same hit
+    /// lists under threshold and top-K semantics — and keep reporting
+    /// the identical `best` — including across bitsim block splits.
+    #[test]
+    fn engines_enumerate_identical_hits() {
+        for semantics in [
+            MatchSemantics::Threshold { min_score: 4 },
+            MatchSemantics::TopK { k: 5 },
+        ] {
+            for seed in [41u64, 42, 43] {
+                let mut it = item(seed, 5, 24, 6);
+                it.semantics = semantics;
+                let cpu = CpuEngine::default().run(&it).unwrap();
+                let mut bitsim = BitsimEngine::new(24, 6, 2, PresetMode::Gang); // 3 blocks
+                let bs = bitsim.run(&it).unwrap();
+                assert!(!cpu.hits.is_empty(), "{semantics} seed {seed}: planted hit missing");
+                assert_eq!(cpu.hits, bs.hits, "{semantics} seed {seed}");
+                assert_eq!(
+                    cpu.best.map(|b| (b.score, b.row, b.loc)),
+                    bs.best.map(|b| (b.score, b.row, b.loc)),
+                    "{semantics} seed {seed}"
+                );
+                // Under best-of the same item enumerates nothing, and
+                // `best` is unchanged by the semantics.
+                it.semantics = MatchSemantics::BestOf;
+                let plain = CpuEngine::default().run(&it).unwrap();
+                assert!(plain.hits.is_empty());
+                assert_eq!(plain.best, cpu.best, "{semantics} seed {seed}: best drifted");
+            }
+        }
+    }
+
+    /// Top-K lists are best-first and bounded; `hits[0]` is the best
+    /// alignment whenever k >= 1.
+    #[test]
+    fn topk_first_hit_is_the_best_alignment() {
+        let mut it = item(77, 6, 24, 6);
+        it.semantics = MatchSemantics::TopK { k: 3 };
+        let r = CpuEngine::default().run(&it).unwrap();
+        assert_eq!(r.hits.len(), 3);
+        let b = r.best.unwrap();
+        assert_eq!((r.hits[0].row, r.hits[0].loc, r.hits[0].score), (b.row, b.loc, b.score));
+        for w in r.hits.windows(2) {
+            assert!(
+                (std::cmp::Reverse(w[0].score), w[0].row, w[0].loc)
+                    < (std::cmp::Reverse(w[1].score), w[1].row, w[1].loc),
+                "top-K list not best-first"
+            );
+        }
     }
 
     /// Tentpole: both engines handle every alphabet, agree with each

@@ -20,6 +20,7 @@ use crate::coordinator::engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngin
 use crate::isa::{PresetMode, ProgramCache};
 use crate::runtime::Runtime;
 use crate::scheduler::{OracularIndex, ShardMap};
+use crate::semantics::MatchSemantics;
 use crate::sim::SystemConfig;
 use crate::tech::Technology;
 use crate::Result;
@@ -73,6 +74,15 @@ pub struct CoordinatorConfig {
     /// projection; work items carry it so a mismatched payload is a
     /// typed refusal instead of a wrong-width score.
     pub alphabet: Alphabet,
+    /// What every pattern's answer is: the single best alignment
+    /// (`BestOf` — the historical default, bit-identical to the
+    /// pre-semantics coordinator), every alignment above a score floor
+    /// (`Threshold`), or the K best (`TopK`). Carried by every work
+    /// item; the lane merge canonicalizes per-lane hit partials under
+    /// the same row-major tie-break at any lane count. The XLA engine
+    /// only reads back per-row bests, so it refuses enumerating
+    /// semantics at construction.
+    pub semantics: MatchSemantics,
     /// Oracular routing: `Some((k, max_rows_per_pattern))` enables the
     /// k-mer candidate index; `None` broadcasts (Naive).
     pub oracular: Option<(usize, usize)>,
@@ -106,6 +116,7 @@ impl CoordinatorConfig {
             frag_chars,
             pat_chars,
             alphabet: Alphabet::Dna2,
+            semantics: MatchSemantics::BestOf,
             oracular: Some((8, 64)),
             queue_depth: 64,
             lanes: Self::default_lanes(),
@@ -165,6 +176,9 @@ pub struct RunMetrics {
     pub patterns: usize,
     /// Patterns that produced a best alignment.
     pub matched: usize,
+    /// Total enumerated hits across the pool (0 under `BestOf`) — the
+    /// result-readout volume the hardware projection prices.
+    pub hits: usize,
     /// Engine passes executed.
     pub passes: usize,
     /// Mean candidate rows per pattern (substrate occupancy).
@@ -226,6 +240,8 @@ impl MatchEngine for XlaEngine {
                 frag_i32.extend(f.iter().map(|&c| c as i32));
             }
             let out = self.rt.execute(&self.variant, &frag_i32, &pat_i32)?;
+            // (The artifact reads back per-row bests only; enumerating
+            // semantics are refused at coordinator construction.)
             // Only the first `block.len()` rows are real; the rest is
             // padding and must be masked out of the reduction.
             for r in 0..block.len() {
@@ -239,7 +255,7 @@ impl MatchEngine for XlaEngine {
                 }
             }
         }
-        Ok(WorkResult { pattern_id: item.pattern_id, best, passes })
+        Ok(WorkResult { pattern_id: item.pattern_id, best, hits: Vec::new(), passes })
     }
 
     fn label(&self) -> &'static str {
@@ -345,6 +361,12 @@ impl Coordinator {
             cfg.engine != EngineKind::Xla || cfg.alphabet == Alphabet::Dna2,
             "the XLA artifacts are lowered for 2-bit DNA; use the cpu or bitsim engine for {}",
             cfg.alphabet
+        );
+        anyhow::ensure!(
+            cfg.engine != EngineKind::Xla || !cfg.semantics.enumerates(),
+            "the XLA artifact reads back per-row bests only; use the cpu or bitsim engine for {} \
+             semantics",
+            cfg.semantics
         );
         for (i, f) in fragments.iter().enumerate() {
             anyhow::ensure!(
@@ -513,6 +535,12 @@ impl Coordinator {
         self.cfg.alphabet
     }
 
+    /// The query semantics this coordinator answers under
+    /// ([`CoordinatorConfig::semantics`]).
+    pub fn semantics(&self) -> MatchSemantics {
+        self.cfg.semantics
+    }
+
     /// Run a pattern pool through the pipeline. Returns per-pattern
     /// results (ordered by pattern id) and run metrics. An empty pool
     /// short-circuits to an empty result with zeroed metrics without
@@ -594,6 +622,7 @@ impl Coordinator {
         let metrics = RunMetrics {
             patterns: 0,
             matched: 0,
+            hits: 0,
             passes: 0,
             mean_candidates: 0.0,
             wall_seconds: 0.0,
@@ -646,7 +675,7 @@ impl Coordinator {
         let sent = AtomicUsize::new(0);
 
         let mut results: Vec<WorkResult> = (0..patterns.len())
-            .map(|pid| WorkResult { pattern_id: pid, best: None, passes: 0 })
+            .map(|pid| WorkResult { pattern_id: pid, best: None, hits: Vec::new(), passes: 0 })
             .collect();
         let mut lane_stats: Vec<LaneStats> = (0..n_lanes).map(LaneStats::idle).collect();
         let mut run_err: Option<anyhow::Error> = None;
@@ -662,6 +691,7 @@ impl Coordinator {
                 let stop = &stop;
                 let sent = &sent;
                 let alphabet = self.cfg.alphabet;
+                let semantics = self.cfg.semantics;
                 move || {
                     let send = |lane: usize, item: WorkItem| -> bool {
                         let Some(tx) = lanes[lane].work_tx.as_ref() else { return false };
@@ -685,6 +715,7 @@ impl Coordinator {
                                     let item = WorkItem {
                                         pattern_id: pid,
                                         alphabet,
+                                        semantics,
                                         pattern: Arc::clone(&patterns[pid]),
                                         fragments: frags,
                                         row_ids: rows.clone(),
@@ -703,6 +734,7 @@ impl Coordinator {
                                     let item = WorkItem {
                                         pattern_id: pid,
                                         alphabet,
+                                        semantics,
                                         // Arc clones: shard-wide fan-out
                                         // shares the resident codes.
                                         pattern: Arc::clone(&patterns[pid]),
@@ -732,13 +764,18 @@ impl Coordinator {
                         stats.items += 1;
                         stats.busy_seconds += msg.busy_seconds;
                         match msg.result {
-                            Ok(partial) => {
+                            Ok(mut partial) => {
                                 stats.passes += partial.passes;
                                 let r = &mut results[partial.pattern_id];
                                 r.passes += partial.passes;
                                 if is_better(&partial.best, &r.best) {
                                     r.best = partial.best;
                                 }
+                                // Per-lane hit partials concatenate here
+                                // and are canonicalized once per pattern
+                                // after the reduce — arrival order never
+                                // reaches the final list.
+                                r.hits.append(&mut partial.hits);
                             }
                             // A failed item fails the run but not the
                             // lanes: stop the feeder and fall through
@@ -785,6 +822,15 @@ impl Coordinator {
         if let Some(e) = run_err {
             return Err(e);
         }
+        // Canonicalize the concatenated per-lane hit partials: the
+        // row-major / best-first orders (and the top-K bound) are
+        // re-established per pattern, so hit lists are bit-identical
+        // for any lane count.
+        if self.cfg.semantics.enumerates() {
+            for r in &mut results {
+                self.cfg.semantics.finalize(&mut r.hits);
+            }
+        }
 
         let wall = t0.elapsed().as_secs_f64();
         for s in &mut lane_stats {
@@ -821,10 +867,17 @@ impl Coordinator {
         };
         let model = crate::scheduler::ThroughputModel::new(cfg);
         let rpp = self.cfg.oracular.map(|_| mean_candidates.max(1.0));
-        let sharded = model.sharded(lane_stats.len().max(1), rpp, n_patterns.max(1));
+        // Enumerated hits are extra result-readout volume the host must
+        // drain off the substrate — the projection prices each one at a
+        // per-row share of the step model's read-out stage (0 hits, as
+        // under `BestOf`, reproduces the plain sharded projection).
+        let total_hits: usize = results.iter().map(|r| r.hits.len()).sum();
+        let sharded =
+            model.enumerating(lane_stats.len().max(1), rpp, n_patterns.max(1), total_hits);
         RunMetrics {
             patterns: n_patterns,
             matched: results.iter().filter(|r| r.best.is_some()).count(),
+            hits: total_hits,
             passes: results.iter().map(|r| r.passes).sum(),
             mean_candidates,
             wall_seconds: wall,
@@ -1091,6 +1144,48 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Tentpole: threshold and top-K hit lists are bit-identical for
+    /// any lane count, the merged answers equal the per-pattern best,
+    /// and `RunMetrics::hits` counts the enumerated volume.
+    #[test]
+    fn hit_semantics_lane_invariant_and_counted_in_metrics() {
+        let w = DnaWorkload::generate(2048, 10, 16, 0.05, 33);
+        let frags = w.fragments(64, 16);
+        for semantics in
+            [MatchSemantics::Threshold { min_score: 12 }, MatchSemantics::TopK { k: 3 }]
+        {
+            let run_with = |lanes: usize| {
+                let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+                cfg.engine = EngineKind::Cpu;
+                cfg.oracular = None;
+                cfg.semantics = semantics;
+                cfg.lanes = lanes;
+                let c = Coordinator::new(cfg, frags.clone()).unwrap();
+                c.run(&w.patterns).unwrap()
+            };
+            let (single, m1) = run_with(1);
+            assert_eq!(m1.hits, single.iter().map(|r| r.hits.len()).sum::<usize>());
+            assert!(m1.hits > 0, "{semantics}: planted patterns must hit");
+            for lanes in [2usize, 4] {
+                let (multi, mn) = run_with(lanes);
+                assert_eq!(mn.hits, m1.hits, "{semantics} lanes={lanes}");
+                for (a, b) in single.iter().zip(&multi) {
+                    let pid = a.pattern_id;
+                    assert_eq!(a.hits, b.hits, "{semantics} lanes={lanes} pattern {pid}");
+                    assert_eq!(a.best, b.best, "{semantics} lanes={lanes}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xla_engine_refuses_enumerating_semantics() {
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.semantics = MatchSemantics::TopK { k: 2 };
+        let err = Coordinator::new(cfg, vec![vec![0u8; 64]; 2]).unwrap_err();
+        assert!(err.to_string().contains("per-row bests"), "unexpected: {err:#}");
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Hit-enumeration sweep (tentpole acceptance): query semantics ×
+//! alphabets × lane counts, **functionally end to end** — real pools
+//! through `Coordinator` → engine under `BestOf`, `Threshold`, and
+//! `TopK` semantics, every answer (best *and* full hit list) checked
+//! against the scalar reference oracles
+//! ([`crate::bench_apps::reference_best`] /
+//! [`crate::bench_apps::reference_hits`]), with the run failing
+//! outright on any divergence. DNA points also run on the gate-level
+//! bitsim engine, proving the word-transposed readout enumerates the
+//! same hits as the packed CPU scorer.
+//!
+//! `--json` emits `BENCH_hits.json`; the committed copy at the
+//! repository root is a CI anchor gated by `bench-gate` exactly like
+//! hotpath/workloads: `patterns`/`matched`/`total_hits`/`verified`/
+//! `bits_per_char` are deterministic (fixed seed, fixed knobs, results
+//! proven lane- and engine-invariant) and must match exactly;
+//! `host_rate` is a conservative floor to ratchet.
+
+use crate::alphabet::{Alphabet, CodedWorkload};
+use crate::bench_apps::{reference_best, reference_hits};
+use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use crate::experiments::rule;
+use crate::semantics::MatchSemantics;
+use crate::util::Json;
+use std::path::Path;
+use std::time::Instant;
+
+/// Sizes of one sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct HitsKnobs {
+    /// Reference length, characters.
+    pub ref_chars: usize,
+    /// Patterns per pool.
+    pub n_patterns: usize,
+    /// Fragment length, characters (fold width).
+    pub frag_chars: usize,
+    /// Pattern length, characters.
+    pub pat_chars: usize,
+    /// Per-character error rate of the sampled patterns.
+    pub error_rate: f64,
+    /// `Threshold` floor: minimum similarity score to report
+    /// (`pat_chars − min_score` is the mismatch budget).
+    pub min_score: usize,
+    /// `TopK` width.
+    pub k: usize,
+    /// Lane counts swept for the CPU engine (bitsim runs the last).
+    pub lanes: [usize; 2],
+    /// Workload seed.
+    pub seed: u64,
+}
+
+impl HitsKnobs {
+    /// Default scale.
+    pub fn standard() -> Self {
+        HitsKnobs {
+            ref_chars: 16_384,
+            n_patterns: 64,
+            frag_chars: 64,
+            pat_chars: 16,
+            error_rate: 0.1,
+            min_score: 12,
+            k: 4,
+            lanes: [1, 2],
+            seed: 0x4175,
+        }
+    }
+
+    /// CI perf-smoke scale: seconds, not minutes. The committed
+    /// `BENCH_hits.json` anchor pins this sweep's deterministic fields.
+    pub fn smoke() -> Self {
+        HitsKnobs { ref_chars: 2048, n_patterns: 24, ..HitsKnobs::standard() }
+    }
+
+    /// The three semantics swept.
+    pub fn semantics(&self) -> [MatchSemantics; 3] {
+        [
+            MatchSemantics::BestOf,
+            MatchSemantics::Threshold { min_score: self.min_score },
+            MatchSemantics::TopK { k: self.k },
+        ]
+    }
+}
+
+/// One (alphabet, engine, semantics, lanes) functional run.
+#[derive(Debug, Clone)]
+pub struct HitsPoint {
+    /// The alphabet swept.
+    pub alphabet: Alphabet,
+    /// The engine that scored the pool.
+    pub engine: EngineKind,
+    /// The query semantics.
+    pub semantics: MatchSemantics,
+    /// Executor lane count.
+    pub lanes: usize,
+    /// Patterns served.
+    pub patterns: usize,
+    /// Patterns with a best alignment (all of them: broadcast).
+    pub matched: usize,
+    /// Total enumerated hits across the pool (0 under best-of).
+    pub total_hits: usize,
+    /// Whether every best **and** every hit list was bit-identical to
+    /// the scalar reference oracles.
+    pub verified: bool,
+    /// Served patterns per second, host wall clock.
+    pub host_rate: f64,
+    /// Projected substrate match rate (prices the hit-drain volume).
+    pub hw_match_rate: f64,
+}
+
+/// Run one pool at one configuration and verify it against the
+/// oracles.
+fn run_point(
+    knobs: &HitsKnobs,
+    w: &CodedWorkload,
+    fragments: &[Vec<u8>],
+    engine: EngineKind,
+    semantics: MatchSemantics,
+    lanes: usize,
+) -> crate::Result<HitsPoint> {
+    let mut cfg =
+        CoordinatorConfig::for_alphabet(w.alphabet, engine, knobs.frag_chars, knobs.pat_chars);
+    cfg.oracular = None; // broadcast: the oracles scan every row
+    cfg.semantics = semantics;
+    cfg.lanes = lanes;
+    let c = Coordinator::new(cfg, fragments.to_vec())?;
+    let t0 = Instant::now();
+    let (results, metrics) = c.run(&w.patterns)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut verified = true;
+    for (r, p) in results.iter().zip(&w.patterns) {
+        let want_best = reference_best(fragments, p);
+        if r.best.map(|b| (b.score, b.row, b.loc)) != want_best {
+            verified = false;
+        }
+        let want_hits = reference_hits(fragments, p, semantics);
+        if r.hits != want_hits {
+            verified = false;
+        }
+    }
+    anyhow::ensure!(
+        verified,
+        "{} {engine:?} {semantics} lanes={lanes}: served answers diverged from the scalar oracle",
+        w.alphabet
+    );
+    Ok(HitsPoint {
+        alphabet: w.alphabet,
+        engine,
+        semantics,
+        lanes,
+        patterns: metrics.patterns,
+        matched: metrics.matched,
+        total_hits: metrics.hits,
+        verified,
+        host_rate: metrics.patterns as f64 / wall.max(1e-12),
+        hw_match_rate: metrics.hw_match_rate,
+    })
+}
+
+/// Run the sweep. Fails (exit-code-visibly, for CI) on any divergence
+/// from the oracles.
+pub fn sweep(knobs: &HitsKnobs) -> crate::Result<Vec<HitsPoint>> {
+    let mut out = Vec::new();
+    for alphabet in Alphabet::ALL {
+        let w = CodedWorkload::generate(
+            alphabet,
+            knobs.ref_chars,
+            knobs.n_patterns,
+            knobs.pat_chars,
+            knobs.error_rate,
+            knobs.seed,
+        );
+        let fragments = w.fragments(knobs.frag_chars, knobs.pat_chars);
+        for semantics in knobs.semantics() {
+            for lanes in knobs.lanes {
+                out.push(run_point(knobs, &w, &fragments, EngineKind::Cpu, semantics, lanes)?);
+            }
+            // Engine parity on the gate-level simulator (DNA keeps the
+            // sweep's runtime bounded; the property suite covers the
+            // other alphabets at unit scale).
+            if alphabet == Alphabet::Dna2 {
+                out.push(run_point(
+                    knobs,
+                    &w,
+                    &fragments,
+                    EngineKind::Bitsim,
+                    semantics,
+                    knobs.lanes[1],
+                )?);
+            }
+        }
+    }
+    // Hit counts are semantics-determined, engine- and lane-invariant:
+    // every point of one (alphabet, semantics) cell must agree.
+    for a in &out {
+        for b in &out {
+            if a.alphabet == b.alphabet && a.semantics == b.semantics {
+                anyhow::ensure!(
+                    a.total_hits == b.total_hits && a.matched == b.matched,
+                    "{} {}: hit counts drifted across engines/lanes ({} vs {})",
+                    a.alphabet,
+                    a.semantics,
+                    a.total_hits,
+                    b.total_hits
+                );
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The `BENCH_hits.json` document.
+fn to_json(knobs: &HitsKnobs, smoke: bool, points: &[HitsPoint]) -> Json {
+    Json::obj(vec![
+        ("experiment", Json::str("hits")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "config",
+            Json::obj(vec![
+                ("ref_chars", Json::int(knobs.ref_chars)),
+                ("n_patterns", Json::int(knobs.n_patterns)),
+                ("frag_chars", Json::int(knobs.frag_chars)),
+                ("pat_chars", Json::int(knobs.pat_chars)),
+                ("error_rate", Json::num(knobs.error_rate)),
+                ("min_score", Json::int(knobs.min_score)),
+                ("k", Json::int(knobs.k)),
+                ("seed", Json::int(knobs.seed as usize)),
+            ]),
+        ),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("alphabet", Json::str(p.alphabet.tag())),
+                            ("bits_per_char", Json::int(p.alphabet.bits_per_char())),
+                            ("engine", Json::str(format!("{:?}", p.engine).to_lowercase())),
+                            ("semantics", Json::str(p.semantics.tag())),
+                            ("lanes", Json::int(p.lanes)),
+                            ("patterns", Json::int(p.patterns)),
+                            ("matched", Json::int(p.matched)),
+                            ("total_hits", Json::int(p.total_hits)),
+                            ("verified", Json::Bool(p.verified)),
+                            (
+                                "hits_per_pattern",
+                                Json::num(p.total_hits as f64 / p.patterns.max(1) as f64),
+                            ),
+                            ("host_rate", Json::num(p.host_rate)),
+                            ("hw_match_rate", Json::num(p.hw_match_rate)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Experiment-driver entry point. Errors propagate so the CI step
+/// fails loudly.
+pub fn run_with(smoke: bool, json: Option<&Path>) -> crate::Result<()> {
+    let knobs = if smoke { HitsKnobs::smoke() } else { HitsKnobs::standard() };
+    rule("Hit enumeration — threshold & top-K semantics × alphabets × lanes");
+    println!(
+        "  {} chars folded into {}-char fragments; {} patterns × {} chars, error rate {}; \
+         threshold >= {}, top-{}",
+        knobs.ref_chars,
+        knobs.frag_chars,
+        knobs.n_patterns,
+        knobs.pat_chars,
+        knobs.error_rate,
+        knobs.min_score,
+        knobs.k
+    );
+    let points = sweep(&knobs)?;
+    println!(
+        "\n  {:<9} {:<7} {:<13} {:>5} {:>8} {:>9} {:>9} {:>12} {:>12} {:>9}",
+        "alphabet", "engine", "semantics", "lanes", "patterns", "hits", "hits/pat", "host q/s",
+        "hw q/s", "verified"
+    );
+    for p in &points {
+        println!(
+            "  {:<9} {:<7} {:<13} {:>5} {:>8} {:>9} {:>9.2} {:>12.0} {:>12.3e} {:>9}",
+            p.alphabet.tag(),
+            format!("{:?}", p.engine).to_lowercase(),
+            p.semantics.tag(),
+            p.lanes,
+            p.patterns,
+            p.total_hits,
+            p.total_hits as f64 / p.patterns.max(1) as f64,
+            p.host_rate,
+            p.hw_match_rate,
+            p.verified
+        );
+    }
+    println!(
+        "\n  every best answer and hit list above is bit-identical to the scalar oracle; \
+         hit counts are engine- and lane-invariant by assertion"
+    );
+    if let Some(path) = json {
+        to_json(&knobs, smoke, &points)
+            .write_file(path)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        println!("\n  wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// Default-scale run (the `experiment hits` / `experiment all` path).
+pub fn run() {
+    if let Err(e) = run_with(false, None) {
+        println!("  hits experiment failed: {e:#}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance shape at smoke scale: every point verifies
+    /// against the oracle, best-of enumerates nothing, top-K
+    /// enumerates exactly k per pattern, and the JSON report carries
+    /// the gated fields.
+    #[test]
+    fn smoke_sweep_verifies_and_pins_deterministic_fields() {
+        let knobs = HitsKnobs::smoke();
+        let points = sweep(&knobs).unwrap();
+        // 3 alphabets × 3 semantics × 2 CPU lane counts + 3 DNA bitsim.
+        assert_eq!(points.len(), 3 * 3 * 2 + 3);
+        for p in &points {
+            assert!(p.verified, "{} {} unverified", p.alphabet, p.semantics);
+            assert_eq!(p.matched, knobs.n_patterns, "{} {}", p.alphabet, p.semantics);
+            match p.semantics {
+                MatchSemantics::BestOf => assert_eq!(p.total_hits, 0),
+                MatchSemantics::TopK { k } => {
+                    assert_eq!(p.total_hits, k * knobs.n_patterns, "{}", p.alphabet)
+                }
+                MatchSemantics::Threshold { .. } => {
+                    // Planted patterns mostly clear the floor: at least
+                    // half the pool must hit somewhere.
+                    assert!(p.total_hits >= knobs.n_patterns / 2, "{}", p.alphabet)
+                }
+            }
+        }
+        let doc = to_json(&knobs, true, &points).render();
+        assert!(doc.contains("\"experiment\": \"hits\""));
+        assert!(doc.contains("\"semantics\": \"threshold:12\""));
+        assert!(doc.contains("\"semantics\": \"topk:4\""));
+        assert!(doc.contains("\"engine\": \"bitsim\""));
+        assert!(doc.contains("\"verified\": true"));
+    }
+}

@@ -17,6 +17,7 @@ pub mod fig6_breakdown;
 pub mod fig7_pattern_length;
 pub mod fig8_technology;
 pub mod fig9_10_nmp;
+pub mod hits;
 pub mod lane_scaling;
 pub mod row_width;
 pub mod scheduling;
@@ -48,4 +49,5 @@ pub fn run_all() {
     lane_scaling::run();
     serving::run();
     workloads::run();
+    hits::run();
 }

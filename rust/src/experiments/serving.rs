@@ -163,6 +163,7 @@ pub fn sweep(knobs: &ServingKnobs) -> crate::Result<Vec<ServePoint>> {
                 queue_depth: knobs.queue_depth,
                 backpressure: Backpressure::Block,
                 dedup,
+                max_hits: 4096,
             },
         )?;
         let report = closed_loop(
@@ -206,6 +207,7 @@ pub fn open_loop_sweep(knobs: &ServingKnobs, smoke: bool) -> crate::Result<Vec<L
             queue_depth: knobs.queue_depth,
             backpressure: Backpressure::Reject,
             dedup: true,
+            max_hits: 4096,
         },
     )?;
     let rates: &[f64] = if smoke { &[200.0, 800.0] } else { &[500.0, 2000.0, 8000.0] };

@@ -33,6 +33,7 @@
 //! | [`array`] | §2.3–2.4, §3.1 | bit-level CRAM-PM array with row-parallel semantics |
 //! | [`smc`] | §3.3 | memory controller: decode LUT, issue, cycle allocation |
 //! | [`sim`] | §4 stages (1)–(8) | step-accurate timing/energy engine, per-stage breakdowns |
+//! | [`semantics`] | §3.2 "Data Output" | query semantics: best-of / threshold / top-K hit enumeration shared by every engine and the lane merge |
 //! | [`scheduler`] | §5 | Naive / Oracular / *Opt pattern schedulers |
 //! | [`baselines`] | §4–5 | GPU (BWA), NMP/NMP-Hyp (HMC), Ambit, Pinatubo, CPU reference |
 //! | [`bench_apps`] | §4 Table 4 | DNA, BitCount, StringMatch, RC4, WordCount workloads |
@@ -52,6 +53,7 @@ pub mod gates;
 pub mod isa;
 pub mod runtime;
 pub mod scheduler;
+pub mod semantics;
 pub mod serve;
 pub mod sim;
 pub mod smc;

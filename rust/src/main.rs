@@ -1,10 +1,11 @@
 //! `cram-pm` — command-line interface to the CRAM-PM reproduction.
 //!
 //! ```text
-//! cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|tables|all>
+//! cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|tables|all>
 //!                    [--smoke] [--json FILE]
 //! cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N]
 //!             [--pat-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F]
+//!             [--semantics best|threshold:N|topk:K]
 //! cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein]
 //!                     [--clients N] [--requests N] [--ppr N]
 //!                     [--catalog N] [--zipf S] [--batch N] [--delay-us N] [--queue N]
@@ -19,6 +20,7 @@ use cram_pm::alphabet::Alphabet;
 use cram_pm::bench_apps::dna::DnaWorkload;
 use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
 use cram_pm::experiments::serving::ServingKnobs;
+use cram_pm::semantics::MatchSemantics;
 use cram_pm::util::{gate, Json};
 use cram_pm::{experiments, Result};
 use std::collections::HashMap;
@@ -26,7 +28,7 @@ use std::path::PathBuf;
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|tables|all> [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm info"
+        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|tables|all> [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n              [--semantics best|threshold:N|topk:K]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm info"
     );
     std::process::exit(2);
 }
@@ -74,6 +76,7 @@ fn cmd_experiment(which: &str, kv: &HashMap<String, String>, flags: &[String]) -
         "lanes" | "lane-scaling" => experiments::lane_scaling::run_with(smoke, json.as_deref())?,
         "serving" | "serve" => experiments::serving::run_with(smoke, json.as_deref())?,
         "workloads" | "alphabets" => experiments::workloads::run_with(smoke, json.as_deref())?,
+        "hits" | "semantics" => experiments::hits::run_with(smoke, json.as_deref())?,
         "all" => experiments::run_all(),
         other => {
             eprintln!("unknown experiment: {other}");
@@ -201,6 +204,15 @@ fn cmd_run(kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
     if naive {
         cfg.oracular = None;
     }
+    if let Some(s) = kv.get("semantics") {
+        match MatchSemantics::parse(s) {
+            Some(semantics) => cfg.semantics = semantics,
+            None => {
+                eprintln!("unknown semantics: {s} (expected best|threshold:N|topk:K)");
+                usage();
+            }
+        }
+    }
     if let Some(v) = kv.get("lanes") {
         match v.parse::<usize>() {
             Ok(n) if n >= 1 => cfg.lanes = n,
@@ -213,6 +225,7 @@ fn cmd_run(kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
     if let Some(dir) = kv.get("artifacts") {
         cfg.artifacts_dir = dir.into();
     }
+    let semantics = cfg.semantics;
     let coord = Coordinator::new(cfg, fragments)?;
     let (results, metrics) = coord.run(&w.patterns)?;
 
@@ -224,6 +237,14 @@ fn cmd_run(kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
     println!("engine            {}", metrics.engine);
     println!("patterns          {}", metrics.patterns);
     println!("matched           {} ({} with perfect score)", metrics.matched, perfect);
+    if semantics.enumerates() {
+        println!(
+            "enumerated hits   {} ({} semantics, {:.2}/pattern)",
+            metrics.hits,
+            semantics,
+            metrics.hits as f64 / metrics.patterns.max(1) as f64
+        );
+    }
     println!("engine passes     {}", metrics.passes);
     println!("mean candidates   {:.1} rows/pattern", metrics.mean_candidates);
     println!("executor lanes    {}", metrics.lanes);

@@ -160,6 +160,40 @@ impl ThroughputModel {
         }
     }
 
+    /// Per-enumerated-hit readout/transfer cost `(s, J)` — one row's
+    /// share of the step model's read-out stage (see
+    /// [`crate::sim::PassCost::per_hit_readout`]).
+    pub fn hit_cost(&self) -> (f64, f64) {
+        self.pass.per_hit_readout(self.config.rows)
+    }
+
+    /// [`ThroughputModel::sharded`] for a pool that also enumerated
+    /// `total_hits` alignment hits (threshold / top-K semantics): the
+    /// extra result-readout volume is priced per hit and added to pool
+    /// time and energy, and the sustained match rate scales down by
+    /// the same factor — result transfer, not compute, is the added
+    /// cost of all-hits queries. `total_hits = 0` (best-of) reproduces
+    /// the plain sharded projection exactly.
+    pub fn enumerating(
+        &self,
+        shards: usize,
+        rows_per_pattern: Option<f64>,
+        pool_size: usize,
+        total_hits: usize,
+    ) -> ShardedReport {
+        let mut r = self.sharded(shards, rows_per_pattern, pool_size);
+        if total_hits > 0 {
+            let (t_hit, e_hit) = self.hit_cost();
+            let drain_t = t_hit * total_hits as f64;
+            let stretched = r.pool_time + drain_t;
+            r.match_rate *= r.pool_time / stretched.max(1e-30);
+            r.pool_time = stretched;
+            r.pool_energy += e_hit * total_hits as f64;
+            r.efficiency = r.match_rate / (r.power * 1e3).max(1e-30);
+        }
+        r
+    }
+
     /// Projected served-QPS when a host-side serving layer coalesces
     /// client requests into micro-batches of `batch_patterns` offered
     /// patterns and dedups identical patterns (`dedup_factor` =
@@ -329,6 +363,28 @@ mod tests {
         let p = model.serving(1, None, 8.0, 0.5);
         assert!((p.dedup_factor - 1.0).abs() < 1e-9);
         assert!((p.served_qps - p.substrate_rate).abs() / p.substrate_rate < 1e-9);
+    }
+
+    /// Hit enumeration is priced as result-readout volume: zero hits
+    /// reproduces the plain sharded projection bit for bit; a large
+    /// hit count stretches pool time/energy and drops the sustained
+    /// rate by exactly the per-hit drain.
+    #[test]
+    fn enumerating_projection_prices_hit_volume() {
+        let cfg = SystemConfig::small(Technology::NearTerm, PresetMode::Gang);
+        let model = ThroughputModel::new(cfg);
+        let (t_hit, e_hit) = model.hit_cost();
+        assert!(t_hit > 0.0 && e_hit > 0.0);
+        let base = model.sharded(2, None, 100);
+        let none = model.enumerating(2, None, 100, 0);
+        assert_eq!(none.pool_time, base.pool_time);
+        assert_eq!(none.pool_energy, base.pool_energy);
+        assert_eq!(none.match_rate, base.match_rate);
+        let heavy = model.enumerating(2, None, 100, 50_000);
+        assert!((heavy.pool_time - base.pool_time - t_hit * 50_000.0).abs() < 1e-12);
+        assert!((heavy.pool_energy - base.pool_energy - e_hit * 50_000.0).abs() < 1e-12);
+        assert!(heavy.match_rate < base.match_rate);
+        assert!(heavy.efficiency < base.efficiency);
     }
 
     #[test]

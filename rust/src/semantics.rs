@@ -1,0 +1,317 @@
+//! Query semantics: what a pattern's answer *is*.
+//!
+//! Every layer of this repository used to collapse a pattern's scores
+//! to the single best alignment. Real large-scale consumers of
+//! repetitive search — grep-style scans, candidate-list read mapping,
+//! log search — need **every** occurrence above a similarity floor, or
+//! the K best candidates. In-storage pattern processors are built
+//! around exactly this all-hits enumeration (Jun et al., "In-Storage
+//! Embedded Accelerator for Sparse Pattern Processing"), and the PIM
+//! literature stresses that result-readout volume, not compute, becomes
+//! the bottleneck once matching moves into memory (Mutlu et al., "A
+//! Modern Primer on Processing-in-Memory") — so hit semantics are
+//! designed into the readout, merge, and serving layers here, not
+//! bolted onto the response.
+//!
+//! [`MatchSemantics`] names the three query shapes:
+//!
+//! * [`MatchSemantics::BestOf`] — today's behavior, bit-identical:
+//!   the single best `(score, row, loc)`; `hits` stays empty.
+//! * [`MatchSemantics::Threshold`] — every alignment scoring at least
+//!   `min_score` (equivalently a k-mismatch budget of
+//!   `pat_chars − min_score`), listed in row-major `(row, loc)` order.
+//! * [`MatchSemantics::TopK`] — the `k` best alignments under the
+//!   best-of order (score descending, then lowest row, then lowest
+//!   loc), listed best-first; `TopK { k: 1 }` lists exactly the
+//!   best-of answer.
+//!
+//! [`HitAccumulator`] is the one shared enumeration core: both the
+//! bit-level engine (fed from the word-transposed `ReadScoreAllRows`
+//! readout) and the CPU engine (fed from the packed scorer) push raw
+//! `(row, loc, score)` candidates through it, and the coordinator's
+//! lane merge canonicalizes concatenated per-lane partials with
+//! [`MatchSemantics::finalize`]. Both are **order-independent**: the
+//! final list is the same for any push/arrival order, which is what
+//! makes hit lists lane-count-invariant.
+
+use crate::baselines::cpu_ref::BestAlignment;
+use std::cmp::Reverse;
+
+/// One enumerated alignment hit — the same `(row, loc, score)` shape
+/// as a best alignment; a hit list is just more than one of them.
+pub type Hit = BestAlignment;
+
+/// What a pattern's answer is (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MatchSemantics {
+    /// The single best alignment (the historical default). `hits`
+    /// stays empty; `best` carries the answer.
+    BestOf,
+    /// Every alignment with `score >= min_score`, in row-major
+    /// `(row, loc)` order. `min_score = pat_chars − b` is a b-mismatch
+    /// budget. Unbounded by construction — serving layers cap the
+    /// response size (`ServeConfig::max_hits`).
+    Threshold {
+        /// Minimum similarity score (matching characters) to report.
+        min_score: usize,
+    },
+    /// The `k` best alignments under the best-of order (score
+    /// descending, then lowest row, then lowest loc), best-first.
+    TopK {
+        /// How many alignments to keep.
+        k: usize,
+    },
+}
+
+/// Best-first sort key under the canonical tie-break: higher score
+/// first, then lowest row, then lowest loc — exactly the order the
+/// single-lane best-of fold visits candidates.
+#[inline]
+fn rank(h: &Hit) -> (Reverse<usize>, usize, usize) {
+    (Reverse(h.score), h.row, h.loc)
+}
+
+impl MatchSemantics {
+    /// Whether this semantics enumerates a hit list at all (`BestOf`
+    /// does not — its engines skip the accumulator entirely, which is
+    /// what keeps the historical path bit-identical and cost-free).
+    pub fn enumerates(self) -> bool {
+        !matches!(self, MatchSemantics::BestOf)
+    }
+
+    /// Short CLI/JSON tag: `best`, `threshold:N`, `topk:K`.
+    pub fn tag(self) -> String {
+        match self {
+            MatchSemantics::BestOf => "best".to_string(),
+            MatchSemantics::Threshold { min_score } => format!("threshold:{min_score}"),
+            MatchSemantics::TopK { k } => format!("topk:{k}"),
+        }
+    }
+
+    /// Parse a CLI tag produced by [`MatchSemantics::tag`].
+    pub fn parse(s: &str) -> Option<MatchSemantics> {
+        if s == "best" {
+            return Some(MatchSemantics::BestOf);
+        }
+        if let Some(n) = s.strip_prefix("threshold:") {
+            return n.parse().ok().map(|min_score| MatchSemantics::Threshold { min_score });
+        }
+        if let Some(k) = s.strip_prefix("topk:") {
+            return k.parse().ok().map(|k| MatchSemantics::TopK { k });
+        }
+        None
+    }
+
+    /// Canonicalize a concatenation of per-lane (or per-block) partial
+    /// hit lists into the final answer. Each candidate `(row, loc)`
+    /// appears at most once across the partials (lanes own disjoint
+    /// rows), so the result is deterministic for any concatenation
+    /// order — the lane merge calls this once per pattern after the
+    /// reduce, preserving the established row-major, lowest-loc
+    /// tie-break at any lane count.
+    pub fn finalize(self, hits: &mut Vec<Hit>) {
+        match self {
+            MatchSemantics::BestOf => hits.clear(),
+            MatchSemantics::Threshold { .. } => {
+                hits.sort_unstable_by_key(|h| (h.row, h.loc));
+            }
+            MatchSemantics::TopK { k } => {
+                hits.sort_unstable_by_key(rank);
+                hits.truncate(k);
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for MatchSemantics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.tag())
+    }
+}
+
+/// The shared enumeration core: push raw `(row, loc, score)`
+/// candidates, take the canonical (bounded, ordered) hit list out.
+///
+/// Order-independent: `finish` returns the same list for any push
+/// order. `TopK` keeps at most `k` hits resident at all times (sorted
+/// best-first, binary-insert + truncate), so an engine enumerating a
+/// huge candidate space holds `k` hits, not all of them; `Threshold`
+/// keeps every qualifying hit (the serving layer owns response-size
+/// capping); `BestOf` keeps nothing.
+#[derive(Debug, Clone)]
+pub struct HitAccumulator {
+    semantics: MatchSemantics,
+    hits: Vec<Hit>,
+}
+
+impl HitAccumulator {
+    /// Empty accumulator for one pattern under `semantics`.
+    pub fn new(semantics: MatchSemantics) -> Self {
+        let cap = match semantics {
+            MatchSemantics::TopK { k } => k.min(1024),
+            _ => 0,
+        };
+        HitAccumulator { semantics, hits: Vec::with_capacity(cap) }
+    }
+
+    /// Offer one scored candidate.
+    #[inline]
+    pub fn push(&mut self, row: usize, loc: usize, score: usize) {
+        match self.semantics {
+            MatchSemantics::BestOf => {}
+            MatchSemantics::Threshold { min_score } => {
+                if score >= min_score {
+                    self.hits.push(Hit { row, loc, score });
+                }
+            }
+            MatchSemantics::TopK { k } => {
+                if k == 0 {
+                    return;
+                }
+                let h = Hit { row, loc, score };
+                // `(row, loc)` is unique per candidate, so ranks are
+                // distinct and the insertion point is unambiguous.
+                let pos = self.hits.partition_point(|x| rank(x) < rank(&h));
+                if pos < k {
+                    if self.hits.len() == k {
+                        self.hits.pop();
+                    }
+                    self.hits.insert(pos, h);
+                }
+            }
+        }
+    }
+
+    /// Number of hits currently held.
+    pub fn len(&self) -> usize {
+        self.hits.len()
+    }
+
+    /// Whether no hit qualified so far.
+    pub fn is_empty(&self) -> bool {
+        self.hits.is_empty()
+    }
+
+    /// The canonical hit list (see [`MatchSemantics::finalize`]).
+    pub fn finish(mut self) -> Vec<Hit> {
+        self.semantics.finalize(&mut self.hits);
+        self.hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_all(acc: &mut HitAccumulator, hits: &[(usize, usize, usize)]) {
+        for &(row, loc, score) in hits {
+            acc.push(row, loc, score);
+        }
+    }
+
+    #[test]
+    fn tags_roundtrip() {
+        for s in [
+            MatchSemantics::BestOf,
+            MatchSemantics::Threshold { min_score: 12 },
+            MatchSemantics::TopK { k: 4 },
+        ] {
+            assert_eq!(MatchSemantics::parse(&s.tag()), Some(s), "{s}");
+        }
+        assert_eq!(MatchSemantics::parse("nope"), None);
+        assert_eq!(MatchSemantics::parse("threshold:x"), None);
+        assert!(MatchSemantics::Threshold { min_score: 1 }.enumerates());
+        assert!(!MatchSemantics::BestOf.enumerates());
+    }
+
+    #[test]
+    fn best_of_accumulates_nothing() {
+        let mut acc = HitAccumulator::new(MatchSemantics::BestOf);
+        push_all(&mut acc, &[(0, 0, 9), (1, 2, 16)]);
+        assert!(acc.is_empty());
+        assert!(acc.finish().is_empty());
+    }
+
+    #[test]
+    fn threshold_keeps_qualifiers_in_row_major_order() {
+        let mut acc = HitAccumulator::new(MatchSemantics::Threshold { min_score: 10 });
+        // Pushed loc-major (the bitsim readout order): finish must
+        // come back row-major.
+        push_all(&mut acc, &[(2, 0, 11), (0, 0, 10), (1, 1, 9), (0, 3, 16), (1, 0, 12)]);
+        let hits = acc.finish();
+        let as_tuples: Vec<_> = hits.iter().map(|h| (h.row, h.loc, h.score)).collect();
+        assert_eq!(as_tuples, vec![(0, 0, 10), (0, 3, 16), (1, 0, 12), (2, 0, 11)]);
+    }
+
+    #[test]
+    fn topk_keeps_k_best_best_first_and_bounded() {
+        let mut acc = HitAccumulator::new(MatchSemantics::TopK { k: 3 });
+        push_all(
+            &mut acc,
+            &[(5, 1, 7), (0, 0, 9), (2, 2, 12), (1, 9, 9), (3, 3, 1), (4, 4, 12)],
+        );
+        assert_eq!(acc.len(), 3, "accumulator must stay bounded at k");
+        let hits = acc.finish();
+        let as_tuples: Vec<_> = hits.iter().map(|h| (h.row, h.loc, h.score)).collect();
+        // Score desc, then lowest row: both 12s before the 9s; among
+        // the 9s the lower row wins the last slot.
+        assert_eq!(as_tuples, vec![(2, 2, 12), (4, 4, 12), (0, 0, 9)]);
+    }
+
+    #[test]
+    fn topk_zero_and_underfull_cases() {
+        let mut acc = HitAccumulator::new(MatchSemantics::TopK { k: 0 });
+        push_all(&mut acc, &[(0, 0, 16)]);
+        assert!(acc.finish().is_empty());
+        let mut acc = HitAccumulator::new(MatchSemantics::TopK { k: 8 });
+        push_all(&mut acc, &[(1, 0, 3), (0, 0, 5)]);
+        let hits = acc.finish();
+        assert_eq!(hits.len(), 2);
+        assert_eq!((hits[0].row, hits[0].score), (0, 5));
+    }
+
+    /// The keystone property of the shared core: push order never
+    /// changes the finished list (what makes hit lists lane-count- and
+    /// engine-readout-order-invariant), and `finalize` over a
+    /// concatenation of partials equals one accumulator fed everything.
+    #[test]
+    fn order_independence_and_partial_merge_equivalence() {
+        let mut rng = crate::util::Rng::new(0x4175);
+        for semantics in [
+            MatchSemantics::Threshold { min_score: 6 },
+            MatchSemantics::TopK { k: 5 },
+        ] {
+            // Distinct (row, loc) pairs with colliding scores.
+            let mut candidates: Vec<(usize, usize, usize)> = (0..40)
+                .map(|i| (i % 8, i / 8, rng.below(10)))
+                .collect();
+            let mut forward = HitAccumulator::new(semantics);
+            push_all(&mut forward, &candidates);
+            let want = forward.finish();
+
+            rng.shuffle(&mut candidates);
+            let mut shuffled = HitAccumulator::new(semantics);
+            push_all(&mut shuffled, &candidates);
+            assert_eq!(shuffled.finish(), want, "{semantics}: push order leaked");
+
+            // Split into "lanes" (disjoint candidate subsets), finish
+            // each, concatenate, finalize — the reducer's path.
+            let mut concat: Vec<Hit> = Vec::new();
+            for lane in 0..3 {
+                let mut acc = HitAccumulator::new(semantics);
+                push_all(
+                    &mut acc,
+                    &candidates
+                        .iter()
+                        .copied()
+                        .filter(|(row, _, _)| row % 3 == lane)
+                        .collect::<Vec<_>>(),
+                );
+                concat.extend(acc.finish());
+            }
+            let mut merged = concat;
+            semantics.finalize(&mut merged);
+            assert_eq!(merged, want, "{semantics}: lane merge diverged");
+        }
+    }
+}

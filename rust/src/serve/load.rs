@@ -266,4 +266,28 @@ mod tests {
         let empty = summarize(&mut []);
         assert_eq!((empty.p50, empty.mean, empty.max), (0.0, 0.0, 0.0));
     }
+
+    /// Satellite: percentile behavior on degenerate sample sizes,
+    /// pinned. 0 elements → all-zero summary; 1 element → every
+    /// quantile is that element; 2 elements → nearest-rank indexing
+    /// (`round(p · (n−1))`, ties away from zero) puts every quantile
+    /// from p50 up on the *larger* element, with the mean still
+    /// between them.
+    #[test]
+    fn summarize_degenerate_sample_sizes() {
+        let empty = summarize(&mut []);
+        assert_eq!(
+            (empty.p50, empty.p95, empty.p99, empty.mean, empty.max),
+            (0.0, 0.0, 0.0, 0.0, 0.0)
+        );
+
+        let one = summarize(&mut [7.5]);
+        assert_eq!((one.p50, one.p95, one.p99, one.mean, one.max), (7.5, 7.5, 7.5, 7.5, 7.5));
+
+        let two = summarize(&mut [3.0, 1.0]); // sorts in place
+        assert_eq!((two.p50, two.p95, two.p99, two.max), (3.0, 3.0, 3.0, 3.0));
+        assert!((two.mean - 2.0).abs() < 1e-12);
+        // Quantiles never invert even at n = 2.
+        assert!(two.p50 <= two.p95 && two.p95 <= two.p99 && two.p99 <= two.max);
+    }
 }

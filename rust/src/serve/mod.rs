@@ -25,8 +25,15 @@
 //!   admission queue, coalesces them into micro-batches (size- and
 //!   deadline-triggered), deduplicates identical patterns across
 //!   requests before dispatch, and demultiplexes per-pattern
-//!   [`crate::coordinator::WorkResult`]s back to each caller with
-//!   queue-wait / batch-wait / execute timing and per-batch occupancy.
+//!   [`crate::coordinator::WorkResult`]s — best alignments *and* the
+//!   full hit lists of threshold/top-K semantics — back to each caller
+//!   with queue-wait / batch-wait / execute timing and per-batch
+//!   occupancy. Requests are alphabet- and semantics-tagged
+//!   ([`MatchRequest`]); mismatches against the serving coordinator
+//!   are typed refusals at admission, and a pattern whose hit list
+//!   exceeds [`ServeConfig::max_hits`] fails its own request
+//!   ([`ServeError::TooManyHits`]) so a low threshold cannot DoS the
+//!   response path.
 //! * [`ServeConfig::backpressure`] — [`Backpressure::Reject`] bounces
 //!   over-admission with a retryable [`ServeError::Overloaded`];
 //!   [`Backpressure::Block`] parks the caller on the bounded queue.

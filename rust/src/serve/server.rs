@@ -18,6 +18,7 @@
 
 use crate::alphabet::Alphabet;
 use crate::coordinator::{Coordinator, WorkResult};
+use crate::semantics::MatchSemantics;
 use crate::util::FxHashMap;
 use crate::Result;
 use std::sync::mpsc;
@@ -53,6 +54,15 @@ pub struct ServeConfig {
     /// micro-batch before dispatch (Zipfian traffic makes this the
     /// main batching win).
     pub dedup: bool,
+    /// Server-side cap on the hit-list length of any single answered
+    /// pattern. A `Threshold` query with a low floor can match nearly
+    /// every resident alignment; without a cap that response volume
+    /// would DoS the demux/response path (clone-per-duplicate under
+    /// dedup, channel transfer per caller). A pattern exceeding the
+    /// cap fails **its own request** with the typed, non-retryable
+    /// [`ServeError::TooManyHits`]; the rest of the micro-batch is
+    /// unaffected.
+    pub max_hits: usize,
 }
 
 impl Default for ServeConfig {
@@ -63,6 +73,7 @@ impl Default for ServeConfig {
             queue_depth: 128,
             backpressure: Backpressure::Block,
             dedup: true,
+            max_hits: 4096,
         }
     }
 }
@@ -102,6 +113,29 @@ pub enum ServeError {
         /// Index of the offending pattern within the request.
         index: usize,
     },
+    /// The request asked for different query semantics than this
+    /// server's coordinator answers under. Semantics are compiled into
+    /// the coordinator's execution and merge (and dedup shares one
+    /// answer per unique pattern), so micro-batches must stay
+    /// semantics-homogeneous — admission refuses the request instead.
+    SemanticsMismatch {
+        /// The semantics the request declared.
+        requested: MatchSemantics,
+        /// The semantics the coordinator serves.
+        serving: MatchSemantics,
+    },
+    /// A pattern's enumerated hit list exceeded the server's
+    /// [`ServeConfig::max_hits`] response cap (e.g. a `Threshold`
+    /// query with a floor low enough to match most of the substrate).
+    /// Non-retryable as-is: raise the threshold or use `TopK`.
+    TooManyHits {
+        /// Index of the offending pattern within the request.
+        index: usize,
+        /// How many hits it enumerated.
+        hits: usize,
+        /// The configured cap.
+        max_hits: usize,
+    },
     /// The coordinator failed the whole micro-batch.
     Run(String),
 }
@@ -122,6 +156,15 @@ impl std::fmt::Display for ServeError {
             ServeError::InvalidSymbol { index } => {
                 write!(f, "request pattern {index} holds codes outside the serving alphabet")
             }
+            ServeError::SemanticsMismatch { requested, serving } => write!(
+                f,
+                "request asked for {requested} semantics but this server serves {serving}"
+            ),
+            ServeError::TooManyHits { index, hits, max_hits } => write!(
+                f,
+                "request pattern {index} enumerated {hits} hits, over the server cap of \
+                 {max_hits}; raise the score threshold or switch to top-K"
+            ),
             ServeError::Run(msg) => write!(f, "micro-batch failed: {msg}"),
         }
     }
@@ -158,6 +201,24 @@ pub struct BatchStats {
     pub occupancy: f64,
 }
 
+impl BatchStats {
+    /// What an empty request reports: it never enters a batch, so it
+    /// is its own one-request, zero-pattern "batch" — neutral in every
+    /// aggregate (`dedup_factor` 1.0 = no duplication evidence,
+    /// occupancy 0). Before this constructor existed the fast path
+    /// fabricated `requests: 0`, i.e. a response claiming it rode a
+    /// batch no request was part of.
+    pub fn empty_request() -> Self {
+        BatchStats {
+            requests: 1,
+            patterns: 0,
+            unique_patterns: 0,
+            dedup_factor: 1.0,
+            occupancy: 0.0,
+        }
+    }
+}
+
 /// One served request's answer.
 #[derive(Debug, Clone)]
 pub struct MatchResponse {
@@ -181,8 +242,15 @@ pub struct ServerTotals {
     /// Micro-batches served.
     pub batches: usize,
     /// Requests answered successfully (including empty requests, which
-    /// never enter a batch).
+    /// never enter a batch — see [`ServerTotals::empty_requests`]).
     pub requests: usize,
+    /// Empty requests answered on the no-dispatch fast path. Counted
+    /// separately so the batch-derived aggregates
+    /// ([`ServerTotals::dedup_factor`],
+    /// [`ServerTotals::mean_batch_patterns`]) are visibly untouched by
+    /// zero-pattern traffic: empty requests contribute to no batch, no
+    /// pattern, and no unique-pattern total.
+    pub empty_requests: usize,
     /// Offered patterns served.
     pub patterns: usize,
     /// Unique patterns executed after dedup.
@@ -212,14 +280,26 @@ impl ServerTotals {
 pub struct MatchRequest {
     /// The alphabet `patterns` is coded in.
     pub alphabet: Alphabet,
+    /// What each pattern's answer is: best-of (default), threshold
+    /// enumeration, or top-K. Must match the serving coordinator's
+    /// semantics ([`ServeError::SemanticsMismatch`] otherwise), the
+    /// same homogeneity contract as the alphabet tag.
+    pub semantics: MatchSemantics,
     /// The pattern pool, one code per byte.
     pub patterns: Vec<Vec<u8>>,
 }
 
 impl MatchRequest {
-    /// Tagged request over pre-encoded codes.
+    /// Tagged request over pre-encoded codes, under the historical
+    /// best-of semantics.
     pub fn new(alphabet: Alphabet, patterns: Vec<Vec<u8>>) -> Self {
-        MatchRequest { alphabet, patterns }
+        MatchRequest { alphabet, semantics: MatchSemantics::BestOf, patterns }
+    }
+
+    /// The same request under explicit query semantics.
+    pub fn with_semantics(mut self, semantics: MatchSemantics) -> Self {
+        self.semantics = semantics;
+        self
     }
 }
 
@@ -256,6 +336,7 @@ pub struct MatchServer {
     batcher: Option<std::thread::JoinHandle<()>>,
     pat_chars: usize,
     alphabet: Alphabet,
+    semantics: MatchSemantics,
     backpressure: Backpressure,
     totals: Arc<Mutex<ServerTotals>>,
 }
@@ -266,6 +347,7 @@ impl MatchServer {
     pub fn start(coordinator: Arc<Coordinator>, cfg: ServeConfig) -> Result<Self> {
         let pat_chars = coordinator.pat_chars();
         let alphabet = coordinator.alphabet();
+        let semantics = coordinator.semantics();
         let backpressure = cfg.backpressure;
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth.max(1));
         let totals = Arc::new(Mutex::new(ServerTotals::default()));
@@ -279,6 +361,7 @@ impl MatchServer {
             batcher: Some(batcher),
             pat_chars,
             alphabet,
+            semantics,
             backpressure,
             totals,
         })
@@ -289,27 +372,43 @@ impl MatchServer {
         self.alphabet
     }
 
+    /// The query semantics this server's coordinator answers under.
+    pub fn semantics(&self) -> MatchSemantics {
+        self.semantics
+    }
+
     /// Submit an untagged pool, assumed coded in the server's own
     /// alphabet ([`MatchServer::alphabet`]) — the pre-generalization
     /// call shape. Validation happens at admission so one malformed
     /// request cannot fail a whole micro-batch; an empty request
     /// answers immediately.
     pub fn submit(&self, patterns: Vec<Vec<u8>>) -> std::result::Result<PendingMatch, ServeError> {
-        self.submit_request(MatchRequest { alphabet: self.alphabet, patterns })
+        self.submit_request(MatchRequest {
+            alphabet: self.alphabet,
+            semantics: self.semantics,
+            patterns,
+        })
     }
 
-    /// Submit an alphabet-tagged request without waiting for its
-    /// response. A request whose alphabet differs from the serving
-    /// coordinator's is refused with [`ServeError::AlphabetMismatch`]
-    /// before it can join (and corrupt) a micro-batch.
+    /// Submit an alphabet- and semantics-tagged request without
+    /// waiting for its response. A request whose alphabet or semantics
+    /// differ from the serving coordinator's is refused with a typed
+    /// error before it can join (and corrupt) a micro-batch.
     pub fn submit_request(
         &self,
         request: MatchRequest,
     ) -> std::result::Result<PendingMatch, ServeError> {
+        let admitted = Instant::now();
         if request.alphabet != self.alphabet {
             return Err(ServeError::AlphabetMismatch {
                 requested: request.alphabet,
                 serving: self.alphabet,
+            });
+        }
+        if request.semantics != self.semantics {
+            return Err(ServeError::SemanticsMismatch {
+                requested: request.semantics,
+                serving: self.semantics,
             });
         }
         let patterns = request.patterns;
@@ -327,26 +426,30 @@ impl MatchServer {
         }
         let (resp_tx, resp_rx) = mpsc::channel();
         if patterns.is_empty() {
+            // Satellite bugfix: the fast path used to fabricate a
+            // zero-request `BatchStats` and a zeroed timing. It now
+            // reports itself as a one-request, zero-pattern batch with
+            // a real admission→response time, counts into
+            // `ServerTotals::requests` *and* `empty_requests`, and —
+            // by touching no batch/pattern/unique total — leaves the
+            // batch-derived `dedup_factor()` / `mean_batch_patterns()`
+            // aggregates exactly where real traffic put them.
             if let Ok(mut t) = self.totals.lock() {
                 t.requests += 1;
+                t.empty_requests += 1;
             }
+            let total = admitted.elapsed().as_secs_f64();
             let _ = resp_tx.send(Ok(MatchResponse {
                 results: Vec::new(),
-                timing: RequestTiming::default(),
-                batch: BatchStats {
-                    requests: 0,
-                    patterns: 0,
-                    unique_patterns: 0,
-                    dedup_factor: 1.0,
-                    occupancy: 0.0,
-                },
+                timing: RequestTiming { total, ..RequestTiming::default() },
+                batch: BatchStats::empty_request(),
             }));
             return Ok(PendingMatch { rx: resp_rx });
         }
         let Some(tx) = self.tx.as_ref() else {
             return Err(ServeError::ShuttingDown);
         };
-        let req = Request { patterns, admitted: Instant::now(), resp: resp_tx };
+        let req = Request { patterns, admitted, resp: resp_tx };
         match self.backpressure {
             Backpressure::Block => {
                 tx.send(req).map_err(|_| ServeError::ShuttingDown)?;
@@ -448,6 +551,19 @@ fn batcher_loop(
     }
 }
 
+/// The one response-size-cap policy both demux branches enforce: the
+/// first pattern (by request index) whose hit-list length exceeds
+/// `max_hits` refuses its request with the typed error.
+fn hit_cap_check(
+    hit_lens: impl Iterator<Item = usize>,
+    max_hits: usize,
+) -> std::result::Result<(), ServeError> {
+    match hit_lens.enumerate().find(|&(_, hits)| hits > max_hits) {
+        Some((index, hits)) => Err(ServeError::TooManyHits { index, hits, max_hits }),
+        None => Ok(()),
+    }
+}
+
 /// One micro-batch through the coordinator and back out to its callers.
 fn dispatch_batch(
     coordinator: &Coordinator,
@@ -464,7 +580,13 @@ fn dispatch_batch(
     // the lanes by reference count via `Coordinator::run_shared`) and
     // each request keeps slot indices into it; with dedup off, the
     // requests' own pools share a single `run_pools` lock acquisition.
-    let (per_request, unique) = if cfg.dedup {
+    // Each request demuxes to its own `Result`: a pattern whose hit
+    // list exceeds `cfg.max_hits` fails that request alone — checked
+    // *before* any per-duplicate clone, so an oversized hit list is
+    // never multiplied across the batch.
+    type PerRequest = Vec<std::result::Result<Vec<WorkResult>, ServeError>>;
+    let (per_request, unique): (std::result::Result<PerRequest, ServeError>, usize) = if cfg.dedup
+    {
         let mut seen: FxHashMap<Arc<[u8]>, usize> = FxHashMap::default();
         let mut pool: Vec<Arc<[u8]>> = Vec::with_capacity(offered);
         let mut slots: Vec<Vec<usize>> = Vec::with_capacity(batch.len());
@@ -489,23 +611,36 @@ fn dispatch_batch(
             Ok((results, _)) => Ok(slots
                 .iter()
                 .map(|map| {
-                    map.iter()
+                    hit_cap_check(
+                        map.iter().map(|&slot| results[slot].hits.len()),
+                        cfg.max_hits,
+                    )?;
+                    Ok(map
+                        .iter()
                         .enumerate()
                         .map(|(i, &slot)| WorkResult {
                             pattern_id: i,
                             best: results[slot].best,
+                            hits: results[slot].hits.clone(),
                             passes: results[slot].passes,
                         })
-                        .collect::<Vec<WorkResult>>()
+                        .collect::<Vec<WorkResult>>())
                 })
-                .collect::<Vec<_>>()),
+                .collect::<PerRequest>()),
             Err(e) => Err(ServeError::Run(format!("{e:#}"))),
         };
         (per_request, unique)
     } else {
         let pools: Vec<&[Vec<u8>]> = batch.iter().map(|(r, _)| r.patterns.as_slice()).collect();
         let per_request = match coordinator.run_pools(&pools) {
-            Ok(per) => Ok(per.into_iter().map(|(results, _)| results).collect::<Vec<_>>()),
+            Ok(per) => Ok(per
+                .into_iter()
+                .map(|(results, _)| {
+                    let capped =
+                        hit_cap_check(results.iter().map(|r| r.hits.len()), cfg.max_hits);
+                    capped.map(|()| results)
+                })
+                .collect::<PerRequest>()),
             Err(e) => Err(ServeError::Run(format!("{e:#}"))),
         };
         (per_request, offered)
@@ -524,21 +659,40 @@ fn dispatch_batch(
     match per_request {
         Ok(all) => {
             // Count only served work: a failed batch must not inflate
-            // the totals the serving projection is derived from.
+            // the totals the serving projection is derived from. The
+            // batch-level offered/unique totals describe what executed
+            // (a hit-capped request's patterns did run); `requests`
+            // counts answers, so capped refusals are excluded. Totals
+            // update BEFORE the responses go out: a client that has
+            // its response in hand must see its own request in
+            // `stats()`.
+            let answered = all.iter().filter(|outcome| outcome.is_ok()).count();
             if let Ok(mut t) = totals.lock() {
                 t.batches += 1;
-                t.requests += batch.len();
+                t.requests += answered;
                 t.patterns += offered;
                 t.unique_patterns += unique;
             }
-            for ((req, picked), results) in batch.into_iter().zip(all) {
-                let timing = RequestTiming {
-                    queue_wait: picked.saturating_duration_since(req.admitted).as_secs_f64(),
-                    batch_wait: t_dispatch.saturating_duration_since(picked).as_secs_f64(),
-                    execute,
-                    total: done.saturating_duration_since(req.admitted).as_secs_f64(),
-                };
-                let _ = req.resp.send(Ok(MatchResponse { results, timing, batch: stats }));
+            for ((req, picked), outcome) in batch.into_iter().zip(all) {
+                match outcome {
+                    Ok(results) => {
+                        let timing = RequestTiming {
+                            queue_wait: picked
+                                .saturating_duration_since(req.admitted)
+                                .as_secs_f64(),
+                            batch_wait: t_dispatch.saturating_duration_since(picked).as_secs_f64(),
+                            execute,
+                            total: done.saturating_duration_since(req.admitted).as_secs_f64(),
+                        };
+                        let _ =
+                            req.resp.send(Ok(MatchResponse { results, timing, batch: stats }));
+                    }
+                    // Response-size cap tripped: this request alone is
+                    // refused; the rest of the batch is unaffected.
+                    Err(e) => {
+                        let _ = req.resp.send(Err(e));
+                    }
+                }
             }
         }
         Err(e) => {
@@ -570,8 +724,32 @@ mod tests {
             queue_depth: 16,
             backpressure: Backpressure::Block,
             dedup,
+            max_hits: 4096,
         };
         (MatchServer::start(coord, serve_cfg).unwrap(), w.patterns)
+    }
+
+    /// Server over explicit resident fragments and query semantics.
+    fn semantics_server(
+        fragments: Vec<Vec<u8>>,
+        semantics: MatchSemantics,
+        max_hits: usize,
+    ) -> MatchServer {
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.engine = EngineKind::Cpu;
+        cfg.lanes = 2;
+        cfg.oracular = None;
+        cfg.semantics = semantics;
+        let coord = Arc::new(Coordinator::new(cfg, fragments).unwrap());
+        let serve_cfg = ServeConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            queue_depth: 16,
+            backpressure: Backpressure::Block,
+            dedup: true,
+            max_hits,
+        };
+        MatchServer::start(coord, serve_cfg).unwrap()
     }
 
     #[test]
@@ -662,6 +840,104 @@ mod tests {
             .unwrap();
         assert_eq!(resp.results.len(), 1);
         server.shutdown();
+    }
+
+    /// Satellite bugfix regression: the empty-request fast path must
+    /// count consistently — `requests` and `empty_requests` move, no
+    /// batch/pattern/unique total moves, the batch-derived aggregates
+    /// are untouched, the response's `BatchStats` describes a real
+    /// one-request zero-pattern batch, and the timing is recorded.
+    #[test]
+    fn empty_request_accounting_is_consistent() {
+        let (server, patterns) = server(8, true);
+        server.match_patterns(patterns[..4].to_vec()).unwrap();
+        let before = server.stats();
+        let resp = server.match_patterns(Vec::new()).unwrap();
+        assert_eq!(resp.batch, BatchStats::empty_request());
+        assert_eq!(resp.batch.requests, 1, "a response must belong to its own request");
+        assert!(resp.timing.total >= 0.0 && resp.timing.execute == 0.0);
+        let after = server.stats();
+        assert_eq!(after.requests, before.requests + 1);
+        assert_eq!(after.empty_requests, before.empty_requests + 1);
+        assert_eq!(after.batches, before.batches);
+        assert_eq!(after.patterns, before.patterns);
+        assert_eq!(after.unique_patterns, before.unique_patterns);
+        assert_eq!(after.dedup_factor(), before.dedup_factor());
+        assert_eq!(after.mean_batch_patterns(), before.mean_batch_patterns());
+        server.shutdown();
+    }
+
+    /// Tentpole, serving level: a request whose semantics differ from
+    /// the serving coordinator's is a typed refusal, and matching
+    /// requests get full hit lists demuxed — duplicates share one
+    /// executed answer, hits included.
+    #[test]
+    fn semantics_mismatch_refused_and_hits_demux_through_dedup() {
+        let w = DnaWorkload::generate(2048, 24, 16, 0.0, 9);
+        let semantics = MatchSemantics::TopK { k: 2 };
+        let server = semantics_server(w.fragments(64, 16), semantics, 4096);
+        assert_eq!(server.semantics(), semantics);
+        let err = server
+            .submit_request(MatchRequest::new(Alphabet::Dna2, vec![w.patterns[0].clone()]))
+            .err()
+            .expect("best-of request against a top-K server must be refused");
+        assert_eq!(
+            err,
+            ServeError::SemanticsMismatch {
+                requested: MatchSemantics::BestOf,
+                serving: semantics
+            }
+        );
+        // `submit` adopts the server's semantics; explicit tagging via
+        // `with_semantics` is equivalent.
+        let resp = server
+            .match_request(
+                MatchRequest::new(Alphabet::Dna2, vec![w.patterns[0].clone(); 3])
+                    .with_semantics(semantics),
+            )
+            .unwrap();
+        assert_eq!(resp.results.len(), 3);
+        assert_eq!(resp.batch.unique_patterns, 1);
+        for r in &resp.results {
+            assert_eq!(r.hits.len(), 2, "top-2 list expected");
+            assert_eq!(r.hits, resp.results[0].hits, "duplicates must share the hit list");
+            assert_eq!(r.hits[0].score, 16, "planted pattern's best hit is perfect");
+            let b = r.best.unwrap();
+            assert_eq!((r.hits[0].row, r.hits[0].loc, r.hits[0].score), (b.row, b.loc, b.score));
+        }
+        server.shutdown();
+    }
+
+    /// Tentpole DoS guard: a pattern whose threshold enumeration blows
+    /// the `max_hits` response cap fails its own request with a typed
+    /// error, while a small request in the same server (and batch) is
+    /// served normally.
+    #[test]
+    fn hit_overflow_fails_only_the_offending_request() {
+        // Four identical all-A rows: the all-A pattern matches every
+        // (row, loc) = 4 × 49 = 196 hits; a mixed pattern scores < 16
+        // everywhere and enumerates nothing at threshold 16.
+        let fragments = vec![vec![0u8; 64]; 4];
+        let semantics = MatchSemantics::Threshold { min_score: 16 };
+        let server = semantics_server(fragments, semantics, 8);
+        let hot = vec![0u8; 16];
+        let cold: Vec<u8> = (0..16u8).map(|i| i % 4).collect();
+        let p_hot = server.submit(vec![hot]).unwrap();
+        let p_cold = server.submit(vec![cold]).unwrap();
+        let err = p_hot.wait().err().expect("196 hits must overflow a cap of 8");
+        assert_eq!(err, ServeError::TooManyHits { index: 0, hits: 196, max_hits: 8 });
+        let resp = p_cold.wait().expect("the small request must be unaffected");
+        assert_eq!(resp.results.len(), 1);
+        assert!(resp.results[0].hits.is_empty());
+        assert!(resp.results[0].best.unwrap().score < 16);
+        let totals = server.shutdown();
+        assert_eq!(totals.requests, 1, "the capped refusal must not count as answered");
+        server_totals_cover_executed_batch(&totals);
+    }
+
+    fn server_totals_cover_executed_batch(totals: &ServerTotals) {
+        assert!(totals.batches >= 1);
+        assert_eq!(totals.patterns, 2, "both patterns executed even though one was refused");
     }
 
     #[test]

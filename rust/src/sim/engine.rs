@@ -160,6 +160,24 @@ impl PassCost {
     pub fn power(&self) -> f64 {
         self.energy / self.masked_latency
     }
+
+    /// Step-model cost `(latency s, energy J)` of draining **one
+    /// enumerated hit** to the host, given `rows` rows per array.
+    ///
+    /// A pass's read-out stage drains every row's score through the
+    /// array's output port once per alignment; one hit's transfer is
+    /// therefore one row's share of that stage. This is what makes
+    /// threshold/top-K enumeration visible in the projection: the PIM
+    /// literature's warning that result readout, not compute, bounds
+    /// in-memory matching (Mutlu et al.) shows up as this per-hit cost
+    /// times the hit volume.
+    pub fn per_hit_readout(&self, rows: usize) -> (f64, f64) {
+        let rows = rows.max(1) as f64;
+        (
+            self.per_alignment.latency(Stage::ReadOut) / rows,
+            self.per_alignment.energy(Stage::ReadOut) / rows,
+        )
+    }
 }
 
 /// Builder of DNA-style pass costs from a [`SystemConfig`].
@@ -347,6 +365,23 @@ mod tests {
         let masked = DnaPassModel::new(cfg).pass_cost();
         assert!(masked.masked_latency < unmasked.masked_latency);
         assert_eq!(masked.energy, unmasked.energy);
+    }
+
+    /// One enumerated hit costs one row's share of the read-out stage:
+    /// `rows` hits drain exactly one full read-out stage.
+    #[test]
+    fn per_hit_readout_is_row_share_of_readout_stage() {
+        let cfg = SystemConfig::small(Technology::NearTerm, PresetMode::Gang);
+        let pc = DnaPassModel::new(cfg).pass_cost();
+        let (t, e) = pc.per_hit_readout(cfg.rows);
+        assert!(t > 0.0 && e > 0.0);
+        let ro_lat = pc.per_alignment.latency(Stage::ReadOut);
+        let ro_en = pc.per_alignment.energy(Stage::ReadOut);
+        assert!((t * cfg.rows as f64 - ro_lat).abs() / ro_lat < 1e-12);
+        assert!((e * cfg.rows as f64 - ro_en).abs() / ro_en < 1e-12);
+        // Degenerate row count clamps rather than dividing by zero.
+        let (t0, _) = pc.per_hit_readout(0);
+        assert!(t0.is_finite());
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //!
 //! * **throughput keys** (`*_rate`, `*_per_sec`, `*_qps`, `speedup`,
 //!   `*_factor`) — higher is better; fail when
-//!   `measured < baseline × (1 − tolerance)`.
+//!   `measured < baseline × (1 − tolerance)`. `dedup_factor` is
+//!   carved out: it describes the *workload's* duplication (a property
+//!   of the load mix, where lower is a legitimate traffic change), not
+//!   a performance metric — gating it as a floor would fail CI on any
+//!   load-mix change. Same for `occupancy` (how full batches closed).
 //! * **exact keys** (counts and geometry: `patterns`, `matched`,
 //!   `bits_per_char`, `alignments_per_pass`, …) and **booleans**
 //!   (e.g. `verified`) — must be equal; these pin the deterministic
@@ -27,9 +31,10 @@ use crate::util::Json;
 
 /// Keys whose values must match exactly (deterministic counts and
 /// geometry).
-const EXACT_KEYS: [&str; 10] = [
+const EXACT_KEYS: [&str; 11] = [
     "patterns",
     "matched",
+    "total_hits",
     "unique_patterns",
     "bits_per_char",
     "alignments_per_pass",
@@ -86,17 +91,29 @@ impl GateReport {
 }
 
 /// Whether `key` names a higher-is-better throughput metric.
+/// `dedup_factor` is excluded despite the `_factor` suffix: it is a
+/// workload property (offered/unique duplication of the load mix), not
+/// a performance result — see [`is_skipped_key`].
 fn is_throughput_key(key: &str) -> bool {
     key.ends_with("_rate")
         || key.ends_with("per_sec")
         || key.ends_with("_qps")
-        || key.ends_with("_factor")
+        || (key.ends_with("_factor") && !is_skipped_key(key))
         || key == "speedup"
 }
 
-/// Whether `key` is excluded from gating (noisy or descriptive).
+/// Whether `key` is excluded from gating (noisy, descriptive, or a
+/// workload property rather than a result): absolute seconds, the
+/// `smoke` flag, and the serving layer's `dedup_factor`/`occupancy`
+/// load-mix descriptors, which a legitimate traffic change moves in
+/// either direction.
 fn is_skipped_key(key: &str) -> bool {
-    key == "smoke" || key == "wall_seconds" || key.ends_with("_s") || key.starts_with("ns_per")
+    key == "smoke"
+        || key == "wall_seconds"
+        || key.ends_with("_s")
+        || key.starts_with("ns_per")
+        || key == "dedup_factor"
+        || key == "occupancy"
 }
 
 /// Compare `measured` against `baseline` with a relative `tolerance`
@@ -268,15 +285,56 @@ mod tests {
         assert_eq!(report.compared[1].path, "alphabets.1.bits_per_char");
     }
 
+    /// The classification table, pinned. Satellite bugfix: any
+    /// `*_factor` key used to classify as a higher-is-better
+    /// throughput floor, which would gate `dedup_factor` — a workload
+    /// property — and fail CI on a legitimate load-mix change that
+    /// lowers duplication. `dedup_factor` and `occupancy` are now
+    /// skipped; genuinely performance-shaped `*_factor` keys still
+    /// gate.
     #[test]
     fn key_classifiers() {
-        for k in ["host_rate", "passes_per_sec", "served_qps", "speedup", "dedup_factor"] {
-            assert!(is_throughput_key(k), "{k}");
+        for k in ["host_rate", "passes_per_sec", "served_qps", "speedup", "speedup_factor"] {
+            assert!(is_throughput_key(k), "{k} must gate as a throughput floor");
         }
-        for k in ["smoke", "wall_seconds", "cached_pass_s", "ns_per_alignment"] {
-            assert!(is_skipped_key(k), "{k}");
+        for k in [
+            "smoke",
+            "wall_seconds",
+            "cached_pass_s",
+            "ns_per_alignment",
+            "dedup_factor",
+            "occupancy",
+        ] {
+            assert!(is_skipped_key(k), "{k} must be skipped");
+            assert!(!is_throughput_key(k), "{k} must not double as a throughput floor");
+        }
+        for k in ["patterns", "matched", "total_hits", "bits_per_char"] {
+            assert!(EXACT_KEYS.contains(&k), "{k} must gate exactly");
         }
         assert!(!is_throughput_key("layout_cols"));
         assert!(!is_skipped_key("host_rate"));
+    }
+
+    /// End-to-end over the comparator: a measured report whose
+    /// dedup_factor *dropped* (load-mix change) passes, while a real
+    /// throughput floor still fails.
+    #[test]
+    fn dedup_factor_drop_does_not_fail_the_gate() {
+        let doc = |dedup: f64, qps: f64| {
+            Json::obj(vec![(
+                "serving",
+                Json::obj(vec![
+                    ("dedup_factor", Json::num(dedup)),
+                    ("occupancy", Json::num(dedup / 4.0)),
+                    ("served_qps", Json::num(qps)),
+                ]),
+            )])
+        };
+        let report = compare(&doc(3.0, 100.0), &doc(1.2, 90.0), 0.25);
+        assert!(report.passed(), "{:?}", report.failures());
+        assert_eq!(report.compared.len(), 1, "only served_qps may gate");
+        let report = compare(&doc(3.0, 100.0), &doc(1.2, 10.0), 0.25);
+        assert_eq!(report.failures().len(), 1);
+        assert_eq!(report.failures()[0].path, "serving.served_qps");
     }
 }

@@ -206,20 +206,43 @@ impl Parser<'_> {
                         Some(b'b') => out.push('\u{0008}'),
                         Some(b'f') => out.push('\u{000C}'),
                         Some(b'u') => {
-                            let hex = self
-                                .bytes
-                                .get(self.pos..self.pos + 4)
-                                .ok_or_else(|| "truncated \\u escape".to_string())?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?,
-                                16,
-                            )
-                            .map_err(|_| "bad \\u escape")?;
-                            self.pos += 4;
-                            // Surrogate pairs are not needed by the
-                            // bench reports; map lone surrogates to the
-                            // replacement character.
-                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                            let code = self.hex4()?;
+                            // UTF-16 surrogate pairs: a high surrogate
+                            // followed by a `\u`-escaped low surrogate
+                            // combines into one astral-plane character
+                            // (JSON escapes U+1F600 as the pair
+                            // `\ud83d` + `\ude00`). A *lone* surrogate has
+                            // no scalar value; it deliberately decodes
+                            // to U+FFFD instead of failing the whole
+                            // document.
+                            let ch = if (0xD800..=0xDBFF).contains(&code) {
+                                let next_is_escape = self.bytes.get(self.pos) == Some(&b'\\')
+                                    && self.bytes.get(self.pos + 1) == Some(&b'u');
+                                if next_is_escape {
+                                    let save = self.pos;
+                                    self.pos += 2;
+                                    let lo = self.hex4()?;
+                                    if (0xDC00..=0xDFFF).contains(&lo) {
+                                        let scalar = 0x10000
+                                            + ((code - 0xD800) << 10)
+                                            + (lo - 0xDC00);
+                                        char::from_u32(scalar).unwrap_or('\u{FFFD}')
+                                    } else {
+                                        // Not a low surrogate: leave it
+                                        // for the next loop iteration;
+                                        // the high half was lone.
+                                        self.pos = save;
+                                        '\u{FFFD}'
+                                    }
+                                } else {
+                                    '\u{FFFD}'
+                                }
+                            } else if (0xDC00..=0xDFFF).contains(&code) {
+                                '\u{FFFD}' // lone low surrogate
+                            } else {
+                                char::from_u32(code).unwrap_or('\u{FFFD}')
+                            };
+                            out.push(ch);
                         }
                         _ => return Err(format!("bad escape at byte {}", self.pos)),
                     }
@@ -244,6 +267,22 @@ impl Parser<'_> {
                 None => return Err("unterminated string".to_string()),
             }
         }
+    }
+
+    /// Read the 4 hex digits of a `\u` escape.
+    fn hex4(&mut self) -> Result<u32, String> {
+        let hex = self
+            .bytes
+            .get(self.pos..self.pos + 4)
+            .ok_or_else(|| "truncated \\u escape".to_string())?;
+        if !hex.iter().all(u8::is_ascii_hexdigit) {
+            return Err(format!("bad \\u escape at byte {}", self.pos));
+        }
+        let code =
+            u32::from_str_radix(std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?, 16)
+                .map_err(|_| "bad \\u escape")?;
+        self.pos += 4;
+        Ok(code)
     }
 
     fn number(&mut self) -> Result<Json, String> {
@@ -402,6 +441,31 @@ mod tests {
         assert!(Json::parse("\"unterminated").is_err());
         assert!(Json::parse("{} trailing").is_err());
         assert!(Json::parse("nope").is_err());
+    }
+
+    /// Satellite bugfix regression: `\u` escape decoding combines
+    /// UTF-16 surrogate pairs, so astral-plane strings round-trip —
+    /// `"\ud83d\ude00"` is one U+1F600, not two U+FFFD. Lone
+    /// surrogates (which name no scalar value) decode to U+FFFD
+    /// deliberately instead of failing the document.
+    #[test]
+    fn parse_combines_utf16_surrogate_pairs() {
+        let pair = [r#""\ud83d\ude00""#, "\"\u{1F600}\""].map(|s| Json::parse(s).unwrap());
+        assert_eq!(pair[0], Json::str("\u{1F600}"));
+        assert_eq!(pair[0], pair[1], "escaped and raw forms must agree");
+        // parse(render(x)) is a round trip for astral-plane strings.
+        let doc = Json::obj(vec![("emoji", Json::str("a\u{1F600}b\u{1D11E}"))]);
+        assert_eq!(Json::parse(&doc.render()).unwrap(), doc);
+        // Lone surrogates decode to the replacement character...
+        assert_eq!(Json::parse(r#""\ud83d""#).unwrap(), Json::str("\u{FFFD}"));
+        assert_eq!(Json::parse(r#""\ude00""#).unwrap(), Json::str("\u{FFFD}"));
+        // ...including a high surrogate chased by a non-low escape or
+        // plain text: the follower is preserved.
+        assert_eq!(Json::parse(r#""\ud83d\u0041""#).unwrap(), Json::str("\u{FFFD}A"));
+        assert_eq!(Json::parse(r#""\ud83dxy""#).unwrap(), Json::str("\u{FFFD}xy"));
+        // Malformed escapes still fail the parse.
+        assert!(Json::parse(r#""\uzzzz""#).is_err());
+        assert!(Json::parse(r#""\ud83d\ud""#).is_err());
     }
 
     #[test]

@@ -339,6 +339,7 @@ fn prop_cached_pooled_bitsim_equals_fresh_everything() {
                 let item = WorkItem {
                     pattern_id: 0,
                     alphabet: cram_pm::alphabet::Alphabet::Dna2,
+                    semantics: cram_pm::semantics::MatchSemantics::BestOf,
                     pattern: Arc::from(pattern.as_slice()),
                     fragments: fragments
                         .iter()
@@ -553,6 +554,68 @@ fn prop_bitsim_generic_alphabets_equal_oracle() {
                         out.scores[0][r], want,
                         "{alphabet} iter={iter} {mode:?} frag={frag_chars} pat={pat_chars} \
                          rows={rows} loc={loc} row {r}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Tentpole acceptance: `Threshold` / `TopK` hit lists are equal to
+/// the scalar reference oracle across word-boundary row counts
+/// (63/64/65) for **both** the bitsim and CPU engines, at every
+/// alphabet — and `best` stays equal to `reference_best` under every
+/// semantics (including `BestOf`, whose hit list is empty).
+#[test]
+fn prop_hit_enumeration_equals_scalar_oracle_both_engines() {
+    use cram_pm::alphabet::Alphabet;
+    use cram_pm::bench_apps::{reference_best, reference_hits};
+    use cram_pm::coordinator::{BitsimEngine, CpuEngine, MatchEngine, WorkItem};
+    use cram_pm::semantics::MatchSemantics;
+    use std::sync::Arc;
+    let mut rng = Rng::new(0x4117);
+    let (frag_chars, pat_chars) = (24usize, 6usize);
+    for alphabet in Alphabet::ALL {
+        let mut cpu = CpuEngine::new(alphabet);
+        // rows_per_block 64: the 65-row item splits across two blocks,
+        // so block-boundary reassembly of hit lists is exercised.
+        let mut bitsim =
+            BitsimEngine::new_alphabet(alphabet, frag_chars, pat_chars, 64, PresetMode::Gang);
+        for n_rows in [63usize, 64, 65] {
+            let fragments: Vec<Vec<u8>> =
+                (0..n_rows).map(|_| alphabet.random_codes(&mut rng, frag_chars)).collect();
+            let home = rng.below(n_rows);
+            let start = rng.below(frag_chars - pat_chars + 1);
+            let pattern = fragments[home][start..start + pat_chars].to_vec();
+            for semantics in [
+                MatchSemantics::BestOf,
+                MatchSemantics::Threshold { min_score: 4 },
+                MatchSemantics::TopK { k: 7 },
+            ] {
+                let item = WorkItem {
+                    pattern_id: 0,
+                    alphabet,
+                    semantics,
+                    pattern: Arc::from(pattern.as_slice()),
+                    fragments: fragments.iter().map(|f| Arc::from(f.as_slice())).collect(),
+                    row_ids: (0..n_rows as u32).collect(),
+                };
+                let want_hits = reference_hits(&fragments, &pattern, semantics);
+                let want_best = reference_best(&fragments, &pattern);
+                if semantics.enumerates() {
+                    assert!(!want_hits.is_empty(), "planted pattern must hit the oracle");
+                }
+                let from_cpu = cpu.run(&item).unwrap();
+                let from_bitsim = bitsim.run(&item).unwrap();
+                for (label, got) in [("cpu", &from_cpu), ("bitsim", &from_bitsim)] {
+                    assert_eq!(
+                        got.hits, want_hits,
+                        "{alphabet} rows={n_rows} {semantics} {label}: hit list diverged"
+                    );
+                    assert_eq!(
+                        got.best.map(|b| (b.score, b.row, b.loc)),
+                        want_best,
+                        "{alphabet} rows={n_rows} {semantics} {label}: best diverged"
                     );
                 }
             }

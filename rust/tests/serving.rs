@@ -6,8 +6,9 @@
 
 use cram_pm::alphabet::{Alphabet, CodedWorkload};
 use cram_pm::bench_apps::dna::DnaWorkload;
-use cram_pm::bench_apps::reference_best;
+use cram_pm::bench_apps::{reference_best, reference_hits};
 use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::semantics::MatchSemantics;
 use cram_pm::serve::{Backpressure, MatchRequest, MatchServer, ServeConfig, ServeError};
 use cram_pm::util::Rng;
 use std::sync::Arc;
@@ -31,6 +32,7 @@ fn serve_cfg(max_batch: usize, dedup: bool) -> ServeConfig {
         queue_depth: 64,
         backpressure: Backpressure::Block,
         dedup,
+        max_hits: 4096,
     }
 }
 
@@ -91,6 +93,7 @@ fn reject_backpressure_sheds_then_recovers() {
             queue_depth: 1,
             backpressure: Backpressure::Reject,
             dedup: true,
+            max_hits: 4096,
         },
     )
     .unwrap();
@@ -129,6 +132,7 @@ fn block_backpressure_never_rejects() {
             queue_depth: 2,
             backpressure: Backpressure::Block,
             dedup: true,
+            max_hits: 4096,
         },
     )
     .unwrap();
@@ -162,6 +166,7 @@ fn shutdown_drains_queued_and_inflight_requests() {
             queue_depth: 32,
             backpressure: Backpressure::Block,
             dedup: true,
+            max_hits: 4096,
         },
     )
     .unwrap();
@@ -251,6 +256,126 @@ fn mixed_alphabet_batch_refused_with_typed_error() {
     assert_eq!(resp.results.len(), 1);
     let totals = server.shutdown();
     assert_eq!(totals.requests, 1, "refused requests must not be counted as served");
+}
+
+/// Acceptance criterion (tentpole): `BestOf` results remain
+/// bit-identical to the pre-semantics behavior — served answers equal
+/// both a direct coordinator run and the scalar reference, with empty
+/// hit lists — across 1–4 lanes × dedup on/off × all three alphabets.
+#[test]
+fn prop_bestof_bit_identical_across_lanes_dedup_and_alphabets() {
+    for alphabet in Alphabet::ALL {
+        let w = CodedWorkload::generate(alphabet, 2048, 12, 16, 0.05, 77);
+        let fragments = w.fragments(64, 16);
+        let reference: Vec<_> =
+            w.patterns.iter().map(|p| reference_best(&fragments, p)).collect();
+        // A duplicate-heavy pool drawn from a small catalog.
+        let pool: Vec<Vec<u8>> = (0..10).map(|i| w.patterns[i % 5].clone()).collect();
+        for lanes in [1usize, 2, 3, 4] {
+            for dedup in [true, false] {
+                let mut cfg = CoordinatorConfig::for_alphabet(alphabet, EngineKind::Cpu, 64, 16);
+                cfg.oracular = None; // broadcast: the reference scans every row
+                cfg.lanes = lanes;
+                assert_eq!(cfg.semantics, MatchSemantics::BestOf, "BestOf must stay the default");
+                let coordinator = Arc::new(Coordinator::new(cfg, fragments.clone()).unwrap());
+                let server =
+                    MatchServer::start(Arc::clone(&coordinator), serve_cfg(16, dedup)).unwrap();
+                let resp = server
+                    .match_request(MatchRequest::new(alphabet, pool.clone()))
+                    .unwrap();
+                let (direct, metrics) = coordinator.run(&pool).unwrap();
+                assert_eq!(metrics.hits, 0, "{alphabet}: BestOf must enumerate nothing");
+                assert_eq!(resp.results.len(), direct.len());
+                for ((served, ran), pid) in resp.results.iter().zip(&direct).zip(0..) {
+                    let want = reference[pid % 5];
+                    assert!(
+                        served.hits.is_empty() && ran.hits.is_empty(),
+                        "{alphabet} lanes={lanes} dedup={dedup}: BestOf grew hits"
+                    );
+                    assert_eq!(
+                        served.best.map(|b| (b.score, b.row, b.loc)),
+                        ran.best.map(|b| (b.score, b.row, b.loc)),
+                        "{alphabet} lanes={lanes} dedup={dedup} pattern {pid}"
+                    );
+                    assert_eq!(
+                        served.best.map(|b| (b.score, b.row, b.loc)),
+                        want,
+                        "{alphabet} lanes={lanes} dedup={dedup} pattern {pid} vs reference"
+                    );
+                }
+                server.shutdown();
+            }
+        }
+    }
+}
+
+/// Serving edge path: a single request larger than `max_batch` closes
+/// its batch beyond nominal capacity (occupancy > 1.0) and is still
+/// answered completely and correctly.
+#[test]
+fn oversized_single_request_served_with_occupancy_above_one() {
+    let (coordinator, catalog) = coordinator(2, 71, 24);
+    let server = MatchServer::start(Arc::clone(&coordinator), serve_cfg(4, true)).unwrap();
+    let pool: Vec<Vec<u8>> = (0..12).map(|i| catalog[i % catalog.len()].clone()).collect();
+    let resp = server.match_patterns(pool.clone()).unwrap();
+    assert_eq!(resp.results.len(), 12);
+    assert_eq!(resp.batch.patterns, 12);
+    assert!(
+        resp.batch.occupancy > 1.0,
+        "12 offered patterns over max_batch=4 must report occupancy 3.0, got {}",
+        resp.batch.occupancy
+    );
+    let (direct, _) = coordinator.run(&pool).unwrap();
+    for (a, b) in resp.results.iter().zip(&direct) {
+        assert_eq!(a.best, b.best);
+    }
+    let totals = server.shutdown();
+    assert_eq!(totals.patterns, 12);
+    assert!(totals.batches >= 1, "oversized request must still have opened a batch");
+}
+
+/// Serving edge path: shutdown drains an in-flight batch carrying
+/// `TopK` semantics — every queued request is answered with its full
+/// (bounded, best-first) hit list, none dropped.
+#[test]
+fn shutdown_drains_inflight_topk_batch() {
+    let w = DnaWorkload::generate(4096, 16, 16, 0.05, 31);
+    let fragments = w.fragments(64, 16);
+    let semantics = MatchSemantics::TopK { k: 3 };
+    let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+    cfg.engine = EngineKind::Cpu;
+    cfg.oracular = None;
+    cfg.semantics = semantics;
+    cfg.lanes = 2;
+    let coordinator = Arc::new(Coordinator::new(cfg, fragments.clone()).unwrap());
+    let server = MatchServer::start(
+        coordinator,
+        ServeConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(5),
+            queue_depth: 32,
+            backpressure: Backpressure::Block,
+            dedup: true,
+            max_hits: 4096,
+        },
+    )
+    .unwrap();
+    let pending: Vec<_> = (0..20)
+        .map(|i| server.submit(vec![w.patterns[i % w.patterns.len()].clone(); 2]).unwrap())
+        .collect();
+    // Shut down immediately: most requests are still queued or mid-batch.
+    let totals = server.shutdown();
+    assert_eq!(totals.requests, 20, "shutdown dropped queued top-K requests");
+    for (i, p) in pending.into_iter().enumerate() {
+        let resp = p.wait().expect("drained request must still be answered");
+        assert_eq!(resp.results.len(), 2);
+        for (r, q) in resp.results.iter().zip([&w.patterns[i % w.patterns.len()]; 2]) {
+            assert_eq!(r.hits.len(), 3, "top-3 list expected");
+            assert_eq!(r.hits, reference_hits(&fragments, q, semantics));
+            let b = r.best.unwrap();
+            assert_eq!((r.hits[0].row, r.hits[0].loc, r.hits[0].score), (b.row, b.loc, b.score));
+        }
+    }
 }
 
 /// Dedup accounting reaches the client: a batch of identical patterns
