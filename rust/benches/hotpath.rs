@@ -132,7 +132,7 @@ fn main() {
         n_instr as f64 / r_codegen.median / 1e6
     );
     let r_cache_build = bench("ProgramCache::for_geometry (64×16 default)", budget, || {
-        ProgramCache::for_geometry(FRAG_CHARS, PAT_CHARS, mode, true)
+        ProgramCache::for_geometry(FRAG_CHARS, PAT_CHARS, mode, true).unwrap()
     });
     println!("{r_cache_build}");
     println!("  (amortized once per coordinator, shared by every lane)");
@@ -157,7 +157,8 @@ fn main() {
     // program + pooled array/buffer hot path.
     section("bitsim engine: simulate one pass (default 64×16 geometry)");
     let item = default_item(&mut rng);
-    let mut engine = BitsimEngine::new(FRAG_CHARS, PAT_CHARS, ROWS_PER_BLOCK, mode);
+    let mut engine = BitsimEngine::new(FRAG_CHARS, PAT_CHARS, ROWS_PER_BLOCK, mode)
+        .expect("default-geometry programs must pass the static verifier");
     let layout = *engine.layout();
     let n_alignments = layout.n_alignments();
     let r_fresh = bench("fresh-everything pass (pre-PR structure)", budget, || {
@@ -332,6 +333,19 @@ fn main() {
                 Json::obj(vec![
                     ("alignment_program_s", Json::num(r_codegen.median)),
                     ("cache_build_s", Json::num(r_cache_build.median)),
+                ]),
+            ),
+            // Static-verifier census of the default-geometry cache:
+            // exact structural counts, gated by bench-gate so a codegen
+            // change that alters the microcode shape is visible.
+            (
+                "verify",
+                Json::obj(vec![
+                    ("programs", Json::int(engine.cache().len())),
+                    ("instructions", Json::int(engine.cache().verify_report().instructions)),
+                    ("gates", Json::int(engine.cache().verify_report().gates)),
+                    ("presets", Json::int(engine.cache().verify_report().presets)),
+                    ("full_adders", Json::int(engine.cache().stats().full_adders)),
                 ]),
             ),
         ]);

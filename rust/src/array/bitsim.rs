@@ -604,7 +604,7 @@ mod tests {
     fn execute_into_recycles_and_matches_execute() {
         let layout = RowLayout::new(16, 4, 200);
         let cache =
-            crate::isa::ProgramCache::build(layout, PresetMode::Gang, true);
+            crate::isa::ProgramCache::build(layout, PresetMode::Gang, true).unwrap();
         let mut arr = CramArray::new(130, layout.total_cols());
         let mut rng = crate::util::Rng::new(99);
         for r in 0..130 {

@@ -6,6 +6,23 @@
 //! computation addresses the same columns everywhere.
 
 
+/// The compartment a column belongs to (§3.1, Fig. 3) — the
+/// column-role oracle the static verifier ([`crate::isa::verify`])
+/// classifies operands with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ColumnRole {
+    /// Reference-fragment data, loaded before any program runs.
+    Fragment,
+    /// Pattern data, loaded before any program runs.
+    Pattern,
+    /// The architected similarity-score result cells.
+    Score,
+    /// The per-character match string at the start of scratch.
+    MatchBits,
+    /// Free scratch for codegen intermediates.
+    Scratch,
+}
+
 /// Column map of one CRAM-PM row. All strings are stored
 /// `bits_per_char` bits per character (§3.1 "we simply use 2-bits to
 /// encode the four characters" for DNA; the text benchmarks use wider
@@ -122,6 +139,39 @@ impl RowLayout {
         assert!(i < self.pat_chars, "match bit {i} out of range");
         self.scratch_col() + i as u32
     }
+
+    /// The compartment `col` belongs to, or `None` past the row edge.
+    pub fn column_role(&self, col: u32) -> Option<ColumnRole> {
+        if col as usize >= self.total_cols() {
+            None
+        } else if col < self.pat_col() {
+            Some(ColumnRole::Fragment)
+        } else if col < self.score_col() {
+            Some(ColumnRole::Pattern)
+        } else if col < self.scratch_col() {
+            Some(ColumnRole::Score)
+        } else if col < self.free_scratch_col() {
+            Some(ColumnRole::MatchBits)
+        } else {
+            Some(ColumnRole::Scratch)
+        }
+    }
+
+    /// Whether `col` holds loaded string data (fragment or pattern) —
+    /// defined in every row before any program runs.
+    pub fn is_data_col(&self, col: u32) -> bool {
+        matches!(self.column_role(col), Some(ColumnRole::Fragment | ColumnRole::Pattern))
+    }
+
+    /// Whether `col` is an architected score result cell.
+    pub fn is_score_col(&self, col: u32) -> bool {
+        matches!(self.column_role(col), Some(ColumnRole::Score))
+    }
+
+    /// The score compartment's column range.
+    pub fn score_range(&self) -> std::ops::Range<u32> {
+        self.score_col()..self.scratch_col()
+    }
 }
 
 #[cfg(test)]
@@ -193,5 +243,46 @@ mod tests {
     #[should_panic(expected = "bits_per_char")]
     fn zero_width_rejected() {
         RowLayout::with_bits(0, 8, 4, 0);
+    }
+
+    #[test]
+    fn column_roles_partition_the_row() {
+        let l = RowLayout::new(16, 4, 12);
+        // Every in-range column has exactly one role, and the role
+        // flips exactly at the compartment boundaries.
+        assert_eq!(l.column_role(l.frag_col()), Some(ColumnRole::Fragment));
+        assert_eq!(l.column_role(l.pat_col() - 1), Some(ColumnRole::Fragment));
+        assert_eq!(l.column_role(l.pat_col()), Some(ColumnRole::Pattern));
+        assert_eq!(l.column_role(l.score_col()), Some(ColumnRole::Score));
+        assert_eq!(l.column_role(l.scratch_col()), Some(ColumnRole::MatchBits));
+        assert_eq!(l.column_role(l.free_scratch_col()), Some(ColumnRole::Scratch));
+        assert_eq!(l.column_role(l.total_cols() as u32 - 1), Some(ColumnRole::Scratch));
+        assert_eq!(l.column_role(l.total_cols() as u32), None);
+        for col in 0..l.total_cols() as u32 {
+            assert!(l.column_role(col).is_some(), "column {col} has no role");
+        }
+    }
+
+    #[test]
+    fn data_and_score_queries_follow_roles() {
+        let l = RowLayout::for_alphabet(crate::alphabet::Alphabet::Protein5, 12, 3, 64);
+        assert!(l.is_data_col(0));
+        assert!(l.is_data_col(l.pat_col()));
+        assert!(!l.is_data_col(l.score_col()));
+        assert!(l.is_score_col(l.score_col()));
+        assert!(!l.is_score_col(l.scratch_col()));
+        assert_eq!(l.score_range(), l.score_col()..l.scratch_col());
+        assert_eq!(l.score_range().len(), l.score_bits());
+    }
+
+    /// A layout whose scratch budget is smaller than the match string
+    /// (legal for memory-only use) must not classify columns past the
+    /// row edge as match bits.
+    #[test]
+    fn tight_scratch_roles_stay_in_range() {
+        let l = RowLayout::new(8, 4, 1);
+        assert!(l.free_scratch_col() as usize > l.total_cols());
+        assert_eq!(l.column_role(l.total_cols() as u32), None);
+        assert_eq!(l.column_role(l.scratch_col()), Some(ColumnRole::MatchBits));
     }
 }

@@ -15,4 +15,4 @@ pub mod bitsim;
 pub mod layout;
 
 pub use bitsim::{CramArray, ExecOutput};
-pub use layout::RowLayout;
+pub use layout::{ColumnRole, RowLayout};

@@ -155,7 +155,7 @@ pub(crate) fn serve_and_verify(
         pat_chars,
         PresetMode::Gang,
         true,
-    );
+    )?;
     Ok(FunctionalReport {
         name: name.to_string(),
         alphabet,

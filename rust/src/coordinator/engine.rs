@@ -20,6 +20,7 @@ use crate::baselines::cpu_ref::BestAlignment;
 use crate::isa::{PresetMode, ProgramCache};
 use crate::semantics::{Hit, HitAccumulator, MatchSemantics};
 use crate::Result;
+use anyhow::Context as _;
 use std::sync::Arc;
 
 /// One unit of coordinator work: a pattern plus the fragments it must
@@ -196,12 +197,13 @@ pub struct BitsimEngine {
 impl BitsimEngine {
     /// Engine for a 2-bit DNA fragment/pattern geometry.
     /// `rows_per_block` bounds the simulated array height per pass.
+    /// Fails if the compiled programs do not pass static verification.
     pub fn new(
         frag_chars: usize,
         pat_chars: usize,
         rows_per_block: usize,
         mode: PresetMode,
-    ) -> Self {
+    ) -> Result<Self> {
         Self::new_alphabet(Alphabet::Dna2, frag_chars, pat_chars, rows_per_block, mode)
     }
 
@@ -214,10 +216,12 @@ impl BitsimEngine {
         pat_chars: usize,
         rows_per_block: usize,
         mode: PresetMode,
-    ) -> Self {
-        let cache =
-            Arc::new(ProgramCache::for_alphabet(alphabet, frag_chars, pat_chars, mode, true));
-        Self::with_cache(cache, rows_per_block)
+    ) -> Result<Self> {
+        let cache = Arc::new(
+            ProgramCache::for_alphabet(alphabet, frag_chars, pat_chars, mode, true)
+                .context("static verification of the compiled alignment programs failed")?,
+        );
+        Ok(Self::with_cache(cache, rows_per_block))
     }
 
     /// Engine over a shared pre-compiled program cache — what the
@@ -328,6 +332,8 @@ impl MatchEngine for BitsimEngine {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::util::Rng;
 
@@ -375,7 +381,7 @@ mod tests {
         for seed in [1, 2, 3] {
             let it = item(seed, 5, 24, 6);
             let cpu = CpuEngine::default().run(&it).unwrap();
-            let mut bitsim = BitsimEngine::new(24, 6, 2, PresetMode::Gang); // forces 3 blocks
+            let mut bitsim = BitsimEngine::new(24, 6, 2, PresetMode::Gang).unwrap(); // forces 3 blocks
             let bs = bitsim.run(&it).unwrap();
             assert_eq!(bs.best.unwrap().score, cpu.best.unwrap().score, "seed {seed}");
             assert!(bs.passes == 3);
@@ -390,7 +396,7 @@ mod tests {
         for seed in [4, 8, 15] {
             let it = item(seed, 6, 24, 6);
             let cpu = CpuEngine::default().run(&it).unwrap().best.unwrap();
-            let mut bitsim = BitsimEngine::new(24, 6, 2, PresetMode::Gang);
+            let mut bitsim = BitsimEngine::new(24, 6, 2, PresetMode::Gang).unwrap();
             let bs = bitsim.run(&it).unwrap().best.unwrap();
             assert_eq!((bs.row, bs.loc, bs.score), (cpu.row, cpu.loc, cpu.score), "seed {seed}");
         }
@@ -401,11 +407,11 @@ mod tests {
     /// exactly like fresh engines would.
     #[test]
     fn pooled_engine_state_does_not_leak_across_runs() {
-        let mut pooled = BitsimEngine::new(24, 6, 2, PresetMode::Gang);
+        let mut pooled = BitsimEngine::new(24, 6, 2, PresetMode::Gang).unwrap();
         for seed in [11, 12, 13, 14] {
             let it = item(seed, 5, 24, 6);
             let from_pooled = pooled.run(&it).unwrap();
-            let fresh = BitsimEngine::new(24, 6, 2, PresetMode::Gang).run(&it).unwrap();
+            let fresh = BitsimEngine::new(24, 6, 2, PresetMode::Gang).unwrap().run(&it).unwrap();
             assert_eq!(
                 from_pooled.best.map(|b| (b.score, b.row, b.loc)),
                 fresh.best.map(|b| (b.score, b.row, b.loc)),
@@ -418,8 +424,8 @@ mod tests {
     /// shared cache equals one that compiled its own.
     #[test]
     fn shared_cache_engine_equals_self_compiled() {
-        let cache = Arc::new(ProgramCache::for_geometry(24, 6, PresetMode::Gang, true));
-        let mut own = BitsimEngine::new(24, 6, 4, PresetMode::Gang);
+        let cache = Arc::new(ProgramCache::for_geometry(24, 6, PresetMode::Gang, true).unwrap());
+        let mut own = BitsimEngine::new(24, 6, 4, PresetMode::Gang).unwrap();
         let mut shared = BitsimEngine::with_cache(Arc::clone(&cache), 4);
         for seed in [21, 22] {
             let it = item(seed, 6, 24, 6);
@@ -439,7 +445,7 @@ mod tests {
         let mut it = item(9, 2, 24, 6);
         let short: Arc<[u8]> = Arc::from(&it.fragments[0][..23]);
         it.fragments[0] = short;
-        let mut e = BitsimEngine::new(24, 6, 8, PresetMode::Gang);
+        let mut e = BitsimEngine::new(24, 6, 8, PresetMode::Gang).unwrap();
         assert!(e.run(&it).is_err());
     }
 
@@ -448,7 +454,7 @@ mod tests {
         let mut it = item(10, 2, 24, 6);
         let short: Arc<[u8]> = Arc::from(&it.pattern[..5]);
         it.pattern = short;
-        let mut e = BitsimEngine::new(24, 6, 8, PresetMode::Gang);
+        let mut e = BitsimEngine::new(24, 6, 8, PresetMode::Gang).unwrap();
         assert!(e.run(&it).is_err());
     }
 
@@ -478,7 +484,7 @@ mod tests {
                 let mut it = item(seed, 5, 24, 6);
                 it.semantics = semantics;
                 let cpu = CpuEngine::default().run(&it).unwrap();
-                let mut bitsim = BitsimEngine::new(24, 6, 2, PresetMode::Gang); // 3 blocks
+                let mut bitsim = BitsimEngine::new(24, 6, 2, PresetMode::Gang).unwrap(); // 3 blocks
                 let bs = bitsim.run(&it).unwrap();
                 assert!(!cpu.hits.is_empty(), "{semantics} seed {seed}: planted hit missing");
                 assert_eq!(cpu.hits, bs.hits, "{semantics} seed {seed}");
@@ -527,7 +533,7 @@ mod tests {
                 let b = cpu.best.unwrap();
                 assert_eq!(b.score, 6, "{alphabet} seed {seed}");
                 let mut bitsim =
-                    BitsimEngine::new_alphabet(alphabet, 24, 6, 2, PresetMode::Gang);
+                    BitsimEngine::new_alphabet(alphabet, 24, 6, 2, PresetMode::Gang).unwrap();
                 let bs = bitsim.run(&it).unwrap();
                 assert_eq!(
                     bs.best.map(|x| (x.score, x.row, x.loc)),
@@ -546,7 +552,7 @@ mod tests {
         let it = item_coded(Alphabet::Protein5, 5, 3, 24, 6);
         let err = CpuEngine::default().run(&it).unwrap_err();
         assert!(err.to_string().contains("alphabet"), "unexpected: {err:#}");
-        let mut bitsim = BitsimEngine::new(24, 6, 4, PresetMode::Gang);
+        let mut bitsim = BitsimEngine::new(24, 6, 4, PresetMode::Gang).unwrap();
         let err = bitsim.run(&it).unwrap_err();
         assert!(err.to_string().contains("symbol width"), "unexpected: {err:#}");
         // Same-width items still pass through the width check.

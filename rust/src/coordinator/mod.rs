@@ -39,6 +39,12 @@
 //! and feeds them through [`Coordinator::run_pools`], which shares one
 //! lane-mutex acquisition across a whole batch.
 
+// The coordinator owns persistent lane threads: a panic in library
+// code strands the reducer and poisons the lane mutex for every later
+// caller, so recoverable failures must be typed errors, never unwraps.
+// Test modules opt back out locally.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod engine;
 pub mod pipeline;
 

@@ -24,7 +24,7 @@ use crate::semantics::MatchSemantics;
 use crate::sim::SystemConfig;
 use crate::tech::Technology;
 use crate::Result;
-use anyhow::anyhow;
+use anyhow::{anyhow, Context as _};
 use std::panic::AssertUnwindSafe;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -40,6 +40,13 @@ pub enum CoordinatorError {
     /// holding the executor lanes. The coordinator must be rebuilt —
     /// retrying the call cannot succeed.
     LanesPoisoned,
+    /// A bitsim executor lane started without the shared program cache
+    /// the coordinator compiles at construction — an internal wiring
+    /// bug, not a caller error.
+    MissingProgramCache,
+    /// `run_shared_pools` returned fewer result sets than pools — an
+    /// internal contract violation of the batch path.
+    PoolResultMissing,
 }
 
 impl std::fmt::Display for CoordinatorError {
@@ -49,6 +56,13 @@ impl std::fmt::Display for CoordinatorError {
                 f,
                 "coordinator lanes poisoned by a previous panic; rebuild the coordinator"
             ),
+            CoordinatorError::MissingProgramCache => write!(
+                f,
+                "bitsim lane started without the shared program cache compiled at construction"
+            ),
+            CoordinatorError::PoolResultMissing => {
+                write!(f, "batched run returned no result set for a submitted pool")
+            }
         }
     }
 }
@@ -393,13 +407,16 @@ impl Coordinator {
         // across every executor lane instead of re-lowering per lane
         // per block per run.
         let bitsim_cache: Option<Arc<ProgramCache>> = match cfg.engine {
-            EngineKind::Bitsim => Some(Arc::new(ProgramCache::for_alphabet(
-                cfg.alphabet,
-                cfg.frag_chars,
-                cfg.pat_chars,
-                cfg.preset_mode,
-                true,
-            ))),
+            EngineKind::Bitsim => Some(Arc::new(
+                ProgramCache::for_alphabet(
+                    cfg.alphabet,
+                    cfg.frag_chars,
+                    cfg.pat_chars,
+                    cfg.preset_mode,
+                    true,
+                )
+                .context("static verification of the coordinator's alignment programs failed")?,
+            )),
             _ => None,
         };
         // Ample result buffering: covers every item the lanes can hold
@@ -427,10 +444,14 @@ impl Coordinator {
                             let cpu = CpuEngine::new(thread_cfg.alphabet);
                             Ok(Box::new(cpu) as Box<dyn MatchEngine>)
                         }
-                        EngineKind::Bitsim => Ok(Box::new(BitsimEngine::with_cache(
-                            lane_cache.expect("bitsim cache built at construction"),
-                            256,
-                        )) as Box<dyn MatchEngine>),
+                        EngineKind::Bitsim => lane_cache
+                            .ok_or_else(|| {
+                                anyhow::Error::new(CoordinatorError::MissingProgramCache)
+                            })
+                            .map(|cache| {
+                                Box::new(BitsimEngine::with_cache(cache, 256))
+                                    as Box<dyn MatchEngine>
+                            }),
                         EngineKind::Xla => {
                             XlaEngine::new(&thread_cfg.artifacts_dir, &thread_cfg.variant)
                                 .map(|e| Box::new(e) as Box<dyn MatchEngine>)
@@ -556,7 +577,7 @@ impl Coordinator {
     /// pool's `Arc`s fan out to the lanes by reference count.
     pub fn run_shared(&self, patterns: &[Arc<[u8]>]) -> Result<(Vec<WorkResult>, RunMetrics)> {
         let mut out = self.run_shared_pools(&[patterns])?;
-        Ok(out.pop().expect("one pool in, one pool out"))
+        out.pop().ok_or_else(|| anyhow::Error::new(CoordinatorError::PoolResultMissing))
     }
 
     /// Run several pattern pools back to back under **one** lane-mutex
@@ -894,6 +915,8 @@ impl Coordinator {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::bench_apps::dna::DnaWorkload;
 

@@ -10,11 +10,14 @@
 //! shared (via `Arc`) across every coordinator executor lane.
 
 use crate::array::RowLayout;
+use crate::isa::verify::{verify, VerifyError, VerifyReport};
 use crate::isa::{CodeGen, CodegenStats, PresetMode, Program};
 
 /// Immutable cache of the lowered alignment programs for one
 /// `(layout, mode, readout)` configuration — one compiled [`Program`]
-/// per alignment `loc`. Build once, execute forever.
+/// per alignment `loc`. Build once, execute forever. Every program is
+/// statically verified at build ([`crate::isa::verify`]): a cache in
+/// hand is proof its programs are hazard-free.
 #[derive(Debug)]
 pub struct ProgramCache {
     layout: RowLayout,
@@ -22,16 +25,26 @@ pub struct ProgramCache {
     readout: bool,
     programs: Vec<Program>,
     stats: CodegenStats,
+    verify: VerifyReport,
 }
 
 impl ProgramCache {
-    /// Compile every alignment program of `layout` up front.
-    pub fn build(layout: RowLayout, mode: PresetMode, readout: bool) -> Self {
+    /// Compile every alignment program of `layout` up front and verify
+    /// each against the layout. Verification is always-on: the cache is
+    /// built once per geometry, so the scan is off the execution path,
+    /// and a [`VerifyError`] here means codegen emitted a program that
+    /// would corrupt the array.
+    pub fn build(layout: RowLayout, mode: PresetMode, readout: bool) -> Result<Self, VerifyError> {
         let mut cg = CodeGen::new(layout, mode);
         let programs: Vec<Program> = (0..layout.n_alignments() as u32)
             .map(|loc| cg.alignment_program(loc, readout))
             .collect();
-        ProgramCache { layout, mode, readout, programs, stats: cg.stats() }
+        let mut report = VerifyReport::default();
+        for (loc, prog) in programs.iter().enumerate() {
+            let rep = verify(prog, &layout).map_err(|e| e.with_loc(loc as u32))?;
+            report.absorb(&rep);
+        }
+        Ok(ProgramCache { layout, mode, readout, programs, stats: cg.stats(), verify: report })
     }
 
     /// Probe the scratch demand of a 2-bit `(frag_chars, pat_chars)`
@@ -42,7 +55,7 @@ impl ProgramCache {
         pat_chars: usize,
         mode: PresetMode,
         readout: bool,
-    ) -> Self {
+    ) -> Result<Self, VerifyError> {
         let dna = crate::alphabet::Alphabet::Dna2;
         ProgramCache::for_alphabet(dna, frag_chars, pat_chars, mode, readout)
     }
@@ -57,7 +70,7 @@ impl ProgramCache {
         pat_chars: usize,
         mode: PresetMode,
         readout: bool,
-    ) -> Self {
+    ) -> Result<Self, VerifyError> {
         let probe = RowLayout::for_alphabet(alphabet, frag_chars, pat_chars, usize::MAX / 2);
         let mut cg = CodeGen::new(probe, mode);
         let _ = cg.alignment_program(0, true);
@@ -106,6 +119,12 @@ impl ProgramCache {
     pub fn stats(&self) -> CodegenStats {
         self.stats
     }
+
+    /// Aggregate static-verification report across all cached programs
+    /// (counts summed, column maxima maxed).
+    pub fn verify_report(&self) -> VerifyReport {
+        self.verify
+    }
 }
 
 #[cfg(test)]
@@ -114,7 +133,7 @@ mod tests {
 
     #[test]
     fn cache_holds_one_program_per_alignment() {
-        let cache = ProgramCache::for_geometry(24, 6, PresetMode::Gang, true);
+        let cache = ProgramCache::for_geometry(24, 6, PresetMode::Gang, true).unwrap();
         assert_eq!(cache.len(), cache.layout().n_alignments());
         assert!(!cache.is_empty());
         assert!(cache.readout());
@@ -127,7 +146,7 @@ mod tests {
     fn cached_programs_equal_fresh_lowering() {
         for mode in [PresetMode::Standard, PresetMode::Gang] {
             for readout in [false, true] {
-                let cache = ProgramCache::for_geometry(20, 5, mode, readout);
+                let cache = ProgramCache::for_geometry(20, 5, mode, readout).unwrap();
                 let mut cg = CodeGen::new(*cache.layout(), mode);
                 for loc in 0..cache.layout().n_alignments() as u32 {
                     assert_eq!(
@@ -145,7 +164,7 @@ mod tests {
         use crate::alphabet::Alphabet;
         let caches: Vec<ProgramCache> = Alphabet::ALL
             .iter()
-            .map(|&a| ProgramCache::for_alphabet(a, 24, 6, PresetMode::Gang, true))
+            .map(|&a| ProgramCache::for_alphabet(a, 24, 6, PresetMode::Gang, true).unwrap())
             .collect();
         for (a, cache) in Alphabet::ALL.iter().zip(&caches) {
             assert_eq!(cache.bits_per_char(), a.bits_per_char());
@@ -163,10 +182,32 @@ mod tests {
 
     #[test]
     fn cache_layout_is_exactly_sized() {
-        let cache = ProgramCache::for_geometry(32, 8, PresetMode::Gang, true);
+        let cache = ProgramCache::for_geometry(32, 8, PresetMode::Gang, true).unwrap();
         for loc in 0..cache.layout().n_alignments() as u32 {
             let max = cache.program(loc).max_column().unwrap() as usize;
             assert!(max < cache.layout().total_cols(), "loc {loc} overflows the layout");
         }
+    }
+
+    /// The verify report is internally consistent and, at the default
+    /// hot-path geometry, pins the exact instruction census that
+    /// `BENCH_hotpath.json` gates in CI — codegen drift shows up here
+    /// before it shows up as a throughput change.
+    #[test]
+    fn default_geometry_verify_totals_are_pinned() {
+        let cache = ProgramCache::for_geometry(64, 16, PresetMode::Gang, true).unwrap();
+        let vr = cache.verify_report();
+        assert_eq!(cache.len(), 49);
+        assert_eq!(vr.instructions, 21_756);
+        assert_eq!(vr.gates, 10_829);
+        assert_eq!(vr.presets, 10_878);
+        assert_eq!(cache.stats().full_adders, 1_274);
+        // One score read-out per program; nothing else is counted.
+        assert_eq!(vr.reads, cache.len());
+        assert_eq!(vr.instructions, vr.gates + vr.presets + vr.reads);
+        // The codegen census and the verifier census must agree.
+        assert_eq!(vr.gates, cache.stats().gates);
+        assert_eq!(vr.presets, cache.stats().presets);
+        assert!((vr.max_column.unwrap() as usize) < cache.layout().total_cols());
     }
 }

@@ -529,6 +529,34 @@ mod tests {
         assert!(cg.stats().scratch_high_water <= l.scratch_cols);
     }
 
+    /// Every alignment program at every symbol width, in both preset
+    /// modes and both readout variants, must pass the full static
+    /// verifier — the machine-checked version of
+    /// `every_gate_output_is_preset_before_firing`, covering dataflow,
+    /// stage order, geometry, gate legality, readout coverage, and
+    /// preset liveness at once.
+    #[test]
+    fn every_alignment_program_passes_the_static_verifier() {
+        use crate::isa::verify::verify;
+        for bits in [1usize, 2, 5, 8] {
+            for mode in [PresetMode::Standard, PresetMode::Gang] {
+                for readout in [false, true] {
+                    let probe = RowLayout::with_bits(bits, 16, 4, usize::MAX / 2);
+                    let mut cg = CodeGen::new(probe, mode);
+                    let _ = cg.alignment_program(0, true);
+                    let l = RowLayout::with_bits(bits, 16, 4, cg.stats().scratch_high_water);
+                    let mut cg = CodeGen::new(l, mode);
+                    for loc in 0..l.n_alignments() as u32 {
+                        let prog = cg.alignment_program(loc, readout);
+                        verify(&prog, &l).unwrap_or_else(|e| {
+                            panic!("bits={bits} {mode:?} readout={readout} loc={loc}: {e}")
+                        });
+                    }
+                }
+            }
+        }
+    }
+
     #[test]
     fn xor_pm_uses_three_gates_plus_copy_per_bit() {
         let mut cg = CodeGen::new(layout(16, 4), PresetMode::Standard);

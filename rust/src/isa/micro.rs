@@ -206,4 +206,53 @@ mod tests {
         p.push(Stage::Match, MicroInstr::gate(GateKind::Nor2, 40, &[7, 99]));
         assert_eq!(p.max_column(), Some(99));
     }
+
+    #[test]
+    fn counts_on_the_empty_program() {
+        let p = Program::new();
+        assert!(p.is_empty());
+        assert_eq!(p.len(), 0);
+        assert_eq!(p.count_where(|_| true), 0);
+        for kind in GateKind::ALL {
+            assert_eq!(p.gate_count(kind), 0);
+        }
+        assert_eq!(p.max_column(), None);
+    }
+
+    /// `extend` must append in issue order and keep the stage tags
+    /// interleaved exactly as issued — the step simulator's Fig. 6
+    /// breakdown and the verifier's phase scan both read the stream
+    /// in order, so a sorting or regrouping `extend` would be a bug.
+    #[test]
+    fn extend_preserves_issue_order_and_stage_interleaving() {
+        let mut a = Program::new();
+        a.push(Stage::PresetMatch, MicroInstr::GangPreset { col: 30, val: false });
+        a.push(Stage::Match, MicroInstr::gate(GateKind::Inv, 30, &[0]));
+        let mut b = Program::new();
+        b.push(Stage::PresetScore, MicroInstr::GangPreset { col: 31, val: true });
+        b.push(Stage::ComputeScore, MicroInstr::gate(GateKind::Copy, 31, &[30]));
+        let mut cat = a.clone();
+        cat.extend(b.clone());
+        assert_eq!(cat.len(), 4);
+        assert_eq!(&cat.instrs[..2], &a.instrs[..]);
+        assert_eq!(&cat.instrs[2..], &b.instrs[..]);
+        let stages: Vec<Stage> = cat.instrs.iter().map(|(s, _)| *s).collect();
+        assert_eq!(
+            stages,
+            vec![Stage::PresetMatch, Stage::Match, Stage::PresetScore, Stage::ComputeScore]
+        );
+    }
+
+    #[test]
+    fn max_column_over_readout_only_programs() {
+        let mut p = Program::new();
+        p.push(Stage::ReadOut, MicroInstr::ReadScoreAllRows { col: 40, len: 5 });
+        assert_eq!(p.max_column(), Some(44));
+        p.push(Stage::ReadOut, MicroInstr::ReadRow { row: 3, col: 90, len: 2 });
+        assert_eq!(p.max_column(), Some(91));
+        // A single-column read reports its own column.
+        let mut p = Program::new();
+        p.push(Stage::ReadOut, MicroInstr::ReadScoreAllRows { col: 7, len: 1 });
+        assert_eq!(p.max_column(), Some(7));
+    }
 }

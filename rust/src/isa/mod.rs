@@ -12,13 +12,22 @@
 //!   `preset` variants, …) that the code generator ([`codegen`]) lowers
 //!   into micro sequences, including the spatio-temporal scheduling of
 //!   the `add_pm` reduction tree and of output-cell presets (§2.6).
+//!
+//! Compiled programs are cached per geometry ([`cache`]) and statically
+//! verified at cache build ([`verify`]) — dataflow, stage ordering,
+//! geometry bounds, gate legality, readout coverage, and preset
+//! liveness are proven before a program ever executes.
 
 pub mod cache;
 pub mod codegen;
 pub mod macro_;
 pub mod micro;
+pub mod verify;
 
 pub use cache::ProgramCache;
 pub use codegen::{CodeGen, CodegenStats, PresetMode};
 pub use macro_::MacroInstr;
 pub use micro::{MicroInstr, Program, Stage};
+pub use verify::{
+    mutation_self_test, verify, CellState, Corruption, Rule, VerifyError, VerifyReport, Violation,
+};

@@ -1,0 +1,869 @@
+//! Static verification of compiled micro-instruction programs.
+//!
+//! The substrate has physical invariants that the bit-level simulator
+//! only exercises dynamically: every gate output cell must be pre-set
+//! to the gate's required polarity before the gate fires (§2.6), gates
+//! have fixed fan-in, column addresses must stay inside the row, and
+//! the stage sequence of Algorithm 1 runs strictly forward — write,
+//! match, score, read-out. This module proves those invariants on a
+//! [`Program`] *without executing it*, by walking the instruction
+//! stream once with an abstract per-column state machine:
+//!
+//! ```text
+//!  Undefined ──Preset──▶ Preset(val) ──Gate out──▶ Computed
+//!      │                     ▲    │
+//!      └──WriteRow──▶ RowData│    └── read / gate input consumes the
+//!  (fragment & pattern       │        pending preset (liveness)
+//!   columns start as Data) ──┘
+//! ```
+//!
+//! The rule catalogue (each [`Violation`] maps to one rule):
+//!
+//! * **R1 def-before-use** — every gate input column is a data/pattern
+//!   column of the [`RowLayout`] or was driven by an earlier
+//!   instruction.
+//! * **R2 stage-order** — presets precede their compute under both
+//!   [`PresetMode`](crate::isa::PresetMode)s; the coarse phase sequence
+//!   never runs backwards; no preset clobbers a still-live computed
+//!   column.
+//! * **R3 geometry** — every column operand is inside the layout's row
+//!   width (which already encodes the per-alphabet bit-plane count).
+//! * **R4 gate-legality** — arity matches [`GateKind::n_inputs`] and
+//!   the output never aliases an input (the preset would destroy it).
+//! * **R5 readout-coverage** — every column a read-out touches is
+//!   actually driven.
+//! * **R6 liveness** — no dead stores: every preset outside the
+//!   architected score compartment is consumed by a later gate or read.
+//!
+//! Verification is wired *always-on* into
+//! [`ProgramCache::build`](crate::isa::ProgramCache::build): programs
+//! are compiled once per geometry, so the cost is off the execution
+//! path. The module also carries the mutation self-test harness
+//! ([`Corruption`], [`corrupt`], [`mutation_self_test`]) that seeds
+//! deliberate hazards into known-good programs and asserts each is
+//! rejected with the intended [`Violation`] — the verifier's own
+//! regression suite, also runnable via `cram-pm verify-programs`.
+
+use crate::array::RowLayout;
+use crate::gates::GateKind;
+use crate::isa::cache::ProgramCache;
+use crate::isa::{MicroInstr, Program, Stage};
+
+/// The rule catalogue — the coarse invariant families of the module
+/// docs. Derived from a [`Violation`] via [`Violation::rule`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    /// R1: gate inputs must be defined before they are read.
+    DefBeforeUse,
+    /// R2: preset-before-compute, forward-only phases, no clobbers.
+    StageOrder,
+    /// R3: column operands inside the row width.
+    Geometry,
+    /// R4: gate arity and output/input aliasing.
+    GateLegality,
+    /// R5: read-outs only read driven columns.
+    ReadoutCoverage,
+    /// R6: no dead preset stores.
+    Liveness,
+}
+
+impl Rule {
+    /// Short stable identifier used in reports (`R1`…`R6`).
+    pub fn code(&self) -> &'static str {
+        match self {
+            Rule::DefBeforeUse => "R1:def-before-use",
+            Rule::StageOrder => "R2:stage-order",
+            Rule::Geometry => "R3:geometry",
+            Rule::GateLegality => "R4:gate-legality",
+            Rule::ReadoutCoverage => "R5:readout-coverage",
+            Rule::Liveness => "R6:liveness",
+        }
+    }
+}
+
+impl std::fmt::Display for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.code())
+    }
+}
+
+/// Abstract state of one column during the scan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellState {
+    /// Never written; reading it is a hazard.
+    Undefined,
+    /// Loaded data: fragment or pattern compartment (defined in every
+    /// row before the program runs).
+    Data,
+    /// Written by a single-row memory-mode write — defined in one row
+    /// only, so not readable by row-parallel gates.
+    RowData,
+    /// Pre-set to a known polarity in every row.
+    Preset(bool),
+    /// Driven by a gate firing.
+    Computed,
+}
+
+impl CellState {
+    /// Whether a row-parallel gate may read this column.
+    fn gate_readable(&self) -> bool {
+        matches!(self, CellState::Data | CellState::Preset(_) | CellState::Computed)
+    }
+}
+
+/// One violated invariant (the payload of a [`VerifyError`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Violation {
+    /// Gate carries the wrong number of inputs for its kind (R4).
+    BadArity { kind: GateKind, n_ins: usize },
+    /// Gate output column also appears among its inputs (R4).
+    OutputAliasesInput { kind: GateKind, col: u32 },
+    /// Column operand at or past the row width (R3).
+    ColumnOutOfRange { col: u32, row_width: u32 },
+    /// Instruction issued under a stage its kind is not legal in (R2).
+    StageMismatch { stage: Stage },
+    /// Coarse phase sequence ran backwards (R2).
+    PhaseRegression { stage: Stage, prev: Stage },
+    /// Gate input column never driven (R1).
+    UseBeforeDef { col: u32 },
+    /// Gate fired on an output cell not pre-set to its required
+    /// polarity (R2).
+    UnpresetOutput { kind: GateKind, col: u32, found: CellState },
+    /// Preset overwrote a computed column that was never read (R2).
+    ClobberedLiveColumn { col: u32 },
+    /// Read-out of a column nothing drives (R5).
+    UndrivenRead { col: u32 },
+    /// Preset whose value is never consumed (R6).
+    DeadStore { col: u32 },
+}
+
+impl Violation {
+    /// The rule family this violation belongs to.
+    pub fn rule(&self) -> Rule {
+        match self {
+            Violation::UseBeforeDef { .. } => Rule::DefBeforeUse,
+            Violation::StageMismatch { .. }
+            | Violation::PhaseRegression { .. }
+            | Violation::UnpresetOutput { .. }
+            | Violation::ClobberedLiveColumn { .. } => Rule::StageOrder,
+            Violation::ColumnOutOfRange { .. } => Rule::Geometry,
+            Violation::BadArity { .. } | Violation::OutputAliasesInput { .. } => Rule::GateLegality,
+            Violation::UndrivenRead { .. } => Rule::ReadoutCoverage,
+            Violation::DeadStore { .. } => Rule::Liveness,
+        }
+    }
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Violation::BadArity { kind, n_ins } => {
+                write!(f, "{kind} gate carries {n_ins} inputs, needs {}", kind.n_inputs())
+            }
+            Violation::OutputAliasesInput { kind, col } => {
+                write!(f, "{kind} output column {col} aliases one of its inputs")
+            }
+            Violation::ColumnOutOfRange { col, row_width } => {
+                write!(f, "column {col} outside the {row_width}-column row")
+            }
+            Violation::StageMismatch { stage } => {
+                write!(f, "instruction kind is not legal under stage {stage:?}")
+            }
+            Violation::PhaseRegression { stage, prev } => {
+                write!(f, "stage {stage:?} after {prev:?}: phases must run forward")
+            }
+            Violation::UseBeforeDef { col } => {
+                write!(f, "gate reads column {col} before anything drives it")
+            }
+            Violation::UnpresetOutput { kind, col, found } => {
+                write!(
+                    f,
+                    "{kind} fired on column {col} not pre-set to {} (state {found:?})",
+                    kind.preset() as u8
+                )
+            }
+            Violation::ClobberedLiveColumn { col } => {
+                write!(f, "preset clobbers computed column {col} before it is read")
+            }
+            Violation::UndrivenRead { col } => {
+                write!(f, "read-out of column {col}, which nothing drives")
+            }
+            Violation::DeadStore { col } => {
+                write!(f, "preset of column {col} is never consumed (dead store)")
+            }
+        }
+    }
+}
+
+/// Typed verification failure: which instruction broke which rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VerifyError {
+    /// Index of the offending instruction in the program stream (for
+    /// [`Violation::DeadStore`], the index of the dead preset itself).
+    pub index: usize,
+    /// Alignment `loc` of the program, when verifying a cache.
+    pub loc: Option<u32>,
+    /// The violated invariant.
+    pub violation: Violation,
+}
+
+impl VerifyError {
+    /// The rule family of the violation.
+    pub fn rule(&self) -> Rule {
+        self.violation.rule()
+    }
+
+    /// Attach the alignment `loc` the program belongs to.
+    pub fn with_loc(mut self, loc: u32) -> Self {
+        self.loc = Some(loc);
+        self
+    }
+}
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.loc {
+            Some(loc) => write!(f, "instr #{} (alignment {loc}): ", self.index)?,
+            None => write!(f, "instr #{}: ", self.index)?,
+        }
+        write!(f, "{} [{}]", self.violation, self.rule())
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// What a successful verification observed — deterministic program
+/// metrics the CLI report and the bench-gate exact fields are built
+/// from. [`VerifyReport::absorb`] aggregates per-program reports into
+/// a per-cache report (counts sum; column maxima max).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct VerifyReport {
+    /// Instructions scanned.
+    pub instructions: usize,
+    /// Gate firings.
+    pub gates: usize,
+    /// Presets (standard or gang).
+    pub presets: usize,
+    /// Read-out instructions.
+    pub reads: usize,
+    /// Columns holding a defined value when the program ends (includes
+    /// the data compartments).
+    pub columns_defined: usize,
+    /// Highest column touched, if any.
+    pub max_column: Option<u32>,
+}
+
+impl VerifyReport {
+    /// Fold another program's report into this aggregate.
+    pub fn absorb(&mut self, other: &VerifyReport) {
+        self.instructions += other.instructions;
+        self.gates += other.gates;
+        self.presets += other.presets;
+        self.reads += other.reads;
+        self.columns_defined = self.columns_defined.max(other.columns_defined);
+        self.max_column = match (self.max_column, other.max_column) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+    }
+}
+
+/// Coarse phase rank of a stage. Strict [`Stage`] monotonicity would be
+/// wrong — Standard mode interleaves `PresetMatch` with `Match` by
+/// design — but the four phases of Algorithm 1 (write → match → score
+/// → read-out) never run backwards in a well-formed program.
+fn phase_rank(stage: Stage) -> u8 {
+    match stage {
+        Stage::WritePatterns => 0,
+        Stage::PresetMatch | Stage::ActivateBitlinesMatch | Stage::Match => 1,
+        Stage::PresetScore | Stage::ActivateBitlinesScore | Stage::ComputeScore => 2,
+        Stage::ReadOut => 3,
+    }
+}
+
+/// Statically verify `prog` against `layout`. Returns the observed
+/// program metrics, or the first violated invariant in scan order.
+pub fn verify(prog: &Program, layout: &RowLayout) -> Result<VerifyReport, VerifyError> {
+    let width = layout.total_cols() as u32;
+    let mut state = vec![CellState::Undefined; width as usize];
+    for col in 0..width {
+        if layout.is_data_col(col) {
+            state[col as usize] = CellState::Data;
+        }
+    }
+    // Index of the still-unconsumed preset of each column, for R6.
+    // Presets into the score compartment are exempt: they are the
+    // architected result cells (e.g. score bits the reduction tree does
+    // not reach), legitimately left for the host even without readout.
+    let mut live_preset: Vec<Option<usize>> = vec![None; width as usize];
+    let mut report =
+        VerifyReport { instructions: prog.len(), max_column: prog.max_column(), ..Default::default() };
+    let mut prev_stage: Option<Stage> = None;
+
+    let fail = |index: usize, violation: Violation| VerifyError { index, loc: None, violation };
+    let bounds = |index: usize, col: u32, len: u32| -> Result<(), VerifyError> {
+        let end = col as u64 + len as u64;
+        if col >= width || end > width as u64 {
+            let col = end.saturating_sub(1).min(u32::MAX as u64) as u32;
+            return Err(fail(index, Violation::ColumnOutOfRange { col, row_width: width }));
+        }
+        Ok(())
+    };
+
+    for (i, (stage, instr)) in prog.instrs.iter().enumerate() {
+        if let Some(prev) = prev_stage {
+            if phase_rank(*stage) < phase_rank(prev) {
+                return Err(fail(i, Violation::PhaseRegression { stage: *stage, prev }));
+            }
+        }
+        prev_stage = Some(*stage);
+        match instr {
+            MicroInstr::Gate { kind, out, ins, n_ins } => {
+                report.gates += 1;
+                // R4 before everything else: a malformed gate's operand
+                // list cannot be trusted for the later checks.
+                let n = *n_ins as usize;
+                if n > ins.len() || n != kind.n_inputs() {
+                    return Err(fail(i, Violation::BadArity { kind: *kind, n_ins: n }));
+                }
+                let inputs = &ins[..n];
+                if inputs.contains(out) {
+                    return Err(fail(i, Violation::OutputAliasesInput { kind: *kind, col: *out }));
+                }
+                for &col in inputs.iter().chain([out]) {
+                    if col >= width {
+                        return Err(fail(i, Violation::ColumnOutOfRange { col, row_width: width }));
+                    }
+                }
+                if !matches!(stage, Stage::Match | Stage::ComputeScore) {
+                    return Err(fail(i, Violation::StageMismatch { stage: *stage }));
+                }
+                for &col in inputs {
+                    if !state[col as usize].gate_readable() {
+                        return Err(fail(i, Violation::UseBeforeDef { col }));
+                    }
+                    live_preset[col as usize] = None;
+                }
+                let o = *out as usize;
+                if state[o] != CellState::Preset(kind.preset()) {
+                    return Err(fail(
+                        i,
+                        Violation::UnpresetOutput { kind: *kind, col: *out, found: state[o] },
+                    ));
+                }
+                live_preset[o] = None;
+                state[o] = CellState::Computed;
+            }
+            MicroInstr::Preset { col, val } | MicroInstr::GangPreset { col, val } => {
+                report.presets += 1;
+                if *col >= width {
+                    return Err(fail(i, Violation::ColumnOutOfRange { col: *col, row_width: width }));
+                }
+                if !stage.is_preset() {
+                    return Err(fail(i, Violation::StageMismatch { stage: *stage }));
+                }
+                let c = *col as usize;
+                if state[c] == CellState::Computed {
+                    return Err(fail(i, Violation::ClobberedLiveColumn { col: *col }));
+                }
+                if let Some(prev_idx) = live_preset[c] {
+                    // The earlier preset never fed anything: report it,
+                    // not the overwriting one.
+                    return Err(fail(prev_idx, Violation::DeadStore { col: *col }));
+                }
+                if !layout.is_score_col(*col) {
+                    live_preset[c] = Some(i);
+                }
+                state[c] = CellState::Preset(*val);
+            }
+            MicroInstr::WriteRow { col, bits, .. } => {
+                bounds(i, *col, bits.len() as u32)?;
+                if *stage != Stage::WritePatterns {
+                    return Err(fail(i, Violation::StageMismatch { stage: *stage }));
+                }
+                for c in *col..*col + bits.len() as u32 {
+                    live_preset[c as usize] = None;
+                    // A single-row write leaves data compartments fully
+                    // defined; anywhere else only one row is.
+                    if state[c as usize] != CellState::Data {
+                        state[c as usize] = CellState::RowData;
+                    }
+                }
+            }
+            MicroInstr::ReadRow { col, len, .. } => {
+                report.reads += 1;
+                bounds(i, *col, *len)?;
+                if *stage != Stage::ReadOut {
+                    return Err(fail(i, Violation::StageMismatch { stage: *stage }));
+                }
+                for c in *col..*col + *len {
+                    if state[c as usize] == CellState::Undefined {
+                        return Err(fail(i, Violation::UndrivenRead { col: c }));
+                    }
+                    live_preset[c as usize] = None;
+                }
+            }
+            MicroInstr::ReadScoreAllRows { col, len } => {
+                report.reads += 1;
+                bounds(i, *col, *len)?;
+                if *stage != Stage::ReadOut {
+                    return Err(fail(i, Violation::StageMismatch { stage: *stage }));
+                }
+                for c in *col..*col + *len {
+                    // The score buffer reads every row, so the column
+                    // must be defined in every row.
+                    if !state[c as usize].gate_readable() {
+                        return Err(fail(i, Violation::UndrivenRead { col: c }));
+                    }
+                    live_preset[c as usize] = None;
+                }
+            }
+        }
+    }
+
+    // R6: the earliest preset nothing ever consumed.
+    if let Some((index, col)) = live_preset
+        .iter()
+        .enumerate()
+        .filter_map(|(col, idx)| idx.map(|i| (i, col as u32)))
+        .min()
+    {
+        return Err(fail(index, Violation::DeadStore { col }));
+    }
+
+    report.columns_defined = state.iter().filter(|s| !matches!(s, CellState::Undefined)).count();
+    Ok(report)
+}
+
+/// The corruption classes of the mutation self-test harness. The first
+/// six are the issue-mandated set; the last two extend coverage to R1
+/// and the clobber arm of R2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Corruption {
+    /// Remove a preset a later gate's output depends on.
+    DroppedPreset,
+    /// Swap the stage tags of a preset and a gate.
+    SwappedStage,
+    /// Point a gate input past the row width.
+    OutOfRangeColumn,
+    /// Shrink a gate's recorded arity below its kind's fan-in.
+    BadArity,
+    /// Insert a read-out of columns nothing drives.
+    DanglingRead,
+    /// Insert a preset nothing ever consumes.
+    DeadStore,
+    /// Point a gate input at an undriven (but in-range) column.
+    DanglingInput,
+    /// Preset over a computed column that is still live.
+    ClobberLive,
+}
+
+impl Corruption {
+    /// Every corruption class, in a stable order.
+    pub const ALL: [Corruption; 8] = [
+        Corruption::DroppedPreset,
+        Corruption::SwappedStage,
+        Corruption::OutOfRangeColumn,
+        Corruption::BadArity,
+        Corruption::DanglingRead,
+        Corruption::DeadStore,
+        Corruption::DanglingInput,
+        Corruption::ClobberLive,
+    ];
+
+    /// Stable name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Corruption::DroppedPreset => "dropped-preset",
+            Corruption::SwappedStage => "swapped-stage",
+            Corruption::OutOfRangeColumn => "out-of-range-column",
+            Corruption::BadArity => "bad-arity",
+            Corruption::DanglingRead => "dangling-read",
+            Corruption::DeadStore => "dead-store",
+            Corruption::DanglingInput => "dangling-input",
+            Corruption::ClobberLive => "clobber-live",
+        }
+    }
+
+    /// Whether `violation` is the variant this corruption must be
+    /// rejected with.
+    pub fn expects(&self, violation: &Violation) -> bool {
+        matches!(
+            (self, violation),
+            (Corruption::DroppedPreset, Violation::UnpresetOutput { .. })
+                | (Corruption::SwappedStage, Violation::StageMismatch { .. })
+                | (Corruption::OutOfRangeColumn, Violation::ColumnOutOfRange { .. })
+                | (Corruption::BadArity, Violation::BadArity { .. })
+                | (Corruption::DanglingRead, Violation::UndrivenRead { .. })
+                | (Corruption::DeadStore, Violation::DeadStore { .. })
+                | (Corruption::DanglingInput, Violation::UseBeforeDef { .. })
+                | (Corruption::ClobberLive, Violation::ClobberedLiveColumn { .. })
+        )
+    }
+}
+
+/// Seed one corruption `class` into a copy of a known-good `prog`.
+/// Each mutation is chosen so the *intended* violation is the first
+/// one the scan reaches.
+pub fn corrupt(prog: &Program, layout: &RowLayout, class: Corruption) -> Program {
+    let mut p = prog.clone();
+    let preset_col = |instr: &MicroInstr| match instr {
+        MicroInstr::Preset { col, .. } | MicroInstr::GangPreset { col, .. } => Some(*col),
+        _ => None,
+    };
+    match class {
+        Corruption::DroppedPreset => {
+            // First preset whose column a later gate drives.
+            let mut victim = None;
+            for i in 0..p.instrs.len() {
+                if let Some(col) = preset_col(&p.instrs[i].1) {
+                    let feeds_gate = p.instrs[i + 1..]
+                        .iter()
+                        .any(|(_, g)| matches!(g, MicroInstr::Gate { out, .. } if *out == col));
+                    if feeds_gate {
+                        victim = Some(i);
+                        break;
+                    }
+                }
+            }
+            let i = victim.expect("no droppable preset in program");
+            p.instrs.remove(i);
+        }
+        Corruption::SwappedStage => {
+            let ip = p
+                .instrs
+                .iter()
+                .position(|(_, instr)| preset_col(instr).is_some())
+                .expect("no preset in program");
+            let ig = p.instrs[ip..]
+                .iter()
+                .position(|(_, instr)| matches!(instr, MicroInstr::Gate { .. }))
+                .map(|off| ip + off)
+                .expect("no gate after first preset");
+            let (sp, sg) = (p.instrs[ip].0, p.instrs[ig].0);
+            p.instrs[ip].0 = sg;
+            p.instrs[ig].0 = sp;
+        }
+        Corruption::OutOfRangeColumn => {
+            let (_, instr) = p
+                .instrs
+                .iter_mut()
+                .find(|(_, instr)| matches!(instr, MicroInstr::Gate { .. }))
+                .expect("no gate in program");
+            if let MicroInstr::Gate { ins, .. } = instr {
+                ins[0] = layout.total_cols() as u32 + 7;
+            }
+        }
+        Corruption::BadArity => {
+            let (_, instr) = p
+                .instrs
+                .iter_mut()
+                .find(|(_, instr)| matches!(instr, MicroInstr::Gate { n_ins, .. } if *n_ins >= 2))
+                .expect("no multi-input gate in program");
+            if let MicroInstr::Gate { n_ins, .. } = instr {
+                *n_ins -= 1;
+            }
+        }
+        Corruption::DanglingRead => {
+            // Read the score compartment before anything drives it.
+            p.instrs.insert(
+                0,
+                (
+                    Stage::ReadOut,
+                    MicroInstr::ReadScoreAllRows {
+                        col: layout.score_col(),
+                        len: layout.score_bits() as u32,
+                    },
+                ),
+            );
+        }
+        Corruption::DeadStore => {
+            // A preset of fragment column 0 that nothing consumes,
+            // placed before the read-out so the phase order stays
+            // forward.
+            let at = p
+                .instrs
+                .iter()
+                .position(|(stage, _)| *stage == Stage::ReadOut)
+                .unwrap_or(p.instrs.len());
+            p.instrs.insert(
+                at,
+                (Stage::PresetScore, MicroInstr::GangPreset { col: layout.frag_col(), val: true }),
+            );
+        }
+        Corruption::DanglingInput => {
+            // The score compartment is undriven while the match phase
+            // runs, so the first gate reading it is a dangling input.
+            let (_, instr) = p
+                .instrs
+                .iter_mut()
+                .find(|(_, instr)| matches!(instr, MicroInstr::Gate { .. }))
+                .expect("no gate in program");
+            if let MicroInstr::Gate { ins, .. } = instr {
+                ins[0] = layout.score_col();
+            }
+        }
+        Corruption::ClobberLive => {
+            // By the first score-phase instruction, match bit 0 is
+            // computed and unread; preset it again.
+            let at = p
+                .instrs
+                .iter()
+                .position(|(stage, _)| phase_rank(*stage) >= 2)
+                .expect("no score phase in program");
+            p.instrs.insert(
+                at,
+                (
+                    Stage::PresetScore,
+                    MicroInstr::GangPreset { col: layout.match_bit_col(0), val: false },
+                ),
+            );
+        }
+    }
+    p
+}
+
+/// Run every [`Corruption`] class against `cache`'s first program and
+/// assert each is rejected with its intended violation. Returns the
+/// per-class rejections for reporting, or a description of the first
+/// class the verifier failed to catch correctly.
+pub fn mutation_self_test(cache: &ProgramCache) -> Result<Vec<(Corruption, VerifyError)>, String> {
+    let prog = cache.program(0);
+    let layout = cache.layout();
+    debug_assert!(verify(prog, layout).is_ok(), "seed program must verify");
+    let mut rejections = Vec::with_capacity(Corruption::ALL.len());
+    for class in Corruption::ALL {
+        let mutated = corrupt(prog, layout, class);
+        match verify(&mutated, layout) {
+            Ok(_) => return Err(format!("{}: corruption was not rejected", class.name())),
+            Err(e) if class.expects(&e.violation) => rejections.push((class, e)),
+            Err(e) => {
+                return Err(format!(
+                    "{}: rejected with the wrong violation: {e}",
+                    class.name()
+                ))
+            }
+        }
+    }
+    Ok(rejections)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::PresetMode;
+
+    /// A layout with ample scratch for hand-built programs. Columns:
+    /// fragment [0,16), pattern [16,20), score [20,22), match bits
+    /// [22,24), free scratch [24,38).
+    fn small_layout() -> RowLayout {
+        RowLayout::new(8, 2, 16)
+    }
+
+    fn preset(col: u32, val: bool) -> MicroInstr {
+        MicroInstr::GangPreset { col, val }
+    }
+
+    #[test]
+    fn compiled_alignment_programs_verify_in_both_modes() {
+        for mode in [PresetMode::Standard, PresetMode::Gang] {
+            for readout in [false, true] {
+                let cache = ProgramCache::for_geometry(24, 6, mode, readout)
+                    .unwrap_or_else(|e| panic!("{mode:?} readout={readout}: {e}"));
+                for loc in 0..cache.len() as u32 {
+                    let rep = verify(cache.program(loc), cache.layout())
+                        .unwrap_or_else(|e| panic!("{mode:?} readout={readout} loc={loc}: {e}"));
+                    assert_eq!(rep.instructions, cache.program(loc).len());
+                    assert_eq!(rep.max_column, cache.program(loc).max_column());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn report_counts_match_program_census() {
+        let cache = ProgramCache::for_geometry(20, 5, PresetMode::Gang, true).unwrap();
+        let prog = cache.program(2);
+        let rep = verify(prog, cache.layout()).unwrap();
+        assert_eq!(rep.gates, prog.count_where(|i| matches!(i, MicroInstr::Gate { .. })));
+        assert_eq!(
+            rep.presets,
+            prog.count_where(|i| matches!(
+                i,
+                MicroInstr::Preset { .. } | MicroInstr::GangPreset { .. }
+            ))
+        );
+        assert_eq!(rep.reads, 1);
+        assert!(rep.columns_defined > 0);
+    }
+
+    #[test]
+    fn unpreset_gate_output_is_rejected() {
+        let l = small_layout();
+        let mut p = Program::new();
+        p.push(Stage::Match, MicroInstr::gate(GateKind::Inv, 30, &[0]));
+        let e = verify(&p, &l).unwrap_err();
+        assert_eq!(e.index, 0);
+        assert_eq!(e.rule(), Rule::StageOrder);
+        assert!(matches!(
+            e.violation,
+            Violation::UnpresetOutput { col: 30, found: CellState::Undefined, .. }
+        ));
+    }
+
+    #[test]
+    fn gate_over_loaded_data_is_rejected_as_unpreset() {
+        // Data compartments are readable but never legal gate outputs.
+        let l = small_layout();
+        let mut p = Program::new();
+        p.push(Stage::Match, MicroInstr::gate(GateKind::Inv, 5, &[0]));
+        let e = verify(&p, &l).unwrap_err();
+        assert!(matches!(
+            e.violation,
+            Violation::UnpresetOutput { col: 5, found: CellState::Data, .. }
+        ));
+    }
+
+    #[test]
+    fn wrong_polarity_preset_is_rejected() {
+        let l = small_layout();
+        let mut p = Program::new();
+        // Inv requires preset() polarity; give it the opposite.
+        p.push(Stage::PresetMatch, preset(30, !GateKind::Inv.preset()));
+        p.push(Stage::Match, MicroInstr::gate(GateKind::Inv, 30, &[0]));
+        let e = verify(&p, &l).unwrap_err();
+        assert_eq!(e.index, 1);
+        assert!(matches!(e.violation, Violation::UnpresetOutput { .. }));
+    }
+
+    #[test]
+    fn phase_regression_is_rejected() {
+        let l = small_layout();
+        let mut p = Program::new();
+        p.push(Stage::PresetScore, preset(30, false));
+        p.push(Stage::PresetMatch, preset(31, false));
+        let e = verify(&p, &l).unwrap_err();
+        assert_eq!(e.index, 1);
+        assert!(matches!(
+            e.violation,
+            Violation::PhaseRegression { stage: Stage::PresetMatch, prev: Stage::PresetScore }
+        ));
+    }
+
+    #[test]
+    fn wrong_stage_kinds_are_rejected() {
+        let l = small_layout();
+        let mut p = Program::new();
+        p.push(Stage::Match, preset(30, false));
+        assert!(matches!(
+            verify(&p, &l).unwrap_err().violation,
+            Violation::StageMismatch { stage: Stage::Match }
+        ));
+        let mut p = Program::new();
+        p.push(Stage::ComputeScore, MicroInstr::ReadScoreAllRows { col: 0, len: 1 });
+        assert!(matches!(
+            verify(&p, &l).unwrap_err().violation,
+            Violation::StageMismatch { stage: Stage::ComputeScore }
+        ));
+    }
+
+    #[test]
+    fn geometry_bounds_are_enforced() {
+        let l = small_layout();
+        let w = l.total_cols() as u32;
+        let mut p = Program::new();
+        p.push(Stage::PresetMatch, preset(w, false));
+        let e = verify(&p, &l).unwrap_err();
+        assert_eq!(e.rule(), Rule::Geometry);
+        assert!(matches!(e.violation, Violation::ColumnOutOfRange { col, .. } if col == w));
+        // A read straddling the row edge is out of range too.
+        let mut p = Program::new();
+        p.push(Stage::ReadOut, MicroInstr::ReadScoreAllRows { col: w - 1, len: 2 });
+        assert_eq!(verify(&p, &l).unwrap_err().rule(), Rule::Geometry);
+    }
+
+    #[test]
+    fn malformed_gates_are_rejected_before_dataflow() {
+        let l = small_layout();
+        // Hand-built variants (the `gate` constructor would panic).
+        let bad_arity = MicroInstr::Gate {
+            kind: GateKind::Nor2,
+            out: 30,
+            ins: [0, 1, u32::MAX, u32::MAX, u32::MAX],
+            n_ins: 3,
+        };
+        let mut p = Program::new();
+        p.push(Stage::Match, bad_arity);
+        let e = verify(&p, &l).unwrap_err();
+        assert_eq!(e.rule(), Rule::GateLegality);
+        assert!(matches!(e.violation, Violation::BadArity { n_ins: 3, .. }));
+
+        let aliasing = MicroInstr::Gate {
+            kind: GateKind::Nor2,
+            out: 1,
+            ins: [0, 1, u32::MAX, u32::MAX, u32::MAX],
+            n_ins: 2,
+        };
+        let mut p = Program::new();
+        p.push(Stage::Match, aliasing);
+        assert!(matches!(
+            verify(&p, &l).unwrap_err().violation,
+            Violation::OutputAliasesInput { col: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn dead_store_is_reported_at_the_dead_preset() {
+        let l = small_layout();
+        let mut p = Program::new();
+        p.push(Stage::PresetMatch, preset(30, false));
+        p.push(Stage::PresetMatch, preset(31, false));
+        p.push(Stage::Match, MicroInstr::gate(GateKind::Inv, 31, &[0]));
+        let e = verify(&p, &l).unwrap_err();
+        assert_eq!(e.index, 0);
+        assert_eq!(e.rule(), Rule::Liveness);
+        assert!(matches!(e.violation, Violation::DeadStore { col: 30 }));
+    }
+
+    #[test]
+    fn score_compartment_presets_are_liveness_exempt() {
+        let l = small_layout();
+        let mut p = Program::new();
+        p.push(Stage::PresetScore, preset(l.score_col(), false));
+        assert!(verify(&p, &l).is_ok(), "architected score cells may stay unread");
+    }
+
+    #[test]
+    fn mutation_classes_cover_all_rules_but_writes() {
+        use std::collections::HashSet;
+        let cache = ProgramCache::for_geometry(24, 6, PresetMode::Gang, true).unwrap();
+        let rejections = mutation_self_test(&cache).unwrap();
+        assert_eq!(rejections.len(), Corruption::ALL.len());
+        let rules: HashSet<Rule> = rejections.iter().map(|(_, e)| e.rule()).collect();
+        for rule in [
+            Rule::DefBeforeUse,
+            Rule::StageOrder,
+            Rule::Geometry,
+            Rule::GateLegality,
+            Rule::ReadoutCoverage,
+            Rule::Liveness,
+        ] {
+            assert!(rules.contains(&rule), "{rule} not covered by any corruption class");
+        }
+    }
+
+    #[test]
+    fn verify_error_display_carries_index_loc_and_rule() {
+        let e = VerifyError {
+            index: 17,
+            loc: None,
+            violation: Violation::UseBeforeDef { col: 42 },
+        }
+        .with_loc(3);
+        let msg = e.to_string();
+        assert!(msg.contains("instr #17"), "{msg}");
+        assert!(msg.contains("alignment 3"), "{msg}");
+        assert!(msg.contains("column 42"), "{msg}");
+        assert!(msg.contains("R1:def-before-use"), "{msg}");
+    }
+}

@@ -11,6 +11,7 @@
 //!                     [--catalog N] [--zipf S] [--batch N] [--delay-us N] [--queue N]
 //!                     [--lanes N] [--seed S]
 //! cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]
+//! cram-pm verify-programs
 //! cram-pm info
 //! ```
 //!
@@ -20,22 +21,22 @@ use cram_pm::alphabet::Alphabet;
 use cram_pm::bench_apps::dna::DnaWorkload;
 use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
 use cram_pm::experiments::serving::ServingKnobs;
+use cram_pm::isa::{mutation_self_test, PresetMode, ProgramCache};
 use cram_pm::semantics::MatchSemantics;
-use cram_pm::util::{gate, Json};
+use cram_pm::util::{gate, FxHashMap, Json};
 use cram_pm::{experiments, Result};
-use std::collections::HashMap;
 use std::path::PathBuf;
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|tables|all> [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n              [--semantics best|threshold:N|topk:K]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm info"
+        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|tables|all> [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n              [--semantics best|threshold:N|topk:K]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm verify-programs\n  cram-pm info"
     );
     std::process::exit(2);
 }
 
 /// Parse `--key value` pairs and bare flags from argv.
-fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
-    let mut kv = HashMap::new();
+fn parse_flags(args: &[String]) -> (FxHashMap<String, String>, Vec<String>) {
+    let mut kv = FxHashMap::default();
     let mut flags = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -56,7 +57,7 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     (kv, flags)
 }
 
-fn cmd_experiment(which: &str, kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
+fn cmd_experiment(which: &str, kv: &FxHashMap<String, String>, flags: &[String]) -> Result<()> {
     let smoke = flags.iter().any(|f| f == "smoke");
     let json = kv.get("json").map(PathBuf::from);
     match which {
@@ -88,7 +89,7 @@ fn cmd_experiment(which: &str, kv: &HashMap<String, String>, flags: &[String]) -
 
 /// The `serve-bench` subcommand: the serving experiment with every knob
 /// CLI-overridable.
-fn cmd_serve_bench(kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
+fn cmd_serve_bench(kv: &FxHashMap<String, String>, flags: &[String]) -> Result<()> {
     let smoke = flags.iter().any(|f| f == "smoke");
     let mut knobs = if smoke { ServingKnobs::smoke() } else { ServingKnobs::standard() };
     let get = |k: &str, d: usize| kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
@@ -119,7 +120,7 @@ fn cmd_serve_bench(kv: &HashMap<String, String>, flags: &[String]) -> Result<()>
 
 /// The `bench-gate` subcommand: fail (exit 1) when a measured report
 /// regresses past tolerance against a committed baseline anchor.
-fn cmd_bench_gate(kv: &HashMap<String, String>) -> Result<()> {
+fn cmd_bench_gate(kv: &FxHashMap<String, String>) -> Result<()> {
     let (Some(baseline_path), Some(measured_path)) = (kv.get("baseline"), kv.get("measured"))
     else {
         eprintln!("bench-gate needs --baseline FILE and --measured FILE");
@@ -172,7 +173,7 @@ fn cmd_bench_gate(kv: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_run(kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
+fn cmd_run(kv: &FxHashMap<String, String>, flags: &[String]) -> Result<()> {
     let get = |k: &str, d: usize| kv.get(k).map(|v| v.parse().unwrap_or(d)).unwrap_or(d);
     let engine = match kv.get("engine").map(|s| s.as_str()).unwrap_or("xla") {
         "xla" => EngineKind::Xla,
@@ -269,6 +270,67 @@ fn cmd_run(kv: &HashMap<String, String>, flags: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The `verify-programs` subcommand: rebuild the compiled-program cache
+/// for a sweep of geometries × alphabets × preset modes × readout
+/// variants and run every program through the static verifier (this is
+/// what `ProgramCache::build` does on every path — the sweep makes the
+/// coverage explicit and CI-visible), then run the mutation self-test
+/// harness to prove the verifier still *rejects* each corruption class.
+fn cmd_verify_programs() -> Result<()> {
+    // (frag_chars, pat_chars): the default engine geometry, the small
+    // test geometries, a non-power-of-two fragment, and the fig7-scale
+    // 100-char pattern.
+    const GEOMETRIES: [(usize, usize); 5] = [(24, 6), (32, 8), (64, 16), (65, 16), (100, 25)];
+    let mut caches = 0usize;
+    let mut programs = 0usize;
+    let mut instructions = 0usize;
+    println!("── static verification sweep ───────────────────────");
+    for (frag_chars, pat_chars) in GEOMETRIES {
+        for alphabet in Alphabet::ALL {
+            for mode in [PresetMode::Standard, PresetMode::Gang] {
+                for readout in [false, true] {
+                    let cache =
+                        ProgramCache::for_alphabet(alphabet, frag_chars, pat_chars, mode, readout)
+                            .map_err(|e| {
+                                anyhow::anyhow!(
+                                    "{frag_chars}×{pat_chars} {} {mode:?} readout={readout}: {e}",
+                                    alphabet.tag()
+                                )
+                            })?;
+                    let rep = cache.verify_report();
+                    println!(
+                        "  {frag_chars:>3}×{pat_chars:<3} {:<8} {:<8} readout={:<5}  \
+                         {:>3} programs, {:>6} instructions, {:>6} gates  ok",
+                        alphabet.tag(),
+                        format!("{mode:?}"),
+                        readout,
+                        cache.len(),
+                        rep.instructions,
+                        rep.gates
+                    );
+                    caches += 1;
+                    programs += cache.len();
+                    instructions += rep.instructions;
+                }
+            }
+        }
+    }
+    println!("  {caches} caches, {programs} programs, {instructions} instructions verified");
+
+    println!("── mutation self-test (verifier must reject) ───────");
+    for mode in [PresetMode::Standard, PresetMode::Gang] {
+        let cache = ProgramCache::for_geometry(64, 16, mode, true)
+            .map_err(|e| anyhow::anyhow!("building the 64×16 {mode:?} cache: {e}"))?;
+        let rejections = mutation_self_test(&cache)
+            .map_err(|e| anyhow::anyhow!("mutation self-test ({mode:?}): {e}"))?;
+        for (class, err) in &rejections {
+            println!("  {:<8} {:<20} rejected: {err}", format!("{mode:?}"), class.name());
+        }
+    }
+    println!("verify-programs: all caches verified, all corruption classes rejected");
+    Ok(())
+}
+
 fn cmd_info() {
     println!(
         "cram-pm — reproduction of \"Computational RAM to Accelerate String Matching at Scale\""
@@ -315,6 +377,7 @@ fn main() -> Result<()> {
             let (kv, _) = parse_flags(&args[1..]);
             cmd_bench_gate(&kv)?;
         }
+        Some("verify-programs") => cmd_verify_programs()?,
         Some("info") => cmd_info(),
         _ => usage(),
     }

@@ -2,9 +2,9 @@
 //! score computation on the hot path.
 
 use crate::runtime::{Manifest, Variant};
+use crate::util::FxHashMap;
 use crate::Result;
 use anyhow::{anyhow, Context};
-use std::collections::HashMap;
 use std::path::Path;
 
 // The offline build image vendors no PJRT crate; `xla_stub` mirrors the
@@ -41,7 +41,7 @@ struct LoadedVariant {
 /// manifest variant.
 pub struct Runtime {
     client: xla::PjRtClient,
-    variants: HashMap<String, LoadedVariant>,
+    variants: FxHashMap<String, LoadedVariant>,
 }
 
 impl Runtime {
@@ -53,7 +53,7 @@ impl Runtime {
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-        let mut variants = HashMap::new();
+        let mut variants = FxHashMap::default();
         for v in &manifest.variants {
             let path = manifest.hlo_path(v);
             let proto = xla::HloModuleProto::from_text_file(

@@ -43,6 +43,12 @@
 //! * [`load`] — Zipfian closed-/open-loop load generators for the
 //!   `serve-bench` CLI and the serving experiment.
 
+// Serving code runs under client traffic: a panic here takes down the
+// batcher thread and every queued request with it, so recoverable
+// failures must be typed [`ServeError`]s or `anyhow` errors, never
+// unwraps. Test modules opt back out locally.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod load;
 pub mod server;
 

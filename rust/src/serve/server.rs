@@ -707,6 +707,8 @@ fn dispatch_batch(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::bench_apps::dna::DnaWorkload;
     use crate::coordinator::{CoordinatorConfig, EngineKind};

@@ -30,8 +30,10 @@
 use crate::util::Json;
 
 /// Keys whose values must match exactly (deterministic counts and
-/// geometry).
-const EXACT_KEYS: [&str; 11] = [
+/// geometry, plus the static verifier's microcode census — a codegen
+/// change that alters the compiled programs' shape must move the
+/// anchor deliberately, not drift past CI).
+const EXACT_KEYS: [&str; 16] = [
     "patterns",
     "matched",
     "total_hits",
@@ -43,6 +45,11 @@ const EXACT_KEYS: [&str; 11] = [
     "rows_per_block",
     "rows",
     "arrays",
+    "programs",
+    "instructions",
+    "gates",
+    "presets",
+    "full_adders",
 ];
 
 /// How one compared leaf fared.
@@ -308,7 +315,17 @@ mod tests {
             assert!(is_skipped_key(k), "{k} must be skipped");
             assert!(!is_throughput_key(k), "{k} must not double as a throughput floor");
         }
-        for k in ["patterns", "matched", "total_hits", "bits_per_char"] {
+        for k in [
+            "patterns",
+            "matched",
+            "total_hits",
+            "bits_per_char",
+            "programs",
+            "instructions",
+            "gates",
+            "presets",
+            "full_adders",
+        ] {
             assert!(EXACT_KEYS.contains(&k), "{k} must gate exactly");
         }
         assert!(!is_throughput_key("layout_cols"));

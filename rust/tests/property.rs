@@ -316,7 +316,7 @@ fn prop_cached_pooled_bitsim_equals_fresh_everything() {
     let (frag_chars, pat_chars) = (24usize, 6usize);
     for mode in [PresetMode::Standard, PresetMode::Gang] {
         for rows_per_block in [64usize, 130] {
-            let mut engine = BitsimEngine::new(frag_chars, pat_chars, rows_per_block, mode);
+            let mut engine = BitsimEngine::new(frag_chars, pat_chars, rows_per_block, mode).unwrap();
             for n_rows in [63usize, 64, 65, 130] {
                 let fragments: Vec<Vec<u8>> =
                     (0..n_rows).map(|_| encode(&rng.dna(frag_chars))).collect();
@@ -532,7 +532,8 @@ fn prop_bitsim_generic_alphabets_equal_oracle() {
             let frag_chars = pat_chars + rng.range(0, 24);
             let rows = rng.range(1, 70);
             let mode = if rng.bool() { PresetMode::Gang } else { PresetMode::Standard };
-            let cache = ProgramCache::for_alphabet(alphabet, frag_chars, pat_chars, mode, true);
+            let cache =
+                ProgramCache::for_alphabet(alphabet, frag_chars, pat_chars, mode, true).unwrap();
             let layout = *cache.layout();
 
             let fragments: Vec<Vec<u8>> =
@@ -580,7 +581,8 @@ fn prop_hit_enumeration_equals_scalar_oracle_both_engines() {
         // rows_per_block 64: the 65-row item splits across two blocks,
         // so block-boundary reassembly of hit lists is exercised.
         let mut bitsim =
-            BitsimEngine::new_alphabet(alphabet, frag_chars, pat_chars, 64, PresetMode::Gang);
+            BitsimEngine::new_alphabet(alphabet, frag_chars, pat_chars, 64, PresetMode::Gang)
+                .unwrap();
         for n_rows in [63usize, 64, 65] {
             let fragments: Vec<Vec<u8>> =
                 (0..n_rows).map(|_| alphabet.random_codes(&mut rng, frag_chars)).collect();
