@@ -23,7 +23,8 @@
 use cram_pm::array::{CramArray, RowLayout};
 use cram_pm::bench_apps::dna::DnaWorkload;
 use cram_pm::coordinator::{
-    BitsimEngine, Coordinator, CoordinatorConfig, EngineKind, MatchEngine, WorkItem,
+    BitsimEngine, Coordinator, CoordinatorConfig, CpuEngine, EngineKind, MatchEngine,
+    SimdKernel, WorkItem,
 };
 use cram_pm::dna::{packed_best_alignment, Encoded, Packed2};
 use cram_pm::isa::{CodeGen, PresetMode, ProgramCache};
@@ -197,6 +198,34 @@ fn main() {
     );
     assert_eq!(profile_scan_item(&item), packed_scan_item(&item), "cpu scorers diverged");
 
+    // Per-kernel A/B: the same work item through `CpuEngine` under
+    // every SIMD kernel compiled into this target. `scalar` runs the
+    // per-row packed scan verbatim (the oracle the vector paths are
+    // proven against); `avx2`/`neon` take the word-transposed block
+    // path. Results must agree bit-for-bit before timing means
+    // anything, so the oracle check runs first.
+    section("simd dispatch: CpuEngine item scoring per kernel");
+    let simd_kernels = SimdKernel::all_available();
+    let oracle_best =
+        CpuEngine::with_kernel(item.alphabet, SimdKernel::Scalar).run(&item).unwrap().best;
+    for &kernel in &simd_kernels {
+        let got = CpuEngine::with_kernel(item.alphabet, kernel).run(&item).unwrap().best;
+        assert_eq!(got, oracle_best, "kernel {kernel} diverged from the scalar oracle");
+    }
+    let mut simd_medians: Vec<(SimdKernel, f64)> = Vec::new();
+    for &kernel in &simd_kernels {
+        let mut eng = CpuEngine::with_kernel(item.alphabet, kernel);
+        let r = bench(&format!("score item, kernel={kernel}"), budget, || eng.run(&item).unwrap());
+        println!("{r}");
+        println!("  → {:.0} items/s", 1.0 / r.median);
+        simd_medians.push((kernel, r.median));
+    }
+    // `all_available` lists the scalar oracle first.
+    let simd_scalar_s = simd_medians[0].1;
+    for &(kernel, median) in &simd_medians[1..] {
+        println!("  → kernel {kernel}: {:.2}× vs scalar", simd_scalar_s / median);
+    }
+
     section("oracular index");
     let (ref_chars, idx_pats) = if smoke { (1 << 16, 256) } else { (1 << 20, 4096) };
     let w = DnaWorkload::generate(ref_chars, idx_pats, 24, 0.01, 7);
@@ -282,6 +311,19 @@ fn main() {
     }
 
     if let Some(path) = json_path {
+        // Per-kernel scorer rows. Only kernels compiled into and
+        // detected on *this* host appear, so the committed anchor must
+        // list only kernels the bench-smoke runner is guaranteed to
+        // have (scalar + avx2 on the x86 runner) — a missing baseline
+        // key fails the gate by design.
+        let mut simd_rows = vec![("kernel", Json::str(SimdKernel::active().tag()))];
+        for &(kernel, median) in &simd_medians {
+            let mut row = vec![("items_per_sec", Json::num(1.0 / median))];
+            if kernel != SimdKernel::Scalar {
+                row.push(("speedup", Json::num(simd_scalar_s / median)));
+            }
+            simd_rows.push((kernel.tag(), Json::obj(row)));
+        }
         let doc = Json::obj(vec![
             ("experiment", Json::str("hotpath")),
             ("smoke", Json::Bool(smoke)),
@@ -328,6 +370,7 @@ fn main() {
                     ),
                 ]),
             ),
+            ("simd_scorer", Json::obj(simd_rows)),
             (
                 "codegen",
                 Json::obj(vec![

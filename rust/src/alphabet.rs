@@ -197,18 +197,25 @@ impl PackedSeq {
     /// The 64-bit window of packed codes starting at character `start`
     /// (up to `⌊64/bits⌋` whole characters; callers mask off anything
     /// past the end).
+    ///
+    /// §Perf: the in-range double-word funnel is hoisted to a fast path
+    /// so the hottest loop (one call per alignment step) pays a single
+    /// length compare instead of two bounds-checked `get`s; only the
+    /// final window of the stream takes the slow tail. Crate-visible so
+    /// [`crate::simd`] can precompute pattern windows for its block
+    /// kernels.
     #[inline]
-    fn window(&self, start: usize) -> u64 {
+    pub(crate) fn window(&self, start: usize) -> u64 {
         let bit = self.bits * start;
         let w = bit / 64;
         let off = bit % 64;
-        let mut x = self.words.get(w).copied().unwrap_or(0) >> off;
-        if off != 0 {
-            if let Some(&hi) = self.words.get(w + 1) {
-                x |= hi << (64 - off);
-            }
+        if off == 0 {
+            return self.words.get(w).copied().unwrap_or(0);
         }
-        x
+        if w + 1 < self.words.len() {
+            return (self.words[w] >> off) | (self.words[w + 1] << (64 - off));
+        }
+        self.words.get(w).copied().unwrap_or(0) >> off
     }
 }
 
@@ -216,8 +223,9 @@ impl PackedSeq {
 /// each whole character `j`, per symbol width 1..=8. Precomputed so
 /// the per-alignment scoring path pays a table lookup, not a
 /// mask-building loop (`LANE_MASKS[2]` is the old DNA `CHAR_LANES`
-/// constant).
-const LANE_MASKS: [u64; 9] = [
+/// constant). Crate-visible: the [`crate::simd`] block kernels
+/// broadcast the same table.
+pub(crate) const LANE_MASKS: [u64; 9] = [
     0,
     0xFFFF_FFFF_FFFF_FFFF,
     0x5555_5555_5555_5555,
@@ -463,6 +471,65 @@ mod tests {
                     &PackedSeq::from_codes(alphabet, &pat),
                 );
                 assert_eq!(got, want, "{alphabet} frag={frag_len} pat={pat_len}");
+            }
+        }
+    }
+
+    /// Bit-level reference for [`PackedSeq::window`]: gather each of
+    /// the 64 window bits straight from the code list.
+    fn window_reference(codes: &[u8], bits: usize, start: usize) -> u64 {
+        let mut want = 0u64;
+        for b in 0..64u64 {
+            let abs = bits as u64 * start as u64 + b;
+            let (ch, within) = ((abs / bits as u64) as usize, abs % bits as u64);
+            if ch < codes.len() && (codes[ch] >> within) & 1 == 1 {
+                want |= 1 << b;
+            }
+        }
+        want
+    }
+
+    #[test]
+    fn window_fast_path_equals_bit_gather_at_word_boundaries() {
+        // 63/64/65-char sequences × all widths: every window start,
+        // including the ones whose high word falls off the stream end
+        // (the slow tail the fast path must not change). Also the Miri
+        // target for `PackedSeq::pack` boundary behavior (CI `miri`
+        // job, `cargo miri test --lib alphabet::`).
+        let mut rng = Rng::new(0x51D0);
+        for alphabet in Alphabet::ALL {
+            let bits = alphabet.bits_per_char();
+            for chars in [63usize, 64, 65] {
+                let codes = alphabet.random_codes(&mut rng, chars);
+                let seq = PackedSeq::from_codes(alphabet, &codes);
+                for start in 0..chars {
+                    assert_eq!(
+                        seq.window(start),
+                        window_reference(&codes, bits, start),
+                        "{alphabet} chars={chars} start={start}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_boundary_word_counts_and_tail_zero_fill() {
+        // The packed stream allocates exactly ceil(chars*bits/64) words
+        // and bits past the last character are zero — the guarantees
+        // the window tail path and the SIMD block kernels lean on.
+        for alphabet in Alphabet::ALL {
+            let bits = alphabet.bits_per_char();
+            for chars in [0usize, 1, 63, 64, 65, 127, 128, 129] {
+                let codes = vec![(alphabet.symbols() - 1) as u8; chars];
+                let seq = PackedSeq::from_codes(alphabet, &codes);
+                assert_eq!(seq.words.len(), (chars * bits).div_ceil(64), "{alphabet} {chars}");
+                if let Some(&last) = seq.words.last() {
+                    let used = chars * bits - (seq.words.len() - 1) * 64;
+                    if used < 64 {
+                        assert_eq!(last >> used, 0, "{alphabet} {chars}: tail bits not zero");
+                    }
+                }
             }
         }
     }

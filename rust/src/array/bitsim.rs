@@ -2,6 +2,7 @@
 
 use crate::dna::Encoded;
 use crate::isa::{MicroInstr, Program};
+use crate::simd::{self, SimdKernel};
 use crate::Result;
 use anyhow::{bail, ensure};
 
@@ -9,13 +10,17 @@ use anyhow::{bail, ensure};
 ///
 /// Storage is column-major: column `c` owns `words_per_col` consecutive
 /// `u64` words, bit `r % 64` of word `r / 64` holding row `r`'s cell.
-/// A row-parallel gate step therefore runs at 64 rows per word op.
+/// A row-parallel gate step therefore runs at 64 rows per word op —
+/// and the bulk word loops (gate apply, block code writes, score
+/// readout) dispatch to the array's [`SimdKernel`], widening that to 4
+/// (AVX2) or 2 (NEON) words per vector op.
 #[derive(Debug, Clone)]
 pub struct CramArray {
     rows: usize,
     cols: usize,
     words_per_col: usize,
     cells: Vec<u64>,
+    kernel: SimdKernel,
 }
 
 /// Data produced by executing a program: memory reads and score-buffer
@@ -71,11 +76,23 @@ impl ExecOutput {
 }
 
 impl CramArray {
-    /// New all-zero array.
+    /// New all-zero array using the process-wide dispatched kernel.
     pub fn new(rows: usize, cols: usize) -> Self {
+        CramArray::with_kernel(rows, cols, SimdKernel::active())
+    }
+
+    /// New all-zero array with an explicit SIMD kernel — the hook the
+    /// forced-dispatch equivalence tests use to diff every available
+    /// kernel against the scalar oracle in one process.
+    pub fn with_kernel(rows: usize, cols: usize, kernel: SimdKernel) -> Self {
         assert!(rows > 0 && cols > 0, "array must be non-empty");
         let words_per_col = rows.div_ceil(64);
-        CramArray { rows, cols, words_per_col, cells: vec![0; words_per_col * cols] }
+        CramArray { rows, cols, words_per_col, cells: vec![0; words_per_col * cols], kernel }
+    }
+
+    /// The SIMD kernel this array's bulk word ops dispatch to.
+    pub fn kernel(&self) -> SimdKernel {
+        self.kernel
     }
 
     /// Clear every cell and (re)size the logical row count without
@@ -212,6 +229,48 @@ impl CramArray {
         self.write_codes_bits(row, col, codes, 2);
     }
 
+    /// Write one code row per entry of `rows` into consecutive array
+    /// rows starting at row 0 — the block fill path. Rows must share
+    /// one length. Instead of `rows × chars × bits` masked
+    /// read-modify-writes ([`CramArray::write_codes_bits`] per row),
+    /// 64 rows' bytes are staged per character and each bit plane is
+    /// transposed to a whole column word by the dispatched kernel,
+    /// then mask-merged in a single store. Array rows past the block
+    /// keep their previous contents.
+    pub fn write_codes_rows<S: AsRef<[u8]>>(&mut self, col: usize, rows: &[S], bits: usize) {
+        assert!((1..=8).contains(&bits), "bits must be in 1..=8, got {bits}");
+        assert!(
+            rows.len() <= self.rows,
+            "block of {} rows exceeds array rows {}",
+            rows.len(),
+            self.rows
+        );
+        let chars = rows.first().map_or(0, |r| r.as_ref().len());
+        for r in rows {
+            assert_eq!(r.as_ref().len(), chars, "block rows must have uniform length");
+        }
+        assert!(col + bits * chars <= self.cols, "code write spills past column {}", self.cols);
+        let wpc = self.words_per_col;
+        let mut staged = [0u8; 64];
+        for (g, group) in rows.chunks(64).enumerate() {
+            let glen = group.len();
+            let live = if glen == 64 { u64::MAX } else { (1u64 << glen) - 1 };
+            if glen < 64 {
+                staged[glen..].fill(0);
+            }
+            for i in 0..chars {
+                for (slot, row) in staged.iter_mut().zip(group) {
+                    *slot = row.as_ref()[i];
+                }
+                for b in 0..bits {
+                    let word = simd::transpose_bit64(self.kernel, &staged, b as u32);
+                    let idx = (col + bits * i + b) * wpc + g;
+                    self.cells[idx] = (self.cells[idx] & !live) | (word & live);
+                }
+            }
+        }
+    }
+
     /// Write the same `bits` bits/character code string into **every**
     /// row at `col` (how patterns are broadcast under the paper's
     /// second pattern-assignment option, §3.2) — one column-parallel
@@ -263,23 +322,36 @@ impl CramArray {
         scores.clear();
         scores.resize(self.rows, 0);
         let wpc = self.words_per_col;
+        // Words holding at least one in-range row (`reset` can leave
+        // capacity words past the logical row count).
+        let live = self.rows.div_ceil(64);
         for i in 0..len {
             let base = (col + i) * wpc;
             let bit = 1u64 << i;
-            for w in 0..wpc {
-                let lo = w * 64;
-                if lo >= self.rows {
-                    break;
+            let col_slice = &self.cells[base..base + live];
+            let mut w = 0;
+            while w < live {
+                // High score bits are mostly all-zero columns: probe
+                // 4-word runs with the dispatched kernel and skip them
+                // without touching each word scalarly.
+                let group_end = (w + 4).min(live);
+                if !simd::any_nonzero(self.kernel, &col_slice[w..group_end]) {
+                    w = group_end;
+                    continue;
                 }
-                let valid = self.rows - lo;
-                let mut word = self.cells[base + w];
-                if valid < 64 {
-                    word &= (1u64 << valid) - 1;
-                }
-                while word != 0 {
-                    let r = word.trailing_zeros() as usize;
-                    scores[lo + r] |= bit;
-                    word &= word - 1;
+                while w < group_end {
+                    let lo = w * 64;
+                    let valid = self.rows - lo;
+                    let mut word = col_slice[w];
+                    if valid < 64 {
+                        word &= (1u64 << valid) - 1;
+                    }
+                    while word != 0 {
+                        let r = word.trailing_zeros() as usize;
+                        scores[lo + r] |= bit;
+                        word &= word - 1;
+                    }
+                    w += 1;
                 }
             }
         }
@@ -296,30 +368,35 @@ impl CramArray {
             ensure!(c < self.cols, "gate input column {c} out of bounds");
             ensure!(c != out, "gate output {out} aliases input (non-destructive rule)");
         }
+        ensure!(ins.len() <= 5, "gate arity {} exceeds 5 inputs", ins.len());
         let t = kind.threshold();
-        let preset = kind.preset();
+        if t > 2 {
+            bail!("unsupported gate threshold {t}");
+        }
         let wpc = self.words_per_col;
-        for w in 0..wpc {
-            // Bit-sliced popcount of up to 5 input bits per row:
-            // (s2 s1 s0) = number of 1-inputs, per bit lane.
-            let (mut s0, mut s1, mut s2) = (0u64, 0u64, 0u64);
-            for &c in ins {
-                let x = self.cells[c * wpc + w];
-                let c0 = s0 & x;
-                s0 ^= x;
-                let c1 = s1 & c0;
-                s1 ^= c0;
-                s2 |= c1;
-            }
-            // switch iff ones <= threshold.
-            let switch = match t {
-                0 => !(s0 | s1 | s2),
-                1 => !(s1 | s2),
-                2 => !(s2 | (s1 & s0)),
-                _ => bail!("unsupported gate threshold {t}"),
-            };
-            let out_word = if preset { !switch } else { switch };
-            self.cells[out * wpc + w] = out_word;
+        let base = self.cells.as_mut_ptr();
+        let mut in_ptrs = [std::ptr::null::<u64>(); 5];
+        for (p, &c) in in_ptrs.iter_mut().zip(ins) {
+            // SAFETY: `c < self.cols` is ensured above, so the column
+            // slice `c*wpc .. (c+1)*wpc` is in bounds of `cells`.
+            *p = unsafe { base.add(c * wpc).cast_const() };
+        }
+        // SAFETY: every column pointer spans `wpc` in-bounds words of
+        // `cells` (bounds ensured above); the output column aliases no
+        // input (the non-destructive rule, ensured above), so the
+        // kernel's exclusive writes through `out` never overlap its
+        // shared reads through `ins`. The kernel computes the same
+        // bit-sliced popcount / threshold switch (pre-set ⊕ switch
+        // polarity folded in) the scalar loop always has.
+        unsafe {
+            simd::gate_apply(
+                self.kernel,
+                t as u32,
+                kind.preset(),
+                base.add(out * wpc),
+                &in_ptrs[..ins.len()],
+                wpc,
+            );
         }
         Ok(())
     }
@@ -653,6 +730,119 @@ mod tests {
                         "{mode:?} row {r} loc {loc}: fragment {}",
                         std::str::from_utf8(f).unwrap()
                     );
+                }
+            }
+        }
+    }
+
+    fn assert_cells_equal(a: &CramArray, b: &CramArray, what: &str) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: geometry");
+        for col in 0..a.cols {
+            for row in 0..a.rows {
+                assert_eq!(a.get(row, col), b.get(row, col), "{what}: cell ({row},{col})");
+            }
+        }
+    }
+
+    /// Tentpole oracle check: every compiled-in kernel's gate step is
+    /// bit-identical to the scalar kernel's, for every gate kind, at
+    /// row counts that exercise the vector body and the scalar
+    /// remainder word.
+    #[test]
+    fn gate_step_every_kernel_matches_scalar_every_kind() {
+        use crate::simd::SimdKernel;
+        for rows in [7usize, 64, 130, 300] {
+            let mut seed_arr = CramArray::with_kernel(rows, 7, SimdKernel::Scalar);
+            let mut rng = crate::util::Rng::new(0xB17_51D ^ rows as u64);
+            for c in 0..5 {
+                for r in 0..rows {
+                    seed_arr.set(r, c, rng.bool());
+                }
+            }
+            for kind in GateKind::ALL {
+                let ins: Vec<usize> = (0..kind.n_inputs()).collect();
+                let mut oracle = seed_arr.clone();
+                oracle.gate_step(kind, 6, &ins).unwrap();
+                for kernel in SimdKernel::all_available() {
+                    let mut arr = seed_arr.clone();
+                    arr.kernel = kernel;
+                    arr.gate_step(kind, 6, &ins).unwrap();
+                    assert_cells_equal(&arr, &oracle, &format!("{kernel} {kind:?} rows={rows}"));
+                }
+            }
+        }
+    }
+
+    /// The transposed block writer must leave the exact cells the
+    /// per-row [`CramArray::write_codes_bits`] path leaves — including
+    /// preserving pre-existing contents outside the block — for every
+    /// kernel, symbol width, and 64-row-boundary block height.
+    #[test]
+    fn write_codes_rows_matches_per_row_writes_every_kernel() {
+        use crate::simd::SimdKernel;
+        for kernel in SimdKernel::all_available() {
+            for bits in [1usize, 2, 5, 8] {
+                for n_rows in [1usize, 63, 64, 65, 129] {
+                    let chars = 9;
+                    let mut rng = crate::util::Rng::new(0xC0DE ^ (bits * 1000 + n_rows) as u64);
+                    let rows: Vec<Vec<u8>> = (0..n_rows)
+                        .map(|_| {
+                            (0..chars).map(|_| (rng.below(1 << bits)) as u8).collect::<Vec<u8>>()
+                        })
+                        .collect();
+                    // Pre-dirty both arrays identically so the merge
+                    // masking (not a lucky zero background) is tested.
+                    let mut bulk = CramArray::with_kernel(140, chars * bits + 3, kernel);
+                    for c in 0..bulk.cols() {
+                        bulk.set_column(c, c % 2 == 0);
+                    }
+                    let mut perrow = bulk.clone();
+                    perrow.kernel = SimdKernel::Scalar;
+                    bulk.write_codes_rows(2, &rows, bits);
+                    for (r, codes) in rows.iter().enumerate() {
+                        perrow.write_codes_bits(r, 2, codes, bits);
+                    }
+                    assert_cells_equal(
+                        &bulk,
+                        &perrow,
+                        &format!("{kernel} bits={bits} rows={n_rows}"),
+                    );
+                }
+            }
+        }
+    }
+
+    /// The zero-run-skipping score read-out stays equal to a per-cell
+    /// reassembly for every kernel, at row counts with garbage-prone
+    /// tail words and after a shrinking `reset`.
+    #[test]
+    fn score_readout_every_kernel_matches_per_cell_reassembly() {
+        use crate::simd::SimdKernel;
+        for kernel in SimdKernel::all_available() {
+            for rows in [1usize, 63, 64, 65, 130, 257] {
+                let mut a = CramArray::with_kernel(rows, 6, kernel);
+                let mut rng = crate::util::Rng::new(0x5C0 ^ rows as u64);
+                for c in 0..6 {
+                    for r in 0..rows {
+                        // Sparse high bits, like real score columns.
+                        a.set(r, c, rng.chance(if c < 3 { 0.5 } else { 0.05 }));
+                    }
+                }
+                let mut scores = Vec::new();
+                a.read_scores_into(1, 4, &mut scores).unwrap();
+                for r in 0..rows {
+                    let expect: u64 =
+                        (0..4).map(|i| u64::from(a.get(r, 1 + i as usize)) << i).sum();
+                    assert_eq!(scores[r], expect, "{kernel} rows={rows} row {r}");
+                }
+                // Shrink below the capacity and re-read: the live-word
+                // bound must track the logical row count.
+                if rows > 64 {
+                    a.reset(rows - 64);
+                    a.set(0, 1, true);
+                    a.read_scores_into(1, 4, &mut scores).unwrap();
+                    assert_eq!(scores.len(), rows - 64);
+                    assert_eq!(scores[0], 1, "{kernel} rows={rows} after reset");
                 }
             }
         }

@@ -19,6 +19,7 @@ use crate::array::{CramArray, ExecOutput, RowLayout};
 use crate::baselines::cpu_ref::BestAlignment;
 use crate::isa::{PresetMode, ProgramCache};
 use crate::semantics::{Hit, HitAccumulator, MatchSemantics};
+use crate::simd::{self, PackedBlock, PatternWindows, SimdKernel};
 use crate::Result;
 use anyhow::Context as _;
 use std::sync::Arc;
@@ -98,21 +99,104 @@ pub trait MatchEngine {
 pub struct CpuEngine {
     /// The alphabet this engine scores (items must match).
     alphabet: Alphabet,
+    /// Which SIMD kernel scores blocks. `Scalar` keeps the historical
+    /// per-row [`packed_similarity`] path verbatim — the oracle the
+    /// vector paths are proven against.
+    kernel: SimdKernel,
     /// Scratch packed fragment, refilled in place per row.
     frag: PackedSeq,
     /// Scratch packed pattern, refilled per item.
     pat: PackedSeq,
+    /// Scratch word-transposed fragment block (SIMD path).
+    block: PackedBlock,
+    /// Scratch pre-expanded pattern windows (SIMD path).
+    windows: PatternWindows,
+    /// Scratch per-row scores of one alignment (SIMD path).
+    scores: Vec<u64>,
+    /// Scratch per-row running best `(score, loc)` (SIMD path).
+    row_best: Vec<(u64, usize)>,
 }
 
 impl CpuEngine {
-    /// Engine for one alphabet.
+    /// Engine for one alphabet, using the process-wide dispatched
+    /// SIMD kernel ([`SimdKernel::active`]).
     pub fn new(alphabet: Alphabet) -> Self {
-        CpuEngine { alphabet, frag: PackedSeq::default(), pat: PackedSeq::default() }
+        CpuEngine::with_kernel(alphabet, SimdKernel::active())
+    }
+
+    /// Engine with an explicit SIMD kernel — the forced-dispatch hook
+    /// the equivalence tests and the per-kernel bench rows use.
+    pub fn with_kernel(alphabet: Alphabet, kernel: SimdKernel) -> Self {
+        CpuEngine {
+            alphabet,
+            kernel,
+            frag: PackedSeq::default(),
+            pat: PackedSeq::default(),
+            block: PackedBlock::default(),
+            windows: PatternWindows::default(),
+            scores: Vec::new(),
+            row_best: Vec::new(),
+        }
     }
 
     /// The alphabet this engine accepts.
     pub fn alphabet(&self) -> Alphabet {
         self.alphabet
+    }
+
+    /// The SIMD kernel this engine scores blocks with.
+    pub fn kernel(&self) -> SimdKernel {
+        self.kernel
+    }
+
+    /// Whether the vector block path can handle this item: it needs a
+    /// uniform-length non-empty fragment block and a pattern with at
+    /// least one alignment. Everything else (and `Scalar`) takes the
+    /// per-row oracle path.
+    fn block_path_applies(&self, item: &WorkItem) -> bool {
+        if self.kernel == SimdKernel::Scalar || item.fragments.is_empty() {
+            return false;
+        }
+        let chars = item.fragments[0].len();
+        !item.pattern.is_empty()
+            && item.pattern.len() <= chars
+            && item.fragments.iter().all(|f| f.len() == chars)
+    }
+
+    /// The SIMD block path: score every row of the word-transposed
+    /// block per alignment. Per-row bests fold over locs first (strict
+    /// `>` keeps the lowest loc), then rows ascending — the same
+    /// row-major tie-break the scalar scan produces; the hit
+    /// accumulator is push-order independent, so the loc-major pushes
+    /// enumerate identical lists.
+    fn run_block(&mut self, item: &WorkItem) -> WorkResult {
+        self.block.refill(self.alphabet, &item.fragments);
+        self.windows.refill(&self.pat);
+        let rows = self.block.rows();
+        let n_locs = self.block.chars() - self.windows.chars() + 1;
+        let mut acc = item.semantics.enumerates().then(|| HitAccumulator::new(item.semantics));
+        self.row_best.clear();
+        self.row_best.resize(rows, (0u64, 0usize));
+        for loc in 0..n_locs {
+            simd::block_scores_into(self.kernel, &self.block, &self.windows, loc, &mut self.scores);
+            for (r, &s) in self.scores.iter().enumerate() {
+                if s > self.row_best[r].0 {
+                    self.row_best[r] = (s, loc);
+                }
+                if let Some(acc) = acc.as_mut() {
+                    acc.push(item.row_ids[r] as usize, loc, s as usize);
+                }
+            }
+        }
+        let mut best: Option<BestAlignment> = None;
+        for (r, &(s, loc)) in self.row_best.iter().enumerate() {
+            if best.map_or(true, |b| (s as usize) > b.score) {
+                let row = item.row_ids[r] as usize;
+                best = Some(BestAlignment { row, loc, score: s as usize });
+            }
+        }
+        let hits = acc.map(HitAccumulator::finish).unwrap_or_default();
+        WorkResult { pattern_id: item.pattern_id, best, hits, passes: 1 }
     }
 }
 
@@ -132,6 +216,9 @@ impl MatchEngine for CpuEngine {
             self.alphabet
         );
         self.pat.refill(self.alphabet, &item.pattern);
+        if self.block_path_applies(item) {
+            return Ok(self.run_block(item));
+        }
         let pattern = &self.pat;
         let mut best: Option<BestAlignment> = None;
         let mut hits: Vec<Hit> = Vec::new();
@@ -227,9 +314,19 @@ impl BitsimEngine {
     /// Engine over a shared pre-compiled program cache — what the
     /// coordinator lanes use: one compile, N lanes.
     pub fn with_cache(cache: Arc<ProgramCache>, rows_per_block: usize) -> Self {
+        Self::with_cache_kernel(cache, rows_per_block, SimdKernel::active())
+    }
+
+    /// Shared-cache engine whose array word ops use an explicit SIMD
+    /// kernel — the forced-dispatch hook for equivalence tests.
+    pub fn with_cache_kernel(
+        cache: Arc<ProgramCache>,
+        rows_per_block: usize,
+        kernel: SimdKernel,
+    ) -> Self {
         assert!(rows_per_block > 0, "rows_per_block must be positive");
         assert!(cache.readout(), "bitsim engine needs read-out programs");
-        let arr = CramArray::new(rows_per_block, cache.layout().total_cols());
+        let arr = CramArray::with_kernel(rows_per_block, cache.layout().total_cols(), kernel);
         BitsimEngine {
             cache,
             rows_per_block,
@@ -285,9 +382,10 @@ impl MatchEngine for BitsimEngine {
                     frag.len(),
                     layout.frag_chars
                 );
-                let frag_col = layout.frag_col() as usize;
-                self.arr.write_codes_bits(r, frag_col, frag, layout.bits_per_char);
             }
+            // One transposed block fill (64 rows per column-word merge)
+            // instead of per-row masked read-modify-writes.
+            self.arr.write_codes_rows(layout.frag_col() as usize, block, layout.bits_per_char);
             self.arr.broadcast_codes_bits(
                 layout.pat_col() as usize,
                 &item.pattern,
@@ -558,5 +656,90 @@ mod tests {
         // Same-width items still pass through the width check.
         let ok = item_coded(Alphabet::Dna2, 5, 3, 24, 6);
         assert!(CpuEngine::default().run(&ok).is_ok());
+    }
+
+    fn assert_results_equal(a: &WorkResult, b: &WorkResult, what: &str) {
+        assert_eq!(
+            a.best.map(|x| (x.score, x.row, x.loc)),
+            b.best.map(|x| (x.score, x.row, x.loc)),
+            "{what}: best"
+        );
+        assert_eq!(a.hits, b.hits, "{what}: hits");
+        assert_eq!(a.pattern_id, b.pattern_id, "{what}: pattern_id");
+    }
+
+    /// Tentpole: the CPU engine's vector block path returns the exact
+    /// `WorkResult` (best incl. tie-break, full hit lists) the scalar
+    /// per-row oracle returns — every available kernel, every
+    /// alphabet, every semantics, word-boundary fragment lengths.
+    #[test]
+    fn cpu_engine_every_kernel_equals_scalar_oracle() {
+        for kernel in SimdKernel::all_available() {
+            for alphabet in Alphabet::ALL {
+                for frag_chars in [24usize, 63, 64, 65] {
+                    for semantics in [
+                        MatchSemantics::BestOf,
+                        MatchSemantics::Threshold { min_score: 3 },
+                        MatchSemantics::TopK { k: 4 },
+                    ] {
+                        let mut it = item_coded(alphabet, 0x5EED, 6, frag_chars, 6);
+                        it.semantics = semantics;
+                        let want =
+                            CpuEngine::with_kernel(alphabet, SimdKernel::Scalar).run(&it).unwrap();
+                        let got = CpuEngine::with_kernel(alphabet, kernel).run(&it).unwrap();
+                        assert_results_equal(
+                            &got,
+                            &want,
+                            &format!("{kernel} {alphabet} chars={frag_chars} {semantics}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Ragged or degenerate items must fall back to the per-row path
+    /// (and agree with the oracle) rather than hitting the uniform
+    /// block packer.
+    #[test]
+    fn cpu_engine_block_path_falls_back_on_ragged_items() {
+        for kernel in SimdKernel::all_available() {
+            let mut it = item(3, 4, 32, 8);
+            let short: Arc<[u8]> = Arc::from(&it.fragments[2][..20]);
+            it.fragments[2] = short;
+            let mut eng = CpuEngine::with_kernel(Alphabet::Dna2, kernel);
+            assert!(!eng.block_path_applies(&it), "{kernel}");
+            let got = eng.run(&it).unwrap();
+            let want = CpuEngine::with_kernel(Alphabet::Dna2, SimdKernel::Scalar).run(&it).unwrap();
+            assert_results_equal(&got, &want, &format!("{kernel} ragged"));
+            // Pattern longer than every fragment: no alignments at all.
+            let mut none = item(4, 2, 8, 6);
+            none.pattern = Arc::from(&[0u8; 9][..]);
+            assert!(!eng.block_path_applies(&none), "{kernel}");
+            assert!(eng.run(&none).unwrap().best.is_none(), "{kernel}");
+        }
+    }
+
+    /// Tentpole: the bitsim engine is kernel-invariant — its array word
+    /// ops (gate apply, block code writes, zero-skip readout) produce
+    /// identical results under every compiled-in kernel.
+    #[test]
+    fn bitsim_engine_every_kernel_equals_scalar_oracle() {
+        let cache = Arc::new(ProgramCache::for_geometry(24, 6, PresetMode::Gang, true).unwrap());
+        for kernel in SimdKernel::all_available() {
+            for semantics in [MatchSemantics::BestOf, MatchSemantics::TopK { k: 5 }] {
+                let mut it = item(0xB175, 5, 24, 6); // 3 blocks at 2 rows/block
+                it.semantics = semantics;
+                let oracle = SimdKernel::Scalar;
+                let want = BitsimEngine::with_cache_kernel(Arc::clone(&cache), 2, oracle)
+                    .run(&it)
+                    .unwrap();
+                let got = BitsimEngine::with_cache_kernel(Arc::clone(&cache), 2, kernel)
+                    .run(&it)
+                    .unwrap();
+                assert_results_equal(&got, &want, &format!("{kernel} {semantics}"));
+                assert_eq!(got.passes, 3, "{kernel} {semantics}");
+            }
+        }
     }
 }

@@ -50,3 +50,7 @@ pub mod pipeline;
 
 pub use engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngine, WorkItem, WorkResult};
 pub use pipeline::{Coordinator, CoordinatorConfig, CoordinatorError, LaneStats, RunMetrics};
+
+// The per-engine dispatch knob (`CoordinatorConfig::simd`), re-exported
+// so coordinator users don't need a separate `crate::simd` import.
+pub use crate::simd::SimdKernel;

@@ -22,6 +22,7 @@ use crate::runtime::Runtime;
 use crate::scheduler::{OracularIndex, ShardMap};
 use crate::semantics::MatchSemantics;
 use crate::sim::SystemConfig;
+use crate::simd::SimdKernel;
 use crate::tech::Technology;
 use crate::Result;
 use anyhow::{anyhow, Context as _};
@@ -112,6 +113,13 @@ pub struct CoordinatorConfig {
     pub preset_mode: PresetMode,
     /// Technology corner for the hardware cost projection.
     pub tech: Technology,
+    /// SIMD kernel the lane engines dispatch their hot word loops to:
+    /// `None` (the default) follows the process-wide decision
+    /// ([`SimdKernel::active`] — best detected, `CRAM_PM_SIMD`
+    /// overridable), `Some(k)` forces `k` per coordinator — the hook
+    /// the forced-dispatch equivalence tests use to diff kernels in
+    /// one process. Recorded in [`RunMetrics::simd`].
+    pub simd: Option<SimdKernel>,
 }
 
 impl CoordinatorConfig {
@@ -136,6 +144,7 @@ impl CoordinatorConfig {
             lanes: Self::default_lanes(),
             preset_mode: PresetMode::Gang,
             tech: Technology::NearTerm,
+            simd: None,
         }
     }
 
@@ -203,6 +212,10 @@ pub struct RunMetrics {
     pub host_rate: f64,
     /// Engine label.
     pub engine: String,
+    /// SIMD kernel tag the lane engines dispatched to (`scalar`,
+    /// `avx2`, `neon`) — every reported number names the kernel that
+    /// produced it.
+    pub simd: String,
     /// Effective executor lane count.
     pub lanes: usize,
     /// Per-lane occupancy/rate accounting.
@@ -439,9 +452,10 @@ impl Coordinator {
                 .spawn(move || {
                     // The engine lives on this thread for the lane's
                     // whole lifetime (PJRT handles never cross threads).
+                    let kernel = thread_cfg.simd.unwrap_or_else(SimdKernel::active);
                     let built: Result<Box<dyn MatchEngine>> = match thread_cfg.engine {
                         EngineKind::Cpu => {
-                            let cpu = CpuEngine::new(thread_cfg.alphabet);
+                            let cpu = CpuEngine::with_kernel(thread_cfg.alphabet, kernel);
                             Ok(Box::new(cpu) as Box<dyn MatchEngine>)
                         }
                         EngineKind::Bitsim => lane_cache
@@ -449,7 +463,7 @@ impl Coordinator {
                                 anyhow::Error::new(CoordinatorError::MissingProgramCache)
                             })
                             .map(|cache| {
-                                Box::new(BitsimEngine::with_cache(cache, 256))
+                                Box::new(BitsimEngine::with_cache_kernel(cache, 256, kernel))
                                     as Box<dyn MatchEngine>
                             }),
                         EngineKind::Xla => {
@@ -638,6 +652,11 @@ impl Coordinator {
             .collect()
     }
 
+    /// The SIMD kernel this coordinator's lane engines dispatch to.
+    pub fn simd_kernel(&self) -> SimdKernel {
+        self.cfg.simd.unwrap_or_else(SimdKernel::active)
+    }
+
     /// The zero-work run: what an empty pool reports.
     fn empty_run(&self) -> (Vec<WorkResult>, RunMetrics) {
         let metrics = RunMetrics {
@@ -649,6 +668,7 @@ impl Coordinator {
             wall_seconds: 0.0,
             host_rate: 0.0,
             engine: format!("{:?}", self.cfg.engine),
+            simd: self.simd_kernel().tag().to_string(),
             lanes: self.n_lanes,
             lane_stats: (0..self.n_lanes).map(LaneStats::idle).collect(),
             hw_seconds: 0.0,
@@ -904,6 +924,7 @@ impl Coordinator {
             wall_seconds: wall,
             host_rate: n_patterns as f64 / wall.max(1e-12),
             engine: format!("{:?}", self.cfg.engine),
+            simd: self.simd_kernel().tag().to_string(),
             lanes: lane_stats.len(),
             lane_stats,
             hw_seconds: sharded.pool_time,

@@ -40,6 +40,7 @@
 //! | [`runtime`] | — | PJRT client: load + execute `artifacts/*.hlo.txt` |
 //! | [`coordinator`] | §2.5 | async serving loop: pattern pool → arrays → scores |
 //! | [`serve`] | — | concurrent batching serving layer: admission queue, micro-batch dedup, load generators |
+//! | [`simd`] | — | explicit AVX2/NEON kernels for the packed scorer and bitsim word ops, runtime-dispatched (`CRAM_PM_SIMD`) with the scalar paths as oracle |
 //! | [`experiments`] | §5 | one driver per paper table/figure |
 
 pub mod alphabet;
@@ -56,6 +57,7 @@ pub mod scheduler;
 pub mod semantics;
 pub mod serve;
 pub mod sim;
+pub mod simd;
 pub mod smc;
 pub mod tech;
 pub mod util;

@@ -12,6 +12,7 @@
 //!                     [--lanes N] [--seed S]
 //! cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]
 //! cram-pm verify-programs
+//! cram-pm simd-info
 //! cram-pm info
 //! ```
 //!
@@ -29,7 +30,7 @@ use std::path::PathBuf;
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|tables|all> [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n              [--semantics best|threshold:N|topk:K]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm verify-programs\n  cram-pm info"
+        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|tables|all> [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n              [--semantics best|threshold:N|topk:K]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm verify-programs\n  cram-pm simd-info\n  cram-pm info"
     );
     std::process::exit(2);
 }
@@ -236,6 +237,7 @@ fn cmd_run(kv: &FxHashMap<String, String>, flags: &[String]) -> Result<()> {
         .count();
     println!("\n── run report ──────────────────────────────────────");
     println!("engine            {}", metrics.engine);
+    println!("simd kernel       {}", metrics.simd);
     println!("patterns          {}", metrics.patterns);
     println!("matched           {} ({} with perfect score)", metrics.matched, perfect);
     if semantics.enumerates() {
@@ -331,6 +333,32 @@ fn cmd_verify_programs() -> Result<()> {
     Ok(())
 }
 
+/// The `simd-info` subcommand: what the host CPU supports, which
+/// kernel the process would dispatch to, and how to override it.
+fn cmd_simd_info() {
+    use cram_pm::simd::{CpuFeatures, SimdKernel};
+    let features = CpuFeatures::detect();
+    println!("── SIMD dispatch ───────────────────────────────────");
+    println!("target arch       {}", std::env::consts::ARCH);
+    println!("cpu features      avx2={} neon={}", features.avx2, features.neon);
+    for kernel in [SimdKernel::Scalar, SimdKernel::Avx2, SimdKernel::Neon] {
+        println!(
+            "  kernel {:<8}  {}",
+            kernel.tag(),
+            if kernel.available() { "available" } else { "unavailable on this host" }
+        );
+    }
+    match std::env::var(SimdKernel::ENV) {
+        Ok(v) => println!("{}      {v} (forced)", SimdKernel::ENV),
+        Err(_) => println!("{}      unset (auto: best available)", SimdKernel::ENV),
+    }
+    println!("active kernel     {}", SimdKernel::active());
+    println!(
+        "override with     {}=scalar|avx2|neon|auto (forcing an unavailable kernel aborts)",
+        SimdKernel::ENV
+    );
+}
+
 fn cmd_info() {
     println!(
         "cram-pm — reproduction of \"Computational RAM to Accelerate String Matching at Scale\""
@@ -378,6 +406,7 @@ fn main() -> Result<()> {
             cmd_bench_gate(&kv)?;
         }
         Some("verify-programs") => cmd_verify_programs()?,
+        Some("simd-info") => cmd_simd_info(),
         Some("info") => cmd_info(),
         _ => usage(),
     }

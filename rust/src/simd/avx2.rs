@@ -1,0 +1,192 @@
+//! AVX2 (x86_64) kernels: 4 × u64 lanes per op.
+//!
+//! Every function is `#[target_feature(enable = "avx2")]` and must
+//! only be reached through [`super`]'s dispatch, which gates on
+//! runtime detection. The kernels are proven bit-identical to
+//! [`super::scalar`] by the `simd` unit tests and the property suite
+//! (including CI's forced-dispatch matrix).
+
+use std::arch::x86_64::*;
+
+use super::{PackedBlock, PatternWindows};
+
+/// Mula's nibble-LUT popcount: per-64-bit-lane popcounts of `v`
+/// (shuffle-as-table over both nibbles, then `sad_epu8` horizontally
+/// sums the 8 byte counts of each lane).
+///
+/// # Safety
+///
+/// AVX2 must be available.
+#[target_feature(enable = "avx2")]
+unsafe fn popcount_epi64(v: __m256i) -> __m256i {
+    #[rustfmt::skip]
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let lo = _mm256_and_si256(v, low_mask);
+    let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+    let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+    _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+}
+
+/// AVX2 block scorer: four transposed rows per vector, uniform funnel
+/// shift per step, Mula popcount, per-lane u64 score accumulation.
+///
+/// # Safety
+///
+/// AVX2 must be available and `out.len() == block.stride` (a multiple
+/// of [`super::LANE_ROWS`], guaranteed by `PackedBlock::refill`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn block_scores(
+    block: &PackedBlock,
+    pat: &PatternWindows,
+    loc: usize,
+    out: &mut [u64],
+) {
+    let bits = block.bits;
+    let stride = block.stride;
+    debug_assert_eq!(out.len(), stride);
+    debug_assert_eq!(stride % super::LANE_ROWS, 0);
+    let lanes = _mm256_set1_epi64x(pat.lanes as i64);
+    // Difference-fold shift counts (1..bits), hoisted out of the loops.
+    let mut fold_sh = [_mm_setzero_si128(); 8];
+    for (k, sh) in fold_sh.iter_mut().enumerate().take(bits).skip(1) {
+        *sh = _mm_cvtsi64_si128(k as i64);
+    }
+    for (s, &pw_raw) in pat.windows.iter().enumerate() {
+        let bit = bits * (loc + s * pat.step);
+        let (w, off) = (bit / 64, bit % 64);
+        let pw = _mm256_set1_epi64x(pw_raw as i64);
+        let tail_raw = if s + 1 == pat.windows.len() { pat.tail_mask } else { u64::MAX };
+        // m = !folded & lanes & tail == andnot(folded, lanes & tail).
+        let lanes_tail = _mm256_and_si256(lanes, _mm256_set1_epi64x(tail_raw as i64));
+        let sh_lo = _mm_cvtsi64_si128(off as i64);
+        let sh_hi = _mm_cvtsi64_si128((64 - off) as i64);
+        let lo_base = block.data.as_ptr().add(w * stride);
+        let hi_base = block.data.as_ptr().add((w + 1) * stride);
+        let mut g = 0;
+        while g < stride {
+            let lo = _mm256_loadu_si256(lo_base.add(g) as *const __m256i);
+            let win = if off == 0 {
+                lo
+            } else {
+                let hi = _mm256_loadu_si256(hi_base.add(g) as *const __m256i);
+                _mm256_or_si256(_mm256_srl_epi64(lo, sh_lo), _mm256_sll_epi64(hi, sh_hi))
+            };
+            let x = _mm256_xor_si256(win, pw);
+            let mut folded = x;
+            for &sh in &fold_sh[1..bits] {
+                folded = _mm256_or_si256(folded, _mm256_srl_epi64(x, sh));
+            }
+            let m = _mm256_andnot_si256(folded, lanes_tail);
+            let cnt = popcount_epi64(m);
+            let op = out.as_mut_ptr().add(g) as *mut __m256i;
+            _mm256_storeu_si256(op, _mm256_add_epi64(_mm256_loadu_si256(op as *const __m256i), cnt));
+            g += super::LANE_ROWS;
+        }
+    }
+}
+
+/// AVX2 gate kernel: the bit-sliced adder chain over 4 substrate words
+/// at a time, with a scalar remainder loop.
+///
+/// # Safety
+///
+/// AVX2 must be available; see [`super::gate_apply`] for the pointer
+/// validity / no-aliasing contract.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gate_apply(
+    threshold: u32,
+    invert: bool,
+    out: *mut u64,
+    ins: &[*const u64],
+    n_words: usize,
+) {
+    let ones = _mm256_set1_epi64x(-1);
+    let mut w = 0;
+    while w + 4 <= n_words {
+        let mut s0 = _mm256_setzero_si256();
+        let mut s1 = _mm256_setzero_si256();
+        let mut s2 = _mm256_setzero_si256();
+        for &ip in ins {
+            let x = _mm256_loadu_si256(ip.add(w) as *const __m256i);
+            let c0 = _mm256_and_si256(s0, x);
+            s0 = _mm256_xor_si256(s0, x);
+            let c1 = _mm256_and_si256(s1, c0);
+            s1 = _mm256_xor_si256(s1, c0);
+            s2 = _mm256_or_si256(s2, c1);
+        }
+        let pre = match threshold {
+            0 => _mm256_or_si256(_mm256_or_si256(s0, s1), s2),
+            1 => _mm256_or_si256(s1, s2),
+            _ => _mm256_or_si256(s2, _mm256_and_si256(s1, s0)),
+        };
+        let word = if invert { pre } else { _mm256_xor_si256(pre, ones) };
+        _mm256_storeu_si256(out.add(w) as *mut __m256i, word);
+        w += 4;
+    }
+    while w < n_words {
+        let (mut s0, mut s1, mut s2) = (0u64, 0u64, 0u64);
+        for &ip in ins {
+            let x = *ip.add(w);
+            let c0 = s0 & x;
+            s0 ^= x;
+            let c1 = s1 & c0;
+            s1 ^= c0;
+            s2 |= c1;
+        }
+        let pre = match threshold {
+            0 => s0 | s1 | s2,
+            1 => s1 | s2,
+            _ => s2 | (s1 & s0),
+        };
+        *out.add(w) = if invert { pre } else { !pre };
+        w += 1;
+    }
+}
+
+/// AVX2 bit-plane transpose: shift bit `b` of every staged byte up to
+/// bit 7, then `movemask_epi8` gathers 32 row bits per vector. A
+/// 16-bit lane shift by ≤ 7 cannot bleed a neighbor byte's bits into
+/// bit 7, so the two movemasks assemble the exact 64-bit column word.
+///
+/// # Safety
+///
+/// AVX2 must be available and `b < 8`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn transpose_bit64(staged: &[u8; 64], b: u32) -> u64 {
+    let sh = _mm_cvtsi32_si128((7 - b) as i32);
+    let lo = _mm256_loadu_si256(staged.as_ptr() as *const __m256i);
+    let hi = _mm256_loadu_si256(staged.as_ptr().add(32) as *const __m256i);
+    let lo_m = _mm256_movemask_epi8(_mm256_sll_epi16(lo, sh)) as u32;
+    let hi_m = _mm256_movemask_epi8(_mm256_sll_epi16(hi, sh)) as u32;
+    u64::from(lo_m) | (u64::from(hi_m) << 32)
+}
+
+/// AVX2 zero-run probe: `testz` over 4-word groups, scalar tail.
+///
+/// # Safety
+///
+/// AVX2 must be available.
+#[target_feature(enable = "avx2")]
+pub unsafe fn any_nonzero(words: &[u64]) -> bool {
+    let mut i = 0;
+    while i + 4 <= words.len() {
+        let v = _mm256_loadu_si256(words.as_ptr().add(i) as *const __m256i);
+        if _mm256_testz_si256(v, v) == 0 {
+            return true;
+        }
+        i += 4;
+    }
+    // No closure here: closures in `#[target_feature]` functions need
+    // Rust 1.86+, above this crate's MSRV.
+    while i < words.len() {
+        if words[i] != 0 {
+            return true;
+        }
+        i += 1;
+    }
+    false
+}

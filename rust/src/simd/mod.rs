@@ -1,0 +1,617 @@
+//! Explicit SIMD kernels with runtime dispatch (ROADMAP item 1).
+//!
+//! CRAM-PM's headline comparison is substrate-vs-host, which makes the
+//! CPU baseline the honest yardstick: a scalar-u64 "host" understates
+//! what the machine under the benchmark actually has. This module
+//! provides AVX2 (x86_64) and NEON (aarch64) kernels for the two hot
+//! word loops — the [`crate::alphabet::PackedSeq`] XOR + mask-fold +
+//! popcount scorer (all three symbol widths) and the bit-level array's
+//! bulk word ops (gate-apply, row-code writes, score readout) — behind
+//! a [`CpuFeatures`] runtime-dispatch facade.
+//!
+//! Dispatch rules:
+//!
+//! * [`SimdKernel::active`] decides once per process (cached
+//!   detection) and is overridable via the `CRAM_PM_SIMD` environment
+//!   variable (`scalar`, `avx2`, `neon`, `auto`), so every path is
+//!   independently testable on any machine and in CI's forced-dispatch
+//!   matrix. Forcing a kernel the host cannot run panics with a clear
+//!   message rather than silently falling back.
+//! * Engines and arrays carry a per-instance kernel
+//!   ([`crate::coordinator::CpuEngine::with_kernel`],
+//!   [`crate::array::bitsim::CramArray::with_kernel`],
+//!   `CoordinatorConfig::simd`), so one test process can diff every
+//!   available path against the scalar oracle regardless of the env.
+//! * The pre-existing scalar code paths are kept verbatim as the
+//!   oracle: `SimdKernel::Scalar` selects them unchanged, and the
+//!   property suite proves each SIMD path bit-identical to them.
+//! * Under Miri, `std::arch` intrinsics are unsupported: the vector
+//!   modules are compiled out and only the scalar kernels (which share
+//!   the same raw-pointer plumbing, so Miri checks the aliasing
+//!   contract) are available.
+//!
+//! The scorer kernels work on a [`PackedBlock`]: a block of
+//! uniform-length fragments packed *word-transposed* (`data[w][r]`),
+//! so one vector load picks up word `w` of 4 adjacent rows and the
+//! funnel-shift offset for an alignment window is uniform across the
+//! row lanes. A zeroed guard word plane keeps the high-word load of
+//! the funnel in bounds at the last word.
+
+use std::sync::OnceLock;
+
+use crate::alphabet::{Alphabet, PackedSeq, LANE_MASKS};
+
+pub mod scalar;
+
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+pub mod avx2;
+
+#[cfg(all(target_arch = "aarch64", not(miri)))]
+pub mod neon;
+
+/// Row-lane granularity of [`PackedBlock`]: rows are padded to a
+/// multiple of this so the widest kernel (AVX2, 4×u64) can always load
+/// full groups. NEON reads 2-row halves of a group; scalar reads rows
+/// one at a time.
+pub const LANE_ROWS: usize = 4;
+
+/// Which SIMD instruction set the dispatched kernels use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SimdKernel {
+    /// The portable scalar-u64 paths — the correctness oracle.
+    Scalar,
+    /// 256-bit AVX2 kernels (x86_64).
+    Avx2,
+    /// 128-bit NEON kernels (aarch64).
+    Neon,
+}
+
+/// What the host CPU supports, probed once at first use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CpuFeatures {
+    /// AVX2 available (x86_64 only; always false under Miri).
+    pub avx2: bool,
+    /// NEON available (baseline on aarch64; always false under Miri).
+    pub neon: bool,
+}
+
+impl CpuFeatures {
+    /// Probe the host. Cheap after the first call (the `std` detection
+    /// macro caches), but callers on hot paths should still hold a
+    /// [`SimdKernel`] rather than re-probing.
+    pub fn detect() -> CpuFeatures {
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
+        {
+            CpuFeatures { avx2: std::is_x86_feature_detected!("avx2"), neon: false }
+        }
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
+        {
+            // NEON (ASIMD) is architecturally baseline on aarch64.
+            CpuFeatures { avx2: false, neon: true }
+        }
+        #[cfg(any(miri, not(any(target_arch = "x86_64", target_arch = "aarch64"))))]
+        {
+            CpuFeatures { avx2: false, neon: false }
+        }
+    }
+}
+
+impl SimdKernel {
+    /// Environment variable that forces the dispatch decision.
+    pub const ENV: &'static str = "CRAM_PM_SIMD";
+
+    /// Short CLI/JSON tag — the value `BENCH_hotpath.json` and
+    /// `RunMetrics` record so every number names the kernel that
+    /// produced it.
+    pub fn tag(self) -> &'static str {
+        match self {
+            SimdKernel::Scalar => "scalar",
+            SimdKernel::Avx2 => "avx2",
+            SimdKernel::Neon => "neon",
+        }
+    }
+
+    /// Parse an override token. `Ok(None)` means `auto` (pick the best
+    /// available kernel); `Err` carries the unrecognized token.
+    pub fn parse(s: &str) -> Result<Option<SimdKernel>, String> {
+        match s {
+            "auto" => Ok(None),
+            "scalar" => Ok(Some(SimdKernel::Scalar)),
+            "avx2" => Ok(Some(SimdKernel::Avx2)),
+            "neon" => Ok(Some(SimdKernel::Neon)),
+            other => Err(other.to_string()),
+        }
+    }
+
+    /// Whether this kernel can run on the host.
+    pub fn available(self) -> bool {
+        let f = CpuFeatures::detect();
+        match self {
+            SimdKernel::Scalar => true,
+            SimdKernel::Avx2 => f.avx2,
+            SimdKernel::Neon => f.neon,
+        }
+    }
+
+    /// Every kernel the host can run, scalar first — the set the
+    /// equivalence property tests sweep in a single process.
+    pub fn all_available() -> Vec<SimdKernel> {
+        let f = CpuFeatures::detect();
+        let mut v = vec![SimdKernel::Scalar];
+        if f.avx2 {
+            v.push(SimdKernel::Avx2);
+        }
+        if f.neon {
+            v.push(SimdKernel::Neon);
+        }
+        v
+    }
+
+    /// Highest-throughput kernel the host supports.
+    pub fn best() -> SimdKernel {
+        let f = CpuFeatures::detect();
+        if f.avx2 {
+            SimdKernel::Avx2
+        } else if f.neon {
+            SimdKernel::Neon
+        } else {
+            SimdKernel::Scalar
+        }
+    }
+
+    /// The process-wide dispatch decision: `CRAM_PM_SIMD` if set (a
+    /// forced kernel must be runnable — misconfiguration panics rather
+    /// than silently benchmarking the wrong path), else the best
+    /// detected kernel. Decided once and cached.
+    pub fn active() -> SimdKernel {
+        static ACTIVE: OnceLock<SimdKernel> = OnceLock::new();
+        *ACTIVE.get_or_init(|| {
+            let raw = std::env::var(SimdKernel::ENV).ok();
+            SimdKernel::resolve(raw.as_deref())
+        })
+    }
+
+    /// Resolution rule behind [`SimdKernel::active`], factored out so
+    /// the override grammar is unit-testable without touching the
+    /// process environment.
+    fn resolve(raw: Option<&str>) -> SimdKernel {
+        let Some(raw) = raw else {
+            return SimdKernel::best();
+        };
+        match SimdKernel::parse(raw) {
+            Ok(None) => SimdKernel::best(),
+            Ok(Some(k)) if k.available() => k,
+            Ok(Some(k)) => panic!(
+                "{}={} forces the {} kernel, but this host cannot run it (available: {})",
+                SimdKernel::ENV,
+                raw,
+                k.tag(),
+                SimdKernel::all_available()
+                    .iter()
+                    .map(|k| k.tag())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+            Err(tok) => panic!(
+                "{}={:?} is not a valid kernel override (expected scalar|avx2|neon|auto)",
+                SimdKernel::ENV,
+                tok
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for SimdKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.tag())
+    }
+}
+
+/// A block of uniform-length fragments packed word-transposed for the
+/// SIMD scorer: `data[w * stride + r]` is word `w` of row `r`'s
+/// [`PackedSeq`]-identical word stream, `stride` is the row count
+/// padded to [`LANE_ROWS`] (padding rows are zero), and one extra
+/// all-zero guard word plane follows the last word so the funnel
+/// shift's high-word load never leaves the buffer.
+#[derive(Debug, Clone, Default)]
+pub struct PackedBlock {
+    data: Vec<u64>,
+    rows: usize,
+    stride: usize,
+    words_per_row: usize,
+    chars: usize,
+    bits: usize,
+}
+
+impl PackedBlock {
+    /// Pack a block of code rows at `alphabet`'s width. All rows must
+    /// have the same length (callers with ragged rows fall back to the
+    /// per-row scalar scorer).
+    pub fn from_rows<S: AsRef<[u8]>>(alphabet: Alphabet, rows: &[S]) -> Self {
+        let mut block = PackedBlock::default();
+        block.refill(alphabet, rows);
+        block
+    }
+
+    /// Re-pack in place, reusing the buffer — the scratch path for
+    /// engines that pack one block per pass.
+    pub fn refill<S: AsRef<[u8]>>(&mut self, alphabet: Alphabet, rows: &[S]) {
+        let bits = alphabet.bits_per_char();
+        let mask = alphabet.code_mask() as u8;
+        let chars = rows.first().map_or(0, |r| r.as_ref().len());
+        let stride = rows.len().next_multiple_of(LANE_ROWS);
+        let words_per_row = (chars * bits).div_ceil(64);
+        self.data.clear();
+        self.data.resize((words_per_row + 1) * stride, 0);
+        self.rows = rows.len();
+        self.stride = stride;
+        self.words_per_row = words_per_row;
+        self.chars = chars;
+        self.bits = bits;
+        for (r, row) in rows.iter().enumerate() {
+            let codes = row.as_ref();
+            assert_eq!(codes.len(), chars, "PackedBlock rows must be uniform length");
+            for (i, &c) in codes.iter().enumerate() {
+                let code = u64::from(c & mask);
+                let bit = i * bits;
+                let (w, off) = (bit / 64, bit % 64);
+                self.data[w * stride + r] |= code << off;
+                if off + bits > 64 {
+                    // Cross-word spill stays below the guard plane:
+                    // bit + bits <= chars*bits <= words_per_row*64.
+                    self.data[(w + 1) * stride + r] |= code >> (64 - off);
+                }
+            }
+        }
+    }
+
+    /// Number of (real, unpadded) rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Characters per row.
+    pub fn chars(&self) -> usize {
+        self.chars
+    }
+
+    /// Bits per character the block was packed at.
+    pub fn bits_per_char(&self) -> usize {
+        self.bits
+    }
+}
+
+/// A pattern pre-expanded into its per-step scoring windows, so the
+/// inner block loop broadcasts precomputed words instead of calling
+/// [`PackedSeq::window`] once per step per alignment.
+#[derive(Debug, Clone, Default)]
+pub struct PatternWindows {
+    windows: Vec<u64>,
+    chars: usize,
+    bits: usize,
+    step: usize,
+    lanes: u64,
+    /// Character-lane mask for the final (possibly partial) step;
+    /// all-ones when the pattern length divides the step.
+    tail_mask: u64,
+}
+
+impl PatternWindows {
+    /// Expand `pattern`'s windows (one per `⌊64/bits⌋`-character step).
+    pub fn from_pattern(pattern: &PackedSeq) -> Self {
+        let mut pw = PatternWindows::default();
+        pw.refill(pattern);
+        pw
+    }
+
+    /// Re-expand in place, reusing the window buffer.
+    pub fn refill(&mut self, pattern: &PackedSeq) {
+        let bits = pattern.bits_per_char();
+        assert!((1..=8).contains(&bits), "pattern must be packed before expansion");
+        let step = 64 / bits;
+        self.chars = pattern.chars();
+        self.bits = bits;
+        self.step = step;
+        self.lanes = LANE_MASKS[bits];
+        self.windows.clear();
+        let steps = pattern.chars().div_ceil(step);
+        for s in 0..steps {
+            self.windows.push(pattern.window(s * step));
+        }
+        self.tail_mask = match pattern.chars() % step {
+            0 => u64::MAX,
+            partial => (1u64 << (bits * partial)) - 1,
+        };
+    }
+
+    /// Pattern length in characters.
+    pub fn chars(&self) -> usize {
+        self.chars
+    }
+}
+
+/// Per-row similarity of `pat` aligned at `loc` against every row of
+/// `block`, written to `out` (resized to the row count). Bit-identical
+/// to calling [`crate::alphabet::packed_similarity`] per row, for
+/// every kernel — the property suite pins this.
+pub fn block_scores_into(
+    kernel: SimdKernel,
+    block: &PackedBlock,
+    pat: &PatternWindows,
+    loc: usize,
+    out: &mut Vec<u64>,
+) {
+    assert_eq!(block.bits, pat.bits, "block and pattern packed at different symbol widths");
+    assert!(pat.chars > 0, "empty pattern has no alignments");
+    assert!(loc + pat.chars <= block.chars, "alignment out of range");
+    out.clear();
+    out.resize(block.stride, 0);
+    match kernel {
+        SimdKernel::Scalar => scalar::block_scores(block, pat, loc, out),
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
+        // SAFETY: dispatch only selects Avx2 when detection succeeded
+        // (see `SimdKernel::available`); `out` spans the full stride.
+        SimdKernel::Avx2 => unsafe { avx2::block_scores(block, pat, loc, out) },
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
+        // SAFETY: NEON is baseline on aarch64; `out` spans the stride.
+        SimdKernel::Neon => unsafe { neon::block_scores(block, pat, loc, out) },
+        other => panic!("SIMD kernel {other} is not compiled into this target"),
+    }
+    out.truncate(block.rows);
+}
+
+/// Apply one row-parallel gate step over `n_words` substrate words:
+/// bit-slice-count the input columns, threshold at `threshold` (0 =
+/// any-high/NOR-style, 1 = majority-of-3, 2 = majority-of-5), and
+/// write the switch words — inverted iff `invert` — to `out`. This is
+/// the bit-level array's hottest loop (one call per gate
+/// micro-instruction).
+///
+/// # Safety
+///
+/// `out` and every pointer in `ins` must be valid for `n_words`
+/// consecutive `u64` accesses (writes for `out`, reads for `ins`), and
+/// `out` must not overlap any input region. The bit-level array
+/// enforces the no-aliasing rule before dispatch (its gate legality
+/// check), so kernels may read inputs and write outputs in any order.
+pub unsafe fn gate_apply(
+    kernel: SimdKernel,
+    threshold: u32,
+    invert: bool,
+    out: *mut u64,
+    ins: &[*const u64],
+    n_words: usize,
+) {
+    debug_assert!(threshold <= 2, "unsupported gate threshold {threshold}");
+    match kernel {
+        SimdKernel::Scalar => scalar::gate_apply(threshold, invert, out, ins, n_words),
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
+        SimdKernel::Avx2 => avx2::gate_apply(threshold, invert, out, ins, n_words),
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
+        SimdKernel::Neon => neon::gate_apply(threshold, invert, out, ins, n_words),
+        other => panic!("SIMD kernel {other} is not compiled into this target"),
+    }
+}
+
+/// Transpose one bit plane out of 64 staged row bytes: bit `r` of the
+/// result is bit `b` of `staged[r]`. The word-transposed row-code
+/// write path calls this once per (64-row group, character, bit
+/// plane).
+pub fn transpose_bit64(kernel: SimdKernel, staged: &[u8; 64], b: u32) -> u64 {
+    debug_assert!(b < 8);
+    match kernel {
+        SimdKernel::Scalar => scalar::transpose_bit64(staged, b),
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
+        // SAFETY: dispatch only selects Avx2 when detection succeeded.
+        SimdKernel::Avx2 => unsafe { avx2::transpose_bit64(staged, b) },
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
+        // No NEON variant: the movemask idiom has no cheap NEON
+        // equivalent and this op is far off the gate-loop critical
+        // path, so aarch64 shares the scalar transpose.
+        SimdKernel::Neon => scalar::transpose_bit64(staged, b),
+        other => panic!("SIMD kernel {other} is not compiled into this target"),
+    }
+}
+
+/// Whether any word of `words` is nonzero — the score readout's
+/// zero-run skip (most high score-bit columns are entirely zero).
+pub fn any_nonzero(kernel: SimdKernel, words: &[u64]) -> bool {
+    match kernel {
+        SimdKernel::Scalar => scalar::any_nonzero(words),
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
+        // SAFETY: dispatch only selects Avx2 when detection succeeded.
+        SimdKernel::Avx2 => unsafe { avx2::any_nonzero(words) },
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdKernel::Neon => unsafe { neon::any_nonzero(words) },
+        other => panic!("SIMD kernel {other} is not compiled into this target"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alphabet::packed_similarity;
+    use crate::util::Rng;
+
+    #[test]
+    fn kernel_tags_parse_and_display_roundtrip() {
+        for k in [SimdKernel::Scalar, SimdKernel::Avx2, SimdKernel::Neon] {
+            assert_eq!(SimdKernel::parse(k.tag()), Ok(Some(k)));
+            assert_eq!(format!("{k}"), k.tag());
+        }
+        assert_eq!(SimdKernel::parse("auto"), Ok(None));
+        assert_eq!(SimdKernel::parse("avx512"), Err("avx512".to_string()));
+    }
+
+    #[test]
+    fn resolution_rule_without_env() {
+        assert_eq!(SimdKernel::resolve(None), SimdKernel::best());
+        assert_eq!(SimdKernel::resolve(Some("auto")), SimdKernel::best());
+        assert_eq!(SimdKernel::resolve(Some("scalar")), SimdKernel::Scalar);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a valid kernel override")]
+    fn resolution_rejects_unknown_tokens() {
+        SimdKernel::resolve(Some("avx512"));
+    }
+
+    #[test]
+    fn active_kernel_is_available_and_detection_is_consistent() {
+        assert!(SimdKernel::active().available());
+        let all = SimdKernel::all_available();
+        assert_eq!(all[0], SimdKernel::Scalar);
+        assert!(all.contains(&SimdKernel::best()));
+        let f = CpuFeatures::detect();
+        assert_eq!(all.contains(&SimdKernel::Avx2), f.avx2);
+        assert_eq!(all.contains(&SimdKernel::Neon), f.neon);
+    }
+
+    #[test]
+    fn packed_block_pads_rows_and_keeps_the_guard_plane_zero() {
+        let mut rng = Rng::new(0xB10C);
+        for alphabet in Alphabet::ALL {
+            for rows in [1usize, 3, 4, 5, 7] {
+                for chars in [63usize, 64, 65] {
+                    let codes: Vec<Vec<u8>> =
+                        (0..rows).map(|_| alphabet.random_codes(&mut rng, chars)).collect();
+                    let block = PackedBlock::from_rows(alphabet, &codes);
+                    assert_eq!(block.rows(), rows);
+                    assert_eq!(block.stride % LANE_ROWS, 0);
+                    assert!(block.stride >= rows);
+                    let wpr = block.words_per_row;
+                    assert_eq!(wpr, (chars * alphabet.bits_per_char()).div_ceil(64));
+                    assert_eq!(block.data.len(), (wpr + 1) * block.stride);
+                    // Guard plane and padding rows must be zero — the
+                    // in-bounds funnel loads rely on it.
+                    assert!(block.data[wpr * block.stride..].iter().all(|&w| w == 0));
+                    for w in 0..wpr {
+                        assert!(block.data[w * block.stride + rows..(w + 1) * block.stride]
+                            .iter()
+                            .all(|&x| x == 0));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_scores_equal_packed_similarity_every_kernel() {
+        // Word-boundary fragment lengths × all alphabets × every
+        // kernel the host has; under Miri only the scalar kernel is
+        // compiled, which is exactly the path Miri can check.
+        let mut rng = Rng::new(0x51AD);
+        for kernel in SimdKernel::all_available() {
+            for alphabet in Alphabet::ALL {
+                let step = alphabet.chars_per_word();
+                for chars in [63usize, 64, 65] {
+                    for pat_len in [1usize, step - 1, step, 16] {
+                        let rows: Vec<Vec<u8>> =
+                            (0..5).map(|_| alphabet.random_codes(&mut rng, chars)).collect();
+                        let pat_codes = alphabet.random_codes(&mut rng, pat_len);
+                        let block = PackedBlock::from_rows(alphabet, &rows);
+                        let pat = PackedSeq::from_codes(alphabet, &pat_codes);
+                        let pw = PatternWindows::from_pattern(&pat);
+                        let mut out = Vec::new();
+                        let last = chars - pat_len;
+                        for loc in [0usize, 1.min(last), last / 2, last] {
+                            block_scores_into(kernel, &block, &pw, loc, &mut out);
+                            for (r, codes) in rows.iter().enumerate() {
+                                let frag = PackedSeq::from_codes(alphabet, codes);
+                                assert_eq!(
+                                    out[r] as usize,
+                                    packed_similarity(&frag, &pat, loc),
+                                    "{kernel} {alphabet} chars={chars} pat={pat_len} \
+                                     loc={loc} row={r}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gate_apply_every_kernel_matches_the_scalar_kernel() {
+        let mut rng = Rng::new(0x6A7E);
+        for kernel in SimdKernel::all_available() {
+            for n_words in [1usize, 3, 4, 5, 8, 13] {
+                for arity in 1usize..=5 {
+                    for threshold in 0u32..=2 {
+                        for invert in [false, true] {
+                            let cols: Vec<Vec<u64>> = (0..arity)
+                                .map(|_| (0..n_words).map(|_| rng.next_u64()).collect())
+                                .collect();
+                            let ins: Vec<*const u64> =
+                                cols.iter().map(|c| c.as_ptr()).collect();
+                            let mut got = vec![0u64; n_words];
+                            let mut want = vec![0u64; n_words];
+                            // SAFETY: each column and both outputs are
+                            // distinct `n_words`-long allocations.
+                            unsafe {
+                                gate_apply(
+                                    kernel,
+                                    threshold,
+                                    invert,
+                                    got.as_mut_ptr(),
+                                    &ins,
+                                    n_words,
+                                );
+                                scalar::gate_apply(
+                                    threshold,
+                                    invert,
+                                    want.as_mut_ptr(),
+                                    &ins,
+                                    n_words,
+                                );
+                            }
+                            assert_eq!(
+                                got, want,
+                                "{kernel} words={n_words} arity={arity} t={threshold} \
+                                 invert={invert}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_bit64_every_kernel_matches_bit_gather() {
+        let mut rng = Rng::new(0x7A05);
+        for kernel in SimdKernel::all_available() {
+            for _ in 0..32 {
+                let mut staged = [0u8; 64];
+                for byte in staged.iter_mut() {
+                    *byte = rng.below(256) as u8;
+                }
+                for b in 0..8u32 {
+                    let mut want = 0u64;
+                    for (r, &byte) in staged.iter().enumerate() {
+                        want |= u64::from((byte >> b) & 1) << r;
+                    }
+                    assert_eq!(transpose_bit64(kernel, &staged, b), want, "{kernel} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn any_nonzero_every_kernel_matches_iterator() {
+        let mut rng = Rng::new(0x0E0);
+        for kernel in SimdKernel::all_available() {
+            for len in 0usize..10 {
+                let zeros = vec![0u64; len];
+                assert!(!any_nonzero(kernel, &zeros), "{kernel} len={len}");
+                for pos in 0..len {
+                    let mut one = vec![0u64; len];
+                    one[pos] = 1u64 << rng.below(64);
+                    assert!(any_nonzero(kernel, &one), "{kernel} len={len} pos={pos}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! NEON (aarch64) kernels: 2 × u64 lanes per op.
+//!
+//! NEON is architecturally baseline on aarch64, so these kernels are
+//! always runnable there; dispatch still routes through
+//! [`super::SimdKernel`] so the scalar oracle stays selectable
+//! (`CRAM_PM_SIMD=scalar`) and CI's arm lane can diff both paths.
+//! Shifts use `vshlq_u64` with per-lane signed counts (negative =
+//! right); counts stay within ±63 because the funnel branches on
+//! `off == 0`. The bit-plane transpose has no cheap NEON movemask
+//! equivalent and stays scalar (see [`super::transpose_bit64`]).
+
+use std::arch::aarch64::*;
+
+use super::{PackedBlock, PatternWindows};
+
+/// Per-64-bit-lane popcount: `vcnt` byte counts, then a widening
+/// pairwise-add chain u8 → u16 → u32 → u64.
+///
+/// # Safety
+///
+/// NEON must be available (baseline on aarch64).
+#[target_feature(enable = "neon")]
+unsafe fn popcount_u64x2(v: uint64x2_t) -> uint64x2_t {
+    vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(v)))))
+}
+
+/// NEON block scorer: two transposed rows per vector, uniform funnel
+/// shift per step, `vcnt` popcount, per-lane u64 score accumulation.
+///
+/// # Safety
+///
+/// NEON must be available and `out.len() == block.stride` (a multiple
+/// of [`super::LANE_ROWS`], so also of 2).
+#[target_feature(enable = "neon")]
+pub unsafe fn block_scores(
+    block: &PackedBlock,
+    pat: &PatternWindows,
+    loc: usize,
+    out: &mut [u64],
+) {
+    let bits = block.bits;
+    let stride = block.stride;
+    debug_assert_eq!(out.len(), stride);
+    debug_assert_eq!(stride % 2, 0);
+    let lanes = vdupq_n_u64(pat.lanes);
+    // Difference-fold shift counts (1..bits) as negative (= right)
+    // per-lane shifts, hoisted out of the loops.
+    let mut fold_sh = [vdupq_n_s64(0); 8];
+    for (k, sh) in fold_sh.iter_mut().enumerate().take(bits).skip(1) {
+        *sh = vdupq_n_s64(-(k as i64));
+    }
+    for (s, &pw_raw) in pat.windows.iter().enumerate() {
+        let bit = bits * (loc + s * pat.step);
+        let (w, off) = (bit / 64, bit % 64);
+        let pw = vdupq_n_u64(pw_raw);
+        let tail_raw = if s + 1 == pat.windows.len() { pat.tail_mask } else { u64::MAX };
+        // m = !folded & lanes & tail == bic(lanes & tail, folded).
+        let lanes_tail = vandq_u64(lanes, vdupq_n_u64(tail_raw));
+        let sh_lo = vdupq_n_s64(-(off as i64));
+        let sh_hi = vdupq_n_s64(64 - off as i64);
+        let lo_base = block.data.as_ptr().add(w * stride);
+        let hi_base = block.data.as_ptr().add((w + 1) * stride);
+        let mut g = 0;
+        while g < stride {
+            let lo = vld1q_u64(lo_base.add(g));
+            let win = if off == 0 {
+                lo
+            } else {
+                let hi = vld1q_u64(hi_base.add(g));
+                vorrq_u64(vshlq_u64(lo, sh_lo), vshlq_u64(hi, sh_hi))
+            };
+            let x = veorq_u64(win, pw);
+            let mut folded = x;
+            for &sh in &fold_sh[1..bits] {
+                folded = vorrq_u64(folded, vshlq_u64(x, sh));
+            }
+            let m = vbicq_u64(lanes_tail, folded);
+            let cnt = popcount_u64x2(m);
+            let op = out.as_mut_ptr().add(g);
+            vst1q_u64(op, vaddq_u64(vld1q_u64(op), cnt));
+            g += 2;
+        }
+    }
+}
+
+/// NEON gate kernel: the bit-sliced adder chain over 2 substrate words
+/// at a time, with a scalar remainder word.
+///
+/// # Safety
+///
+/// NEON must be available; see [`super::gate_apply`] for the pointer
+/// validity / no-aliasing contract.
+#[target_feature(enable = "neon")]
+pub unsafe fn gate_apply(
+    threshold: u32,
+    invert: bool,
+    out: *mut u64,
+    ins: &[*const u64],
+    n_words: usize,
+) {
+    let ones = vdupq_n_u64(u64::MAX);
+    let mut w = 0;
+    while w + 2 <= n_words {
+        let mut s0 = vdupq_n_u64(0);
+        let mut s1 = vdupq_n_u64(0);
+        let mut s2 = vdupq_n_u64(0);
+        for &ip in ins {
+            let x = vld1q_u64(ip.add(w));
+            let c0 = vandq_u64(s0, x);
+            s0 = veorq_u64(s0, x);
+            let c1 = vandq_u64(s1, c0);
+            s1 = veorq_u64(s1, c0);
+            s2 = vorrq_u64(s2, c1);
+        }
+        let pre = match threshold {
+            0 => vorrq_u64(vorrq_u64(s0, s1), s2),
+            1 => vorrq_u64(s1, s2),
+            _ => vorrq_u64(s2, vandq_u64(s1, s0)),
+        };
+        let word = if invert { pre } else { veorq_u64(pre, ones) };
+        vst1q_u64(out.add(w), word);
+        w += 2;
+    }
+    while w < n_words {
+        let (mut s0, mut s1, mut s2) = (0u64, 0u64, 0u64);
+        for &ip in ins {
+            let x = *ip.add(w);
+            let c0 = s0 & x;
+            s0 ^= x;
+            let c1 = s1 & c0;
+            s1 ^= c0;
+            s2 |= c1;
+        }
+        let pre = match threshold {
+            0 => s0 | s1 | s2,
+            1 => s1 | s2,
+            _ => s2 | (s1 & s0),
+        };
+        *out.add(w) = if invert { pre } else { !pre };
+        w += 1;
+    }
+}
+
+/// NEON zero-run probe: OR the two lanes of each 2-word group.
+///
+/// # Safety
+///
+/// NEON must be available.
+#[target_feature(enable = "neon")]
+pub unsafe fn any_nonzero(words: &[u64]) -> bool {
+    let mut i = 0;
+    while i + 2 <= words.len() {
+        let v = vld1q_u64(words.as_ptr().add(i));
+        if (vgetq_lane_u64::<0>(v) | vgetq_lane_u64::<1>(v)) != 0 {
+            return true;
+        }
+        i += 2;
+    }
+    // No closure here: closures in `#[target_feature]` functions need
+    // Rust 1.86+, above this crate's MSRV.
+    while i < words.len() {
+        if words[i] != 0 {
+            return true;
+        }
+        i += 1;
+    }
+    false
+}

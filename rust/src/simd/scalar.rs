@@ -1,0 +1,95 @@
+//! Portable scalar-u64 kernels — the dispatch oracle.
+//!
+//! Each function here is the reference the AVX2/NEON variants are
+//! proven bit-identical to. The gate kernel deliberately shares the
+//! raw-pointer calling convention of the vector kernels (rather than
+//! taking slices), so `cargo miri test --lib simd` checks the exact
+//! aliasing/validity contract the unsafe kernels rely on.
+
+use super::{PackedBlock, PatternWindows};
+
+/// One scored word: OR-fold the XOR difference onto each character's
+/// low bit lane, complement, mask to the lanes (and the tail of a
+/// partial step), popcount. Identical per-word math to
+/// [`crate::alphabet::packed_similarity`].
+#[inline]
+fn score_word(x: u64, bits: usize, lanes: u64, tail: u64) -> u64 {
+    let mut folded = x;
+    for k in 1..bits {
+        folded |= x >> k;
+    }
+    u64::from((!folded & lanes & tail).count_ones())
+}
+
+/// Scalar block scorer: per step, funnel the uniform-offset window out
+/// of the transposed word planes and score every row.
+/// `out.len() == block.stride`.
+pub fn block_scores(block: &PackedBlock, pat: &PatternWindows, loc: usize, out: &mut [u64]) {
+    let bits = block.bits;
+    let stride = block.stride;
+    debug_assert_eq!(out.len(), stride);
+    for (s, &pw) in pat.windows.iter().enumerate() {
+        let bit = bits * (loc + s * pat.step);
+        let (w, off) = (bit / 64, bit % 64);
+        let tail = if s + 1 == pat.windows.len() { pat.tail_mask } else { u64::MAX };
+        let lo = &block.data[w * stride..(w + 1) * stride];
+        let hi = &block.data[(w + 1) * stride..(w + 2) * stride];
+        for ((&l, &h), o) in lo.iter().zip(hi).zip(out.iter_mut()) {
+            let win = if off == 0 { l } else { (l >> off) | (h << (64 - off)) };
+            *o += score_word(win ^ pw, bits, pat.lanes, tail);
+        }
+    }
+}
+
+/// Scalar gate kernel: bit-sliced ones-count adder chain over the
+/// input columns, thresholded and optionally inverted — the same
+/// per-word algebra the bit-level array has always used.
+///
+/// # Safety
+///
+/// See [`super::gate_apply`]: `out` and every pointer in `ins` must be
+/// valid for `n_words` `u64` accesses and `out` must not overlap any
+/// input.
+pub unsafe fn gate_apply(
+    threshold: u32,
+    invert: bool,
+    out: *mut u64,
+    ins: &[*const u64],
+    n_words: usize,
+) {
+    for w in 0..n_words {
+        let (mut s0, mut s1, mut s2) = (0u64, 0u64, 0u64);
+        for &ip in ins {
+            let x = *ip.add(w);
+            let c0 = s0 & x;
+            s0 ^= x;
+            let c1 = s1 & c0;
+            s1 ^= c0;
+            s2 |= c1;
+        }
+        // `pre` is the complement of the switch word; writing `pre`
+        // directly for the inverted (preset-style) polarity saves the
+        // double negation.
+        let pre = match threshold {
+            0 => s0 | s1 | s2,
+            1 => s1 | s2,
+            _ => s2 | (s1 & s0),
+        };
+        *out.add(w) = if invert { pre } else { !pre };
+    }
+}
+
+/// Scalar bit-plane transpose: bit `r` of the result is bit `b` of
+/// `staged[r]`.
+pub fn transpose_bit64(staged: &[u8; 64], b: u32) -> u64 {
+    let mut word = 0u64;
+    for (r, &byte) in staged.iter().enumerate() {
+        word |= u64::from((byte >> b) & 1) << r;
+    }
+    word
+}
+
+/// Scalar zero-run probe.
+pub fn any_nonzero(words: &[u64]) -> bool {
+    words.iter().any(|&w| w != 0)
+}

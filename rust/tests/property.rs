@@ -13,7 +13,12 @@
 //!   share a k-mer), and pass assignments are a subset of the k-mer
 //!   candidate set;
 //! * coordinator: result ordering and count invariants under random
-//!   pool sizes, and lane-count invariance of the merged results.
+//!   pool sizes, and lane-count invariance of the merged results;
+//! * simd: every vector kernel available on this host (avx2/neon) is
+//!   bit-identical to the scalar oracle — at the CPU-engine block
+//!   path, the bitsim word-op, and the forced-dispatch coordinator
+//!   levels. CI re-runs this whole suite under each forced
+//!   `CRAM_PM_SIMD` value on both architectures.
 
 use cram_pm::array::{CramArray, RowLayout};
 use cram_pm::bench_apps::dna::DnaWorkload;
@@ -621,6 +626,138 @@ fn prop_hit_enumeration_equals_scalar_oracle_both_engines() {
                     );
                 }
             }
+        }
+    }
+}
+
+/// Tentpole: the CPU engine's SIMD block path is bit-identical to the
+/// scalar oracle for every kernel available on this host — every
+/// alphabet, fragment lengths straddling the 64- and 128-char word
+/// boundaries, planted patterns, and all three match semantics (so hit
+/// lists and pass counts are diffed too, not just the best tuple).
+/// Under a forced `CRAM_PM_SIMD` this suite still covers every
+/// *compiled* kernel: `with_kernel` bypasses the process-wide dispatch.
+#[test]
+fn prop_simd_scorer_equals_scalar_every_width() {
+    use cram_pm::alphabet::Alphabet;
+    use cram_pm::coordinator::{CpuEngine, MatchEngine, SimdKernel, WorkItem};
+    use cram_pm::semantics::MatchSemantics;
+    use std::sync::Arc;
+    let mut rng = Rng::new(0x51DCAFE);
+    let kernels = SimdKernel::all_available();
+    for alphabet in Alphabet::ALL {
+        let mut oracle = CpuEngine::with_kernel(alphabet, SimdKernel::Scalar);
+        let mut engines: Vec<CpuEngine> =
+            kernels.iter().map(|&k| CpuEngine::with_kernel(alphabet, k)).collect();
+        for frag_chars in [63usize, 64, 65, 127, 128, 129] {
+            let n_rows = rng.range(1, 70);
+            let pat_chars = 1 + rng.below(frag_chars.min(40));
+            let fragments: Vec<Vec<u8>> =
+                (0..n_rows).map(|_| alphabet.random_codes(&mut rng, frag_chars)).collect();
+            let home = rng.below(n_rows);
+            let start = rng.below(frag_chars - pat_chars + 1);
+            let pattern = fragments[home][start..start + pat_chars].to_vec();
+            for semantics in [
+                MatchSemantics::BestOf,
+                MatchSemantics::Threshold { min_score: pat_chars.saturating_sub(1) },
+                MatchSemantics::TopK { k: 5 },
+            ] {
+                let item = WorkItem {
+                    pattern_id: 0,
+                    alphabet,
+                    semantics,
+                    pattern: Arc::from(pattern.as_slice()),
+                    fragments: fragments.iter().map(|f| Arc::from(f.as_slice())).collect(),
+                    row_ids: (0..n_rows as u32).collect(),
+                };
+                let want = oracle.run(&item).unwrap();
+                for (eng, &kernel) in engines.iter_mut().zip(&kernels) {
+                    let got = eng.run(&item).unwrap();
+                    let ctx = format!(
+                        "{alphabet} kernel={kernel} frag={frag_chars} pat={pat_chars} \
+                         rows={n_rows} {semantics}"
+                    );
+                    assert_eq!(got.best, want.best, "{ctx}: best diverged");
+                    assert_eq!(got.hits, want.hits, "{ctx}: hit list diverged");
+                    assert_eq!(got.passes, want.passes, "{ctx}: pass count diverged");
+                }
+            }
+        }
+    }
+}
+
+/// Tentpole: the bitsim word-op kernels (bit-sliced gate apply, bulk
+/// block staging via `write_codes_rows`, word-transposed readout) are
+/// bit-identical across every available kernel — proven end to end by
+/// executing compiled Algorithm 1 programs on kernel-forced arrays and
+/// pinning every kernel's scores to the character-level oracle.
+#[test]
+fn prop_simd_bitsim_word_ops_equal_scalar() {
+    use cram_pm::alphabet::Alphabet;
+    use cram_pm::coordinator::SimdKernel;
+    use cram_pm::isa::ProgramCache;
+    let mut rng = Rng::new(0xB1751D);
+    let kernels = SimdKernel::all_available();
+    for alphabet in Alphabet::ALL {
+        for &rows in &[63usize, 64, 65, 129] {
+            let pat_chars = rng.range(2, 8);
+            let frag_chars = pat_chars + rng.range(0, 20);
+            let cache =
+                ProgramCache::for_alphabet(alphabet, frag_chars, pat_chars, PresetMode::Gang, true)
+                    .unwrap();
+            let layout = *cache.layout();
+            let fragments: Vec<Vec<u8>> =
+                (0..rows).map(|_| alphabet.random_codes(&mut rng, frag_chars)).collect();
+            let pattern = alphabet.random_codes(&mut rng, pat_chars);
+            let loc = rng.below(layout.n_alignments()) as u32;
+            let want: Vec<u64> = fragments
+                .iter()
+                .map(|f| score_profile(f, &pattern)[loc as usize] as u64)
+                .collect();
+            for &kernel in &kernels {
+                let mut arr = CramArray::with_kernel(rows, layout.total_cols(), kernel);
+                arr.write_codes_rows(layout.frag_col() as usize, &fragments, layout.bits_per_char);
+                arr.broadcast_codes_bits(layout.pat_col() as usize, &pattern, layout.bits_per_char);
+                let out = arr.execute(cache.program(loc)).unwrap();
+                assert_eq!(
+                    out.scores[0], want,
+                    "{alphabet} kernel={kernel} rows={rows} frag={frag_chars} \
+                     pat={pat_chars} loc={loc}"
+                );
+            }
+        }
+    }
+}
+
+/// Satellite: forcing the coordinator's dispatch
+/// ([`CoordinatorConfig::simd`]) to any available kernel yields
+/// results bit-identical to forcing the scalar oracle — including
+/// enumerated hit lists under `TopK` — and the run's metrics report
+/// the forced kernel's tag.
+#[test]
+fn prop_coordinator_forced_dispatch_invariant() {
+    use cram_pm::coordinator::SimdKernel;
+    use cram_pm::semantics::MatchSemantics;
+    let w = DnaWorkload::generate(1 << 12, 8, 16, 0.02, 17);
+    let fragments = w.fragments(64, 16);
+    let run_with = |kernel: SimdKernel| {
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.engine = EngineKind::Cpu;
+        cfg.semantics = MatchSemantics::TopK { k: 4 };
+        cfg.oracular = None;
+        cfg.lanes = 2;
+        cfg.simd = Some(kernel);
+        Coordinator::new(cfg, fragments.clone()).unwrap().run(&w.patterns).unwrap()
+    };
+    let (want, want_metrics) = run_with(SimdKernel::Scalar);
+    assert_eq!(want_metrics.simd, "scalar", "forced scalar must be reported");
+    for kernel in SimdKernel::all_available() {
+        let (got, metrics) = run_with(kernel);
+        assert_eq!(metrics.simd, kernel.tag(), "metrics must name the forced kernel");
+        assert_eq!(got.len(), want.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.best, b.best, "kernel {kernel} pattern {}: best diverged", a.pattern_id);
+            assert_eq!(a.hits, b.hits, "kernel {kernel} pattern {}: hits diverged", a.pattern_id);
         }
     }
 }
