@@ -36,6 +36,7 @@ fn main() {
                 backpressure: Backpressure::Block,
                 dedup,
                 max_hits: 4096,
+                deadline: None,
             },
         )
         .unwrap();

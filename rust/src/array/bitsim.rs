@@ -1,6 +1,7 @@
 //! Columnar bit-level simulator for one CRAM-PM array.
 
 use crate::dna::Encoded;
+use crate::fault::{FaultChannel, FaultSession};
 use crate::isa::{MicroInstr, Program};
 use crate::simd::{self, SimdKernel};
 use crate::Result;
@@ -21,6 +22,11 @@ pub struct CramArray {
     words_per_col: usize,
     cells: Vec<u64>,
     kernel: SimdKernel,
+    /// Armed device-fault stream ([`crate::fault`]): when present, gate
+    /// steps, code writes, and score read-outs flip bits at the
+    /// session's per-op rates. `None` (the default) is the perfect
+    /// device — one pointer-sized check per bulk op, no RNG draws.
+    fault: Option<FaultSession>,
 }
 
 /// Data produced by executing a program: memory reads and score-buffer
@@ -87,7 +93,67 @@ impl CramArray {
     pub fn with_kernel(rows: usize, cols: usize, kernel: SimdKernel) -> Self {
         assert!(rows > 0 && cols > 0, "array must be non-empty");
         let words_per_col = rows.div_ceil(64);
-        CramArray { rows, cols, words_per_col, cells: vec![0; words_per_col * cols], kernel }
+        CramArray {
+            rows,
+            cols,
+            words_per_col,
+            cells: vec![0; words_per_col * cols],
+            kernel,
+            fault: None,
+        }
+    }
+
+    /// Arm a device-fault stream: until [`CramArray::take_fault`], gate
+    /// steps, code writes, and score read-outs flip bits at the
+    /// session's per-op rates.
+    pub fn set_fault(&mut self, session: FaultSession) {
+        self.fault = Some(session);
+    }
+
+    /// Disarm and return the fault stream (carrying its injected-flip
+    /// count); the array is a perfect device again.
+    pub fn take_fault(&mut self) -> Option<FaultSession> {
+        self.fault.take()
+    }
+
+    /// Flip one cell in place — how an injected device fault lands.
+    #[inline]
+    fn toggle(&mut self, row: usize, col: usize) {
+        self.cells[col * self.words_per_col + row / 64] ^= 1 << (row % 64);
+    }
+
+    /// Account `ops` write-channel device ops; `map` turns a faulty
+    /// op's offset into the (row, col) cell it was staging.
+    fn write_faults(&mut self, ops: u64, map: impl Fn(u64) -> (usize, usize)) {
+        if self.fault.is_none() {
+            return;
+        }
+        let mut flipped: Vec<(usize, usize)> = Vec::new();
+        if let Some(sess) = self.fault.as_mut() {
+            sess.flips(FaultChannel::Write, ops, |o| flipped.push(map(o)));
+        }
+        for (row, col) in flipped {
+            self.toggle(row, col);
+        }
+    }
+
+    /// Account one gate-channel device op for a gate step writing
+    /// column `out`; a firing fault flips one row's output bit.
+    fn gate_fault(&mut self, out: usize) {
+        let rows = self.rows;
+        let flip_row = match self.fault.as_mut() {
+            None => return,
+            Some(sess) => {
+                if sess.one(FaultChannel::Gate) {
+                    Some(sess.pick(rows))
+                } else {
+                    None
+                }
+            }
+        };
+        if let Some(row) = flip_row {
+            self.toggle(row, out);
+        }
     }
 
     /// The SIMD kernel this array's bulk word ops dispatch to.
@@ -170,6 +236,7 @@ impl CramArray {
                 self.cells[idx] &= !m;
             }
         }
+        self.write_faults(bits.len() as u64, |o| (row, col + o as usize));
     }
 
     /// Read `len` bits from one row into a caller-owned buffer.
@@ -221,6 +288,9 @@ impl CramArray {
                 }
             }
         }
+        // One write op per staged bit; bit planes are contiguous per
+        // character, so op offset o lands at column col + o.
+        self.write_faults((codes.len() * bits) as u64, |o| (row, col + o as usize));
     }
 
     /// Write a 2-bit-code string into one row at `col` (the DNA
@@ -269,6 +339,16 @@ impl CramArray {
                 }
             }
         }
+        // One write op per staged cell bit, row-major (each block row's
+        // chars × bits planes in layout order) — the same op count the
+        // per-row write path charges.
+        let per_row = (chars * bits) as u64;
+        if per_row > 0 {
+            self.write_faults(rows.len() as u64 * per_row, |o| {
+                let (r, rem) = ((o / per_row) as usize, (o % per_row) as usize);
+                (r, col + rem)
+            });
+        }
     }
 
     /// Write the same `bits` bits/character code string into **every**
@@ -286,6 +366,15 @@ impl CramArray {
             for b in 0..bits {
                 self.set_column(col + bits * i + b, c >> b & 1 == 1);
             }
+        }
+        // Broadcast charges one write op per (row, plane) cell.
+        let per_row = (codes.len() * bits) as u64;
+        if per_row > 0 {
+            let rows = self.rows as u64;
+            self.write_faults(rows * per_row, |o| {
+                let (r, rem) = ((o / per_row) as usize, (o % per_row) as usize);
+                (r, col + rem)
+            });
         }
     }
 
@@ -398,6 +487,11 @@ impl CramArray {
                 wpc,
             );
         }
+        // One gate-channel device op per row-parallel gate firing: a
+        // thermally-misfired MTJ flips one row's output bit.
+        if self.fault.is_some() {
+            self.gate_fault(out);
+        }
         Ok(())
     }
 
@@ -458,6 +552,16 @@ impl CramArray {
             MicroInstr::ReadScoreAllRows { col, len } => {
                 let mut buf = out.take_score_buf();
                 self.read_scores_into(*col as usize, *len as usize, &mut buf)?;
+                // One read-channel device op per assembled row score; a
+                // firing fault mis-senses one bit of that row's score.
+                if let Some(sess) = self.fault.as_mut() {
+                    let width = (*len as usize).max(1);
+                    let mut rows: Vec<usize> = Vec::new();
+                    sess.flips(FaultChannel::Read, buf.len() as u64, |o| rows.push(o as usize));
+                    for r in rows {
+                        buf[r] ^= 1u64 << sess.pick(width);
+                    }
+                }
                 out.scores.push(buf);
             }
         }
@@ -809,6 +913,77 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// Armed write-channel faults corrupt staged cells, replay
+    /// bit-identically under the same session, and never fire disarmed.
+    #[test]
+    fn write_faults_corrupt_deterministically() {
+        use crate::fault::FaultPlan;
+        let build = |plan: Option<&FaultPlan>| {
+            let mut a = CramArray::new(64, 20);
+            if let Some(p) = plan {
+                a.set_fault(p.session(3, 0));
+            }
+            let codes: Vec<u8> = (0..8u8).map(|c| c % 4).collect();
+            a.write_codes_rows(0, &vec![codes.clone(); 64], 2);
+            a.broadcast_codes_bits(16, &codes[..1], 2);
+            let injected = a.take_fault().map_or(0, |s| s.injected());
+            (a, injected)
+        };
+        let plan = FaultPlan::rates(0.0, 0.05, 0.0, 5);
+        let (clean, n0) = build(None);
+        let (f1, n1) = build(Some(&plan));
+        let (f2, n2) = build(Some(&plan));
+        assert_eq!(n0, 0, "disarmed array must be a perfect device");
+        assert!(n1 > 0, "5% write rate over ~1150 ops fires w.h.p.");
+        assert_eq!(n1, n2);
+        assert_cells_equal(&f1, &f2, "same session must replay identically");
+        // Within one bulk write, distinct op offsets map to distinct
+        // cells, so any fired flip survives as a visible diff.
+        let diff = (0..20).any(|c| (0..64).any(|r| f1.get(r, c) != clean.get(r, c)));
+        assert!(diff, "injected write faults must corrupt cells");
+    }
+
+    /// Read-channel faults mis-sense at most one bit per assembled row
+    /// score and stay inside the score width.
+    #[test]
+    fn read_faults_stay_within_score_width() {
+        use crate::fault::FaultPlan;
+        let mut a = CramArray::new(64, 6);
+        a.set_column(1, true); // every row's clean score is 0b010
+        let mut prog = Program::new();
+        prog.push(Stage::ReadOut, MicroInstr::ReadScoreAllRows { col: 0, len: 3 });
+        let plan = FaultPlan::rates(0.0, 0.0, 0.25, 9);
+        a.set_fault(plan.session(0, 0));
+        let out = a.execute(&prog).unwrap();
+        let injected = a.take_fault().unwrap().injected();
+        assert!(injected > 0, "25% read rate over 64 row-reads fires w.h.p.");
+        let corrupted = out.scores[0].iter().filter(|&&s| s != 0b010).count();
+        assert_eq!(corrupted, injected, "each firing read op mis-senses exactly one row");
+        for &s in &out.scores[0] {
+            assert!(s < 8, "read flip escaped the 3-bit score width: {s}");
+        }
+    }
+
+    /// A gate-channel fault flips exactly one row of the gate's output
+    /// column and leaves the inputs untouched (non-destructive rule
+    /// holds even for misfires).
+    #[test]
+    fn gate_faults_flip_one_output_row() {
+        use crate::fault::FaultPlan;
+        let a0 = CramArray::new(64, 3);
+        let mut clean = a0.clone();
+        clean.gate_step(GateKind::Inv, 1, &[0]).unwrap();
+        let mut a = a0.clone();
+        a.set_fault(FaultPlan::rates(1.0, 0.0, 0.0, 3).session(0, 0));
+        a.gate_step(GateKind::Inv, 1, &[0]).unwrap();
+        assert_eq!(a.take_fault().unwrap().injected(), 1);
+        let diff: Vec<usize> = (0..64).filter(|&r| a.get(r, 1) != clean.get(r, 1)).collect();
+        assert_eq!(diff.len(), 1, "a rate-1.0 gate op must flip exactly one output row");
+        for r in 0..64 {
+            assert_eq!(a.get(r, 0), clean.get(r, 0), "input column row {r}");
         }
     }
 

@@ -126,6 +126,7 @@ pub(crate) fn serve_and_verify(
             backpressure: Backpressure::Block,
             dedup: true,
             max_hits: 4096,
+            deadline: None,
         },
     )?;
     let t0 = Instant::now();

@@ -17,6 +17,7 @@
 use crate::alphabet::{packed_best_alignment, packed_similarity, Alphabet, PackedSeq};
 use crate::array::{CramArray, ExecOutput, RowLayout};
 use crate::baselines::cpu_ref::BestAlignment;
+use crate::fault::FaultPlan;
 use crate::isa::{PresetMode, ProgramCache};
 use crate::semantics::{Hit, HitAccumulator, MatchSemantics};
 use crate::simd::{self, PackedBlock, PatternWindows, SimdKernel};
@@ -68,6 +69,13 @@ pub struct WorkResult {
     pub hits: Vec<Hit>,
     /// Executable/array passes consumed.
     pub passes: usize,
+    /// Device faults injected into this execution by an armed
+    /// [`FaultPlan`] (0 when fault injection is disabled).
+    pub faults_injected: usize,
+    /// Corrupted executions the coordinator's protection layer caught
+    /// (invariant checks + re-execution voting) before this result was
+    /// accepted. Engines report 0; the protection layer fills it in.
+    pub faults_detected: usize,
 }
 
 /// Which backend the executor stage uses.
@@ -88,6 +96,17 @@ pub trait MatchEngine {
 
     /// Engine label for metrics.
     fn label(&self) -> &'static str;
+
+    /// Arm (or clear) a device-fault plan for subsequent runs. The
+    /// default is a no-op: engines with no device model to corrupt
+    /// (the XLA artifact path) silently ignore fault plans.
+    fn set_fault_plan(&mut self, _plan: Option<FaultPlan>) {}
+
+    /// Select which protection attempt the next `run` executes as.
+    /// Fault streams split per `(pattern, attempt)`
+    /// ([`FaultPlan::session`]), so re-execution voting draws fresh
+    /// faults instead of replaying the ones it is voting away.
+    fn set_attempt(&mut self, _attempt: u64) {}
 }
 
 /// Software-oracle engine: width-generic packed XOR+popcount scoring
@@ -115,6 +134,10 @@ pub struct CpuEngine {
     scores: Vec<u64>,
     /// Scratch per-row running best `(score, loc)` (SIMD path).
     row_best: Vec<(u64, usize)>,
+    /// Armed device-fault plan, if any ([`MatchEngine::set_fault_plan`]).
+    fault: Option<FaultPlan>,
+    /// Protection attempt the next run executes as.
+    attempt: u64,
 }
 
 impl CpuEngine {
@@ -136,6 +159,8 @@ impl CpuEngine {
             windows: PatternWindows::default(),
             scores: Vec::new(),
             row_best: Vec::new(),
+            fault: None,
+            attempt: 0,
         }
     }
 
@@ -196,7 +221,55 @@ impl CpuEngine {
             }
         }
         let hits = acc.map(HitAccumulator::finish).unwrap_or_default();
-        WorkResult { pattern_id: item.pattern_id, best, hits, passes: 1 }
+        WorkResult {
+            pattern_id: item.pattern_id,
+            best,
+            hits,
+            passes: 1,
+            faults_injected: 0,
+            faults_detected: 0,
+        }
+    }
+
+    /// Device-fault path: the CPU reference has no physical gate, write,
+    /// or sense ops to hook, so each candidate's assembled score stands
+    /// in for one device op per channel
+    /// ([`crate::fault::FaultSession::corrupt_score`]). A dedicated
+    /// explicit `(row, loc)` scan — neither the SIMD block path nor
+    /// [`packed_best_alignment`] materializes per-candidate scores to
+    /// corrupt.
+    fn run_faulty(&mut self, item: &WorkItem, plan: &FaultPlan) -> WorkResult {
+        let mut sess = plan.session(item.pattern_id, self.attempt);
+        // Bits needed to hold a clean score (≤ pattern chars): readout
+        // flips stay within the sense width, exactly like the bitsim's.
+        let width = (usize::BITS - item.pattern.len().leading_zeros()) as usize;
+        let mut best: Option<BestAlignment> = None;
+        let mut acc = item.semantics.enumerates().then(|| HitAccumulator::new(item.semantics));
+        for (frag, &rid) in item.fragments.iter().zip(&item.row_ids) {
+            self.frag.refill(self.alphabet, frag);
+            if self.pat.chars() == 0 || self.pat.chars() > self.frag.chars() {
+                continue;
+            }
+            for loc in 0..=self.frag.chars() - self.pat.chars() {
+                let score = packed_similarity(&self.frag, &self.pat, loc);
+                let score = sess.corrupt_score(score, width.max(1));
+                if let Some(acc) = acc.as_mut() {
+                    acc.push(rid as usize, loc, score);
+                }
+                if best.map_or(true, |b| score > b.score) {
+                    best = Some(BestAlignment { row: rid as usize, loc, score });
+                }
+            }
+        }
+        let hits = acc.map(HitAccumulator::finish).unwrap_or_default();
+        WorkResult {
+            pattern_id: item.pattern_id,
+            best,
+            hits,
+            passes: 1,
+            faults_injected: sess.injected(),
+            faults_detected: 0,
+        }
     }
 }
 
@@ -216,6 +289,9 @@ impl MatchEngine for CpuEngine {
             self.alphabet
         );
         self.pat.refill(self.alphabet, &item.pattern);
+        if let Some(plan) = self.fault.clone().filter(FaultPlan::rates_enabled) {
+            return Ok(self.run_faulty(item, &plan));
+        }
         if self.block_path_applies(item) {
             return Ok(self.run_block(item));
         }
@@ -255,11 +331,26 @@ impl MatchEngine for CpuEngine {
                 }
             }
         }
-        Ok(WorkResult { pattern_id: item.pattern_id, best, hits, passes: 1 })
+        Ok(WorkResult {
+            pattern_id: item.pattern_id,
+            best,
+            hits,
+            passes: 1,
+            faults_injected: 0,
+            faults_detected: 0,
+        })
     }
 
     fn label(&self) -> &'static str {
         "cpu"
+    }
+
+    fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        self.fault = plan;
+    }
+
+    fn set_attempt(&mut self, attempt: u64) {
+        self.attempt = attempt;
     }
 }
 
@@ -279,6 +370,10 @@ pub struct BitsimEngine {
     out: ExecOutput,
     /// Pooled per-row running best `(score, loc)`.
     row_best: Vec<(u64, usize)>,
+    /// Armed device-fault plan, if any ([`MatchEngine::set_fault_plan`]).
+    fault: Option<FaultPlan>,
+    /// Protection attempt the next run executes as.
+    attempt: u64,
 }
 
 impl BitsimEngine {
@@ -333,6 +428,8 @@ impl BitsimEngine {
             arr,
             out: ExecOutput::default(),
             row_best: Vec::new(),
+            fault: None,
+            attempt: 0,
         }
     }
 
@@ -363,6 +460,16 @@ impl MatchEngine for BitsimEngine {
             item.pattern.len(),
             layout.pat_chars
         );
+        // Arm this execution's fault stream inside the array — one
+        // deterministic session per (pattern, attempt). An armed session
+        // from an earlier errored run is cleared either way, so faults
+        // never leak across items.
+        match self.fault.as_ref().filter(|p| p.rates_enabled()) {
+            Some(plan) => self.arr.set_fault(plan.session(item.pattern_id, self.attempt)),
+            None => {
+                self.arr.take_fault();
+            }
+        }
         let mut best: Option<BestAlignment> = None;
         // Enumerating semantics tap the same word-transposed
         // `ReadScoreAllRows` readout the best-of fold consumes — every
@@ -420,11 +527,27 @@ impl MatchEngine for BitsimEngine {
             }
         }
         let hits = acc.map(HitAccumulator::finish).unwrap_or_default();
-        Ok(WorkResult { pattern_id: item.pattern_id, best, hits, passes })
+        let faults_injected = self.arr.take_fault().map_or(0, |s| s.injected());
+        Ok(WorkResult {
+            pattern_id: item.pattern_id,
+            best,
+            hits,
+            passes,
+            faults_injected,
+            faults_detected: 0,
+        })
     }
 
     fn label(&self) -> &'static str {
         "bitsim"
+    }
+
+    fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        self.fault = plan;
+    }
+
+    fn set_attempt(&mut self, attempt: u64) {
+        self.attempt = attempt;
     }
 }
 
@@ -741,5 +864,81 @@ mod tests {
                 assert_eq!(got.passes, 3, "{kernel} {semantics}");
             }
         }
+    }
+
+    /// Zero-cost-when-disabled: arming an all-zero-rate plan (or none)
+    /// changes neither engine's answer nor its fault counters.
+    #[test]
+    fn disabled_fault_plan_is_invisible() {
+        let it = item(5, 4, 32, 8);
+        let clean = CpuEngine::default().run(&it).unwrap();
+        let mut cpu = CpuEngine::default();
+        cpu.set_fault_plan(Some(FaultPlan::default()));
+        let armed = cpu.run(&it).unwrap();
+        assert_results_equal(&armed, &clean, "cpu zero-rate plan");
+        assert_eq!(armed.faults_injected, 0);
+        assert_eq!(armed.faults_detected, 0);
+
+        let mut bs = BitsimEngine::new(32, 8, 2, PresetMode::Gang).unwrap();
+        let bs_clean = bs.run(&it).unwrap();
+        bs.set_fault_plan(Some(FaultPlan::default()));
+        let bs_armed = bs.run(&it).unwrap();
+        assert_results_equal(&bs_armed, &bs_clean, "bitsim zero-rate plan");
+        assert_eq!(bs_armed.faults_injected, 0);
+    }
+
+    /// Faulted executions are deterministic per (seed, pattern,
+    /// attempt) and draw fresh faults per attempt — the property
+    /// re-execution voting is built on.
+    #[test]
+    fn faulted_runs_replay_per_attempt_and_split_across_attempts() {
+        let mut it = item(6, 4, 32, 8);
+        // Threshold-0 enumerates every candidate's (possibly corrupted)
+        // score, so two fault streams compare over the full ~100-score
+        // list, not just the argmax.
+        it.semantics = MatchSemantics::Threshold { min_score: 0 };
+        let plan = FaultPlan::rates(0.0, 0.0, 0.3, 1234);
+        let run_at = |attempt: u64| {
+            let mut e = CpuEngine::default();
+            e.set_fault_plan(Some(plan.clone()));
+            e.set_attempt(attempt);
+            e.run(&it).unwrap()
+        };
+        let a = run_at(0);
+        let b = run_at(0);
+        assert_results_equal(&a, &b, "same attempt must replay bit-identically");
+        assert_eq!(a.faults_injected, b.faults_injected);
+        assert!(a.faults_injected > 0, "0.3 readout rate over ~100 candidates must fire");
+        let c = run_at(1);
+        // Fresh stream: ~30 corruptions land on different candidates.
+        assert_ne!(a.hits, c.hits, "attempts must draw fresh faults");
+    }
+
+    /// Both device-modelling engines actually corrupt results under a
+    /// hot plan — faults are injected, counted, and visible.
+    #[test]
+    fn hot_fault_plan_corrupts_both_engines() {
+        let mut it = item(7, 4, 32, 8);
+        // Enumerate every score so divergence is judged over the full
+        // candidate set, not just the argmax surviving by luck.
+        it.semantics = MatchSemantics::Threshold { min_score: 0 };
+        let plan = FaultPlan::rates(0.0, 0.0, 0.5, 77);
+        let clean_cpu = CpuEngine::default().run(&it).unwrap();
+        let mut cpu = CpuEngine::default();
+        cpu.set_fault_plan(Some(plan.clone()));
+        let faulty_cpu = cpu.run(&it).unwrap();
+        assert!(faulty_cpu.faults_injected > 0);
+        assert_ne!(faulty_cpu.hits, clean_cpu.hits, "cpu: a 0.5 readout rate must corrupt");
+
+        let mut bs = BitsimEngine::new(32, 8, 2, PresetMode::Gang).unwrap();
+        let clean_bs = bs.run(&it).unwrap();
+        bs.set_fault_plan(Some(plan));
+        let faulty_bs = bs.run(&it).unwrap();
+        assert!(faulty_bs.faults_injected > 0);
+        assert_ne!(faulty_bs.hits, clean_bs.hits, "bitsim: a 0.5 readout rate must corrupt");
+        // Disarming restores the clean answer — no leaked array state.
+        bs.set_fault_plan(None);
+        let back = bs.run(&it).unwrap();
+        assert_results_equal(&back, &clean_bs, "bitsim after disarm");
     }
 }

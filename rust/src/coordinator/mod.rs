@@ -49,7 +49,9 @@ pub mod engine;
 pub mod pipeline;
 
 pub use engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngine, WorkItem, WorkResult};
-pub use pipeline::{Coordinator, CoordinatorConfig, CoordinatorError, LaneStats, RunMetrics};
+pub use pipeline::{
+    Coordinator, CoordinatorConfig, CoordinatorError, LaneStats, Protection, RunMetrics,
+};
 
 // The per-engine dispatch knob (`CoordinatorConfig::simd`), re-exported
 // so coordinator users don't need a separate `crate::simd` import.

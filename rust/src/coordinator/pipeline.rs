@@ -17,6 +17,7 @@
 use crate::alphabet::Alphabet;
 use crate::baselines::cpu_ref::BestAlignment;
 use crate::coordinator::engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngine, WorkItem, WorkResult};
+use crate::fault::FaultPlan;
 use crate::isa::{PresetMode, ProgramCache};
 use crate::runtime::Runtime;
 use crate::scheduler::{OracularIndex, ShardMap};
@@ -37,10 +38,40 @@ use std::time::{Duration, Instant};
 /// `err.downcast_ref::<CoordinatorError>()`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CoordinatorError {
-    /// The lane mutex is poisoned: a previous run panicked while
-    /// holding the executor lanes. The coordinator must be rebuilt —
-    /// retrying the call cannot succeed.
-    LanesPoisoned,
+    /// Protection ran a pattern out of its re-execution budget without
+    /// ever collecting the configured number of agreeing, invariant-
+    /// clean executions — silent device corruption turned into a typed,
+    /// per-pattern failure. The lanes themselves are healthy; retrying
+    /// the run (or lowering the fault rate) can succeed.
+    FaultDetected {
+        /// The pattern whose executions never agreed.
+        pattern_id: usize,
+        /// Executions spent before giving up
+        /// ([`Protection::votes`] + [`Protection::max_retries`]).
+        attempts: usize,
+    },
+    /// An executor lane exhausted its restart budget
+    /// ([`CoordinatorConfig::max_lane_restarts`]): its engine kept
+    /// panicking through respawns, so the lane stopped retrying. The
+    /// next run tears the lane set down and respawns it with a fresh
+    /// budget.
+    LaneQuarantined {
+        /// The quarantined lane (shard id).
+        lane: usize,
+        /// In-place engine respawns the lane performed before giving
+        /// up.
+        restarts: usize,
+    },
+    /// The run stalled: no lane produced a result for
+    /// [`CoordinatorConfig::stall_timeout`] while results were still
+    /// outstanding — a wedged engine, not a slow one. The wedged lane
+    /// set is abandoned (never joined) and respawned on the next run.
+    LanesStalled {
+        /// How long the reducer waited before declaring the stall, ms.
+        waited_ms: u64,
+        /// Results still outstanding when it gave up.
+        missing: usize,
+    },
     /// A bitsim executor lane started without the shared program cache
     /// the coordinator compiles at construction — an internal wiring
     /// bug, not a caller error.
@@ -53,9 +84,20 @@ pub enum CoordinatorError {
 impl std::fmt::Display for CoordinatorError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            CoordinatorError::LanesPoisoned => write!(
+            CoordinatorError::FaultDetected { pattern_id, attempts } => write!(
                 f,
-                "coordinator lanes poisoned by a previous panic; rebuild the coordinator"
+                "fault protection detected unrecoverable corruption on pattern {pattern_id}: \
+                 {attempts} executions without an agreeing quorum"
+            ),
+            CoordinatorError::LaneQuarantined { lane, restarts } => write!(
+                f,
+                "executor lane {lane} quarantined after {restarts} engine respawns; \
+                 the next run respawns the lane set"
+            ),
+            CoordinatorError::LanesStalled { waited_ms, missing } => write!(
+                f,
+                "executor lanes stalled: {missing} results still outstanding after {waited_ms} ms; \
+                 the next run respawns the lane set"
             ),
             CoordinatorError::MissingProgramCache => write!(
                 f,
@@ -69,6 +111,30 @@ impl std::fmt::Display for CoordinatorError {
 }
 
 impl std::error::Error for CoordinatorError {}
+
+/// Opt-in fault detection & recovery: N-modular re-execution voting
+/// plus cheap result-invariant checks, applied per work item inside
+/// the executor lanes. A result is accepted once `votes` independent
+/// executions agree bit for bit (each drawing fresh fault streams —
+/// [`crate::fault::FaultPlan::session`] splits per attempt);
+/// invariant-violating executions are discarded outright. When
+/// `votes + max_retries` executions pass without a quorum the item
+/// fails with the typed [`CoordinatorError::FaultDetected`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Protection {
+    /// Agreeing, invariant-clean executions required to accept (≥ 1;
+    /// 2 = classic dual-modular redundancy with retry).
+    pub votes: usize,
+    /// Extra executions allowed beyond `votes` before the item fails
+    /// as [`CoordinatorError::FaultDetected`].
+    pub max_retries: usize,
+}
+
+impl Default for Protection {
+    fn default() -> Self {
+        Protection { votes: 2, max_retries: 6 }
+    }
+}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -120,6 +186,27 @@ pub struct CoordinatorConfig {
     /// the forced-dispatch equivalence tests use to diff kernels in
     /// one process. Recorded in [`RunMetrics::simd`].
     pub simd: Option<SimdKernel>,
+    /// Device-fault plan armed in every lane engine: per-op flip rates
+    /// for the gate/write/readout channels plus the test-only
+    /// panic/stall supervision hooks. `None` (the default) models a
+    /// perfect device at zero cost. The XLA engine has no device model
+    /// and ignores the rates.
+    pub fault: Option<FaultPlan>,
+    /// Opt-in detection & recovery ([`Protection`]): re-execution
+    /// voting + invariant checks per work item. `None` (the default)
+    /// accepts every engine result as-is — faults, if armed, corrupt
+    /// silently.
+    pub protection: Option<Protection>,
+    /// Lane supervision budget: in-place engine respawns a lane may
+    /// perform (after executor panics) before it quarantines
+    /// ([`CoordinatorError::LaneQuarantined`]).
+    pub max_lane_restarts: usize,
+    /// How long the reducer waits without any lane reply — while
+    /// results are outstanding — before declaring the run stalled
+    /// ([`CoordinatorError::LanesStalled`]). Also bounds the total
+    /// abort-drain wait. Generous by default: it is a wedge detector,
+    /// not a latency target.
+    pub stall_timeout: Duration,
 }
 
 impl CoordinatorConfig {
@@ -145,6 +232,10 @@ impl CoordinatorConfig {
             preset_mode: PresetMode::Gang,
             tech: Technology::NearTerm,
             simd: None,
+            fault: None,
+            protection: None,
+            max_lane_restarts: 4,
+            stall_timeout: Duration::from_secs(60),
         }
     }
 
@@ -220,6 +311,15 @@ pub struct RunMetrics {
     pub lanes: usize,
     /// Per-lane occupancy/rate accounting.
     pub lane_stats: Vec<LaneStats>,
+    /// Device faults injected across the run's executions (0 unless a
+    /// [`CoordinatorConfig::fault`] plan with nonzero rates is armed).
+    pub faults_injected: usize,
+    /// Corrupted executions [`Protection`] caught — invariant-invalid
+    /// or voted away — before results were accepted.
+    pub faults_detected: usize,
+    /// In-place lane engine respawns the supervisor performed during
+    /// this run (panicked executors that recovered).
+    pub lane_restarts: usize,
     /// Projected time on the CRAM-PM substrate, s (aggregated across
     /// the matching shard split).
     pub hw_seconds: f64,
@@ -282,7 +382,14 @@ impl MatchEngine for XlaEngine {
                 }
             }
         }
-        Ok(WorkResult { pattern_id: item.pattern_id, best, hits: Vec::new(), passes })
+        Ok(WorkResult {
+            pattern_id: item.pattern_id,
+            best,
+            hits: Vec::new(),
+            passes,
+            faults_injected: 0,
+            faults_detected: 0,
+        })
     }
 
     fn label(&self) -> &'static str {
@@ -307,6 +414,12 @@ struct LaneSet {
     lanes: Vec<Lane>,
     shard: ShardMap,
     res_rx: mpsc::Receiver<LaneResult>,
+    /// Set while a run is in flight and cleared only when it left the
+    /// lanes provably idle and the channel drained. A run that stalls
+    /// (wedged lane) or quarantines a lane leaves it set, and the next
+    /// run tears this set down and respawns it instead of inheriting
+    /// wedged threads or stale in-flight results.
+    dirty: bool,
 }
 
 /// One lane→reducer message.
@@ -326,6 +439,140 @@ fn is_better(candidate: &Option<BestAlignment>, incumbent: &Option<BestAlignment
         (Some(c), Some(i)) => {
             (c.score, std::cmp::Reverse(c.row), std::cmp::Reverse(c.loc))
                 > (i.score, std::cmp::Reverse(i.row), std::cmp::Reverse(i.loc))
+        }
+    }
+}
+
+/// Execute one work item inside a lane: fire the test-only supervision
+/// hooks, then either run the engine once (no protection) or run the
+/// re-execution voting loop until `votes` invariant-clean executions
+/// agree bit for bit. Runs on the lane thread, inside its
+/// `catch_unwind` — a `FaultPlan::panic_on_item` panic unwinds from
+/// here into the supervisor.
+fn execute_item(
+    engine: &mut dyn MatchEngine,
+    item: &WorkItem,
+    fault: Option<&FaultPlan>,
+    protection: Option<Protection>,
+    pat_chars: usize,
+) -> Result<WorkResult> {
+    if let Some(plan) = fault {
+        plan.trip(item.pattern_id);
+    }
+    let Some(p) = protection else {
+        return engine.run(item);
+    };
+    let need = p.votes.max(1);
+    let budget = need + p.max_retries;
+    // Voting over equivalence classes: each invariant-clean execution
+    // either joins the class it agrees with or opens a new one; the
+    // first class to reach `need` members wins. Corrupt executions
+    // rarely agree with anything, so under faults this converges as
+    // soon as `need` clean executions happen — and every execution
+    // outside the winning class was, by definition, corrupt.
+    let mut classes: Vec<(WorkResult, usize)> = Vec::new();
+    let mut invalid = 0usize;
+    let mut valid = 0usize;
+    let mut injected = 0usize;
+    for attempt in 0..budget {
+        engine.set_attempt(attempt as u64);
+        let run = engine.run(item);
+        let r = match run {
+            Ok(r) => r,
+            Err(e) => {
+                engine.set_attempt(0);
+                return Err(e); // engine refusal, not corruption
+            }
+        };
+        injected += r.faults_injected;
+        if !result_invariants_hold(&r, item, pat_chars) {
+            invalid += 1; // provably corrupt: discard without a vote
+            continue;
+        }
+        valid += 1;
+        let slot = classes.iter().position(|(c, _)| results_agree(c, &r));
+        let members = match slot {
+            Some(i) => {
+                classes[i].1 += 1;
+                classes[i].1
+            }
+            None => {
+                classes.push((r, 1));
+                1
+            }
+        };
+        if members >= need {
+            let i = slot.unwrap_or(classes.len() - 1);
+            let (mut accepted, won) = classes.swap_remove(i);
+            accepted.faults_injected = injected;
+            accepted.faults_detected = invalid + (valid - won);
+            engine.set_attempt(0);
+            return Ok(accepted);
+        }
+    }
+    engine.set_attempt(0);
+    Err(anyhow::Error::new(CoordinatorError::FaultDetected {
+        pattern_id: item.pattern_id,
+        attempts: budget,
+    }))
+}
+
+/// Bit-for-bit agreement between two executions of the same item: the
+/// answer fields only — operational counters (passes, fault counts)
+/// are not part of the vote.
+fn results_agree(a: &WorkResult, b: &WorkResult) -> bool {
+    a.best == b.best && a.hits == b.hits
+}
+
+/// Cheap per-execution invariant checks — necessary conditions every
+/// uncorrupted result satisfies by construction, so a violation proves
+/// corruption without a second execution. (The converse does not hold:
+/// plenty of corruption passes these bounds, which is what the voting
+/// is for.)
+fn result_invariants_hold(r: &WorkResult, item: &WorkItem, pat_chars: usize) -> bool {
+    // Score bound from the step model: one match per pattern char.
+    let max_score = pat_chars;
+    if let Some(b) = &r.best {
+        if b.score > max_score {
+            return false;
+        }
+        // The best row must be one of the item's candidate rows, at a
+        // loc with room for the whole pattern.
+        let Some(fi) = item.row_ids.iter().position(|&rid| rid as usize == b.row) else {
+            return false;
+        };
+        let frag_len = item.fragments[fi].len();
+        if item.pattern.len() > frag_len || b.loc > frag_len - item.pattern.len() {
+            return false;
+        }
+    }
+    match item.semantics {
+        MatchSemantics::BestOf => r.hits.is_empty(),
+        MatchSemantics::Threshold { min_score } => {
+            r.hits.iter().all(|h| h.score >= min_score && h.score <= max_score)
+                && r.hits.windows(2).all(|w| (w[0].row, w[0].loc) < (w[1].row, w[1].loc))
+                && match &r.best {
+                    // A qualifying best must itself be enumerated.
+                    Some(b) if b.score >= min_score => r
+                        .hits
+                        .iter()
+                        .any(|h| h.row == b.row && h.loc == b.loc && h.score == b.score),
+                    _ => true,
+                }
+        }
+        MatchSemantics::TopK { k } => {
+            r.hits.len() <= k
+                && r.hits.iter().all(|h| h.score <= max_score)
+                && r.hits.windows(2).all(|w| {
+                    (std::cmp::Reverse(w[0].score), w[0].row, w[0].loc)
+                        < (std::cmp::Reverse(w[1].score), w[1].row, w[1].loc)
+                })
+                && match (&r.best, r.hits.first()) {
+                    (Some(b), Some(h)) => h.row == b.row && h.loc == b.loc && h.score == b.score,
+                    (Some(_), None) => k == 0,
+                    (None, Some(_)) => false,
+                    (None, None) => true,
+                }
         }
     }
 }
@@ -352,6 +599,13 @@ pub struct Coordinator {
     /// serving micro-batch — it was rebuilt per `run` call before,
     /// which dominated short pools.
     oracular_index: Option<OracularIndex>,
+    /// The shared compiled-program cache (bitsim engine only), retained
+    /// so lane respawns and full lane-set rebuilds never re-lower.
+    bitsim_cache: Option<Arc<ProgramCache>>,
+    /// Total in-place lane engine respawns across the coordinator's
+    /// lifetime; runs report their delta in
+    /// [`RunMetrics::lane_restarts`].
+    restarts: Arc<AtomicUsize>,
     inner: Mutex<LaneSet>,
 }
 
@@ -413,8 +667,6 @@ impl Coordinator {
         });
         let fragments: Vec<Arc<[u8]>> =
             fragments.into_iter().map(|f| Arc::from(f.into_boxed_slice())).collect();
-        let shard = ShardMap::new(fragments.len(), cfg.lanes.max(1));
-        let n_lanes = shard.shards();
         // §Perf: the bit-level engine's alignment programs depend only
         // on the geometry — compile them once here and share the cache
         // across every executor lane instead of re-lowering per lane
@@ -432,6 +684,33 @@ impl Coordinator {
             )),
             _ => None,
         };
+        let restarts = Arc::new(AtomicUsize::new(0));
+        let inner = Self::spawn_lane_set(&cfg, &bitsim_cache, fragments.len(), &restarts)?;
+        let n_lanes = inner.shard.shards();
+        Ok(Coordinator {
+            cfg,
+            fragments,
+            n_lanes,
+            oracular_index,
+            bitsim_cache,
+            restarts,
+            inner: Mutex::new(inner),
+        })
+    }
+
+    /// Spawn a complete supervised lane set: one persistent executor
+    /// thread per shard, a shared result channel, and the startup
+    /// handshake that surfaces engine construction failures. Used at
+    /// construction and by [`Coordinator::rebuild_lanes`] after a run
+    /// left the previous set wedged or quarantined.
+    fn spawn_lane_set(
+        cfg: &CoordinatorConfig,
+        bitsim_cache: &Option<Arc<ProgramCache>>,
+        n_rows: usize,
+        restarts: &Arc<AtomicUsize>,
+    ) -> Result<LaneSet> {
+        let shard = ShardMap::new(n_rows, cfg.lanes.max(1));
+        let n_lanes = shard.shards();
         // Ample result buffering: covers every item the lanes can hold
         // at once (queued + in flight) so lanes rarely block on the
         // reducer; emptiness between runs is guaranteed by the
@@ -447,34 +726,38 @@ impl Coordinator {
             let lane_cache = bitsim_cache.clone();
             let res_tx = res_tx.clone();
             let ready_tx = ready_tx.clone();
+            let restarts = Arc::clone(restarts);
             let handle = std::thread::Builder::new()
                 .name(format!("crampm-lane{lane_id}"))
                 .spawn(move || {
                     // The engine lives on this thread for the lane's
-                    // whole lifetime (PJRT handles never cross threads).
+                    // whole lifetime (PJRT handles never cross
+                    // threads). `build_engine` is retained so the
+                    // supervisor below can respawn it in place after a
+                    // panic.
                     let kernel = thread_cfg.simd.unwrap_or_else(SimdKernel::active);
-                    let built: Result<Box<dyn MatchEngine>> = match thread_cfg.engine {
-                        EngineKind::Cpu => {
-                            let cpu = CpuEngine::with_kernel(thread_cfg.alphabet, kernel);
-                            Ok(Box::new(cpu) as Box<dyn MatchEngine>)
-                        }
-                        EngineKind::Bitsim => lane_cache
-                            .ok_or_else(|| {
-                                anyhow::Error::new(CoordinatorError::MissingProgramCache)
-                            })
-                            .map(|cache| {
+                    let build_engine = || -> Result<Box<dyn MatchEngine>> {
+                        let mut engine: Box<dyn MatchEngine> = match thread_cfg.engine {
+                            EngineKind::Cpu => {
+                                Box::new(CpuEngine::with_kernel(thread_cfg.alphabet, kernel))
+                            }
+                            EngineKind::Bitsim => {
+                                let cache = lane_cache.clone().ok_or_else(|| {
+                                    anyhow::Error::new(CoordinatorError::MissingProgramCache)
+                                })?;
                                 Box::new(BitsimEngine::with_cache_kernel(cache, 256, kernel))
-                                    as Box<dyn MatchEngine>
-                            }),
-                        EngineKind::Xla => {
-                            XlaEngine::new(&thread_cfg.artifacts_dir, &thread_cfg.variant)
-                                .map(|e| Box::new(e) as Box<dyn MatchEngine>)
-                                .map_err(|e| e.context("loading XLA engine"))
-                        }
+                            }
+                            EngineKind::Xla => Box::new(
+                                XlaEngine::new(&thread_cfg.artifacts_dir, &thread_cfg.variant)
+                                    .map_err(|e| e.context("loading XLA engine"))?,
+                            ),
+                        };
+                        engine.set_fault_plan(thread_cfg.fault.clone());
+                        Ok(engine)
                     };
                     // Startup handshake: report construction before
                     // accepting any work.
-                    let mut engine = match built {
+                    let mut engine = match build_engine() {
                         Ok(engine) => {
                             let _ = ready_tx.send((lane_id, Ok(())));
                             engine
@@ -484,21 +767,52 @@ impl Coordinator {
                             return;
                         }
                     };
+                    // Lane supervision: a panicking execution must not
+                    // strand the reducer waiting on this item forever —
+                    // and should not fail the run either. The engine is
+                    // respawned in place (fresh state; the panic may
+                    // have left it mid-mutation) and the same item is
+                    // retried, up to the restart budget; past it the
+                    // lane quarantines and the item fails typed. Every
+                    // received item still produces exactly one result
+                    // message.
+                    let mut lane_restarts = 0usize;
                     for item in work_rx {
                         let t = Instant::now();
-                        // A panicking engine must not strand the
-                        // reducer waiting on this item forever: convert
-                        // the panic into an item error and keep the
-                        // lane alive. Every received item therefore
-                        // produces exactly one result message.
-                        let result =
-                            std::panic::catch_unwind(AssertUnwindSafe(|| engine.run(&item)))
-                                .unwrap_or_else(|_| {
-                                    Err(anyhow!(
-                                        "executor lane {lane_id} panicked scoring pattern {}",
-                                        item.pattern_id
-                                    ))
-                                });
+                        let result = loop {
+                            let attempt = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                                execute_item(
+                                    engine.as_mut(),
+                                    &item,
+                                    thread_cfg.fault.as_ref(),
+                                    thread_cfg.protection,
+                                    thread_cfg.pat_chars,
+                                )
+                            }));
+                            match attempt {
+                                Ok(res) => break res,
+                                Err(_) => {
+                                    lane_restarts += 1;
+                                    restarts.fetch_add(1, Ordering::SeqCst);
+                                    if lane_restarts > thread_cfg.max_lane_restarts {
+                                        break Err(anyhow::Error::new(
+                                            CoordinatorError::LaneQuarantined {
+                                                lane: lane_id,
+                                                restarts: lane_restarts,
+                                            },
+                                        ));
+                                    }
+                                    match build_engine() {
+                                        Ok(fresh) => engine = fresh,
+                                        Err(e) => {
+                                            break Err(e.context(format!(
+                                                "respawning executor lane {lane_id} engine"
+                                            )))
+                                        }
+                                    }
+                                }
+                            }
+                        };
                         let busy_seconds = t.elapsed().as_secs_f64();
                         if res_tx.send(LaneResult { lane: lane_id, busy_seconds, result }).is_err()
                         {
@@ -539,13 +853,27 @@ impl Coordinator {
             }
             return Err(e);
         }
-        Ok(Coordinator {
-            cfg,
-            fragments,
-            n_lanes,
-            oracular_index,
-            inner: Mutex::new(LaneSet { lanes, shard, res_rx }),
-        })
+        Ok(LaneSet { lanes, shard, res_rx, dirty: false })
+    }
+
+    /// Tear down a suspect lane set and spawn a fresh one in its place.
+    /// Healthy old lanes exit when their closed work queues disconnect;
+    /// **wedged lanes are never joined** — their threads are detached,
+    /// and their eventual result send fails once the old receiver drops
+    /// here, which ends the thread. Joining would hang the rebuild on
+    /// exactly the wedge it is recovering from.
+    fn rebuild_lanes(&self, inner: &mut LaneSet) -> Result<()> {
+        let fresh =
+            Self::spawn_lane_set(&self.cfg, &self.bitsim_cache, self.fragments.len(), &self.restarts)
+                .context("respawning executor lanes after a wedged or quarantined run")?;
+        let mut old = std::mem::replace(inner, fresh);
+        for lane in &mut old.lanes {
+            lane.work_tx.take();
+            drop(lane.handle.take()); // detach: never join a wedge
+        }
+        // Dropping `old` now drops the stale result receiver too,
+        // discarding any stale in-flight results with it.
+        Ok(())
     }
 
     /// Number of resident fragments.
@@ -633,20 +961,24 @@ impl Coordinator {
         if pools.iter().all(|p| p.is_empty()) {
             return Ok(pools.iter().map(|_| self.empty_run()).collect());
         }
-        // One batch at a time through the persistent lanes. A poisoned
-        // mutex means a previous run panicked mid-flight; surface the
-        // typed, non-retryable error.
-        let inner = self
-            .inner
-            .lock()
-            .map_err(|_| anyhow::Error::new(CoordinatorError::LanesPoisoned))?;
+        // One batch at a time through the persistent lanes. Crash
+        // residue heals here instead of bricking the coordinator: a
+        // poisoned mutex (a previous run panicked mid-flight) is
+        // reclaimed — the dirty flag below, not the poison bit, is
+        // what tracks lane health — and a dirty lane set (wedged or
+        // quarantined by a previous run) is torn down and respawned
+        // before any new work enters it.
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if inner.dirty {
+            self.rebuild_lanes(&mut inner)?;
+        }
         pools
             .iter()
             .map(|pool| {
                 if pool.is_empty() {
                     Ok(self.empty_run())
                 } else {
-                    self.run_on(&inner, pool)
+                    self.run_on(&mut inner, pool)
                 }
             })
             .collect()
@@ -674,6 +1006,9 @@ impl Coordinator {
             hw_seconds: 0.0,
             hw_energy: 0.0,
             hw_match_rate: 0.0,
+            faults_injected: 0,
+            faults_detected: 0,
+            lane_restarts: 0,
         };
         (Vec::new(), metrics)
     }
@@ -681,11 +1016,19 @@ impl Coordinator {
     /// One non-empty pool through the lanes the caller already holds.
     fn run_on(
         &self,
-        inner: &LaneSet,
+        inner: &mut LaneSet,
         patterns: &[Arc<[u8]>],
     ) -> Result<(Vec<WorkResult>, RunMetrics)> {
         let t0 = Instant::now();
+        // Pessimistically dirty until this run provably left the lanes
+        // idle and the channel drained — a panic that escapes mid-run
+        // (poisoning the mutex) therefore also marks the set for
+        // rebuild.
+        inner.dirty = true;
+        let restarts_before = self.restarts.load(Ordering::SeqCst);
         let lanes = &inner.lanes;
+        let shard_map = &inner.shard;
+        let res_rx = &inner.res_rx;
         let n_lanes = lanes.len();
 
         // Per-pattern candidate routes (ascending row ids), split into
@@ -701,7 +1044,7 @@ impl Coordinator {
         let oracular_plan: Option<Vec<Vec<(usize, Vec<u32>)>>> = self
             .oracular_index
             .as_ref()
-            .map(|idx| patterns.iter().map(|p| inner.shard.split(&idx.candidates(p))).collect());
+            .map(|idx| patterns.iter().map(|p| shard_map.split(&idx.candidates(p))).collect());
         let (expected, total_candidates): (usize, usize) = match &oracular_plan {
             Some(plan) => (
                 plan.iter().map(|per| per.len()).sum(),
@@ -716,7 +1059,14 @@ impl Coordinator {
         let sent = AtomicUsize::new(0);
 
         let mut results: Vec<WorkResult> = (0..patterns.len())
-            .map(|pid| WorkResult { pattern_id: pid, best: None, hits: Vec::new(), passes: 0 })
+            .map(|pid| WorkResult {
+                pattern_id: pid,
+                best: None,
+                hits: Vec::new(),
+                passes: 0,
+                faults_injected: 0,
+                faults_detected: 0,
+            })
             .collect();
         let mut lane_stats: Vec<LaneStats> = (0..n_lanes).map(LaneStats::idle).collect();
         let mut run_err: Option<anyhow::Error> = None;
@@ -728,19 +1078,36 @@ impl Coordinator {
             let feeder = scope.spawn({
                 let fragments = &self.fragments;
                 let oracular_plan = &oracular_plan;
-                let shard = &inner.shard;
+                let shard = shard_map;
                 let stop = &stop;
                 let sent = &sent;
                 let alphabet = self.cfg.alphabet;
                 let semantics = self.cfg.semantics;
                 move || {
-                    let send = |lane: usize, item: WorkItem| -> bool {
+                    let send = |lane: usize, mut item: WorkItem| -> bool {
                         let Some(tx) = lanes[lane].work_tx.as_ref() else { return false };
-                        let ok = tx.send(item).is_ok();
-                        if ok {
-                            sent.fetch_add(1, Ordering::SeqCst);
+                        // Non-blocking with stop polling: a blocking
+                        // send into a wedged lane's full queue would
+                        // strand this feeder (and the scope join behind
+                        // it) past any stall detection the reducer
+                        // does. Instead, poll the queue and bail out as
+                        // soon as the run is being aborted.
+                        loop {
+                            if stop.load(Ordering::Relaxed) {
+                                return false;
+                            }
+                            match tx.try_send(item) {
+                                Ok(()) => {
+                                    sent.fetch_add(1, Ordering::SeqCst);
+                                    return true;
+                                }
+                                Err(mpsc::TrySendError::Full(back)) => {
+                                    item = back;
+                                    std::thread::sleep(Duration::from_micros(500));
+                                }
+                                Err(mpsc::TrySendError::Disconnected(_)) => return false,
+                            }
                         }
-                        ok
                     };
                     for pid in 0..patterns.len() {
                         match oracular_plan {
@@ -798,7 +1165,7 @@ impl Coordinator {
             let mut received = 0usize;
             let mut aborted = false;
             while received < expected {
-                match inner.res_rx.recv() {
+                match res_rx.recv_timeout(self.cfg.stall_timeout) {
                     Ok(msg) => {
                         received += 1;
                         let stats = &mut lane_stats[msg.lane];
@@ -809,6 +1176,8 @@ impl Coordinator {
                                 stats.passes += partial.passes;
                                 let r = &mut results[partial.pattern_id];
                                 r.passes += partial.passes;
+                                r.faults_injected += partial.faults_injected;
+                                r.faults_detected += partial.faults_detected;
                                 if is_better(&partial.best, &r.best) {
                                     r.best = partial.best;
                                 }
@@ -831,7 +1200,22 @@ impl Coordinator {
                             }
                         }
                     }
-                    Err(_) => {
+                    // No lane replied for the whole stall window with
+                    // results still outstanding: a wedged engine, not a
+                    // slow one. Abort with the typed stall — the
+                    // caller's next run respawns the lane set.
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if run_err.is_none() {
+                            run_err = Some(anyhow::Error::new(CoordinatorError::LanesStalled {
+                                waited_ms: self.cfg.stall_timeout.as_millis() as u64,
+                                missing: expected - received,
+                            }));
+                        }
+                        stop.store(true, Ordering::Relaxed);
+                        aborted = true;
+                        break;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
                         if run_err.is_none() {
                             run_err = Some(anyhow!("executor lanes exited mid-run"));
                         }
@@ -845,13 +1229,30 @@ impl Coordinator {
                 // shared channel is empty for the next run. The timeout
                 // covers the window where the feeder is between sends:
                 // once it has finished and all sent items are in,
-                // nothing more can arrive. Draining concurrently also
-                // unblocks a feeder parked on a full lane queue.
+                // nothing more can arrive. The total wait is bounded by
+                // `stall_timeout`: if a wedged lane never replies, give
+                // up with the typed stall (composed onto whatever error
+                // aborted the run) and leave the set dirty for rebuild
+                // instead of spinning here forever.
+                let drain_deadline = Instant::now() + self.cfg.stall_timeout;
                 loop {
                     if feeder.is_finished() && received >= sent.load(Ordering::SeqCst) {
                         break;
                     }
-                    match inner.res_rx.recv_timeout(Duration::from_millis(10)) {
+                    let now = Instant::now();
+                    if now >= drain_deadline {
+                        let stalled = CoordinatorError::LanesStalled {
+                            waited_ms: self.cfg.stall_timeout.as_millis() as u64,
+                            missing: sent.load(Ordering::SeqCst).saturating_sub(received),
+                        };
+                        run_err = Some(match run_err.take() {
+                            Some(e) => e.context(stalled),
+                            None => anyhow::Error::new(stalled),
+                        });
+                        break;
+                    }
+                    let wait = (drain_deadline - now).min(Duration::from_millis(10));
+                    match res_rx.recv_timeout(wait) {
                         Ok(_) => received += 1,
                         Err(mpsc::RecvTimeoutError::Timeout) => {}
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -861,8 +1262,22 @@ impl Coordinator {
             let _ = feeder.join();
         });
         if let Some(e) = run_err {
+            // Lanes stay suspect — and force a rebuild before the next
+            // run — only when the failure says so: a stall leaves
+            // wedged threads and possibly stale in-flight results; a
+            // quarantine leaves a lane with an exhausted restart
+            // budget. Every other failure completed its drain above,
+            // so the set is clean and persists.
+            inner.dirty = matches!(
+                e.downcast_ref::<CoordinatorError>(),
+                Some(
+                    CoordinatorError::LanesStalled { .. }
+                        | CoordinatorError::LaneQuarantined { .. }
+                )
+            );
             return Err(e);
         }
+        inner.dirty = false;
         // Canonicalize the concatenated per-lane hit partials: the
         // row-major / best-first orders (and the top-K bound) are
         // re-established per pattern, so hit lists are bit-identical
@@ -878,8 +1293,15 @@ impl Coordinator {
             s.occupancy = if wall > 0.0 { s.busy_seconds / wall } else { 0.0 };
         }
         let mean_candidates = total_candidates as f64 / patterns.len().max(1) as f64;
-        let metrics =
-            self.project_hardware(patterns.len(), mean_candidates, wall, &results, lane_stats);
+        let lane_restarts = self.restarts.load(Ordering::SeqCst).saturating_sub(restarts_before);
+        let metrics = self.project_hardware(
+            patterns.len(),
+            mean_candidates,
+            wall,
+            &results,
+            lane_stats,
+            lane_restarts,
+        );
         Ok((results, metrics))
     }
 
@@ -892,6 +1314,7 @@ impl Coordinator {
         wall: f64,
         results: &[WorkResult],
         lane_stats: Vec<LaneStats>,
+        lane_restarts: usize,
     ) -> RunMetrics {
         let rows = self.fragments.len().min(10_240).max(1);
         let arrays = self.fragments.len().div_ceil(rows);
@@ -930,6 +1353,9 @@ impl Coordinator {
             hw_seconds: sharded.pool_time,
             hw_energy: sharded.pool_energy,
             hw_match_rate: sharded.match_rate,
+            faults_injected: results.iter().map(|r| r.faults_injected).sum(),
+            faults_detected: results.iter().map(|r| r.faults_detected).sum(),
+            lane_restarts,
         }
     }
 }
@@ -1275,5 +1701,149 @@ mod tests {
                 a.pattern_id
             );
         }
+    }
+
+    /// Full per-pattern answers (best + hit list) for equality checks
+    /// across fault/protection configurations.
+    fn answers(results: &[WorkResult]) -> Vec<(Option<BestAlignment>, Vec<crate::semantics::Hit>)> {
+        results.iter().map(|r| (r.best, r.hits.clone())).collect()
+    }
+
+    fn faulty_cfg(lanes: usize) -> CoordinatorConfig {
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.engine = EngineKind::Cpu;
+        cfg.oracular = None; // broadcast: plenty of scored candidates per item
+        cfg.semantics = MatchSemantics::Threshold { min_score: 12 };
+        cfg.lanes = lanes;
+        cfg
+    }
+
+    /// Protection with a perfect device is pure overhead: answers stay
+    /// bit-identical and no faults are counted.
+    #[test]
+    fn protection_without_faults_is_bit_identical() {
+        let w = DnaWorkload::generate(2048, 24, 16, 0.05, 41);
+        let frags = w.fragments(64, 16);
+        let plain = Coordinator::new(faulty_cfg(2), frags.clone()).unwrap();
+        let (clean, _) = plain.run(&w.patterns).unwrap();
+        let mut cfg = faulty_cfg(2);
+        cfg.protection = Some(Protection::default());
+        let protected = Coordinator::new(cfg, frags).unwrap();
+        let (res, m) = protected.run(&w.patterns).unwrap();
+        assert_eq!(answers(&res), answers(&clean));
+        assert_eq!((m.faults_injected, m.faults_detected, m.lane_restarts), (0, 0, 0));
+    }
+
+    /// The tentpole acceptance at the pipeline level: with a fault plan
+    /// actively flipping readout bits, re-execution voting recovers the
+    /// fault-free answers bit for bit — and proves it was not a no-op
+    /// by counting injected and detected faults.
+    #[test]
+    fn protected_faulty_run_matches_the_fault_free_oracle() {
+        let w = DnaWorkload::generate(2048, 48, 16, 0.0, 77);
+        let frags = w.fragments(64, 16);
+        let plain = Coordinator::new(faulty_cfg(2), frags.clone()).unwrap();
+        let (clean, _) = plain.run(&w.patterns).unwrap();
+        let mut cfg = faulty_cfg(2);
+        cfg.fault = Some(FaultPlan::rates(0.0, 0.0, 3e-4, 9));
+        cfg.protection = Some(Protection { votes: 2, max_retries: 20 });
+        let protected = Coordinator::new(cfg, frags).unwrap();
+        let (res, m) = protected.run(&w.patterns).unwrap();
+        assert_eq!(answers(&res), answers(&clean), "voting must reproduce the oracle");
+        assert!(m.faults_injected > 0, "the plan never fired: {m:?}");
+        assert!(m.faults_detected > 0, "nothing was caught: {m:?}");
+    }
+
+    /// The control arm: the same fault rates without protection corrupt
+    /// visibly — otherwise the tentpole test above proves nothing.
+    #[test]
+    fn unprotected_faults_diverge_visibly() {
+        let w = DnaWorkload::generate(2048, 48, 16, 0.0, 77);
+        let frags = w.fragments(64, 16);
+        let plain = Coordinator::new(faulty_cfg(2), frags.clone()).unwrap();
+        let (clean, _) = plain.run(&w.patterns).unwrap();
+        let mut cfg = faulty_cfg(2);
+        cfg.fault = Some(FaultPlan::rates(0.0, 0.0, 5e-3, 9));
+        let exposed = Coordinator::new(cfg, frags).unwrap();
+        let (res, m) = exposed.run(&w.patterns).unwrap();
+        assert!(m.faults_injected > 0);
+        assert_eq!(m.faults_detected, 0, "no protection, nothing may be counted as caught");
+        assert_ne!(answers(&res), answers(&clean), "faults at 5e-3/op must corrupt something");
+    }
+
+    /// Lane supervision: an executor panic mid-batch is absorbed — the
+    /// engine respawns in place, the item is retried, the run completes
+    /// with the exact fault-free answers, and the restart is counted.
+    #[test]
+    fn panicking_item_respawns_the_lane_and_completes() {
+        let w = DnaWorkload::generate(2048, 24, 16, 0.0, 77);
+        let frags = w.fragments(64, 16);
+        let plain = Coordinator::new(faulty_cfg(2), frags.clone()).unwrap();
+        let (clean, _) = plain.run(&w.patterns).unwrap();
+        let mut cfg = faulty_cfg(2);
+        cfg.fault = Some(FaultPlan::panic_on_item(5));
+        let supervised = Coordinator::new(cfg, frags).unwrap();
+        let (res, m) = supervised.run(&w.patterns).unwrap();
+        assert_eq!(answers(&res), answers(&clean));
+        assert_eq!(m.lane_restarts, 1, "exactly one respawn: {m:?}");
+        // The panic budget is spent; later runs are undisturbed.
+        let (res2, m2) = supervised.run(&w.patterns).unwrap();
+        assert_eq!(answers(&res2), answers(&clean));
+        assert_eq!(m2.lane_restarts, 0);
+    }
+
+    /// Past the restart budget the lane quarantines with a typed error
+    /// — and the next run self-heals by respawning the lane set.
+    #[test]
+    fn quarantine_is_typed_and_the_next_run_heals() {
+        let w = DnaWorkload::generate(2048, 24, 16, 0.0, 77);
+        let frags = w.fragments(64, 16);
+        // One lane: a multi-lane broadcast would race both copies of
+        // pattern 3 at the shared panic budget and could split the
+        // three panics across lanes, leaving every lane under budget.
+        let mut cfg = faulty_cfg(1);
+        cfg.fault = Some(FaultPlan::panic_on_item_times(3, 3));
+        cfg.max_lane_restarts = 2;
+        let c = Coordinator::new(cfg, frags.clone()).unwrap();
+        let err = c.run(&w.patterns).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CoordinatorError>(),
+                Some(&CoordinatorError::LaneQuarantined { restarts: 3, .. })
+            ),
+            "unexpected: {err:#}"
+        );
+        // The panic budget (3) is exhausted; the rebuilt lane set must
+        // answer exactly like an undisturbed coordinator.
+        let (res, m) = c.run(&w.patterns).unwrap();
+        let plain = Coordinator::new(faulty_cfg(1), frags).unwrap();
+        let (clean, _) = plain.run(&w.patterns).unwrap();
+        assert_eq!(answers(&res), answers(&clean));
+        assert_eq!(m.lane_restarts, 0);
+    }
+
+    /// A wedged lane (engine stalled mid-item) trips the reducer's
+    /// stall detector instead of hanging the run, and the next run
+    /// respawns the lane set and succeeds.
+    #[test]
+    fn stalled_lane_times_out_typed_and_the_next_run_heals() {
+        let w = DnaWorkload::generate(2048, 8, 16, 0.0, 77);
+        let frags = w.fragments(64, 16);
+        let mut cfg = faulty_cfg(2);
+        cfg.fault = Some(FaultPlan::stall_on_item(2, 2_000));
+        cfg.stall_timeout = Duration::from_millis(200);
+        let c = Coordinator::new(cfg, frags).unwrap();
+        let err = c.run(&w.patterns).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CoordinatorError>(),
+                Some(&CoordinatorError::LanesStalled { .. })
+            ),
+            "unexpected: {err:#}"
+        );
+        // Stall budget spent; the respawned lane set recovers.
+        let (res, m) = c.run(&w.patterns).unwrap();
+        assert_eq!(res.len(), w.patterns.len());
+        assert_eq!(m.patterns, w.patterns.len());
     }
 }

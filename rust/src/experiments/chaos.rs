@@ -1,0 +1,519 @@
+//! Chaos sweep (fault-tolerance acceptance): stochastic device faults
+//! × engines × query semantics, **adversarially end to end** — every
+//! configuration runs three times against the same pool:
+//!
+//! 1. **clean** (no fault plan): the fault-free oracle;
+//! 2. **protected** (gate/write 1e-5, readout 1e-3 flips per op, with
+//!    re-execution voting + invariant checks armed): must be
+//!    **bit-identical** to the clean run — best answers and full hit
+//!    lists — while actually injecting and catching faults;
+//! 3. **unprotected** (rates one dial higher, no protection): must
+//!    **visibly diverge** from the clean run, proving the fault
+//!    injection isn't a no-op and the protection earns its keep.
+//!
+//! A forced executor panic per engine then exercises lane supervision:
+//! the lane respawns in place (exactly one restart) and the merged
+//! answers stay bit-identical to the clean oracle.
+//!
+//! Every property is `ensure!`d, so the run fails exit-code-visibly in
+//! CI on any violation. `--json` emits `BENCH_faults.json`; the
+//! committed anchor at the repository root pins the deterministic
+//! shape (point geometry, the `identical` verdicts, the recovery
+//! restart count). The raw fault counters are deterministic too (the
+//! fault plan is seed-split per pattern × attempt and the lane count
+//! is fixed), and their keys gate exactly — promote a CI-measured
+//! artifact over the anchor to pin them (EXPERIMENTS.md §Bench gate).
+
+use crate::bench_apps::dna::DnaWorkload;
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, EngineKind, Protection, RunMetrics, WorkResult,
+};
+use crate::experiments::rule;
+use crate::fault::FaultPlan;
+use crate::semantics::{Hit, MatchSemantics};
+use crate::util::Json;
+use std::path::Path;
+use std::time::Instant;
+
+/// Per-op flip rates for one fault regime.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultRates {
+    /// Gate-output flip probability per logic op.
+    pub gate: f64,
+    /// Write-disturb flip probability per written bit.
+    pub write: f64,
+    /// Readout flip probability per read op.
+    pub read: f64,
+}
+
+/// Sizes and regimes of one sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosKnobs {
+    /// Reference length, characters.
+    pub ref_chars: usize,
+    /// Patterns per pool.
+    pub n_patterns: usize,
+    /// Fragment length, characters (fold width).
+    pub frag_chars: usize,
+    /// Pattern length, characters.
+    pub pat_chars: usize,
+    /// Per-character error rate of the sampled patterns (0: planted
+    /// patterns score `pat_chars` exactly, so divergence is crisp).
+    pub error_rate: f64,
+    /// `Threshold` floor swept alongside best-of and top-K.
+    pub min_score: usize,
+    /// `TopK` width.
+    pub k: usize,
+    /// Executor lane count (fixed: fault counters are summed per lane,
+    /// so the deterministic totals are a function of the shard split).
+    pub lanes: usize,
+    /// The regime protection must survive bit-identically.
+    pub protected: FaultRates,
+    /// The regime that must visibly corrupt an unprotected run.
+    pub unprotected: FaultRates,
+    /// Re-execution votes required to accept a result.
+    pub votes: usize,
+    /// Extra re-executions allowed beyond the vote quorum.
+    pub max_retries: usize,
+    /// Workload seed (fault-plan seeds split off it per point).
+    pub seed: u64,
+}
+
+impl ChaosKnobs {
+    /// Default scale. The geometry stays compact on purpose — chaos
+    /// probes correctness under faults, not throughput — while the
+    /// pattern pool is 4× the smoke pool.
+    pub fn standard() -> Self {
+        ChaosKnobs {
+            ref_chars: 512,
+            n_patterns: 48,
+            frag_chars: 64,
+            pat_chars: 16,
+            error_rate: 0.0,
+            min_score: 12,
+            k: 4,
+            lanes: 2,
+            protected: FaultRates { gate: 1e-5, write: 1e-5, read: 1e-3 },
+            unprotected: FaultRates { gate: 2e-4, write: 2e-4, read: 2e-2 },
+            votes: 2,
+            max_retries: 13,
+            seed: 0xFA17,
+        }
+    }
+
+    /// CI chaos-smoke scale: seconds, not minutes. The committed
+    /// `BENCH_faults.json` anchor pins this sweep's deterministic
+    /// shape.
+    pub fn smoke() -> Self {
+        ChaosKnobs { n_patterns: 12, ..ChaosKnobs::standard() }
+    }
+
+    /// The three semantics swept.
+    pub fn semantics(&self) -> [MatchSemantics; 3] {
+        [
+            MatchSemantics::BestOf,
+            MatchSemantics::Threshold { min_score: self.min_score },
+            MatchSemantics::TopK { k: self.k },
+        ]
+    }
+
+    /// The engines with a device model. The XLA artifact path has no
+    /// gate/write/readout structure to corrupt, so it is out of scope.
+    pub fn engines(&self) -> [EngineKind; 2] {
+        [EngineKind::Cpu, EngineKind::Bitsim]
+    }
+}
+
+/// One (engine, semantics) cell: clean vs protected vs unprotected.
+#[derive(Debug, Clone)]
+pub struct ChaosPoint {
+    /// The engine whose device model was corrupted.
+    pub engine: EngineKind,
+    /// The query semantics.
+    pub semantics: MatchSemantics,
+    /// Executor lane count.
+    pub lanes: usize,
+    /// Patterns served per run.
+    pub patterns: usize,
+    /// Faults injected across the protected run (all attempts).
+    pub faults_injected: usize,
+    /// Corrupted executions the protection caught in the protected run.
+    pub faults_detected: usize,
+    /// Whether the protected run was bit-identical to the clean run.
+    pub protected_identical: bool,
+    /// Faults injected across the unprotected run.
+    pub unprotected_injected: usize,
+    /// Patterns whose unprotected answer diverged from the clean run.
+    pub diverged_patterns: usize,
+    /// Clean / protected / unprotected wall times, seconds.
+    pub clean_s: f64,
+    /// Protected-run wall time, seconds (voting re-executes items).
+    pub protected_s: f64,
+    /// Unprotected-run wall time, seconds.
+    pub unprotected_s: f64,
+}
+
+/// One forced-panic recovery exercise.
+#[derive(Debug, Clone)]
+pub struct RecoveryPoint {
+    /// The engine whose lane executor was panicked.
+    pub engine: EngineKind,
+    /// In-place lane respawns the supervisor performed (must be 1).
+    pub lane_restarts: usize,
+    /// Whether the recovered run was bit-identical to the clean run.
+    pub identical: bool,
+}
+
+/// The full answer of one run — what bit-identity is judged on.
+fn answers(results: &[WorkResult]) -> Vec<(Option<Hit>, Vec<Hit>)> {
+    results.iter().map(|r| (r.best, r.hits.clone())).collect()
+}
+
+fn base_cfg(knobs: &ChaosKnobs, engine: EngineKind, semantics: MatchSemantics) -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::xla("dna_small", knobs.frag_chars, knobs.pat_chars);
+    cfg.engine = engine;
+    cfg.oracular = None; // broadcast: every row scores, so faults have targets
+    cfg.semantics = semantics;
+    cfg.lanes = knobs.lanes;
+    cfg
+}
+
+fn timed_run(
+    cfg: CoordinatorConfig,
+    fragments: &[Vec<u8>],
+    pool: &[Vec<u8>],
+) -> crate::Result<(Vec<WorkResult>, RunMetrics, f64)> {
+    let c = Coordinator::new(cfg, fragments.to_vec())?;
+    let t0 = Instant::now();
+    let (results, metrics) = c.run(pool)?;
+    Ok((results, metrics, t0.elapsed().as_secs_f64()))
+}
+
+/// Run one (engine, semantics) cell and `ensure!` its acceptance
+/// properties.
+fn run_point(
+    knobs: &ChaosKnobs,
+    w: &DnaWorkload,
+    fragments: &[Vec<u8>],
+    engine: EngineKind,
+    semantics: MatchSemantics,
+    fault_seed: u64,
+) -> crate::Result<ChaosPoint> {
+    let tag = format!("{engine:?} {semantics}");
+
+    let (clean, clean_m, clean_s) =
+        timed_run(base_cfg(knobs, engine, semantics), fragments, &w.patterns)?;
+    anyhow::ensure!(
+        clean_m.faults_injected == 0 && clean_m.faults_detected == 0 && clean_m.lane_restarts == 0,
+        "{tag}: the fault-free oracle run reported fault activity"
+    );
+    let clean_answers = answers(&clean);
+
+    let mut cfg = base_cfg(knobs, engine, semantics);
+    let r = knobs.protected;
+    cfg.fault = Some(FaultPlan::rates(r.gate, r.write, r.read, fault_seed));
+    cfg.protection = Some(Protection { votes: knobs.votes, max_retries: knobs.max_retries });
+    let (protected, prot_m, protected_s) = timed_run(cfg, fragments, &w.patterns)?;
+    let protected_identical = answers(&protected) == clean_answers;
+    anyhow::ensure!(
+        protected_identical,
+        "{tag}: protected run diverged from the fault-free oracle at rates \
+         gate={} write={} read={} per op",
+        r.gate,
+        r.write,
+        r.read
+    );
+    anyhow::ensure!(
+        prot_m.faults_injected > 0,
+        "{tag}: protected run injected nothing — the fault plan is not reaching the engine"
+    );
+
+    let mut cfg = base_cfg(knobs, engine, semantics);
+    let r = knobs.unprotected;
+    cfg.fault = Some(FaultPlan::rates(r.gate, r.write, r.read, fault_seed ^ 0x5EED));
+    let (unprotected, unprot_m, unprotected_s) = timed_run(cfg, fragments, &w.patterns)?;
+    anyhow::ensure!(
+        unprot_m.faults_detected == 0,
+        "{tag}: detection fired without protection armed"
+    );
+    let diverged = answers(&unprotected)
+        .iter()
+        .zip(&clean_answers)
+        .filter(|(a, b)| a != b)
+        .count();
+    anyhow::ensure!(
+        diverged >= 1,
+        "{tag}: unprotected run at gate={} write={} read={} per op stayed identical — \
+         the injected faults are invisible",
+        r.gate,
+        r.write,
+        r.read
+    );
+
+    Ok(ChaosPoint {
+        engine,
+        semantics,
+        lanes: knobs.lanes,
+        patterns: clean_m.patterns,
+        faults_injected: prot_m.faults_injected,
+        faults_detected: prot_m.faults_detected,
+        protected_identical,
+        unprotected_injected: unprot_m.faults_injected,
+        diverged_patterns: diverged,
+        clean_s,
+        protected_s,
+        unprotected_s,
+    })
+}
+
+/// Force one executor panic per engine and prove lane supervision
+/// recovers bit-identically.
+fn run_recovery(
+    knobs: &ChaosKnobs,
+    w: &DnaWorkload,
+    fragments: &[Vec<u8>],
+    engine: EngineKind,
+) -> crate::Result<RecoveryPoint> {
+    let (clean, _, _) =
+        timed_run(base_cfg(knobs, engine, MatchSemantics::BestOf), fragments, &w.patterns)?;
+    let mut cfg = base_cfg(knobs, engine, MatchSemantics::BestOf);
+    cfg.fault = Some(FaultPlan::panic_on_item(0));
+    let (recovered, m, _) = timed_run(cfg, fragments, &w.patterns)?;
+    let identical = answers(&recovered) == answers(&clean);
+    anyhow::ensure!(
+        identical,
+        "{engine:?}: the respawned lane's merge diverged from the clean run"
+    );
+    anyhow::ensure!(
+        m.lane_restarts == 1,
+        "{engine:?}: expected exactly one supervised respawn, saw {}",
+        m.lane_restarts
+    );
+    Ok(RecoveryPoint { engine, lane_restarts: m.lane_restarts, identical })
+}
+
+/// Run the sweep. Fails (exit-code-visibly, for CI) on any violated
+/// fault-tolerance property.
+pub fn sweep(knobs: &ChaosKnobs) -> crate::Result<(Vec<ChaosPoint>, Vec<RecoveryPoint>)> {
+    let w = DnaWorkload::generate(
+        knobs.ref_chars,
+        knobs.n_patterns,
+        knobs.pat_chars,
+        knobs.error_rate,
+        knobs.seed,
+    );
+    let fragments = w.fragments(knobs.frag_chars, knobs.pat_chars);
+    let mut points = Vec::new();
+    let mut idx = 0u64;
+    for engine in knobs.engines() {
+        for semantics in knobs.semantics() {
+            idx += 1;
+            let fault_seed = knobs.seed ^ (idx << 32);
+            points.push(run_point(knobs, &w, &fragments, engine, semantics, fault_seed)?);
+        }
+    }
+    // Individual protected points can legitimately catch zero faults
+    // (most injected flips land on scores that stay below threshold),
+    // but across the sweep the detector must have fired.
+    let detected: usize = points.iter().map(|p| p.faults_detected).sum();
+    anyhow::ensure!(
+        detected > 0,
+        "no protected point detected any fault — voting/invariants are not engaging"
+    );
+    let mut recovery = Vec::new();
+    for engine in knobs.engines() {
+        recovery.push(run_recovery(knobs, &w, &fragments, engine)?);
+    }
+    Ok((points, recovery))
+}
+
+/// The `BENCH_faults.json` document.
+fn to_json(
+    knobs: &ChaosKnobs,
+    smoke: bool,
+    points: &[ChaosPoint],
+    recovery: &[RecoveryPoint],
+) -> Json {
+    Json::obj(vec![
+        ("experiment", Json::str("chaos")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "config",
+            Json::obj(vec![
+                ("ref_chars", Json::int(knobs.ref_chars)),
+                ("n_patterns", Json::int(knobs.n_patterns)),
+                ("frag_chars", Json::int(knobs.frag_chars)),
+                ("pat_chars", Json::int(knobs.pat_chars)),
+                ("min_score", Json::int(knobs.min_score)),
+                ("k", Json::int(knobs.k)),
+                ("lanes", Json::int(knobs.lanes)),
+                ("votes", Json::int(knobs.votes)),
+                ("max_retries", Json::int(knobs.max_retries)),
+                ("seed", Json::int(knobs.seed as usize)),
+                ("protected_read_flips_per_op", Json::num(knobs.protected.read)),
+                ("unprotected_read_flips_per_op", Json::num(knobs.unprotected.read)),
+            ]),
+        ),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("engine", Json::str(format!("{:?}", p.engine).to_lowercase())),
+                            ("semantics", Json::str(p.semantics.tag())),
+                            ("lanes", Json::int(p.lanes)),
+                            ("patterns", Json::int(p.patterns)),
+                            (
+                                "protected",
+                                Json::obj(vec![
+                                    ("faults_injected", Json::int(p.faults_injected)),
+                                    ("faults_detected", Json::int(p.faults_detected)),
+                                    ("identical", Json::Bool(p.protected_identical)),
+                                    ("wall_s", Json::num(p.protected_s)),
+                                ]),
+                            ),
+                            (
+                                "unprotected",
+                                Json::obj(vec![
+                                    ("faults_injected", Json::int(p.unprotected_injected)),
+                                    ("diverged_patterns", Json::int(p.diverged_patterns)),
+                                    ("wall_s", Json::num(p.unprotected_s)),
+                                ]),
+                            ),
+                            ("clean_s", Json::num(p.clean_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "recovery",
+            Json::Arr(
+                recovery
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("engine", Json::str(format!("{:?}", r.engine).to_lowercase())),
+                            ("lane_restarts", Json::int(r.lane_restarts)),
+                            ("identical", Json::Bool(r.identical)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Experiment-driver entry point. Errors propagate so the CI step
+/// fails loudly.
+pub fn run_with(smoke: bool, json: Option<&Path>) -> crate::Result<()> {
+    let knobs = if smoke { ChaosKnobs::smoke() } else { ChaosKnobs::standard() };
+    rule("Chaos — device faults × engines × semantics, protected vs unprotected");
+    println!(
+        "  {} chars folded into {}-char fragments; {} patterns × {} chars; \
+         protected flips/op: gate {:.0e} write {:.0e} read {:.0e} (votes={}, retries<={}); \
+         unprotected: gate {:.0e} write {:.0e} read {:.0e}",
+        knobs.ref_chars,
+        knobs.frag_chars,
+        knobs.n_patterns,
+        knobs.pat_chars,
+        knobs.protected.gate,
+        knobs.protected.write,
+        knobs.protected.read,
+        knobs.votes,
+        knobs.max_retries,
+        knobs.unprotected.gate,
+        knobs.unprotected.write,
+        knobs.unprotected.read,
+    );
+    let (points, recovery) = sweep(&knobs)?;
+    println!(
+        "\n  {:<7} {:<13} {:>5} {:>8} {:>9} {:>9} {:>10} {:>9} {:>9}",
+        "engine",
+        "semantics",
+        "lanes",
+        "patterns",
+        "injected",
+        "detected",
+        "identical",
+        "raw inj",
+        "diverged"
+    );
+    for p in &points {
+        println!(
+            "  {:<7} {:<13} {:>5} {:>8} {:>9} {:>9} {:>10} {:>9} {:>9}",
+            format!("{:?}", p.engine).to_lowercase(),
+            p.semantics.tag(),
+            p.lanes,
+            p.patterns,
+            p.faults_injected,
+            p.faults_detected,
+            p.protected_identical,
+            p.unprotected_injected,
+            p.diverged_patterns,
+        );
+    }
+    for r in &recovery {
+        println!(
+            "  {:<7} forced panic: {} lane respawn, merge identical: {}",
+            format!("{:?}", r.engine).to_lowercase(),
+            r.lane_restarts,
+            r.identical
+        );
+    }
+    println!(
+        "\n  every protected run above is bit-identical to its fault-free oracle; \
+         every unprotected run visibly diverged (both by assertion)"
+    );
+    if let Some(path) = json {
+        to_json(&knobs, smoke, &points, &recovery)
+            .write_file(path)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        println!("\n  wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// Default-scale run (the `experiment chaos` / `experiment all` path).
+pub fn run() {
+    if let Err(e) = run_with(false, None) {
+        println!("  chaos experiment failed: {e:#}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance shape at smoke scale: protection-on runs are
+    /// bit-identical across both engines and all three semantics,
+    /// unprotected runs diverge, the panic exercise recovers with one
+    /// respawn, and the JSON report carries the gated fields.
+    #[test]
+    fn smoke_sweep_proves_protection_and_recovery() {
+        let knobs = ChaosKnobs::smoke();
+        let (points, recovery) = sweep(&knobs).unwrap();
+        assert_eq!(points.len(), 2 * 3, "2 engines × 3 semantics");
+        for p in &points {
+            assert!(p.protected_identical, "{:?} {}", p.engine, p.semantics);
+            assert!(p.faults_injected > 0, "{:?} {}", p.engine, p.semantics);
+            assert!(p.diverged_patterns >= 1, "{:?} {}", p.engine, p.semantics);
+            assert_eq!(p.patterns, knobs.n_patterns);
+        }
+        assert!(points.iter().map(|p| p.faults_detected).sum::<usize>() > 0);
+        assert_eq!(recovery.len(), 2);
+        for r in &recovery {
+            assert_eq!(r.lane_restarts, 1, "{:?}", r.engine);
+            assert!(r.identical, "{:?}", r.engine);
+        }
+        let doc = to_json(&knobs, true, &points, &recovery).render();
+        assert!(doc.contains("\"experiment\": \"chaos\""));
+        assert!(doc.contains("\"faults_injected\""));
+        assert!(doc.contains("\"faults_detected\""));
+        assert!(doc.contains("\"diverged_patterns\""));
+        assert!(doc.contains("\"lane_restarts\": 1"));
+        assert!(doc.contains("\"identical\": true"));
+    }
+}

@@ -11,6 +11,7 @@
 //! `cram-pm experiment --help`).
 
 pub mod ablation;
+pub mod chaos;
 pub mod fig11_gates;
 pub mod fig5_designs;
 pub mod fig6_breakdown;
@@ -50,4 +51,5 @@ pub fn run_all() {
     serving::run();
     workloads::run();
     hits::run();
+    chaos::run();
 }

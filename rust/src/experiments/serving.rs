@@ -164,6 +164,7 @@ pub fn sweep(knobs: &ServingKnobs) -> crate::Result<Vec<ServePoint>> {
                 backpressure: Backpressure::Block,
                 dedup,
                 max_hits: 4096,
+                deadline: None,
             },
         )?;
         let report = closed_loop(
@@ -208,6 +209,7 @@ pub fn open_loop_sweep(knobs: &ServingKnobs, smoke: bool) -> crate::Result<Vec<L
             backpressure: Backpressure::Reject,
             dedup: true,
             max_hits: 4096,
+            deadline: None,
         },
     )?;
     let rates: &[f64] = if smoke { &[200.0, 800.0] } else { &[500.0, 2000.0, 8000.0] };
@@ -236,6 +238,9 @@ fn to_json(knobs: &ServingKnobs, smoke: bool, points: &[ServePoint], open: &[Loa
             ("label", Json::str(r.label.clone())),
             ("requests", Json::int(r.requests)),
             ("rejected", Json::int(r.rejected)),
+            ("retries", Json::int(r.retries)),
+            ("gave_up", Json::int(r.gave_up)),
+            ("backoff_s", Json::num(r.backoff_seconds)),
             ("wall_seconds", Json::num(r.wall_seconds)),
             ("request_rate", Json::num(r.request_rate)),
             ("pattern_rate", Json::num(r.pattern_rate)),

@@ -1,0 +1,421 @@
+//! Deterministic fault injection for the stochastic substrate.
+//!
+//! CRAM-PM's gates are thermally-activated MTJ switches: real in-memory
+//! logic flips output bits at a nonzero per-operation rate, writes
+//! disturb neighbouring cells, and readout sensing misfires — the
+//! reliability picture computational phase-change memory (Sebastian et
+//! al.) and STT-MRAM compute substrates (Jain et al.) share. The bitsim
+//! models a perfect device unless told otherwise; this module is the
+//! "otherwise".
+//!
+//! A [`FaultPlan`] carries one per-op flip rate per fault channel
+//! ([`FaultChannel::Gate`] / [`FaultChannel::Write`] /
+//! [`FaultChannel::Read`]) plus a seed. Plans are **seed-splittable**:
+//! [`FaultPlan::session`] derives an independent deterministic stream
+//! per `(pattern, attempt)`, so re-executing a work item under
+//! protection draws *fresh* faults (re-execution voting would be
+//! useless against replayed ones) while the whole run stays
+//! reproducible bit for bit under a fixed plan seed.
+//!
+//! Within a session, faults are sampled by **geometric gap skipping**:
+//! instead of one Bernoulli draw per device op (the hot loop does
+//! millions), the session draws the gap to the next faulty op from the
+//! geometric distribution `floor(ln U / ln(1-p))` and counts ops down
+//! to it — statistically identical, nearly free when rates are low,
+//! and exactly free (`u64::MAX` sentinel, one integer compare) when a
+//! channel's rate is zero. At most one flip fires per faulty op, which
+//! is exact to first order for the `p ≪ 1` rates physical devices have.
+//!
+//! The plan also carries the two **test-only supervision hooks** the
+//! coordinator's lane-respawn machinery is proven against:
+//! [`FaultPlan::panic_on_item`] (the executor panics mid-batch, a
+//! bounded number of times) and [`FaultPlan::stall_on_item`] (the
+//! executor wedges for a fixed duration, tripping the stall detector).
+//! Both decrement a shared atomic budget so a respawned lane's retry of
+//! the same item succeeds — that is what makes "bit-identical after
+//! respawn" testable.
+
+use crate::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// The three device-error channels of the array model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultChannel {
+    /// Gate-output flip: one bulk gate application writes a wrong bit
+    /// into its output column (thermally-activated MTJ switching).
+    Gate = 0,
+    /// Write-disturb flip: staging a code bit into the array corrupts a
+    /// cell.
+    Write = 1,
+    /// Readout flip: the sense path reports a wrong bit of an assembled
+    /// row score.
+    Read = 2,
+}
+
+/// A bounded test-only trigger: fire (panic or stall) on a specific
+/// pattern id, `remaining` times total across all lanes and attempts.
+#[derive(Debug, Clone)]
+struct ItemTrigger {
+    pattern_id: usize,
+    remaining: Arc<AtomicUsize>,
+}
+
+impl ItemTrigger {
+    fn new(pattern_id: usize, times: usize) -> Self {
+        ItemTrigger { pattern_id, remaining: Arc::new(AtomicUsize::new(times)) }
+    }
+
+    /// Decrement-if-positive; true when this call claimed a firing.
+    fn claim(&self, pattern_id: usize) -> bool {
+        if pattern_id != self.pattern_id {
+            return false;
+        }
+        self.remaining
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+            .is_ok()
+    }
+}
+
+/// A deterministic, seed-splittable device-fault plan.
+///
+/// Cloning shares the panic/stall budgets (they are process-wide
+/// triggers) but the rate channels are pure parameters — every lane
+/// and attempt derives its own independent stream via
+/// [`FaultPlan::session`].
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Per-op probability of a gate-output flip.
+    pub gate_flip_rate: f64,
+    /// Per-op probability of a write-disturb flip.
+    pub write_flip_rate: f64,
+    /// Per-op probability of a readout flip.
+    pub read_flip_rate: f64,
+    /// Root seed every session stream splits from.
+    pub seed: u64,
+    panic_trigger: Option<ItemTrigger>,
+    stall_trigger: Option<(ItemTrigger, u64)>,
+}
+
+impl FaultPlan {
+    /// A plan with per-channel flip rates under a root seed.
+    pub fn rates(gate: f64, write: f64, read: f64, seed: u64) -> Self {
+        FaultPlan {
+            gate_flip_rate: gate,
+            write_flip_rate: write,
+            read_flip_rate: read,
+            seed,
+            panic_trigger: None,
+            stall_trigger: None,
+        }
+    }
+
+    /// Test-only supervision hook: the executor panics when it picks up
+    /// `pattern_id` — once. The budget is shared across clones, so the
+    /// respawned lane's retry of the same item runs clean.
+    pub fn panic_on_item(pattern_id: usize) -> Self {
+        Self::panic_on_item_times(pattern_id, 1)
+    }
+
+    /// [`FaultPlan::panic_on_item`] with an explicit firing budget
+    /// (`times` panics total, then the item executes normally) — used
+    /// to drive a lane past its restart quarantine.
+    pub fn panic_on_item_times(pattern_id: usize, times: usize) -> Self {
+        FaultPlan { panic_trigger: Some(ItemTrigger::new(pattern_id, times)), ..Self::default() }
+    }
+
+    /// Test-only supervision hook: the executor wedges (sleeps
+    /// `millis`) when it picks up `pattern_id` — once. Long enough a
+    /// stall trips the coordinator's typed stall detector instead of
+    /// hanging the run forever.
+    pub fn stall_on_item(pattern_id: usize, millis: u64) -> Self {
+        FaultPlan {
+            stall_trigger: Some((ItemTrigger::new(pattern_id, 1), millis)),
+            ..Self::default()
+        }
+    }
+
+    /// Whether any rate channel can fire (the zero-cost-when-disabled
+    /// gate: engines skip all fault plumbing when this is false).
+    pub fn rates_enabled(&self) -> bool {
+        self.gate_flip_rate > 0.0 || self.write_flip_rate > 0.0 || self.read_flip_rate > 0.0
+    }
+
+    /// Fire the test-only supervision hooks for `pattern_id`: panics or
+    /// sleeps if an armed trigger claims this execution. Called by the
+    /// lane executor at item pickup, inside its `catch_unwind`.
+    pub fn trip(&self, pattern_id: usize) {
+        if let Some((trigger, millis)) = &self.stall_trigger {
+            if trigger.claim(pattern_id) {
+                std::thread::sleep(std::time::Duration::from_millis(*millis));
+            }
+        }
+        if let Some(trigger) = &self.panic_trigger {
+            if trigger.claim(pattern_id) {
+                panic!("fault plan: injected executor panic on pattern {pattern_id}");
+            }
+        }
+    }
+
+    /// Split an independent deterministic fault stream for one
+    /// `(pattern, attempt)` execution.
+    pub fn session(&self, pattern_id: usize, attempt: u64) -> FaultSession {
+        let seed = mix(self.seed)
+            .wrapping_add(mix((pattern_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)))
+            .wrapping_add(mix(attempt.wrapping_mul(0xD1B5_4A32_D192_ED03) ^ 0xA24B_AED4_963E_E407));
+        FaultSession {
+            rng: Rng::new(seed),
+            channels: [
+                Channel::new(self.gate_flip_rate),
+                Channel::new(self.write_flip_rate),
+                Channel::new(self.read_flip_rate),
+            ],
+            injected: 0,
+        }
+    }
+}
+
+/// splitmix64 finalizer — the standard seed-splitting mix.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One rate channel's skip-sampling state.
+#[derive(Debug, Clone)]
+struct Channel {
+    /// Ops left before the next faulty one; `u64::MAX` when disabled.
+    until_next: u64,
+    /// `ln(1 − p)`; `0.0` doubles as the disabled marker (p ≤ 0).
+    ln_keep: f64,
+}
+
+impl Channel {
+    fn new(p: f64) -> Self {
+        if p <= 0.0 {
+            return Channel { until_next: u64::MAX, ln_keep: 0.0 };
+        }
+        // The first gap is drawn lazily on first use so construction
+        // costs no RNG draws for channels that never see an op.
+        Channel { until_next: 0, ln_keep: (1.0 - p.min(1.0)).ln() }
+    }
+}
+
+/// The deterministic per-execution fault stream
+/// ([`FaultPlan::session`]): counts device ops per channel and says
+/// which ones flip.
+#[derive(Debug, Clone)]
+pub struct FaultSession {
+    rng: Rng,
+    channels: [Channel; 3],
+    injected: usize,
+}
+
+impl FaultSession {
+    /// Account `ops` device operations on `channel`; `flip(offset)` is
+    /// called for each faulty op (0-based offset within this batch).
+    /// The caller maps the offset back to the device coordinate (cell,
+    /// column, row) it was about to touch.
+    pub fn flips(&mut self, channel: FaultChannel, ops: u64, mut flip: impl FnMut(u64)) {
+        let i = channel as usize;
+        if self.channels[i].ln_keep == 0.0 {
+            return; // disabled channel: one compare, no draws
+        }
+        if self.channels[i].until_next == 0 {
+            // Lazily draw the channel's first gap.
+            self.channels[i].until_next = self.gap(i);
+        }
+        let mut offset = 0u64;
+        loop {
+            let until = self.channels[i].until_next;
+            let left = ops - offset;
+            if until > left {
+                self.channels[i].until_next = until - left;
+                return;
+            }
+            // The `until`-th op from here (1-based) is the faulty one.
+            offset += until;
+            flip(offset - 1);
+            self.injected += 1;
+            self.channels[i].until_next = self.gap(i);
+            if offset >= ops {
+                return;
+            }
+        }
+    }
+
+    /// Whether a single op on `channel` faults (the CPU engine's
+    /// per-candidate shape, where one score is the whole device op).
+    pub fn one(&mut self, channel: FaultChannel) -> bool {
+        let mut hit = false;
+        self.flips(channel, 1, |_| hit = true);
+        hit
+    }
+
+    /// Uniform draw in `0..n` — which bit/cell a firing flip lands on.
+    pub fn pick(&mut self, n: usize) -> usize {
+        self.rng.below(n.max(1))
+    }
+
+    /// Corrupt one assembled candidate score as the CPU reference
+    /// device would see it: each enabled channel contributes one op for
+    /// this candidate, and a firing op flips one bit of the
+    /// `width`-bit score. (The CPU engine has no physical gate/write
+    /// ops to hook, so all three channels collapse onto the score.)
+    pub fn corrupt_score(&mut self, score: usize, width: usize) -> usize {
+        let mut s = score;
+        for channel in [FaultChannel::Gate, FaultChannel::Write, FaultChannel::Read] {
+            if self.one(channel) {
+                s ^= 1usize << self.pick(width.max(1));
+            }
+        }
+        s
+    }
+
+    /// Faults injected by this session so far.
+    pub fn injected(&self) -> usize {
+        self.injected
+    }
+
+    /// Draw the next geometric gap for channel `i`: the number of clean
+    /// ops before the faulty one, plus one (i.e. the 1-based index of
+    /// the next faulty op from now).
+    fn gap(&mut self, i: usize) -> u64 {
+        let ln_keep = self.channels[i].ln_keep;
+        if ln_keep == f64::NEG_INFINITY {
+            return 1; // p = 1: every op faults
+        }
+        // U ∈ (0,1]: next_f64 can return 0, which would send ln to -∞;
+        // clamp to the smallest positive normal instead (a gap cap,
+        // not a bias, at these magnitudes).
+        let u = self.rng.next_f64().max(f64::MIN_POSITIVE);
+        let g = (u.ln() / ln_keep).floor() + 1.0;
+        if g >= u64::MAX as f64 {
+            u64::MAX
+        } else {
+            g as u64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plan_never_fires() {
+        let plan = FaultPlan::default();
+        assert!(!plan.rates_enabled());
+        let mut s = plan.session(0, 0);
+        for ch in [FaultChannel::Gate, FaultChannel::Write, FaultChannel::Read] {
+            s.flips(ch, 1_000_000, |_| panic!("disabled channel fired"));
+        }
+        assert_eq!(s.injected(), 0);
+    }
+
+    #[test]
+    fn sessions_are_deterministic_and_split_by_pattern_and_attempt() {
+        let plan = FaultPlan::rates(1e-3, 1e-3, 1e-3, 42);
+        let collect = |pid: usize, attempt: u64| {
+            let mut s = plan.session(pid, attempt);
+            let mut offs = Vec::new();
+            s.flips(FaultChannel::Gate, 100_000, |o| offs.push(o));
+            (offs, s.injected())
+        };
+        let (a1, n1) = collect(3, 0);
+        let (a2, n2) = collect(3, 0);
+        assert_eq!(a1, a2, "same (pattern, attempt) must replay identically");
+        assert_eq!(n1, n2);
+        let (b, _) = collect(3, 1);
+        let (c, _) = collect(4, 0);
+        assert!(n1 > 0, "1e-3 over 100k ops fires w.h.p.");
+        assert_ne!(a1, b, "attempts must draw fresh faults");
+        assert_ne!(a1, c, "patterns must draw independent streams");
+    }
+
+    #[test]
+    fn geometric_skipping_matches_the_rate() {
+        let p = 2e-3;
+        let plan = FaultPlan::rates(0.0, p, 0.0, 7);
+        let ops = 500_000u64;
+        let mut s = plan.session(0, 0);
+        let mut count = 0usize;
+        s.flips(FaultChannel::Write, ops, |o| {
+            assert!(o < ops);
+            count += 1;
+        });
+        let expect = p * ops as f64;
+        // 500k ops at 2e-3 → mean 1000, σ ≈ 31.6; ±20 % is > 6σ.
+        assert!(
+            (count as f64) > expect * 0.8 && (count as f64) < expect * 1.2,
+            "observed {count} flips, expected ≈{expect:.0}"
+        );
+        assert_eq!(s.injected(), count);
+    }
+
+    #[test]
+    fn split_batches_fire_like_one_batch() {
+        // Counting 10 × 10k ops must replay the same faults as 1 × 100k:
+        // the gap state carries across `flips` calls.
+        let plan = FaultPlan::rates(1e-3, 0.0, 0.0, 99);
+        let mut s1 = plan.session(5, 2);
+        let mut whole = Vec::new();
+        s1.flips(FaultChannel::Gate, 100_000, |o| whole.push(o));
+        let mut s2 = plan.session(5, 2);
+        let mut parts = Vec::new();
+        for chunk in 0..10u64 {
+            s2.flips(FaultChannel::Gate, 10_000, |o| parts.push(chunk * 10_000 + o));
+        }
+        assert_eq!(whole, parts);
+    }
+
+    #[test]
+    fn certain_rate_fires_every_op() {
+        let plan = FaultPlan::rates(1.0, 0.0, 0.0, 1);
+        let mut s = plan.session(0, 0);
+        let mut offs = Vec::new();
+        s.flips(FaultChannel::Gate, 5, |o| offs.push(o));
+        assert_eq!(offs, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn corrupt_score_stays_within_width() {
+        let plan = FaultPlan::rates(0.2, 0.2, 0.2, 11);
+        let mut s = plan.session(1, 0);
+        let width = 5usize;
+        let mut changed = 0usize;
+        for _ in 0..2_000 {
+            let c = s.corrupt_score(16, width);
+            if c != 16 {
+                changed += 1;
+            }
+            assert!(c < 1 << width, "flip escaped the score width: {c}");
+        }
+        assert!(changed > 0, "0.2-per-channel rates must corrupt some scores");
+    }
+
+    #[test]
+    fn panic_budget_is_shared_and_bounded() {
+        let plan = FaultPlan::panic_on_item(7);
+        let clone = plan.clone();
+        plan.trip(3); // wrong item: no-op
+        let fired = std::panic::catch_unwind(|| clone.trip(7));
+        assert!(fired.is_err(), "armed trigger must panic on its item");
+        // Budget exhausted (shared across clones): the retry runs clean.
+        plan.trip(7);
+        clone.trip(7);
+    }
+
+    #[test]
+    fn stall_trigger_sleeps_once() {
+        let plan = FaultPlan::stall_on_item(2, 10);
+        let t0 = std::time::Instant::now();
+        plan.trip(2);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(10));
+        let t1 = std::time::Instant::now();
+        plan.trip(2); // budget spent: immediate
+        assert!(t1.elapsed() < std::time::Duration::from_millis(10));
+    }
+}

@@ -31,6 +31,7 @@
 //! | [`gates`] | §2.1–2.2 | resistive-divider gate formation, V_gate windows, compound XOR/adder sequences |
 //! | [`isa`] | §3.3 | micro/macro instructions and code generation |
 //! | [`array`] | §2.3–2.4, §3.1 | bit-level CRAM-PM array with row-parallel semantics |
+//! | [`fault`] | §2.1 (thermally-activated switching) | deterministic, seed-splittable device-fault injection: gate/write/readout flip channels, geometric skip sampling, supervision test hooks |
 //! | [`smc`] | §3.3 | memory controller: decode LUT, issue, cycle allocation |
 //! | [`sim`] | §4 stages (1)–(8) | step-accurate timing/energy engine, per-stage breakdowns |
 //! | [`semantics`] | §3.2 "Data Output" | query semantics: best-of / threshold / top-K hit enumeration shared by every engine and the lane merge |
@@ -50,6 +51,7 @@ pub mod bench_apps;
 pub mod coordinator;
 pub mod dna;
 pub mod experiments;
+pub mod fault;
 pub mod gates;
 pub mod isa;
 pub mod runtime;

@@ -1,8 +1,9 @@
 //! `cram-pm` — command-line interface to the CRAM-PM reproduction.
 //!
 //! ```text
-//! cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|tables|all>
+//! cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|chaos|tables|all>
 //!                    [--smoke] [--json FILE]
+//! cram-pm chaos [--smoke] [--json FILE]
 //! cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N]
 //!             [--pat-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F]
 //!             [--semantics best|threshold:N|topk:K]
@@ -30,7 +31,7 @@ use std::path::PathBuf;
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|tables|all> [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n              [--semantics best|threshold:N|topk:K]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm verify-programs\n  cram-pm simd-info\n  cram-pm info"
+        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|chaos|tables|all> [--smoke] [--json FILE]\n  cram-pm chaos [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n              [--semantics best|threshold:N|topk:K]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm verify-programs\n  cram-pm simd-info\n  cram-pm info"
     );
     std::process::exit(2);
 }
@@ -79,6 +80,7 @@ fn cmd_experiment(which: &str, kv: &FxHashMap<String, String>, flags: &[String])
         "serving" | "serve" => experiments::serving::run_with(smoke, json.as_deref())?,
         "workloads" | "alphabets" => experiments::workloads::run_with(smoke, json.as_deref())?,
         "hits" | "semantics" => experiments::hits::run_with(smoke, json.as_deref())?,
+        "chaos" | "faults" => experiments::chaos::run_with(smoke, json.as_deref())?,
         "all" => experiments::run_all(),
         other => {
             eprintln!("unknown experiment: {other}");
@@ -400,6 +402,11 @@ fn main() -> Result<()> {
         Some("serve-bench") => {
             let (kv, flags) = parse_flags(&args[1..]);
             cmd_serve_bench(&kv, &flags)?;
+        }
+        // Shorthand for `experiment chaos` (the CI chaos-smoke entry).
+        Some("chaos") => {
+            let (kv, flags) = parse_flags(&args[1..]);
+            cmd_experiment("chaos", &kv, &flags)?;
         }
         Some("bench-gate") => {
             let (kv, _) = parse_flags(&args[1..]);

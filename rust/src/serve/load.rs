@@ -13,6 +13,14 @@ use crate::serve::{MatchServer, ServeError};
 use crate::util::Rng;
 use std::time::{Duration, Instant};
 
+/// Overload retries a closed-loop client performs per request before
+/// it gives up ([`LoadReport::gave_up`]).
+pub const RETRY_CAP: usize = 16;
+/// First backoff ceiling; doubles per retry.
+pub const BACKOFF_BASE: Duration = Duration::from_micros(100);
+/// Backoff ceiling growth stops here (~7 doublings from the base).
+pub const BACKOFF_CAP: Duration = Duration::from_millis(10);
+
 /// Zipf(s) sampler over ranks `0..n` (rank 0 most popular) via inverse
 /// CDF lookup.
 #[derive(Debug, Clone)]
@@ -87,6 +95,14 @@ pub struct LoadReport {
     /// Admissions refused with [`ServeError::Overloaded`] (closed loop
     /// retries them; open loop sheds them).
     pub rejected: usize,
+    /// Refusals the closed loop retried after a backoff (0 in the open
+    /// loop, which sheds instead). `rejected = retries + gave_up`.
+    pub retries: usize,
+    /// Requests the closed loop abandoned after exhausting its retry
+    /// cap — persistent overload surfaced instead of retrying forever.
+    pub gave_up: usize,
+    /// Total time the closed loop spent sleeping in backoff, s.
+    pub backoff_seconds: f64,
     /// Driver wall-clock, s.
     pub wall_seconds: f64,
     /// Completed requests per second.
@@ -99,8 +115,13 @@ pub struct LoadReport {
 
 /// Closed loop: `clients` threads each issue `requests_per_client`
 /// requests of `patterns_per_request` Zipf-sampled catalog patterns,
-/// back to back; [`ServeError::Overloaded`] retries after a short
-/// backoff (reject-with-retry contract).
+/// back to back. [`ServeError::Overloaded`] retries under full-jitter
+/// exponential backoff (the mean doubles from [`BACKOFF_BASE`] up to
+/// [`BACKOFF_CAP`]; the jitter decorrelates clients so they don't
+/// re-collide in lockstep) and gives up after [`RETRY_CAP`] retries —
+/// a fixed-interval retry loop here used to hammer a saturated
+/// admission queue at 5 kHz per client, which is exactly the retry
+/// storm the reject-with-retry contract is supposed to avoid.
 pub fn closed_loop(
     server: &MatchServer,
     catalog: &[Vec<u8>],
@@ -115,6 +136,9 @@ pub fn closed_loop(
     let t0 = Instant::now();
     let mut latencies: Vec<f64> = Vec::new();
     let mut rejected = 0usize;
+    let mut retries = 0usize;
+    let mut gave_up = 0usize;
+    let mut backoff_seconds = 0.0f64;
     let mut served_patterns = 0usize;
     std::thread::scope(|scope| -> crate::Result<()> {
         let mut handles = Vec::with_capacity(clients);
@@ -124,11 +148,15 @@ pub fn closed_loop(
                 let mut rng = Rng::new(seed ^ (cid as u64 + 1).wrapping_mul(0x9E37_79B9));
                 let mut lats = Vec::with_capacity(requests_per_client);
                 let mut rej = 0usize;
+                let mut rty = 0usize;
+                let mut gup = 0usize;
+                let mut backoff = Duration::ZERO;
                 let mut pats = 0usize;
                 for _ in 0..requests_per_client {
                     let req: Vec<Vec<u8>> = (0..patterns_per_request)
                         .map(|_| catalog[zipf.sample(&mut rng)].clone())
                         .collect();
+                    let mut attempt = 0usize;
                     loop {
                         match server.match_patterns(req.clone()) {
                             Ok(resp) => {
@@ -138,22 +166,40 @@ pub fn closed_loop(
                             }
                             Err(ServeError::Overloaded) => {
                                 rej += 1;
-                                std::thread::sleep(Duration::from_micros(200));
+                                if attempt >= RETRY_CAP {
+                                    // Persistent overload: drop this
+                                    // request and report it, instead of
+                                    // retrying forever.
+                                    gup += 1;
+                                    break;
+                                }
+                                // Full jitter: uniform in [0, ceiling),
+                                // ceiling doubling per attempt.
+                                let ceiling =
+                                    BACKOFF_CAP.min(BACKOFF_BASE * (1u32 << attempt.min(10)));
+                                let sleep = ceiling.mul_f64(rng.next_f64());
+                                backoff += sleep;
+                                std::thread::sleep(sleep);
+                                rty += 1;
+                                attempt += 1;
                             }
                             Err(e) => return Err(e),
                         }
                     }
                 }
-                Ok((lats, rej, pats))
+                Ok((lats, rej, rty, gup, backoff, pats))
             }));
         }
         for h in handles {
-            let (lats, rej, pats) = h
+            let (lats, rej, rty, gup, backoff, pats) = h
                 .join()
                 .map_err(|_| anyhow::anyhow!("load client panicked"))?
                 .map_err(|e| anyhow::anyhow!("load client failed: {e}"))?;
             latencies.extend(lats);
             rejected += rej;
+            retries += rty;
+            gave_up += gup;
+            backoff_seconds += backoff.as_secs_f64();
             served_patterns += pats;
         }
         Ok(())
@@ -164,6 +210,9 @@ pub fn closed_loop(
         label: format!("closed-loop c{clients}"),
         requests,
         rejected,
+        retries,
+        gave_up,
+        backoff_seconds,
         wall_seconds: wall,
         request_rate: requests as f64 / wall.max(1e-12),
         pattern_rate: served_patterns as f64 / wall.max(1e-12),
@@ -219,6 +268,9 @@ pub fn open_loop(
         label: format!("open-loop {offered_qps:.0} rps"),
         requests,
         rejected,
+        retries: 0,
+        gave_up: 0,
+        backoff_seconds: 0.0,
         wall_seconds: wall,
         request_rate: requests as f64 / wall.max(1e-12),
         pattern_rate: served_patterns as f64 / wall.max(1e-12),

@@ -63,6 +63,15 @@ pub struct ServeConfig {
     /// [`ServeError::TooManyHits`]; the rest of the micro-batch is
     /// unaffected.
     pub max_hits: usize,
+    /// Default end-to-end deadline applied to every request that does
+    /// not carry its own ([`MatchRequest::with_deadline`]): admission →
+    /// response, covering queue wait, batch coalescing, and execution.
+    /// Distinct from `max_delay`, which only bounds the coalescing
+    /// window: a request past its deadline fails with the typed,
+    /// retryable [`ServeError::DeadlineExceeded`] while the rest of its
+    /// micro-batch completes normally. `None` (the default) never
+    /// expires a request.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -74,6 +83,7 @@ impl Default for ServeConfig {
             backpressure: Backpressure::Block,
             dedup: true,
             max_hits: 4096,
+            deadline: None,
         }
     }
 }
@@ -136,6 +146,14 @@ pub enum ServeError {
         /// The configured cap.
         max_hits: usize,
     },
+    /// The request's end-to-end deadline (admission → response, set per
+    /// request via [`MatchRequest::with_deadline`] or server-wide via
+    /// [`ServeConfig::deadline`]) passed before its response was ready —
+    /// either still queued/coalescing at dispatch, or its batch's
+    /// execution outlasted the budget. Transient and retryable: resubmit
+    /// with a longer budget or at lower load. Only the expired request
+    /// fails; the rest of its micro-batch completes normally.
+    DeadlineExceeded,
     /// The coordinator failed the whole micro-batch.
     Run(String),
 }
@@ -165,6 +183,9 @@ impl std::fmt::Display for ServeError {
                 "request pattern {index} enumerated {hits} hits, over the server cap of \
                  {max_hits}; raise the score threshold or switch to top-K"
             ),
+            ServeError::DeadlineExceeded => {
+                write!(f, "request deadline exceeded before its response was ready; retry later")
+            }
             ServeError::Run(msg) => write!(f, "micro-batch failed: {msg}"),
         }
     }
@@ -257,6 +278,9 @@ pub struct ServerTotals {
     pub unique_patterns: usize,
     /// Requests refused with [`ServeError::Overloaded`].
     pub rejected: usize,
+    /// Requests failed with [`ServeError::DeadlineExceeded`] — expired
+    /// while queued/coalescing, or while their batch executed.
+    pub deadline_failures: usize,
 }
 
 impl ServerTotals {
@@ -287,18 +311,33 @@ pub struct MatchRequest {
     pub semantics: MatchSemantics,
     /// The pattern pool, one code per byte.
     pub patterns: Vec<Vec<u8>>,
+    /// End-to-end response budget for this request, admission →
+    /// response. `None` adopts the server-wide [`ServeConfig::deadline`]
+    /// (which itself defaults to no deadline).
+    pub deadline: Option<Duration>,
 }
 
 impl MatchRequest {
     /// Tagged request over pre-encoded codes, under the historical
     /// best-of semantics.
     pub fn new(alphabet: Alphabet, patterns: Vec<Vec<u8>>) -> Self {
-        MatchRequest { alphabet, semantics: MatchSemantics::BestOf, patterns }
+        MatchRequest {
+            alphabet,
+            semantics: MatchSemantics::BestOf,
+            patterns,
+            deadline: None,
+        }
     }
 
     /// The same request under explicit query semantics.
     pub fn with_semantics(mut self, semantics: MatchSemantics) -> Self {
         self.semantics = semantics;
+        self
+    }
+
+    /// The same request under an explicit end-to-end deadline.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
         self
     }
 }
@@ -307,6 +346,9 @@ impl MatchRequest {
 struct Request {
     patterns: Vec<Vec<u8>>,
     admitted: Instant,
+    /// Absolute expiry (admission + effective budget); `None` never
+    /// expires.
+    deadline: Option<Instant>,
     resp: mpsc::Sender<std::result::Result<MatchResponse, ServeError>>,
 }
 
@@ -338,6 +380,8 @@ pub struct MatchServer {
     alphabet: Alphabet,
     semantics: MatchSemantics,
     backpressure: Backpressure,
+    /// Server-wide default response budget ([`ServeConfig::deadline`]).
+    deadline: Option<Duration>,
     totals: Arc<Mutex<ServerTotals>>,
 }
 
@@ -349,6 +393,7 @@ impl MatchServer {
         let alphabet = coordinator.alphabet();
         let semantics = coordinator.semantics();
         let backpressure = cfg.backpressure;
+        let deadline = cfg.deadline;
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth.max(1));
         let totals = Arc::new(Mutex::new(ServerTotals::default()));
         let thread_totals = Arc::clone(&totals);
@@ -363,6 +408,7 @@ impl MatchServer {
             alphabet,
             semantics,
             backpressure,
+            deadline,
             totals,
         })
     }
@@ -387,6 +433,7 @@ impl MatchServer {
             alphabet: self.alphabet,
             semantics: self.semantics,
             patterns,
+            deadline: None,
         })
     }
 
@@ -449,7 +496,10 @@ impl MatchServer {
         let Some(tx) = self.tx.as_ref() else {
             return Err(ServeError::ShuttingDown);
         };
-        let req = Request { patterns, admitted, resp: resp_tx };
+        // The request's own budget wins over the server default; either
+        // pins an absolute expiry at admission, so queue wait counts.
+        let deadline = request.deadline.or(self.deadline).map(|d| admitted + d);
+        let req = Request { patterns, admitted, deadline, resp: resp_tx };
         match self.backpressure {
             Backpressure::Block => {
                 tx.send(req).map_err(|_| ServeError::ShuttingDown)?;
@@ -529,20 +579,30 @@ fn batcher_loop(
     while let Ok(first) = rx.recv() {
         let opened = Instant::now();
         let mut offered = first.patterns.len();
+        // The coalescing window closes at `max_delay` — or at the
+        // earliest member deadline, if that is sooner: holding a batch
+        // open past a member's response budget would expire it for
+        // nothing but coalescing.
+        let mut due = opened + cfg.max_delay;
+        if let Some(d) = first.deadline {
+            due = due.min(d);
+        }
         let mut batch: Vec<(Request, Instant)> = vec![(first, opened)];
-        let deadline = opened + cfg.max_delay;
         while offered < cfg.max_batch {
             let now = Instant::now();
-            if now >= deadline {
+            if now >= due {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
+            match rx.recv_timeout(due - now) {
                 Ok(req) => {
                     offered += req.patterns.len();
+                    if let Some(d) = req.deadline {
+                        due = due.min(d);
+                    }
                     batch.push((req, Instant::now()));
                 }
-                // Deadline hit, or the queue disconnected mid-batch —
-                // either way this batch is closed; disconnect ends the
+                // Window closed, or the queue disconnected mid-batch —
+                // either way this batch is done; disconnect ends the
                 // outer loop once the queue is empty.
                 Err(_) => break,
             }
@@ -572,6 +632,31 @@ fn dispatch_batch(
     totals: &Mutex<ServerTotals>,
 ) {
     let t_dispatch = Instant::now();
+    // Deadline check at pickup: a request that expired while queued or
+    // coalescing fails now, before its patterns cost a coordinator
+    // trip; the rest of the batch dispatches normally.
+    let mut expired: Vec<Request> = Vec::new();
+    let batch: Vec<(Request, Instant)> = batch
+        .into_iter()
+        .filter_map(|(req, picked)| match req.deadline {
+            Some(d) if t_dispatch >= d => {
+                expired.push(req);
+                None
+            }
+            _ => Some((req, picked)),
+        })
+        .collect();
+    if !expired.is_empty() {
+        if let Ok(mut t) = totals.lock() {
+            t.deadline_failures += expired.len();
+        }
+        for req in expired {
+            let _ = req.resp.send(Err(ServeError::DeadlineExceeded));
+        }
+    }
+    if batch.is_empty() {
+        return;
+    }
     let offered: usize = batch.iter().map(|(r, _)| r.patterns.len()).sum();
 
     // One coordinator trip either way. Dedup collapses identical
@@ -623,6 +708,8 @@ fn dispatch_batch(
                             best: results[slot].best,
                             hits: results[slot].hits.clone(),
                             passes: results[slot].passes,
+                            faults_injected: results[slot].faults_injected,
+                            faults_detected: results[slot].faults_detected,
                         })
                         .collect::<Vec<WorkResult>>())
                 })
@@ -658,22 +745,42 @@ fn dispatch_batch(
     let done = Instant::now();
     match per_request {
         Ok(all) => {
+            // Post-execute deadline check: these requests' patterns did
+            // run, but execution outlasted the budget — the caller gets
+            // the typed expiry rather than a late response.
+            let outcomes: Vec<(Request, Instant, std::result::Result<Vec<WorkResult>, ServeError>)> =
+                batch
+                    .into_iter()
+                    .zip(all)
+                    .map(|((req, picked), outcome)| {
+                        let outcome = match (req.deadline, outcome) {
+                            (Some(d), Ok(_)) if done >= d => Err(ServeError::DeadlineExceeded),
+                            (_, o) => o,
+                        };
+                        (req, picked, outcome)
+                    })
+                    .collect();
             // Count only served work: a failed batch must not inflate
             // the totals the serving projection is derived from. The
             // batch-level offered/unique totals describe what executed
-            // (a hit-capped request's patterns did run); `requests`
-            // counts answers, so capped refusals are excluded. Totals
-            // update BEFORE the responses go out: a client that has
-            // its response in hand must see its own request in
+            // (a hit-capped or expired request's patterns did run);
+            // `requests` counts answers, so refusals are excluded.
+            // Totals update BEFORE the responses go out: a client that
+            // has its response in hand must see its own request in
             // `stats()`.
-            let answered = all.iter().filter(|outcome| outcome.is_ok()).count();
+            let answered = outcomes.iter().filter(|(_, _, o)| o.is_ok()).count();
+            let late = outcomes
+                .iter()
+                .filter(|(_, _, o)| matches!(o, Err(ServeError::DeadlineExceeded)))
+                .count();
             if let Ok(mut t) = totals.lock() {
                 t.batches += 1;
                 t.requests += answered;
                 t.patterns += offered;
                 t.unique_patterns += unique;
+                t.deadline_failures += late;
             }
-            for ((req, picked), outcome) in batch.into_iter().zip(all) {
+            for (req, picked, outcome) in outcomes {
                 match outcome {
                     Ok(results) => {
                         let timing = RequestTiming {
@@ -727,6 +834,7 @@ mod tests {
             backpressure: Backpressure::Block,
             dedup,
             max_hits: 4096,
+            deadline: None,
         };
         (MatchServer::start(coord, serve_cfg).unwrap(), w.patterns)
     }
@@ -750,6 +858,7 @@ mod tests {
             backpressure: Backpressure::Block,
             dedup: true,
             max_hits,
+            deadline: None,
         };
         MatchServer::start(coord, serve_cfg).unwrap()
     }
@@ -940,6 +1049,45 @@ mod tests {
     fn server_totals_cover_executed_batch(totals: &ServerTotals) {
         assert!(totals.batches >= 1);
         assert_eq!(totals.patterns, 2, "both patterns executed even though one was refused");
+    }
+
+    /// Tentpole, deadline level: a request admitted with a zero budget
+    /// expires at pickup with the typed, retryable error, while the
+    /// rest of its batch (and later traffic) completes normally — and
+    /// the expiry is counted separately from answered requests.
+    #[test]
+    fn expired_request_fails_typed_while_the_batch_completes() {
+        let w = DnaWorkload::generate(2048, 24, 16, 0.0, 9);
+        let frags = w.fragments(64, 16);
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.engine = EngineKind::Cpu;
+        cfg.lanes = 2;
+        let coord = Arc::new(Coordinator::new(cfg, frags).unwrap());
+        let serve_cfg = ServeConfig {
+            max_batch: 64,
+            max_delay: Duration::from_millis(100),
+            ..ServeConfig::default()
+        };
+        let server = MatchServer::start(coord, serve_cfg).unwrap();
+        // The patient request opens the batch; the zero-budget one
+        // joins it (its deadline also closes the coalescing window
+        // immediately, so neither waits out the full `max_delay`).
+        let patient = server
+            .submit_request(MatchRequest::new(Alphabet::Dna2, vec![w.patterns[0].clone()]))
+            .unwrap();
+        let doomed = server
+            .submit_request(
+                MatchRequest::new(Alphabet::Dna2, vec![w.patterns[1].clone()])
+                    .with_deadline(Duration::ZERO),
+            )
+            .unwrap();
+        assert_eq!(doomed.wait().unwrap_err(), ServeError::DeadlineExceeded);
+        let resp = patient.wait().unwrap();
+        assert_eq!(resp.results.len(), 1);
+        assert_eq!(resp.results[0].best.unwrap().score, 16);
+        let totals = server.shutdown();
+        assert_eq!(totals.deadline_failures, 1);
+        assert_eq!(totals.requests, 1, "the expired request must not count as answered");
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::util::Json;
 /// geometry, plus the static verifier's microcode census — a codegen
 /// change that alters the compiled programs' shape must move the
 /// anchor deliberately, not drift past CI).
-const EXACT_KEYS: [&str; 16] = [
+const EXACT_KEYS: [&str; 20] = [
     "patterns",
     "matched",
     "total_hits",
@@ -50,6 +50,14 @@ const EXACT_KEYS: [&str; 16] = [
     "gates",
     "presets",
     "full_adders",
+    // Chaos/fault-tolerance counters: the fault plan is seed-split per
+    // pattern × attempt and the lane count is pinned by the knobs, so
+    // these are deterministic — drift means the injection or detection
+    // machinery changed shape.
+    "faults_injected",
+    "faults_detected",
+    "diverged_patterns",
+    "lane_restarts",
 ];
 
 /// How one compared leaf fared.
@@ -325,6 +333,10 @@ mod tests {
             "gates",
             "presets",
             "full_adders",
+            "faults_injected",
+            "faults_detected",
+            "diverged_patterns",
+            "lane_restarts",
         ] {
             assert!(EXACT_KEYS.contains(&k), "{k} must gate exactly");
         }

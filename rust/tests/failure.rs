@@ -1,7 +1,9 @@
 //! Failure injection: malformed inputs must produce errors, not
 //! panics or silent corruption.
 
+use cram_pm::bench_apps::dna::DnaWorkload;
 use cram_pm::coordinator::{Coordinator, CoordinatorConfig, CoordinatorError, EngineKind};
+use cram_pm::fault::FaultPlan;
 use cram_pm::runtime::{Manifest, Runtime};
 use std::path::PathBuf;
 
@@ -99,16 +101,64 @@ fn empty_pattern_slice_short_circuits_cleanly() {
 }
 
 #[test]
-fn poisoned_lane_error_is_typed_and_downcastable() {
-    // The mutex-poisoning path surfaces a typed error (not a bare
-    // string), so callers can distinguish "rebuild the coordinator"
-    // from transient run failures.
-    let err = anyhow::Error::new(CoordinatorError::LanesPoisoned);
-    assert_eq!(
-        err.downcast_ref::<CoordinatorError>(),
-        Some(&CoordinatorError::LanesPoisoned)
-    );
-    assert!(err.to_string().contains("poisoned"));
+fn recoverable_lane_errors_are_typed_and_downcastable() {
+    // Every supervision outcome surfaces a typed error (not a bare
+    // string), so callers can distinguish "retry the run" from real
+    // corruption. A panicked lane no longer poisons the coordinator:
+    // the supervisor respawns it, and only budget exhaustion or a
+    // wedge reaches the caller — as these variants.
+    for e in [
+        CoordinatorError::FaultDetected { pattern_id: 7, attempts: 16 },
+        CoordinatorError::LaneQuarantined { lane: 1, restarts: 3 },
+        CoordinatorError::LanesStalled { waited_ms: 250, missing: 4 },
+    ] {
+        let err = anyhow::Error::new(e);
+        assert_eq!(err.downcast_ref::<CoordinatorError>(), Some(&e));
+        assert!(!err.to_string().is_empty());
+    }
+    assert!(anyhow::Error::new(CoordinatorError::LaneQuarantined { lane: 1, restarts: 3 })
+        .to_string()
+        .contains("quarantined"));
+    assert!(anyhow::Error::new(CoordinatorError::LanesStalled { waited_ms: 250, missing: 4 })
+        .to_string()
+        .contains("stalled"));
+}
+
+/// Satellite acceptance: an engine that panics mid-batch neither hangs
+/// `Coordinator::run` nor corrupts the merge. The supervisor respawns
+/// the lane in place, the interrupted item re-executes, and the merged
+/// answers are bit-identical to a clean run — after which the
+/// coordinator keeps serving with no residual restarts.
+#[test]
+fn panicking_engine_mid_batch_recovers_bit_identically() {
+    let w = DnaWorkload::generate(2048, 24, 16, 0.0, 13);
+    let fragments = w.fragments(64, 16);
+    let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+    cfg.engine = EngineKind::Cpu;
+    cfg.oracular = None;
+    cfg.lanes = 2;
+    let clean = Coordinator::new(cfg.clone(), fragments.clone()).unwrap();
+    let (want, _) = clean.run(&w.patterns).unwrap();
+
+    let mut faulty = cfg;
+    faulty.fault = Some(FaultPlan::panic_on_item(7));
+    let coord = Coordinator::new(faulty, fragments).unwrap();
+    let (got, m) = coord.run(&w.patterns).unwrap();
+    assert_eq!(m.lane_restarts, 1, "exactly one supervised respawn");
+    assert_eq!(got.len(), want.len());
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.pattern_id, b.pattern_id);
+        assert_eq!(a.best, b.best, "pattern {}", a.pattern_id);
+        assert_eq!(a.hits, b.hits, "pattern {}", a.pattern_id);
+    }
+    // The panic budget is spent: the next run is restart-free and
+    // still bit-identical.
+    let (again, m2) = coord.run(&w.patterns).unwrap();
+    assert_eq!(m2.lane_restarts, 0, "respawned lane must keep serving");
+    for (a, b) in again.iter().zip(&want) {
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.hits, b.hits);
+    }
 }
 
 #[test]

@@ -33,6 +33,7 @@ fn serve_cfg(max_batch: usize, dedup: bool) -> ServeConfig {
         backpressure: Backpressure::Block,
         dedup,
         max_hits: 4096,
+        deadline: None,
     }
 }
 
@@ -94,6 +95,7 @@ fn reject_backpressure_sheds_then_recovers() {
             backpressure: Backpressure::Reject,
             dedup: true,
             max_hits: 4096,
+            deadline: None,
         },
     )
     .unwrap();
@@ -133,6 +135,7 @@ fn block_backpressure_never_rejects() {
             backpressure: Backpressure::Block,
             dedup: true,
             max_hits: 4096,
+            deadline: None,
         },
     )
     .unwrap();
@@ -167,6 +170,7 @@ fn shutdown_drains_queued_and_inflight_requests() {
             backpressure: Backpressure::Block,
             dedup: true,
             max_hits: 4096,
+            deadline: None,
         },
     )
     .unwrap();
@@ -357,6 +361,7 @@ fn shutdown_drains_inflight_topk_batch() {
             backpressure: Backpressure::Block,
             dedup: true,
             max_hits: 4096,
+            deadline: None,
         },
     )
     .unwrap();
@@ -391,4 +396,52 @@ fn batch_stats_report_dedup_and_occupancy() {
     assert!((resp.batch.occupancy - 6.0 / 16.0).abs() < 1e-9);
     assert!(resp.timing.total >= resp.timing.queue_wait + resp.timing.batch_wait);
     server.shutdown();
+}
+
+/// End-to-end deadline semantics: a request whose budget expires fails
+/// with the typed, retryable `DeadlineExceeded` while its batch-mates
+/// are answered normally, and a retry with a sane budget succeeds.
+#[test]
+fn request_deadline_is_typed_retryable_and_batchmates_complete() {
+    let (coordinator, catalog) = coordinator(2, 81, 16);
+    let server = MatchServer::start(
+        coordinator,
+        ServeConfig {
+            max_batch: 16,
+            max_delay: Duration::from_millis(50),
+            queue_depth: 32,
+            backpressure: Backpressure::Block,
+            dedup: true,
+            max_hits: 4096,
+            // Server-wide default budget; per-request deadlines below
+            // override it.
+            deadline: Some(Duration::from_secs(30)),
+        },
+    )
+    .unwrap();
+    // The patient request opens the coalescing window; the zero-budget
+    // one joins (or trails) it and must expire at dispatch without
+    // taking its batch-mates down.
+    let patient = server.submit(vec![catalog[0].clone()]).unwrap();
+    let doomed = server
+        .submit_request(
+            MatchRequest::new(Alphabet::Dna2, vec![catalog[1].clone()])
+                .with_deadline(Duration::ZERO),
+        )
+        .unwrap();
+    assert_eq!(doomed.wait().err(), Some(ServeError::DeadlineExceeded));
+    let resp = patient.wait().expect("batch-mate must still be answered");
+    assert_eq!(resp.results.len(), 1);
+    // Retrying the failed pattern with a real budget succeeds: the
+    // failure is transient, not a property of the pattern.
+    let retried = server
+        .match_request(
+            MatchRequest::new(Alphabet::Dna2, vec![catalog[1].clone()])
+                .with_deadline(Duration::from_secs(30)),
+        )
+        .unwrap();
+    assert_eq!(retried.results.len(), 1);
+    let totals = server.shutdown();
+    assert_eq!(totals.deadline_failures, 1, "exactly one request missed its deadline");
+    assert_eq!(totals.requests, 2, "expired requests must not count as served");
 }
