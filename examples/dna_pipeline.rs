@@ -18,7 +18,7 @@
 
 use cram_pm::baselines::CpuMatcher;
 use cram_pm::bench_apps::dna::DnaWorkload;
-use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use std::time::Instant;
 
 fn main() -> cram_pm::Result<()> {
@@ -44,7 +44,7 @@ fn main() -> cram_pm::Result<()> {
     let mut cfg = CoordinatorConfig::xla("dna_small", FRAG_CHARS, PAT_CHARS);
     if !have_artifacts {
         eprintln!("artifacts/ missing — run `make artifacts`; using the bit-level engine instead");
-        cfg.engine = EngineKind::Bitsim;
+        cfg.engine = EngineSpec::Bitsim;
     }
     let coord = Coordinator::new(cfg, fragments.clone())?;
 

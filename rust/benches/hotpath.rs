@@ -23,7 +23,7 @@
 use cram_pm::array::{CramArray, RowLayout};
 use cram_pm::bench_apps::dna::DnaWorkload;
 use cram_pm::coordinator::{
-    BitsimEngine, Coordinator, CoordinatorConfig, CpuEngine, EngineKind, MatchEngine,
+    BitsimEngine, Coordinator, CoordinatorConfig, CpuEngine, Engine, EngineSpec,
     SimdKernel, WorkItem,
 };
 use cram_pm::dna::{packed_best_alignment, Encoded, Packed2};
@@ -260,7 +260,7 @@ fn main() {
         let mut base_rate = 0.0;
         for &lanes in lanes_list {
             let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-            cfg.engine = EngineKind::Cpu;
+            cfg.engine = EngineSpec::Cpu;
             cfg.oracular = None;
             cfg.lanes = lanes;
             let coord = Coordinator::new(cfg, frags.clone()).unwrap();
@@ -302,7 +302,7 @@ fn main() {
         println!("  → {:.0} patterns/s host throughput", 512.0 / r.median);
 
         let mut cfg2 = CoordinatorConfig::xla("dna_small", 64, 16);
-        cfg2.engine = EngineKind::Cpu;
+        cfg2.engine = EngineSpec::Cpu;
         let coord2 = Coordinator::new(cfg2, frags).unwrap();
         let r = bench("same, CPU oracle engine", 5.0, || coord2.run(&w.patterns).unwrap());
         println!("{r}");

@@ -5,7 +5,7 @@
 //! `cargo bench --bench serving`
 
 use cram_pm::bench_apps::dna::DnaWorkload;
-use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use cram_pm::serve::load::closed_loop;
 use cram_pm::serve::{Backpressure, MatchServer, ServeConfig};
 use cram_pm::util::bench::section;
@@ -17,7 +17,7 @@ fn main() {
     let w = DnaWorkload::generate(1 << 14, 128, 16, 0.0, 99);
     let fragments = w.fragments(64, 16);
     let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-    cfg.engine = EngineKind::Cpu;
+    cfg.engine = EngineSpec::Cpu;
     cfg.lanes = 4;
     let coordinator = Arc::new(Coordinator::new(cfg, fragments).unwrap());
 

@@ -12,7 +12,7 @@
 use crate::alphabet::Alphabet;
 use crate::baselines::WorkProfile;
 use crate::bench_apps::common::{reference_best, AppReport, Benchmark, FunctionalReport};
-use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use crate::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use crate::isa::PresetMode;
 use crate::serve::{Backpressure, MatchRequest, MatchServer, ServeConfig};
 use crate::sim::{DnaPassModel, SystemConfig};
@@ -76,7 +76,7 @@ impl StringMatchBench {
     pub fn functional(
         &self,
         alphabet: Alphabet,
-        engine: EngineKind,
+        engine: EngineSpec,
         n_segments: usize,
         n_needles: usize,
         seed: u64,
@@ -334,7 +334,7 @@ mod tests {
         };
         let mut cols = Vec::new();
         for alphabet in Alphabet::ALL {
-            let r = bench.functional(alphabet, EngineKind::Cpu, 48, 12, 77).unwrap();
+            let r = bench.functional(alphabet, EngineSpec::Cpu, 48, 12, 77).unwrap();
             assert!(r.verified, "{alphabet}: served answers diverged from the reference");
             assert_eq!(r.matched, 12, "{alphabet}: planted needles must all hit");
             assert_eq!(r.patterns, 12);
@@ -357,7 +357,7 @@ mod tests {
             mean_word_chars: 7.5,
             rows: 512,
         };
-        let r = bench.functional(Alphabet::Protein5, EngineKind::Bitsim, 12, 6, 5).unwrap();
+        let r = bench.functional(Alphabet::Protein5, EngineSpec::Bitsim, 12, 6, 5).unwrap();
         assert!(r.verified && r.matched == 6, "bitsim protein run diverged: {r:?}");
     }
 

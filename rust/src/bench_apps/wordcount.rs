@@ -13,7 +13,7 @@ use crate::bench_apps::common::{
     data_parallel_report, AppReport, Benchmark, FunctionalReport, PassSpec,
 };
 use crate::bench_apps::stringmatch::serve_and_verify;
-use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use crate::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use crate::isa::PresetMode;
 use crate::tech::Technology;
 use crate::util::Rng;
@@ -60,7 +60,7 @@ impl WordCountBench {
     pub fn functional(
         &self,
         alphabet: Alphabet,
-        engine: EngineKind,
+        engine: EngineSpec,
         n_rows: usize,
         n_queries: usize,
         seed: u64,
@@ -173,7 +173,7 @@ mod tests {
     fn functional_serving_counts_presence_across_alphabets() {
         let wc = WordCountBench { words: 0, word_bits: 32, rows: 512 };
         for alphabet in Alphabet::ALL {
-            let r = wc.functional(alphabet, EngineKind::Cpu, 40, 10, 19).unwrap();
+            let r = wc.functional(alphabet, EngineSpec::Cpu, 40, 10, 19).unwrap();
             assert!(r.verified, "{alphabet}: answers diverged from the reference");
             // Even-indexed queries are resident: exactly 5 of 10 hit.
             assert_eq!(r.matched, 5, "{alphabet}");

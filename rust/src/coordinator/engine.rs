@@ -12,73 +12,35 @@
 //!   ([`CramArray::execute_into`]).
 //! * XLA — the AOT artifact through [`crate::runtime::Runtime`]
 //!   (constructed inside the executor thread; see
-//!   [`crate::coordinator::pipeline`]).
+//!   [`crate::engine::xla`]).
+//!
+//! The [`Engine`] trait itself — and the [`WorkItem`]/[`WorkResult`]
+//! types engines exchange — live in [`crate::engine`] alongside the
+//! capability declarations and the spec registry; this module
+//! re-exports them so existing `coordinator::` paths keep working.
 
 use crate::alphabet::{packed_best_alignment, packed_similarity, Alphabet, PackedSeq};
 use crate::array::{CramArray, ExecOutput, RowLayout};
 use crate::baselines::cpu_ref::BestAlignment;
+use crate::engine::registry;
 use crate::fault::FaultPlan;
 use crate::isa::{PresetMode, ProgramCache};
-use crate::semantics::{Hit, HitAccumulator, MatchSemantics};
+use crate::semantics::{Hit, HitAccumulator};
 use crate::simd::{self, PackedBlock, PatternWindows, SimdKernel};
 use crate::Result;
 use anyhow::Context as _;
 use std::sync::Arc;
 
-/// One unit of coordinator work: a pattern plus the fragments it must
-/// be matched against (already gathered by the scheduler stage).
-///
-/// Pattern and fragment codes are shared `Arc<[u8]>` slices: the
-/// scheduler → lane → engine fan-out clones reference counts, never
-/// the code bytes — a pattern broadcast to N lanes used to deep-copy
-/// its codes N times (and every candidate fragment once per route).
-#[derive(Debug, Clone)]
-pub struct WorkItem {
-    /// Pattern id (index into the pool).
-    pub pattern_id: usize,
-    /// The alphabet `pattern` and `fragments` are coded in — engines
-    /// refuse an item whose symbol width does not match their geometry
-    /// rather than silently scoring at the wrong width.
-    pub alphabet: Alphabet,
-    /// What answer this item wants: the single best alignment
-    /// (`BestOf`, the historical default — bit-identical, no hit
-    /// enumeration runs at all), every alignment above a score floor,
-    /// or the K best. Engines enumerate accordingly.
-    pub semantics: MatchSemantics,
-    /// The pattern, one [`Alphabet`] code per byte.
-    pub pattern: Arc<[u8]>,
-    /// Candidate fragments, one code per byte each.
-    pub fragments: Vec<Arc<[u8]>>,
-    /// Global row ids of the fragments (for score annotation).
-    pub row_ids: Vec<u32>,
-}
+pub use crate::engine::{Capabilities, Engine, EngineSpec, WorkItem, WorkResult};
 
-/// Result of one work item: the best alignment over the candidates,
-/// plus — under enumerating semantics — the canonical hit list.
-#[derive(Debug, Clone)]
-pub struct WorkResult {
-    /// Pattern id.
-    pub pattern_id: usize,
-    /// Best alignment (global row id, loc, score), if any candidate.
-    /// Computed identically under every semantics.
-    pub best: Option<BestAlignment>,
-    /// Enumerated hits per [`WorkItem::semantics`]: empty under
-    /// `BestOf`; every qualifying alignment in row-major `(row, loc)`
-    /// order under `Threshold`; the K best, best-first, under `TopK`
-    /// (bounded at `k` per partial, so lane fan-out stays bounded).
-    pub hits: Vec<Hit>,
-    /// Executable/array passes consumed.
-    pub passes: usize,
-    /// Device faults injected into this execution by an armed
-    /// [`FaultPlan`] (0 when fault injection is disabled).
-    pub faults_injected: usize,
-    /// Corrupted executions the coordinator's protection layer caught
-    /// (invariant checks + re-execution voting) before this result was
-    /// accepted. Engines report 0; the protection layer fills it in.
-    pub faults_detected: usize,
-}
-
-/// Which backend the executor stage uses.
+/// Which backend the executor stage uses — superseded by
+/// [`EngineSpec`], which carries backend-specific parameters (the XLA
+/// artifact location) on the variant that needs them and constructs
+/// engines through the capability-negotiating registry
+/// ([`crate::engine::registry`]). Convert with
+/// `EngineSpec::from(kind)` while migrating.
+#[deprecated(note = "use EngineSpec: `EngineSpec::Cpu`, `EngineSpec::Bitsim`, \
+                     `EngineSpec::xla(variant, artifacts_dir)`, or `EngineSpec::Gpu`")]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
     /// AOT XLA artifact on the PJRT CPU client.
@@ -89,24 +51,19 @@ pub enum EngineKind {
     Cpu,
 }
 
-/// A backend that can score a work item.
-pub trait MatchEngine {
-    /// Execute one work item.
-    fn run(&mut self, item: &WorkItem) -> Result<WorkResult>;
-
-    /// Engine label for metrics.
-    fn label(&self) -> &'static str;
-
-    /// Arm (or clear) a device-fault plan for subsequent runs. The
-    /// default is a no-op: engines with no device model to corrupt
-    /// (the XLA artifact path) silently ignore fault plans.
-    fn set_fault_plan(&mut self, _plan: Option<FaultPlan>) {}
-
-    /// Select which protection attempt the next `run` executes as.
-    /// Fault streams split per `(pattern, attempt)`
-    /// ([`FaultPlan::session`]), so re-execution voting draws fresh
-    /// faults instead of replaying the ones it is voting away.
-    fn set_attempt(&mut self, _attempt: u64) {}
+#[allow(deprecated)]
+impl From<EngineKind> for EngineSpec {
+    /// The migration shim: maps each legacy kind to its spec,
+    /// reproducing the old config defaults (`Xla` points at the
+    /// `dna_small` variant under `artifacts/`, which the removed
+    /// `variant`/`artifacts_dir` config fields defaulted to).
+    fn from(kind: EngineKind) -> Self {
+        match kind {
+            EngineKind::Cpu => EngineSpec::Cpu,
+            EngineKind::Bitsim => EngineSpec::Bitsim,
+            EngineKind::Xla => EngineSpec::xla("dna_small", "artifacts"),
+        }
+    }
 }
 
 /// Software-oracle engine: width-generic packed XOR+popcount scoring
@@ -134,7 +91,7 @@ pub struct CpuEngine {
     scores: Vec<u64>,
     /// Scratch per-row running best `(score, loc)` (SIMD path).
     row_best: Vec<(u64, usize)>,
-    /// Armed device-fault plan, if any ([`MatchEngine::set_fault_plan`]).
+    /// Armed device-fault plan, if any ([`Engine::set_fault_plan`]).
     fault: Option<FaultPlan>,
     /// Protection attempt the next run executes as.
     attempt: u64,
@@ -280,7 +237,7 @@ impl Default for CpuEngine {
     }
 }
 
-impl MatchEngine for CpuEngine {
+impl Engine for CpuEngine {
     fn run(&mut self, item: &WorkItem) -> Result<WorkResult> {
         anyhow::ensure!(
             item.alphabet == self.alphabet,
@@ -345,6 +302,10 @@ impl MatchEngine for CpuEngine {
         "cpu"
     }
 
+    fn capabilities(&self) -> Capabilities {
+        registry::CPU_CAPS
+    }
+
     fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
         self.fault = plan;
     }
@@ -370,7 +331,7 @@ pub struct BitsimEngine {
     out: ExecOutput,
     /// Pooled per-row running best `(score, loc)`.
     row_best: Vec<(u64, usize)>,
-    /// Armed device-fault plan, if any ([`MatchEngine::set_fault_plan`]).
+    /// Armed device-fault plan, if any ([`Engine::set_fault_plan`]).
     fault: Option<FaultPlan>,
     /// Protection attempt the next run executes as.
     attempt: u64,
@@ -444,7 +405,7 @@ impl BitsimEngine {
     }
 }
 
-impl MatchEngine for BitsimEngine {
+impl Engine for BitsimEngine {
     fn run(&mut self, item: &WorkItem) -> Result<WorkResult> {
         let layout = *self.cache.layout();
         anyhow::ensure!(
@@ -542,6 +503,10 @@ impl MatchEngine for BitsimEngine {
         "bitsim"
     }
 
+    fn capabilities(&self) -> Capabilities {
+        registry::BITSIM_CAPS
+    }
+
     fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
         self.fault = plan;
     }
@@ -556,6 +521,7 @@ mod tests {
     #![allow(clippy::unwrap_used, clippy::expect_used)]
 
     use super::*;
+    use crate::semantics::MatchSemantics;
     use crate::util::Rng;
 
     fn item(seed: u64, n_frags: usize, frag_chars: usize, pat_chars: usize) -> WorkItem {

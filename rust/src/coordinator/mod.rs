@@ -28,11 +28,13 @@
 //! the paper's "all rows must have their patterns ready" lock-step
 //! plays at array level.
 //!
-//! Functional results come from the XLA artifact (or the bit-level
-//! array simulator, selectable per [`EngineKind`]); *hardware* time and
-//! energy for the run come from the step-accurate model, so a pipeline
-//! run reports both "what matched where" and "what it would cost on
-//! the spintronic substrate".
+//! Functional results come from whichever backend each lane's
+//! [`EngineSpec`] resolves to through the capability-negotiating
+//! registry ([`crate::engine`]) — CPU oracle, gate-level bitsim, XLA
+//! artifact, or the wgpu scorer; *hardware* time and energy for the
+//! run come from the step-accurate model, so a pipeline run reports
+//! both "what matched where" and "what it would cost on the
+//! spintronic substrate".
 //!
 //! Above this module sits the [`crate::serve`] layer: a `MatchServer`
 //! coalesces concurrent client requests into deduplicated micro-batches
@@ -48,10 +50,16 @@
 pub mod engine;
 pub mod pipeline;
 
-pub use engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngine, WorkItem, WorkResult};
+pub use engine::{BitsimEngine, CpuEngine, WorkItem, WorkResult};
+#[allow(deprecated)]
+pub use engine::EngineKind;
 pub use pipeline::{
     Coordinator, CoordinatorConfig, CoordinatorError, LaneStats, Protection, RunMetrics,
 };
+
+// The unified engine API, re-exported so coordinator users get the
+// trait, spec, and capability types without a separate import.
+pub use crate::engine::{Capabilities, Engine, EngineCtx, EngineSpec, Need, Requirements};
 
 // The per-engine dispatch knob (`CoordinatorConfig::simd`), re-exported
 // so coordinator users don't need a separate `crate::simd` import.

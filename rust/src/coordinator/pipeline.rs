@@ -16,10 +16,9 @@
 
 use crate::alphabet::Alphabet;
 use crate::baselines::cpu_ref::BestAlignment;
-use crate::coordinator::engine::{BitsimEngine, CpuEngine, EngineKind, MatchEngine, WorkItem, WorkResult};
+use crate::engine::{registry, Engine, EngineCtx, EngineSpec, Need, Requirements, WorkItem, WorkResult};
 use crate::fault::FaultPlan;
 use crate::isa::{PresetMode, ProgramCache};
-use crate::runtime::Runtime;
 use crate::scheduler::{OracularIndex, ShardMap};
 use crate::semantics::MatchSemantics;
 use crate::sim::SystemConfig;
@@ -28,7 +27,6 @@ use crate::tech::Technology;
 use crate::Result;
 use anyhow::{anyhow, Context as _};
 use std::panic::AssertUnwindSafe;
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -79,6 +77,22 @@ pub enum CoordinatorError {
     /// `run_shared_pools` returned fewer result sets than pools — an
     /// internal contract violation of the batch path.
     PoolResultMissing,
+    /// Capability negotiation refused the configuration at
+    /// [`Coordinator::new`]: a lane's engine cannot honor something the
+    /// config demands (alphabet, enumerating semantics, a rates-enabled
+    /// fault plan, a forced SIMD kernel). The one typed refusal that
+    /// replaced the per-backend `ensure!`s — backends never fail these
+    /// mid-run.
+    UnsupportedCapability {
+        /// The refusing engine's registry name ("xla", "gpu", ...).
+        engine: &'static str,
+        /// The specific capability the configuration needs and the
+        /// engine lacks.
+        needs: Need,
+        /// The engine's own statement of its limits
+        /// (`Capabilities::limits_note`).
+        note: &'static str,
+    },
 }
 
 impl std::fmt::Display for CoordinatorError {
@@ -105,6 +119,13 @@ impl std::fmt::Display for CoordinatorError {
             ),
             CoordinatorError::PoolResultMissing => {
                 write!(f, "batched run returned no result set for a submitted pool")
+            }
+            CoordinatorError::UnsupportedCapability { engine, needs, note } => {
+                write!(f, "the {engine} engine does not support {needs}")?;
+                if !note.is_empty() {
+                    write!(f, "; {note}")?;
+                }
+                Ok(())
             }
         }
     }
@@ -139,12 +160,22 @@ impl Default for Protection {
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Which backend scores the passes.
-    pub engine: EngineKind,
-    /// XLA artifact variant (EngineKind::Xla only).
-    pub variant: String,
-    /// Artifact directory (EngineKind::Xla only).
-    pub artifacts_dir: PathBuf,
+    /// Which backend scores the passes. Backend-specific parameters
+    /// (the XLA artifact variant and directory, formerly separate
+    /// config fields) live on the [`EngineSpec`] variant that needs
+    /// them. Every spec is resolved through the engine registry and
+    /// capability-negotiated at [`Coordinator::new`] — an engine that
+    /// cannot honor this configuration is a typed
+    /// [`CoordinatorError::UnsupportedCapability`] there, never a
+    /// mid-run failure.
+    pub engine: EngineSpec,
+    /// Heterogeneous lane mixing: `Some(specs)` assigns lane `i` the
+    /// spec `specs[i % specs.len()]` (cycling), overriding `engine`.
+    /// Every listed spec is capability-negotiated. The lane merge is
+    /// engine-invariant (score desc, row asc, loc asc), so a mixed
+    /// lane set answers bit-identically to any homogeneous one.
+    /// `None` (and `Some(vec![])`) runs every lane on `engine`.
+    pub lane_engines: Option<Vec<EngineSpec>>,
     /// Fragment length, characters (must match the resident fragments).
     pub frag_chars: usize,
     /// Pattern length, characters.
@@ -160,9 +191,10 @@ pub struct CoordinatorConfig {
     /// pre-semantics coordinator), every alignment above a score floor
     /// (`Threshold`), or the K best (`TopK`). Carried by every work
     /// item; the lane merge canonicalizes per-lane hit partials under
-    /// the same row-major tie-break at any lane count. The XLA engine
-    /// only reads back per-row bests, so it refuses enumerating
-    /// semantics at construction.
+    /// the same row-major tie-break at any lane count. Engines without
+    /// hit enumeration (the XLA artifact reads back per-row bests
+    /// only) refuse enumerating semantics at construction via
+    /// capability negotiation.
     pub semantics: MatchSemantics,
     /// Oracular routing: `Some((k, max_rows_per_pattern))` enables the
     /// k-mer candidate index; `None` broadcasts (Naive).
@@ -189,8 +221,11 @@ pub struct CoordinatorConfig {
     /// Device-fault plan armed in every lane engine: per-op flip rates
     /// for the gate/write/readout channels plus the test-only
     /// panic/stall supervision hooks. `None` (the default) models a
-    /// perfect device at zero cost. The XLA engine has no device model
-    /// and ignores the rates.
+    /// perfect device at zero cost. A plan with nonzero rates demands
+    /// the `fault_injection` capability — engines without a device
+    /// model (XLA, GPU) refuse it at construction instead of silently
+    /// ignoring the rates; panic/stall hooks are lane-level and work
+    /// with every engine.
     pub fault: Option<FaultPlan>,
     /// Opt-in detection & recovery ([`Protection`]): re-execution
     /// voting + invariant checks per work item. `None` (the default)
@@ -216,12 +251,12 @@ impl CoordinatorConfig {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 8)
     }
 
-    /// Sensible defaults around one artifact variant.
+    /// Sensible defaults around one XLA artifact variant (artifacts
+    /// under `artifacts/`).
     pub fn xla(variant: &str, frag_chars: usize, pat_chars: usize) -> Self {
         CoordinatorConfig {
-            engine: EngineKind::Xla,
-            variant: variant.to_string(),
-            artifacts_dir: PathBuf::from("artifacts"),
+            engine: EngineSpec::xla(variant, "artifacts"),
+            lane_engines: None,
             frag_chars,
             pat_chars,
             alphabet: Alphabet::Dna2,
@@ -244,7 +279,7 @@ impl CoordinatorConfig {
     /// artifacts are 2-bit DNA only).
     pub fn for_alphabet(
         alphabet: Alphabet,
-        engine: EngineKind,
+        engine: EngineSpec,
         frag_chars: usize,
         pat_chars: usize,
     ) -> Self {
@@ -252,6 +287,32 @@ impl CoordinatorConfig {
         cfg.engine = engine;
         cfg.alphabet = alphabet;
         cfg
+    }
+
+    /// The spec lane `lane` runs: `lane_engines[lane % len]` when
+    /// heterogeneous mixing is configured, else [`Self::engine`].
+    pub fn spec_for_lane(&self, lane: usize) -> &EngineSpec {
+        match &self.lane_engines {
+            Some(v) if !v.is_empty() => &v[lane % v.len()],
+            _ => &self.engine,
+        }
+    }
+
+    /// Every distinct spec this configuration can assign to a lane —
+    /// what capability negotiation sweeps.
+    fn unique_specs(&self) -> Vec<&EngineSpec> {
+        let mut out: Vec<&EngineSpec> = Vec::new();
+        match &self.lane_engines {
+            Some(v) if !v.is_empty() => {
+                for s in v {
+                    if !out.contains(&s) {
+                        out.push(s);
+                    }
+                }
+            }
+            _ => out.push(&self.engine),
+        }
+        out
     }
 }
 
@@ -301,7 +362,10 @@ pub struct RunMetrics {
     pub wall_seconds: f64,
     /// Host-side pattern rate, patterns/s.
     pub host_rate: f64,
-    /// Engine label.
+    /// Which backend(s) produced every number: the distinct lane
+    /// engine labels (`Engine::label`, lowercase), joined with `+` in
+    /// lane order — `"cpu"` for a homogeneous run, `"cpu+bitsim"` for
+    /// a mixed lane set.
     pub engine: String,
     /// SIMD kernel tag the lane engines dispatched to (`scalar`,
     /// `avx2`, `neon`) — every reported number names the kernel that
@@ -327,74 +391,6 @@ pub struct RunMetrics {
     pub hw_energy: f64,
     /// Projected substrate match rate, patterns/s.
     pub hw_match_rate: f64,
-}
-
-/// XLA-backed engine (constructed inside its executor lane — PJRT
-/// handles never cross threads).
-struct XlaEngine {
-    rt: Runtime,
-    variant: String,
-    rows: usize,
-    frag_chars: usize,
-}
-
-impl XlaEngine {
-    fn new(dir: &std::path::Path, variant: &str) -> Result<Self> {
-        let rt = Runtime::load(dir)?;
-        let v = rt
-            .variant(variant)
-            .ok_or_else(|| anyhow!("variant {variant} not in manifest"))?
-            .clone();
-        Ok(XlaEngine { rt, variant: variant.to_string(), rows: v.rows, frag_chars: v.frag_chars })
-    }
-}
-
-impl MatchEngine for XlaEngine {
-    fn run(&mut self, item: &WorkItem) -> Result<WorkResult> {
-        let mut best: Option<BestAlignment> = None;
-        let mut passes = 0usize;
-        let pat_i32: Vec<i32> = item.pattern.iter().map(|&c| c as i32).collect();
-        for (bi, block) in item.fragments.chunks(self.rows).enumerate() {
-            passes += 1;
-            let mut frag_i32 = Vec::with_capacity(block.len() * self.frag_chars);
-            for f in block {
-                anyhow::ensure!(
-                    f.len() == self.frag_chars,
-                    "fragment length {} != variant frag_chars {}",
-                    f.len(),
-                    self.frag_chars
-                );
-                frag_i32.extend(f.iter().map(|&c| c as i32));
-            }
-            let out = self.rt.execute(&self.variant, &frag_i32, &pat_i32)?;
-            // (The artifact reads back per-row bests only; enumerating
-            // semantics are refused at coordinator construction.)
-            // Only the first `block.len()` rows are real; the rest is
-            // padding and must be masked out of the reduction.
-            for r in 0..block.len() {
-                let score = out.best_score[r] as usize;
-                if best.map_or(true, |b| score > b.score) {
-                    best = Some(BestAlignment {
-                        row: item.row_ids[bi * self.rows + r] as usize,
-                        loc: out.best_loc[r] as usize,
-                        score,
-                    });
-                }
-            }
-        }
-        Ok(WorkResult {
-            pattern_id: item.pattern_id,
-            best,
-            hits: Vec::new(),
-            passes,
-            faults_injected: 0,
-            faults_detected: 0,
-        })
-    }
-
-    fn label(&self) -> &'static str {
-        "xla"
-    }
 }
 
 /// One executor lane: a persistent thread owning one substrate shard's
@@ -450,7 +446,7 @@ fn is_better(candidate: &Option<BestAlignment>, incumbent: &Option<BestAlignment
 /// `catch_unwind` — a `FaultPlan::panic_on_item` panic unwinds from
 /// here into the supervisor.
 fn execute_item(
-    engine: &mut dyn MatchEngine,
+    engine: &mut dyn Engine,
     item: &WorkItem,
     fault: Option<&FaultPlan>,
     protection: Option<Protection>,
@@ -588,6 +584,10 @@ fn result_invariants_hold(r: &WorkResult, item: &WorkItem, pat_chars: usize) -> 
 /// with cores (see EXPERIMENTS.md §Perf and §Lane sweep).
 pub struct Coordinator {
     cfg: CoordinatorConfig,
+    /// Distinct lane engine labels joined with `+` in lane order —
+    /// computed once at construction, reported by every run's
+    /// [`RunMetrics::engine`] and the serving schema.
+    engine_label: String,
     /// Resident fragments as shared slices: work items fan them out to
     /// the lanes by reference count, not by deep copy.
     fragments: Vec<Arc<[u8]>>,
@@ -638,17 +638,29 @@ impl Coordinator {
     /// here, not on the first `run`.
     pub fn new(cfg: CoordinatorConfig, fragments: Vec<Vec<u8>>) -> Result<Self> {
         anyhow::ensure!(!fragments.is_empty(), "no fragments resident");
-        anyhow::ensure!(
-            cfg.engine != EngineKind::Xla || cfg.alphabet == Alphabet::Dna2,
-            "the XLA artifacts are lowered for 2-bit DNA; use the cpu or bitsim engine for {}",
-            cfg.alphabet
-        );
-        anyhow::ensure!(
-            cfg.engine != EngineKind::Xla || !cfg.semantics.enumerates(),
-            "the XLA artifact reads back per-row bests only; use the cpu or bitsim engine for {} \
-             semantics",
-            cfg.semantics
-        );
+        // Capability negotiation: every distinct lane spec resolves to
+        // its registry factory, and the factory's declared capabilities
+        // are checked against what this configuration demands — the
+        // one place any backend refuses anything. A lane engine never
+        // sees a configuration it can't honor.
+        let requirements = Requirements {
+            alphabet: cfg.alphabet,
+            semantics: cfg.semantics,
+            device_faults: cfg.fault.as_ref().map_or(false, FaultPlan::rates_enabled),
+            forced_simd: cfg.simd,
+        };
+        let mut needs_program_cache = false;
+        for spec in cfg.unique_specs() {
+            let factory = registry::resolve(spec)?;
+            if let Some(needs) = factory.capabilities.unmet(&requirements) {
+                return Err(anyhow::Error::new(CoordinatorError::UnsupportedCapability {
+                    engine: factory.name,
+                    needs,
+                    note: factory.capabilities.limits_note,
+                }));
+            }
+            needs_program_cache |= factory.needs_program_cache;
+        }
         for (i, f) in fragments.iter().enumerate() {
             anyhow::ensure!(
                 f.len() == cfg.frag_chars,
@@ -670,9 +682,10 @@ impl Coordinator {
         // §Perf: the bit-level engine's alignment programs depend only
         // on the geometry — compile them once here and share the cache
         // across every executor lane instead of re-lowering per lane
-        // per block per run.
-        let bitsim_cache: Option<Arc<ProgramCache>> = match cfg.engine {
-            EngineKind::Bitsim => Some(Arc::new(
+        // per block per run. The registry says whether any lane's
+        // factory wants it.
+        let bitsim_cache: Option<Arc<ProgramCache>> = if needs_program_cache {
+            Some(Arc::new(
                 ProgramCache::for_alphabet(
                     cfg.alphabet,
                     cfg.frag_chars,
@@ -681,14 +694,24 @@ impl Coordinator {
                     true,
                 )
                 .context("static verification of the coordinator's alignment programs failed")?,
-            )),
-            _ => None,
+            ))
+        } else {
+            None
         };
         let restarts = Arc::new(AtomicUsize::new(0));
         let inner = Self::spawn_lane_set(&cfg, &bitsim_cache, fragments.len(), &restarts)?;
         let n_lanes = inner.shard.shards();
+        let mut labels: Vec<&'static str> = Vec::new();
+        for lane in 0..n_lanes {
+            let label = cfg.spec_for_lane(lane).label();
+            if !labels.contains(&label) {
+                labels.push(label);
+            }
+        }
+        let engine_label = labels.join("+");
         Ok(Coordinator {
             cfg,
+            engine_label,
             fragments,
             n_lanes,
             oracular_index,
@@ -723,6 +746,7 @@ impl Coordinator {
         for lane_id in 0..n_lanes {
             let (work_tx, work_rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth.max(1));
             let thread_cfg = cfg.clone();
+            let lane_spec = cfg.spec_for_lane(lane_id).clone();
             let lane_cache = bitsim_cache.clone();
             let res_tx = res_tx.clone();
             let ready_tx = ready_tx.clone();
@@ -734,24 +758,20 @@ impl Coordinator {
                     // whole lifetime (PJRT handles never cross
                     // threads). `build_engine` is retained so the
                     // supervisor below can respawn it in place after a
-                    // panic.
-                    let kernel = thread_cfg.simd.unwrap_or_else(SimdKernel::active);
-                    let build_engine = || -> Result<Box<dyn MatchEngine>> {
-                        let mut engine: Box<dyn MatchEngine> = match thread_cfg.engine {
-                            EngineKind::Cpu => {
-                                Box::new(CpuEngine::with_kernel(thread_cfg.alphabet, kernel))
-                            }
-                            EngineKind::Bitsim => {
-                                let cache = lane_cache.clone().ok_or_else(|| {
-                                    anyhow::Error::new(CoordinatorError::MissingProgramCache)
-                                })?;
-                                Box::new(BitsimEngine::with_cache_kernel(cache, 256, kernel))
-                            }
-                            EngineKind::Xla => Box::new(
-                                XlaEngine::new(&thread_cfg.artifacts_dir, &thread_cfg.variant)
-                                    .map_err(|e| e.context("loading XLA engine"))?,
-                            ),
-                        };
+                    // panic. Construction goes through the registry —
+                    // this lane's spec was resolved and capability-
+                    // negotiated at `Coordinator::new`, so no backend
+                    // dispatch lives here.
+                    let ctx = EngineCtx {
+                        alphabet: thread_cfg.alphabet,
+                        frag_chars: thread_cfg.frag_chars,
+                        pat_chars: thread_cfg.pat_chars,
+                        kernel: thread_cfg.simd.unwrap_or_else(SimdKernel::active),
+                        rows_per_block: 256,
+                        bitsim_cache: lane_cache,
+                    };
+                    let build_engine = || -> Result<Box<dyn Engine>> {
+                        let mut engine = registry::resolve(&lane_spec)?.build(&lane_spec, &ctx)?;
                         engine.set_fault_plan(thread_cfg.fault.clone());
                         Ok(engine)
                     };
@@ -898,6 +918,14 @@ impl Coordinator {
         self.cfg.alphabet
     }
 
+    /// The engine label stamped on every [`RunMetrics`] and serving
+    /// response: distinct lane [`EngineSpec::label`]s in lane order,
+    /// joined with `+` (e.g. `"cpu"`, or `"cpu+bitsim"` under
+    /// heterogeneous [`CoordinatorConfig::lane_engines`]).
+    pub fn engine_label(&self) -> &str {
+        &self.engine_label
+    }
+
     /// The query semantics this coordinator answers under
     /// ([`CoordinatorConfig::semantics`]).
     pub fn semantics(&self) -> MatchSemantics {
@@ -999,7 +1027,7 @@ impl Coordinator {
             mean_candidates: 0.0,
             wall_seconds: 0.0,
             host_rate: 0.0,
-            engine: format!("{:?}", self.cfg.engine),
+            engine: self.engine_label.clone(),
             simd: self.simd_kernel().tag().to_string(),
             lanes: self.n_lanes,
             lane_stats: (0..self.n_lanes).map(LaneStats::idle).collect(),
@@ -1346,7 +1374,7 @@ impl Coordinator {
             mean_candidates,
             wall_seconds: wall,
             host_rate: n_patterns as f64 / wall.max(1e-12),
-            engine: format!("{:?}", self.cfg.engine),
+            engine: self.engine_label.clone(),
             simd: self.simd_kernel().tag().to_string(),
             lanes: lane_stats.len(),
             lane_stats,
@@ -1367,7 +1395,7 @@ mod tests {
     use super::*;
     use crate::bench_apps::dna::DnaWorkload;
 
-    fn coordinator(engine: EngineKind, oracular: Option<(usize, usize)>) -> (Coordinator, DnaWorkload) {
+    fn coordinator(engine: EngineSpec, oracular: Option<(usize, usize)>) -> (Coordinator, DnaWorkload) {
         let w = DnaWorkload::generate(2048, 48, 16, 0.0, 77);
         let frags = w.fragments(64, 16);
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
@@ -1378,7 +1406,7 @@ mod tests {
 
     #[test]
     fn cpu_pipeline_matches_all_errorfree_reads() {
-        let (c, w) = coordinator(EngineKind::Cpu, Some((8, 32)));
+        let (c, w) = coordinator(EngineSpec::Cpu, Some((8, 32)));
         let (results, m) = c.run(&w.patterns).unwrap();
         assert_eq!(m.patterns, 48);
         // Error-free reads sampled from the reference must all find a
@@ -1389,7 +1417,7 @@ mod tests {
 
     #[test]
     fn naive_broadcast_also_finds_everything() {
-        let (c, w) = coordinator(EngineKind::Cpu, None);
+        let (c, w) = coordinator(EngineSpec::Cpu, None);
         let (results, m) = c.run(&w.patterns[..8].to_vec()).unwrap();
         assert!((m.mean_candidates - c.rows() as f64).abs() < 1e-9);
         assert!(results.iter().all(|r| r.best.map_or(false, |b| b.score == 16)));
@@ -1397,7 +1425,7 @@ mod tests {
 
     #[test]
     fn oracular_uses_far_fewer_candidates_than_naive() {
-        let (c, w) = coordinator(EngineKind::Cpu, Some((8, 32)));
+        let (c, w) = coordinator(EngineSpec::Cpu, Some((8, 32)));
         let (_, m) = c.run(&w.patterns).unwrap();
         assert!(
             m.mean_candidates < c.rows() as f64 / 4.0,
@@ -1410,7 +1438,7 @@ mod tests {
 
     #[test]
     fn pattern_length_mismatch_rejected() {
-        let (c, _) = coordinator(EngineKind::Cpu, None);
+        let (c, _) = coordinator(EngineSpec::Cpu, None);
         assert!(c.run(&[vec![0u8; 5]]).is_err());
     }
 
@@ -1424,7 +1452,7 @@ mod tests {
         for oracular in [Some((8, 32)), None] {
             let run_with = |lanes: usize| {
                 let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-                cfg.engine = EngineKind::Cpu;
+                cfg.engine = EngineSpec::Cpu;
                 cfg.oracular = oracular;
                 cfg.lanes = lanes;
                 let c = Coordinator::new(cfg, frags.clone()).unwrap();
@@ -1455,7 +1483,7 @@ mod tests {
         let frags = vec![vec![1u8; 64]; 8];
         for lanes in [1, 2, 4, 8] {
             let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-            cfg.engine = EngineKind::Cpu;
+            cfg.engine = EngineSpec::Cpu;
             cfg.oracular = None;
             cfg.lanes = lanes;
             let c = Coordinator::new(cfg, frags.clone()).unwrap();
@@ -1470,7 +1498,7 @@ mod tests {
         let w = DnaWorkload::generate(2048, 16, 16, 0.0, 5);
         let frags = w.fragments(64, 16);
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-        cfg.engine = EngineKind::Cpu;
+        cfg.engine = EngineSpec::Cpu;
         cfg.oracular = None;
         cfg.lanes = 3;
         let c = Coordinator::new(cfg, frags).unwrap();
@@ -1489,7 +1517,7 @@ mod tests {
     #[test]
     fn lanes_clamp_to_fragment_count() {
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-        cfg.engine = EngineKind::Cpu;
+        cfg.engine = EngineSpec::Cpu;
         cfg.lanes = 64;
         let c = Coordinator::new(cfg, vec![vec![0u8; 64]; 3]).unwrap();
         assert_eq!(c.lanes(), 3);
@@ -1502,7 +1530,7 @@ mod tests {
     fn coordinator_survives_many_runs_on_the_same_lanes() {
         // Lanes are persistent; the shared result channel must come
         // back clean between runs.
-        let (c, w) = coordinator(EngineKind::Cpu, Some((8, 32)));
+        let (c, w) = coordinator(EngineSpec::Cpu, Some((8, 32)));
         for _ in 0..3 {
             let (results, m) = c.run(&w.patterns).unwrap();
             assert_eq!(results.len(), w.patterns.len());
@@ -1512,7 +1540,7 @@ mod tests {
 
     #[test]
     fn empty_pool_short_circuits_with_zeroed_metrics() {
-        let (c, _) = coordinator(EngineKind::Cpu, Some((8, 32)));
+        let (c, _) = coordinator(EngineSpec::Cpu, Some((8, 32)));
         let (results, m) = c.run(&[]).unwrap();
         assert!(results.is_empty());
         assert_eq!((m.patterns, m.matched, m.passes), (0, 0, 0));
@@ -1526,7 +1554,7 @@ mod tests {
     /// under one lock acquisition answers exactly like separate runs.
     #[test]
     fn run_pools_matches_separate_runs_per_pool() {
-        let (c, w) = coordinator(EngineKind::Cpu, Some((8, 32)));
+        let (c, w) = coordinator(EngineSpec::Cpu, Some((8, 32)));
         let a = &w.patterns[..8];
         let b = &w.patterns[8..20];
         let batched = c.run_pools(&[a, &[], b]).unwrap();
@@ -1551,7 +1579,7 @@ mod tests {
     /// answers, same metrics shape.
     #[test]
     fn run_shared_matches_run() {
-        let (c, w) = coordinator(EngineKind::Cpu, Some((8, 32)));
+        let (c, w) = coordinator(EngineSpec::Cpu, Some((8, 32)));
         let pool = &w.patterns[..12];
         let shared: Vec<Arc<[u8]>> = pool.iter().map(|p| Arc::from(p.as_slice())).collect();
         let (direct, _) = c.run(pool).unwrap();
@@ -1572,7 +1600,7 @@ mod tests {
 
     #[test]
     fn pat_chars_exposed_for_admission_validation() {
-        let (c, _) = coordinator(EngineKind::Cpu, None);
+        let (c, _) = coordinator(EngineSpec::Cpu, None);
         assert_eq!(c.pat_chars(), 16);
     }
 
@@ -1593,9 +1621,9 @@ mod tests {
                 .iter()
                 .map(|p| crate::bench_apps::common::reference_best(&frags, p))
                 .collect();
-            for engine in [EngineKind::Cpu, EngineKind::Bitsim] {
+            for engine in [EngineSpec::Cpu, EngineSpec::Bitsim] {
                 for lanes in [1usize, 3] {
-                    let mut cfg = CoordinatorConfig::for_alphabet(alphabet, engine, 64, 16);
+                    let mut cfg = CoordinatorConfig::for_alphabet(alphabet, engine.clone(), 64, 16);
                     cfg.oracular = None; // broadcast: the reference scans every row
                     cfg.lanes = lanes;
                     let c = Coordinator::new(cfg, frags.clone()).unwrap();
@@ -1628,7 +1656,7 @@ mod tests {
         {
             let run_with = |lanes: usize| {
                 let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-                cfg.engine = EngineKind::Cpu;
+                cfg.engine = EngineSpec::Cpu;
                 cfg.oracular = None;
                 cfg.semantics = semantics;
                 cfg.lanes = lanes;
@@ -1655,6 +1683,17 @@ mod tests {
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
         cfg.semantics = MatchSemantics::TopK { k: 2 };
         let err = Coordinator::new(cfg, vec![vec![0u8; 64]; 2]).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CoordinatorError>(),
+                Some(&CoordinatorError::UnsupportedCapability {
+                    engine: "xla",
+                    needs: Need::Enumeration(MatchSemantics::TopK { k: 2 }),
+                    ..
+                })
+            ),
+            "unexpected: {err:#}"
+        );
         assert!(err.to_string().contains("per-row bests"), "unexpected: {err:#}");
     }
 
@@ -1663,14 +1702,61 @@ mod tests {
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
         cfg.alphabet = Alphabet::Ascii8;
         let err = Coordinator::new(cfg, vec![vec![0u8; 64]; 4]).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CoordinatorError>(),
+                Some(&CoordinatorError::UnsupportedCapability {
+                    engine: "xla",
+                    needs: Need::Alphabet(Alphabet::Ascii8),
+                    ..
+                })
+            ),
+            "unexpected: {err:#}"
+        );
         assert!(err.to_string().contains("2-bit DNA"), "unexpected: {err:#}");
+    }
+
+    #[test]
+    fn xla_engine_refuses_armed_fault_plans_at_construction() {
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.fault = Some(FaultPlan::rates(0.0, 0.0, 1e-3, 9));
+        let err = Coordinator::new(cfg, vec![vec![0u8; 64]; 2]).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CoordinatorError>(),
+                Some(&CoordinatorError::UnsupportedCapability {
+                    engine: "xla",
+                    needs: Need::FaultInjection,
+                    ..
+                })
+            ),
+            "unexpected: {err:#}"
+        );
+    }
+
+    /// Chaos-style panic/stall plans are lane-level (the supervisor
+    /// handles them host-side), so they must NOT trip the device-fault
+    /// capability gate even on engines without a fault model.
+    #[test]
+    fn panic_plans_do_not_require_the_fault_capability() {
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.fault = Some(FaultPlan::panic_on_item(7));
+        // Construction must pass negotiation; it may only fail later,
+        // at lane spawn, for missing artifacts.
+        match Coordinator::new(cfg, vec![vec![0u8; 64]; 2]) {
+            Ok(_) => {}
+            Err(err) => assert!(
+                err.downcast_ref::<CoordinatorError>().is_none(),
+                "negotiation wrongly refused a host-side plan: {err:#}"
+            ),
+        }
     }
 
     #[test]
     fn out_of_alphabet_codes_rejected() {
         // Fragment code 4 is outside DNA's 4 symbols.
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-        cfg.engine = EngineKind::Cpu;
+        cfg.engine = EngineSpec::Cpu;
         let err = Coordinator::new(cfg.clone(), vec![vec![4u8; 64]; 2]).unwrap_err();
         assert!(err.to_string().contains("alphabet"), "unexpected: {err:#}");
         // Pattern codes are checked at run time.
@@ -1685,9 +1771,9 @@ mod tests {
             eprintln!("skipping: run `make artifacts` first");
             return;
         }
-        let (cx, w) = coordinator(EngineKind::Xla, Some((8, 32)));
+        let (cx, w) = coordinator(EngineSpec::xla("dna_small", "artifacts"), Some((8, 32)));
         let mut cfg2 = cx.cfg.clone();
-        cfg2.engine = EngineKind::Cpu;
+        cfg2.engine = EngineSpec::Cpu;
         let cc = Coordinator::new(cfg2, w.fragments(64, 16)).unwrap();
 
         let pats = w.patterns[..16].to_vec();
@@ -1709,9 +1795,80 @@ mod tests {
         results.iter().map(|r| (r.best, r.hits.clone())).collect()
     }
 
+    /// Tentpole: heterogeneous lanes (different engines per lane) are
+    /// bit-identical to a single-engine run at every lane split,
+    /// because the merge order is engine-invariant.
+    #[test]
+    fn heterogeneous_lanes_match_single_engine_runs_bitwise() {
+        let w = DnaWorkload::generate(4096, 24, 16, 0.06, 19);
+        let frags = w.fragments(64, 16);
+        let run_with = |lanes: usize, lane_engines: Option<Vec<EngineSpec>>| {
+            let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+            cfg.engine = EngineSpec::Cpu;
+            cfg.lane_engines = lane_engines;
+            cfg.oracular = None;
+            cfg.semantics = MatchSemantics::Threshold { min_score: 12 };
+            cfg.lanes = lanes;
+            let c = Coordinator::new(cfg, frags.clone()).unwrap();
+            let label = c.engine_label().to_string();
+            (c.run(&w.patterns).unwrap().0, label)
+        };
+        let (single, single_label) = run_with(1, None);
+        assert_eq!(single_label, "cpu");
+        for lanes in [2usize, 3, 4] {
+            let mixed = Some(vec![EngineSpec::Cpu, EngineSpec::Bitsim]);
+            let (multi, label) = run_with(lanes, mixed);
+            assert_eq!(label, "cpu+bitsim", "lanes={lanes}");
+            assert_eq!(answers(&multi), answers(&single), "lanes={lanes}");
+        }
+    }
+
+    /// Lane specs cycle over `lane_engines`; an empty vec means the
+    /// homogeneous default, and duplicate labels dedup in the metrics.
+    #[test]
+    fn lane_engine_cycling_and_label_dedup() {
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.engine = EngineSpec::Cpu;
+        cfg.lane_engines = Some(vec![EngineSpec::Bitsim]);
+        cfg.lanes = 3;
+        assert_eq!(cfg.spec_for_lane(0), &EngineSpec::Bitsim);
+        assert_eq!(cfg.spec_for_lane(2), &EngineSpec::Bitsim);
+        let c = Coordinator::new(cfg, vec![vec![1u8; 64]; 6]).unwrap();
+        // All three lanes run bitsim: one label, not "bitsim+bitsim+bitsim".
+        assert_eq!(c.engine_label(), "bitsim");
+        let (_, m) = c.run(&[vec![1u8; 16]]).unwrap();
+        assert_eq!(m.engine, "bitsim");
+
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.engine = EngineSpec::Cpu;
+        cfg.lane_engines = Some(Vec::new());
+        assert_eq!(cfg.spec_for_lane(0), &EngineSpec::Cpu, "empty vec falls back to cfg.engine");
+    }
+
+    /// A heterogeneous set is negotiated per distinct engine: one
+    /// incapable lane engine refuses the whole coordinator, typed, at
+    /// construction.
+    #[test]
+    fn heterogeneous_negotiation_refuses_on_the_weakest_lane() {
+        let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
+        cfg.engine = EngineSpec::Cpu;
+        cfg.lane_engines =
+            Some(vec![EngineSpec::Cpu, EngineSpec::xla("dna_small", "artifacts")]);
+        cfg.lanes = 2;
+        cfg.semantics = MatchSemantics::TopK { k: 2 };
+        let err = Coordinator::new(cfg, vec![vec![0u8; 64]; 4]).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CoordinatorError>(),
+                Some(&CoordinatorError::UnsupportedCapability { engine: "xla", .. })
+            ),
+            "unexpected: {err:#}"
+        );
+    }
+
     fn faulty_cfg(lanes: usize) -> CoordinatorConfig {
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-        cfg.engine = EngineKind::Cpu;
+        cfg.engine = EngineSpec::Cpu;
         cfg.oracular = None; // broadcast: plenty of scored candidates per item
         cfg.semantics = MatchSemantics::Threshold { min_score: 12 };
         cfg.lanes = lanes;

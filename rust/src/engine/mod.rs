@@ -1,0 +1,374 @@
+//! The unified engine API: one capability-negotiating [`Engine`] trait
+//! over every scoring backend (CPU reference, gate-level bitsim, XLA
+//! AOT artifacts, wgpu compute), constructed through a small
+//! [`registry`] from typed [`EngineSpec`]s.
+//!
+//! CRAM-PM's core claim is that the same pattern-matching workload can
+//! be served by radically different substrates (paper §V compares
+//! in-memory arrays, CPUs, GPUs, and near-memory processors). The
+//! coordinator therefore treats backends as interchangeable trait
+//! objects — but backends genuinely differ in what they can do: the
+//! XLA artifacts are lowered for 2-bit DNA and read back per-row bests
+//! only; the GPU scorer has no device-fault model. Those differences
+//! are declared once, as data, in [`Capabilities`], and checked once,
+//! at coordinator construction, against the [`Requirements`] implied
+//! by the configuration — so every "this backend can't do that"
+//! decision is a typed construction-time refusal instead of a deep-lane
+//! panic or a silently wrong answer.
+//!
+//! Lanes may mix engines: the coordinator's merge is engine-invariant
+//! (score desc, row asc, loc asc), so a heterogeneous lane set answers
+//! bit-identically to any homogeneous one.
+
+pub mod registry;
+pub mod xla;
+
+use crate::alphabet::Alphabet;
+use crate::baselines::cpu_ref::BestAlignment;
+use crate::fault::FaultPlan;
+use crate::isa::ProgramCache;
+use crate::semantics::{Hit, MatchSemantics};
+use crate::simd::SimdKernel;
+use crate::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+pub use registry::{registered, resolve, EngineFactory};
+
+/// One schedulable unit of work: score one pattern against one shard's
+/// candidate fragment rows. Pattern and fragment codes are shared
+/// slices — fan-out to the lanes bumps reference counts, never deep
+/// copies.
+#[derive(Debug, Clone)]
+pub struct WorkItem {
+    /// Index of the pattern in its submitted pool.
+    pub pattern_id: usize,
+    /// The alphabet the codes are in; engines refuse a mismatch with
+    /// their compiled width instead of mis-scoring it.
+    pub alphabet: Alphabet,
+    /// What this item's answer is: best-of, threshold enumeration, or
+    /// top-K (see [`MatchSemantics`]).
+    pub semantics: MatchSemantics,
+    /// Pattern codes (one code per char).
+    pub pattern: Arc<[u8]>,
+    /// Candidate fragment rows, one code slice per row.
+    pub fragments: Vec<Arc<[u8]>>,
+    /// Substrate row ids aligned with `fragments` (ascending).
+    pub row_ids: Vec<u32>,
+}
+
+/// What one engine pass over one work item produced.
+#[derive(Debug, Clone)]
+pub struct WorkResult {
+    /// Echoes [`WorkItem::pattern_id`].
+    pub pattern_id: usize,
+    /// Best alignment across the item's candidate rows, under the
+    /// row-major tie-break (highest score, then lowest row, then
+    /// lowest loc); `None` when the item had no candidates.
+    pub best: Option<BestAlignment>,
+    /// Enumerated hits (empty under `BestOf`), canonically ordered per
+    /// the item's semantics.
+    pub hits: Vec<Hit>,
+    /// Engine passes consumed (block-sized substrate dispatches).
+    pub passes: usize,
+    /// Device faults the engine's armed fault plan injected while
+    /// executing this item (0 without a plan).
+    pub faults_injected: usize,
+    /// Faults the engine itself detected and masked (0 for engines
+    /// without self-checking).
+    pub faults_detected: usize,
+}
+
+/// A scoring backend, boxed per executor lane. Engines are built
+/// inside their lane thread (some backends' handles never cross
+/// threads) through [`registry::resolve`] and re-built in place by the
+/// lane supervisor after a panic.
+///
+/// The contract: [`Engine::run`] answers one [`WorkItem`] under the
+/// item's semantics with the row-major tie-break, bit-identically to
+/// the scalar reference — [`Engine::capabilities`] declares, as data,
+/// the configurations the engine can honor, and the coordinator
+/// refuses everything else **at construction** with
+/// `CoordinatorError::UnsupportedCapability`. An engine never needs
+/// runtime "can't do that" branches for negotiated-away cases.
+pub trait Engine {
+    /// Score one work item.
+    fn run(&mut self, item: &WorkItem) -> Result<WorkResult>;
+
+    /// Stable lowercase label ("cpu", "bitsim", "xla", "gpu") — the
+    /// provenance tag `RunMetrics::engine` and the serving schema
+    /// report.
+    fn label(&self) -> &'static str;
+
+    /// What this engine can honor. Must match the registry's
+    /// declaration for the spec that built it.
+    fn capabilities(&self) -> Capabilities;
+
+    /// Arm (or disarm) the device-fault plan. Engines without a device
+    /// model ignore this; negotiation guarantees they never see a plan
+    /// with nonzero rates.
+    fn set_fault_plan(&mut self, _plan: Option<FaultPlan>) {}
+
+    /// Select the fault-stream split for re-execution voting: attempt
+    /// `n` draws fresh, independent fault randomness.
+    fn set_attempt(&mut self, _attempt: u64) {}
+}
+
+/// What a backend can honor, declared as data (one `const` per
+/// registry entry) so negotiation is a table lookup, not a `match`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Capabilities {
+    /// Alphabets the engine scores.
+    pub alphabets: &'static [Alphabet],
+    /// Whether enumerating semantics (`Threshold`, `TopK`) are
+    /// supported, or only per-row bests.
+    pub enumeration: bool,
+    /// Whether the engine models device faults (rates-enabled
+    /// [`FaultPlan`]s). Panic/stall supervision hooks are lane-level
+    /// and work with every engine.
+    pub fault_injection: bool,
+    /// Whether the engine dispatches through [`SimdKernel`] and thus
+    /// honors a forced per-coordinator kernel.
+    pub forced_simd: bool,
+    /// One-line statement of the engine's limits, appended to every
+    /// refusal so the error explains itself.
+    pub limits_note: &'static str,
+}
+
+impl Capabilities {
+    /// The unrestricted capability set (every alphabet, enumeration,
+    /// fault model, forced SIMD).
+    pub const fn full() -> Self {
+        Capabilities {
+            alphabets: &Alphabet::ALL,
+            enumeration: true,
+            fault_injection: true,
+            forced_simd: true,
+            limits_note: "",
+        }
+    }
+
+    /// The first requirement this capability set cannot honor, if any
+    /// — the payload of `CoordinatorError::UnsupportedCapability`.
+    pub fn unmet(&self, req: &Requirements) -> Option<Need> {
+        if !self.alphabets.contains(&req.alphabet) {
+            return Some(Need::Alphabet(req.alphabet));
+        }
+        if req.semantics.enumerates() && !self.enumeration {
+            return Some(Need::Enumeration(req.semantics));
+        }
+        if req.device_faults && !self.fault_injection {
+            return Some(Need::FaultInjection);
+        }
+        if let Some(k) = req.forced_simd {
+            if !self.forced_simd {
+                return Some(Need::ForcedSimd(k));
+            }
+        }
+        None
+    }
+}
+
+/// What a coordinator configuration demands of every lane engine —
+/// derived from `CoordinatorConfig`, checked against each resolved
+/// spec's [`Capabilities`] before any lane spawns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Requirements {
+    /// The configured alphabet.
+    pub alphabet: Alphabet,
+    /// The configured query semantics.
+    pub semantics: MatchSemantics,
+    /// True when a fault plan with nonzero flip rates is armed (plans
+    /// carrying only panic/stall supervision hooks don't need engine
+    /// support).
+    pub device_faults: bool,
+    /// `Some(k)` when the configuration forces a SIMD kernel per
+    /// coordinator (`CoordinatorConfig::simd`); the process-wide
+    /// default (`None`) never refuses.
+    pub forced_simd: Option<SimdKernel>,
+}
+
+/// The single capability a refusal hinged on — the typed payload of
+/// `CoordinatorError::UnsupportedCapability`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Need {
+    /// The engine does not score this alphabet.
+    Alphabet(Alphabet),
+    /// The engine cannot enumerate hits under these semantics.
+    Enumeration(MatchSemantics),
+    /// The engine has no device-fault model for a rates-enabled plan.
+    FaultInjection,
+    /// The engine does not dispatch through a forceable SIMD kernel.
+    ForcedSimd(SimdKernel),
+}
+
+impl std::fmt::Display for Need {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Need::Alphabet(a) => write!(f, "scoring the {a} alphabet"),
+            Need::Enumeration(s) => write!(f, "enumerating hits under {s} semantics"),
+            Need::FaultInjection => write!(f, "modeling device faults (a fault plan with nonzero rates is armed)"),
+            Need::ForcedSimd(k) => write!(f, "forcing the {} SIMD kernel", k.tag()),
+        }
+    }
+}
+
+/// Which backend a lane runs — the typed replacement for the old
+/// `EngineKind` enum plus the `variant`/`artifacts_dir` config field
+/// trio. Backend-specific parameters live on the variant that needs
+/// them, so a `Cpu` spec can't carry a dangling artifact path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineSpec {
+    /// The packed word-parallel CPU scorer — the reference every other
+    /// backend is proven against.
+    Cpu,
+    /// The gate-level bit-serial array simulator.
+    Bitsim,
+    /// AOT-compiled XLA artifacts (2-bit DNA, per-row bests only).
+    Xla {
+        /// Artifact variant name in the manifest.
+        variant: String,
+        /// Directory holding the compiled artifacts.
+        artifacts_dir: PathBuf,
+    },
+    /// The wgpu compute scorer (requires building with
+    /// `--features gpu`; resolving without it is a typed error).
+    Gpu,
+}
+
+impl EngineSpec {
+    /// Stable lowercase label, identical to the built engine's
+    /// [`Engine::label`].
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineSpec::Cpu => "cpu",
+            EngineSpec::Bitsim => "bitsim",
+            EngineSpec::Xla { .. } => "xla",
+            EngineSpec::Gpu => "gpu",
+        }
+    }
+
+    /// An XLA spec with explicit artifact location.
+    pub fn xla(variant: &str, artifacts_dir: impl Into<PathBuf>) -> Self {
+        EngineSpec::Xla { variant: variant.to_string(), artifacts_dir: artifacts_dir.into() }
+    }
+
+    /// Parse a CLI engine name. `xla` gets the default artifact
+    /// location (`artifacts/`, variant `dna_small`); use
+    /// [`EngineSpec::xla`] to point elsewhere.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "cpu" => Some(EngineSpec::Cpu),
+            "bitsim" => Some(EngineSpec::Bitsim),
+            "xla" => Some(EngineSpec::xla("dna_small", "artifacts")),
+            "gpu" => Some(EngineSpec::Gpu),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for EngineSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Everything a registry factory needs to build an engine inside its
+/// lane thread: the coordinator geometry plus the shared compiled
+/// caches. One value per lane, cloned from the coordinator config.
+#[derive(Debug, Clone)]
+pub struct EngineCtx {
+    /// The alphabet the lane scores.
+    pub alphabet: Alphabet,
+    /// Fragment length, characters.
+    pub frag_chars: usize,
+    /// Pattern length, characters.
+    pub pat_chars: usize,
+    /// The SIMD kernel SIMD-capable engines dispatch to.
+    pub kernel: SimdKernel,
+    /// Bitsim block height (rows per substrate pass).
+    pub rows_per_block: usize,
+    /// The shared compiled-program cache (compiled once at coordinator
+    /// construction when any lane is bitsim).
+    pub bitsim_cache: Option<Arc<ProgramCache>>,
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn full_capabilities_refuse_nothing() {
+        let caps = Capabilities::full();
+        for alphabet in Alphabet::ALL {
+            for semantics in [
+                MatchSemantics::BestOf,
+                MatchSemantics::Threshold { min_score: 3 },
+                MatchSemantics::TopK { k: 2 },
+            ] {
+                for device_faults in [false, true] {
+                    let req = Requirements {
+                        alphabet,
+                        semantics,
+                        device_faults,
+                        forced_simd: Some(SimdKernel::Scalar),
+                    };
+                    assert_eq!(caps.unmet(&req), None);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unmet_reports_the_first_missing_capability() {
+        let caps = Capabilities {
+            alphabets: &[Alphabet::Dna2],
+            enumeration: false,
+            fault_injection: false,
+            forced_simd: false,
+            limits_note: "test engine",
+        };
+        let base = Requirements {
+            alphabet: Alphabet::Dna2,
+            semantics: MatchSemantics::BestOf,
+            device_faults: false,
+            forced_simd: None,
+        };
+        assert_eq!(caps.unmet(&base), None);
+        assert_eq!(
+            caps.unmet(&Requirements { alphabet: Alphabet::Ascii8, ..base }),
+            Some(Need::Alphabet(Alphabet::Ascii8))
+        );
+        assert_eq!(
+            caps.unmet(&Requirements { semantics: MatchSemantics::TopK { k: 1 }, ..base }),
+            Some(Need::Enumeration(MatchSemantics::TopK { k: 1 }))
+        );
+        assert_eq!(
+            caps.unmet(&Requirements { device_faults: true, ..base }),
+            Some(Need::FaultInjection)
+        );
+        assert_eq!(
+            caps.unmet(&Requirements { forced_simd: Some(SimdKernel::Scalar), ..base }),
+            Some(Need::ForcedSimd(SimdKernel::Scalar))
+        );
+    }
+
+    #[test]
+    fn spec_labels_are_stable_and_lowercase() {
+        assert_eq!(EngineSpec::Cpu.label(), "cpu");
+        assert_eq!(EngineSpec::Bitsim.label(), "bitsim");
+        assert_eq!(EngineSpec::xla("dna_small", "artifacts").label(), "xla");
+        assert_eq!(EngineSpec::Gpu.label(), "gpu");
+        assert_eq!(EngineSpec::Cpu.to_string(), "cpu");
+    }
+
+    #[test]
+    fn spec_parse_round_trips_cli_names() {
+        for name in ["cpu", "bitsim", "xla", "gpu"] {
+            assert_eq!(EngineSpec::parse(name).unwrap().label(), name);
+        }
+        assert_eq!(EngineSpec::parse("tpu"), None);
+    }
+}

@@ -1,0 +1,208 @@
+//! The engine registry: one [`EngineFactory`] per backend, each
+//! pairing a `const` [`Capabilities`] declaration with a build
+//! function. The coordinator resolves every lane's [`EngineSpec`]
+//! here — capability negotiation reads the factory's declaration
+//! *before* any lane thread spawns, and the lane thread calls
+//! [`EngineFactory::build`] to construct its boxed engine. No caller
+//! ever `match`es on the backend again.
+
+use crate::alphabet::Alphabet;
+use crate::coordinator::CoordinatorError;
+use crate::engine::xla::XlaEngine;
+use crate::engine::{Capabilities, Engine, EngineCtx, EngineSpec};
+use crate::Result;
+use anyhow::{anyhow, Context as _};
+
+/// What the CPU reference engine can honor: everything.
+pub const CPU_CAPS: Capabilities = Capabilities::full();
+
+/// What the gate-level bitsim engine can honor: everything.
+pub const BITSIM_CAPS: Capabilities = Capabilities::full();
+
+/// What the XLA AOT engine can honor: 2-bit DNA, per-row bests only,
+/// no device-fault model, no host SIMD dispatch.
+pub const XLA_CAPS: Capabilities = Capabilities {
+    alphabets: &[Alphabet::Dna2],
+    enumeration: false,
+    fault_injection: false,
+    forced_simd: false,
+    limits_note: "the XLA artifacts are lowered for 2-bit DNA and read back per-row bests only; \
+                  use the cpu or bitsim engine",
+};
+
+/// What the wgpu compute engine can honor: every alphabet and
+/// semantics, but no device-fault model and no host SIMD dispatch.
+pub const GPU_CAPS: Capabilities = Capabilities {
+    alphabets: &Alphabet::ALL,
+    enumeration: true,
+    fault_injection: false,
+    forced_simd: false,
+    limits_note: "the wgpu scorer has no device-fault model and dispatches WGSL workgroups, \
+                  not host SIMD kernels",
+};
+
+/// One registered backend: its stable name (identical to
+/// [`EngineSpec::label`]), its declared capabilities, and the function
+/// that constructs it inside an executor lane.
+#[derive(Clone, Copy)]
+pub struct EngineFactory {
+    /// Stable lowercase engine name.
+    pub name: &'static str,
+    /// What the built engine can honor — negotiation reads this
+    /// without constructing anything.
+    pub capabilities: Capabilities,
+    /// Whether [`EngineCtx::bitsim_cache`] must be populated before
+    /// building — the coordinator compiles the shared program cache
+    /// once, at construction, iff some lane's factory asks for it.
+    pub needs_program_cache: bool,
+    builder: fn(&EngineSpec, &EngineCtx) -> Result<Box<dyn Engine>>,
+}
+
+impl std::fmt::Debug for EngineFactory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EngineFactory")
+            .field("name", &self.name)
+            .field("capabilities", &self.capabilities)
+            .finish()
+    }
+}
+
+impl EngineFactory {
+    /// Construct the engine for `spec`. Called on the lane thread
+    /// (some backends' handles never cross threads); also used by the
+    /// lane supervisor to respawn a panicked engine in place.
+    pub fn build(&self, spec: &EngineSpec, ctx: &EngineCtx) -> Result<Box<dyn Engine>> {
+        (self.builder)(spec, ctx)
+    }
+}
+
+fn build_cpu(_spec: &EngineSpec, ctx: &EngineCtx) -> Result<Box<dyn Engine>> {
+    Ok(Box::new(crate::coordinator::CpuEngine::with_kernel(ctx.alphabet, ctx.kernel)))
+}
+
+fn build_bitsim(_spec: &EngineSpec, ctx: &EngineCtx) -> Result<Box<dyn Engine>> {
+    let cache = ctx
+        .bitsim_cache
+        .clone()
+        .ok_or_else(|| anyhow::Error::new(CoordinatorError::MissingProgramCache))?;
+    Ok(Box::new(crate::coordinator::BitsimEngine::with_cache_kernel(
+        cache,
+        ctx.rows_per_block,
+        ctx.kernel,
+    )))
+}
+
+fn build_xla(spec: &EngineSpec, _ctx: &EngineCtx) -> Result<Box<dyn Engine>> {
+    match spec {
+        EngineSpec::Xla { variant, artifacts_dir } => Ok(Box::new(
+            XlaEngine::new(artifacts_dir, variant).context("loading XLA engine")?,
+        )),
+        other => Err(anyhow!("xla factory handed a {} spec", other.label())),
+    }
+}
+
+#[cfg(feature = "gpu")]
+fn build_gpu(_spec: &EngineSpec, ctx: &EngineCtx) -> Result<Box<dyn Engine>> {
+    Ok(Box::new(crate::gpu::GpuEngine::new(ctx).context("initializing wgpu engine")?))
+}
+
+const CPU_FACTORY: EngineFactory = EngineFactory {
+    name: "cpu",
+    capabilities: CPU_CAPS,
+    needs_program_cache: false,
+    builder: build_cpu,
+};
+
+const BITSIM_FACTORY: EngineFactory = EngineFactory {
+    name: "bitsim",
+    capabilities: BITSIM_CAPS,
+    needs_program_cache: true,
+    builder: build_bitsim,
+};
+
+const XLA_FACTORY: EngineFactory = EngineFactory {
+    name: "xla",
+    capabilities: XLA_CAPS,
+    needs_program_cache: false,
+    builder: build_xla,
+};
+
+#[cfg(feature = "gpu")]
+const GPU_FACTORY: EngineFactory = EngineFactory {
+    name: "gpu",
+    capabilities: GPU_CAPS,
+    needs_program_cache: false,
+    builder: build_gpu,
+};
+
+#[cfg(feature = "gpu")]
+static REGISTRY: [EngineFactory; 4] = [CPU_FACTORY, BITSIM_FACTORY, XLA_FACTORY, GPU_FACTORY];
+
+#[cfg(not(feature = "gpu"))]
+static REGISTRY: [EngineFactory; 3] = [CPU_FACTORY, BITSIM_FACTORY, XLA_FACTORY];
+
+/// Every backend compiled into this binary — the capability-matrix
+/// tests sweep this so a newly registered engine is covered without
+/// touching the suite.
+pub fn registered() -> &'static [EngineFactory] {
+    &REGISTRY
+}
+
+/// Resolve a spec to its registered factory. A [`EngineSpec::Gpu`]
+/// spec in a binary built without `--features gpu` is a typed error
+/// here — at coordinator construction — never a silent fallback.
+pub fn resolve(spec: &EngineSpec) -> Result<&'static EngineFactory> {
+    #[cfg(not(feature = "gpu"))]
+    if matches!(spec, EngineSpec::Gpu) {
+        return Err(anyhow!(
+            "the gpu engine is only available when built with --features gpu \
+             (this binary was built without it)"
+        ));
+    }
+    REGISTRY
+        .iter()
+        .find(|f| f.name == spec.label())
+        .ok_or_else(|| anyhow!("no registered engine named {}", spec.label()))
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn every_factory_name_parses_back_to_a_spec() {
+        for f in registered() {
+            let spec = EngineSpec::parse(f.name).unwrap();
+            assert_eq!(spec.label(), f.name);
+        }
+    }
+
+    #[test]
+    fn resolve_finds_the_matching_factory() {
+        for spec in [EngineSpec::Cpu, EngineSpec::Bitsim, EngineSpec::xla("dna_small", "artifacts")]
+        {
+            assert_eq!(resolve(&spec).unwrap().name, spec.label());
+        }
+    }
+
+    #[cfg(not(feature = "gpu"))]
+    #[test]
+    fn gpu_spec_is_a_typed_refusal_without_the_feature() {
+        let err = resolve(&EngineSpec::Gpu).unwrap_err();
+        assert!(err.to_string().contains("--features gpu"), "unexpected: {err:#}");
+    }
+
+    #[cfg(feature = "gpu")]
+    #[test]
+    fn gpu_spec_resolves_with_the_feature() {
+        assert_eq!(resolve(&EngineSpec::Gpu).unwrap().name, "gpu");
+    }
+
+    #[test]
+    fn reference_engines_are_unrestricted() {
+        assert_eq!(resolve(&EngineSpec::Cpu).unwrap().capabilities, Capabilities::full());
+        assert_eq!(resolve(&EngineSpec::Bitsim).unwrap().capabilities, Capabilities::full());
+    }
+}

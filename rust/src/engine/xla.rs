@@ -1,0 +1,88 @@
+//! The XLA AOT engine: scores through compiled artifact executables
+//! loaded by [`crate::runtime::Runtime`]. Artifacts are lowered for
+//! 2-bit DNA and read back per-row bests only — both limits are
+//! declared in [`registry::XLA_CAPS`](crate::engine::registry) and
+//! negotiated away at coordinator construction, so `run` never sees a
+//! configuration it can't honor.
+
+use crate::baselines::cpu_ref::BestAlignment;
+use crate::engine::{registry, Capabilities, Engine, WorkItem, WorkResult};
+use crate::runtime::Runtime;
+use crate::Result;
+use anyhow::anyhow;
+use std::path::Path;
+
+/// XLA-backed engine (constructed inside its executor lane — PJRT
+/// handles never cross threads).
+pub struct XlaEngine {
+    rt: Runtime,
+    variant: String,
+    rows: usize,
+    frag_chars: usize,
+}
+
+impl XlaEngine {
+    /// Load the artifact runtime and look up `variant` in its
+    /// manifest. Fails typed when the artifacts are missing — the lane
+    /// startup handshake surfaces this at coordinator construction.
+    pub fn new(dir: &Path, variant: &str) -> Result<Self> {
+        let rt = Runtime::load(dir)?;
+        let v = rt
+            .variant(variant)
+            .ok_or_else(|| anyhow!("variant {variant} not in manifest"))?
+            .clone();
+        Ok(XlaEngine { rt, variant: variant.to_string(), rows: v.rows, frag_chars: v.frag_chars })
+    }
+}
+
+impl Engine for XlaEngine {
+    fn run(&mut self, item: &WorkItem) -> Result<WorkResult> {
+        let mut best: Option<BestAlignment> = None;
+        let mut passes = 0usize;
+        let pat_i32: Vec<i32> = item.pattern.iter().map(|&c| c as i32).collect();
+        for (bi, block) in item.fragments.chunks(self.rows).enumerate() {
+            passes += 1;
+            let mut frag_i32 = Vec::with_capacity(block.len() * self.frag_chars);
+            for f in block {
+                anyhow::ensure!(
+                    f.len() == self.frag_chars,
+                    "fragment length {} != variant frag_chars {}",
+                    f.len(),
+                    self.frag_chars
+                );
+                frag_i32.extend(f.iter().map(|&c| c as i32));
+            }
+            let out = self.rt.execute(&self.variant, &frag_i32, &pat_i32)?;
+            // The artifact reads back per-row bests only; enumerating
+            // semantics are negotiated away at construction. Only the
+            // first `block.len()` rows are real; the rest is padding
+            // and must be masked out of the reduction.
+            for r in 0..block.len() {
+                let score = out.best_score[r] as usize;
+                if best.map_or(true, |b| score > b.score) {
+                    best = Some(BestAlignment {
+                        row: item.row_ids[bi * self.rows + r] as usize,
+                        loc: out.best_loc[r] as usize,
+                        score,
+                    });
+                }
+            }
+        }
+        Ok(WorkResult {
+            pattern_id: item.pattern_id,
+            best,
+            hits: Vec::new(),
+            passes,
+            faults_injected: 0,
+            faults_detected: 0,
+        })
+    }
+
+    fn label(&self) -> &'static str {
+        "xla"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        registry::XLA_CAPS
+    }
+}

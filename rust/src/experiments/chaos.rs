@@ -26,7 +26,7 @@
 
 use crate::bench_apps::dna::DnaWorkload;
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, EngineKind, Protection, RunMetrics, WorkResult,
+    Coordinator, CoordinatorConfig, EngineSpec, Protection, RunMetrics, WorkResult,
 };
 use crate::experiments::rule;
 use crate::fault::FaultPlan;
@@ -119,8 +119,8 @@ impl ChaosKnobs {
 
     /// The engines with a device model. The XLA artifact path has no
     /// gate/write/readout structure to corrupt, so it is out of scope.
-    pub fn engines(&self) -> [EngineKind; 2] {
-        [EngineKind::Cpu, EngineKind::Bitsim]
+    pub fn engines(&self) -> [EngineSpec; 2] {
+        [EngineSpec::Cpu, EngineSpec::Bitsim]
     }
 }
 
@@ -128,7 +128,7 @@ impl ChaosKnobs {
 #[derive(Debug, Clone)]
 pub struct ChaosPoint {
     /// The engine whose device model was corrupted.
-    pub engine: EngineKind,
+    pub engine: EngineSpec,
     /// The query semantics.
     pub semantics: MatchSemantics,
     /// Executor lane count.
@@ -157,7 +157,7 @@ pub struct ChaosPoint {
 #[derive(Debug, Clone)]
 pub struct RecoveryPoint {
     /// The engine whose lane executor was panicked.
-    pub engine: EngineKind,
+    pub engine: EngineSpec,
     /// In-place lane respawns the supervisor performed (must be 1).
     pub lane_restarts: usize,
     /// Whether the recovered run was bit-identical to the clean run.
@@ -169,9 +169,13 @@ fn answers(results: &[WorkResult]) -> Vec<(Option<Hit>, Vec<Hit>)> {
     results.iter().map(|r| (r.best, r.hits.clone())).collect()
 }
 
-fn base_cfg(knobs: &ChaosKnobs, engine: EngineKind, semantics: MatchSemantics) -> CoordinatorConfig {
+fn base_cfg(
+    knobs: &ChaosKnobs,
+    engine: &EngineSpec,
+    semantics: MatchSemantics,
+) -> CoordinatorConfig {
     let mut cfg = CoordinatorConfig::xla("dna_small", knobs.frag_chars, knobs.pat_chars);
-    cfg.engine = engine;
+    cfg.engine = engine.clone();
     cfg.oracular = None; // broadcast: every row scores, so faults have targets
     cfg.semantics = semantics;
     cfg.lanes = knobs.lanes;
@@ -195,11 +199,11 @@ fn run_point(
     knobs: &ChaosKnobs,
     w: &DnaWorkload,
     fragments: &[Vec<u8>],
-    engine: EngineKind,
+    engine: &EngineSpec,
     semantics: MatchSemantics,
     fault_seed: u64,
 ) -> crate::Result<ChaosPoint> {
-    let tag = format!("{engine:?} {semantics}");
+    let tag = format!("{} {semantics}", engine.label());
 
     let (clean, clean_m, clean_s) =
         timed_run(base_cfg(knobs, engine, semantics), fragments, &w.patterns)?;
@@ -251,7 +255,7 @@ fn run_point(
     );
 
     Ok(ChaosPoint {
-        engine,
+        engine: engine.clone(),
         semantics,
         lanes: knobs.lanes,
         patterns: clean_m.patterns,
@@ -272,7 +276,7 @@ fn run_recovery(
     knobs: &ChaosKnobs,
     w: &DnaWorkload,
     fragments: &[Vec<u8>],
-    engine: EngineKind,
+    engine: &EngineSpec,
 ) -> crate::Result<RecoveryPoint> {
     let (clean, _, _) =
         timed_run(base_cfg(knobs, engine, MatchSemantics::BestOf), fragments, &w.patterns)?;
@@ -282,14 +286,16 @@ fn run_recovery(
     let identical = answers(&recovered) == answers(&clean);
     anyhow::ensure!(
         identical,
-        "{engine:?}: the respawned lane's merge diverged from the clean run"
+        "{}: the respawned lane's merge diverged from the clean run",
+        engine.label()
     );
     anyhow::ensure!(
         m.lane_restarts == 1,
-        "{engine:?}: expected exactly one supervised respawn, saw {}",
+        "{}: expected exactly one supervised respawn, saw {}",
+        engine.label(),
         m.lane_restarts
     );
-    Ok(RecoveryPoint { engine, lane_restarts: m.lane_restarts, identical })
+    Ok(RecoveryPoint { engine: engine.clone(), lane_restarts: m.lane_restarts, identical })
 }
 
 /// Run the sweep. Fails (exit-code-visibly, for CI) on any violated
@@ -309,7 +315,7 @@ pub fn sweep(knobs: &ChaosKnobs) -> crate::Result<(Vec<ChaosPoint>, Vec<Recovery
         for semantics in knobs.semantics() {
             idx += 1;
             let fault_seed = knobs.seed ^ (idx << 32);
-            points.push(run_point(knobs, &w, &fragments, engine, semantics, fault_seed)?);
+            points.push(run_point(knobs, &w, &fragments, &engine, semantics, fault_seed)?);
         }
     }
     // Individual protected points can legitimately catch zero faults
@@ -322,7 +328,7 @@ pub fn sweep(knobs: &ChaosKnobs) -> crate::Result<(Vec<ChaosPoint>, Vec<Recovery
     );
     let mut recovery = Vec::new();
     for engine in knobs.engines() {
-        recovery.push(run_recovery(knobs, &w, &fragments, engine)?);
+        recovery.push(run_recovery(knobs, &w, &fragments, &engine)?);
     }
     Ok((points, recovery))
 }
@@ -361,7 +367,7 @@ fn to_json(
                     .iter()
                     .map(|p| {
                         Json::obj(vec![
-                            ("engine", Json::str(format!("{:?}", p.engine).to_lowercase())),
+                            ("engine", Json::str(p.engine.label())),
                             ("semantics", Json::str(p.semantics.tag())),
                             ("lanes", Json::int(p.lanes)),
                             ("patterns", Json::int(p.patterns)),
@@ -395,7 +401,7 @@ fn to_json(
                     .iter()
                     .map(|r| {
                         Json::obj(vec![
-                            ("engine", Json::str(format!("{:?}", r.engine).to_lowercase())),
+                            ("engine", Json::str(r.engine.label())),
                             ("lane_restarts", Json::int(r.lane_restarts)),
                             ("identical", Json::Bool(r.identical)),
                         ])
@@ -444,7 +450,7 @@ pub fn run_with(smoke: bool, json: Option<&Path>) -> crate::Result<()> {
     for p in &points {
         println!(
             "  {:<7} {:<13} {:>5} {:>8} {:>9} {:>9} {:>10} {:>9} {:>9}",
-            format!("{:?}", p.engine).to_lowercase(),
+            p.engine.label(),
             p.semantics.tag(),
             p.lanes,
             p.patterns,
@@ -458,7 +464,7 @@ pub fn run_with(smoke: bool, json: Option<&Path>) -> crate::Result<()> {
     for r in &recovery {
         println!(
             "  {:<7} forced panic: {} lane respawn, merge identical: {}",
-            format!("{:?}", r.engine).to_lowercase(),
+            r.engine.label(),
             r.lane_restarts,
             r.identical
         );

@@ -18,7 +18,7 @@
 
 use crate::alphabet::{Alphabet, CodedWorkload};
 use crate::bench_apps::{reference_best, reference_hits};
-use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use crate::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use crate::experiments::rule;
 use crate::semantics::MatchSemantics;
 use crate::util::Json;
@@ -87,7 +87,7 @@ pub struct HitsPoint {
     /// The alphabet swept.
     pub alphabet: Alphabet,
     /// The engine that scored the pool.
-    pub engine: EngineKind,
+    pub engine: EngineSpec,
     /// The query semantics.
     pub semantics: MatchSemantics,
     /// Executor lane count.
@@ -113,12 +113,16 @@ fn run_point(
     knobs: &HitsKnobs,
     w: &CodedWorkload,
     fragments: &[Vec<u8>],
-    engine: EngineKind,
+    engine: EngineSpec,
     semantics: MatchSemantics,
     lanes: usize,
 ) -> crate::Result<HitsPoint> {
-    let mut cfg =
-        CoordinatorConfig::for_alphabet(w.alphabet, engine, knobs.frag_chars, knobs.pat_chars);
+    let mut cfg = CoordinatorConfig::for_alphabet(
+        w.alphabet,
+        engine.clone(),
+        knobs.frag_chars,
+        knobs.pat_chars,
+    );
     cfg.oracular = None; // broadcast: the oracles scan every row
     cfg.semantics = semantics;
     cfg.lanes = lanes;
@@ -140,8 +144,9 @@ fn run_point(
     }
     anyhow::ensure!(
         verified,
-        "{} {engine:?} {semantics} lanes={lanes}: served answers diverged from the scalar oracle",
-        w.alphabet
+        "{} {} {semantics} lanes={lanes}: served answers diverged from the scalar oracle",
+        w.alphabet,
+        engine.label()
     );
     Ok(HitsPoint {
         alphabet: w.alphabet,
@@ -173,7 +178,7 @@ pub fn sweep(knobs: &HitsKnobs) -> crate::Result<Vec<HitsPoint>> {
         let fragments = w.fragments(knobs.frag_chars, knobs.pat_chars);
         for semantics in knobs.semantics() {
             for lanes in knobs.lanes {
-                out.push(run_point(knobs, &w, &fragments, EngineKind::Cpu, semantics, lanes)?);
+                out.push(run_point(knobs, &w, &fragments, EngineSpec::Cpu, semantics, lanes)?);
             }
             // Engine parity on the gate-level simulator (DNA keeps the
             // sweep's runtime bounded; the property suite covers the
@@ -183,7 +188,7 @@ pub fn sweep(knobs: &HitsKnobs) -> crate::Result<Vec<HitsPoint>> {
                     knobs,
                     &w,
                     &fragments,
-                    EngineKind::Bitsim,
+                    EngineSpec::Bitsim,
                     semantics,
                     knobs.lanes[1],
                 )?);
@@ -236,7 +241,7 @@ fn to_json(knobs: &HitsKnobs, smoke: bool, points: &[HitsPoint]) -> Json {
                         Json::obj(vec![
                             ("alphabet", Json::str(p.alphabet.tag())),
                             ("bits_per_char", Json::int(p.alphabet.bits_per_char())),
-                            ("engine", Json::str(format!("{:?}", p.engine).to_lowercase())),
+                            ("engine", Json::str(p.engine.label())),
                             ("semantics", Json::str(p.semantics.tag())),
                             ("lanes", Json::int(p.lanes)),
                             ("patterns", Json::int(p.patterns)),
@@ -283,7 +288,7 @@ pub fn run_with(smoke: bool, json: Option<&Path>) -> crate::Result<()> {
         println!(
             "  {:<9} {:<7} {:<13} {:>5} {:>8} {:>9} {:>9.2} {:>12.0} {:>12.3e} {:>9}",
             p.alphabet.tag(),
-            format!("{:?}", p.engine).to_lowercase(),
+            p.engine.label(),
             p.semantics.tag(),
             p.lanes,
             p.patterns,

@@ -11,7 +11,7 @@
 //! unchanged".
 
 use crate::bench_apps::dna::DnaWorkload;
-use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use crate::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use crate::experiments::rule;
 use crate::scheduler::{OracularScheduler, PatternScheduler, RowAddr, ShardMap};
 use crate::util::Json;
@@ -47,7 +47,7 @@ pub fn sweep(
     let mut base_rate = 0.0;
     for &lanes in lanes_list {
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-        cfg.engine = EngineKind::Cpu;
+        cfg.engine = EngineSpec::Cpu;
         cfg.oracular = None;
         cfg.lanes = lanes;
         let coord = Coordinator::new(cfg, fragments.clone())?;

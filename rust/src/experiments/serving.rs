@@ -16,7 +16,7 @@
 
 use crate::alphabet::{Alphabet, CodedWorkload};
 use crate::bench_apps::dna::DnaWorkload;
-use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use crate::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use crate::experiments::rule;
 use crate::isa::PresetMode;
 use crate::scheduler::ThroughputModel;
@@ -138,7 +138,7 @@ fn build(knobs: &ServingKnobs) -> crate::Result<(Arc<Coordinator>, Vec<Vec<u8>>)
             (w.fragments(64, 16), w.patterns)
         }
     };
-    let mut cfg = CoordinatorConfig::for_alphabet(knobs.alphabet, EngineKind::Cpu, 64, 16);
+    let mut cfg = CoordinatorConfig::for_alphabet(knobs.alphabet, EngineSpec::Cpu, 64, 16);
     cfg.lanes = knobs.lanes;
     Ok((Arc::new(Coordinator::new(cfg, fragments)?), patterns))
 }

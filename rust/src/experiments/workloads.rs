@@ -16,7 +16,7 @@
 
 use crate::alphabet::Alphabet;
 use crate::bench_apps::{FunctionalReport, StringMatchBench, WordCountBench};
-use crate::coordinator::EngineKind;
+use crate::coordinator::EngineSpec;
 use crate::experiments::rule;
 use crate::util::Json;
 use std::path::Path;
@@ -94,14 +94,14 @@ pub fn sweep(knobs: &WorkloadKnobs) -> crate::Result<Vec<AlphabetPoint>> {
     for alphabet in Alphabet::ALL {
         let sm = sm_bench.functional(
             alphabet,
-            EngineKind::Cpu,
+            EngineSpec::Cpu,
             knobs.sm_segments,
             knobs.sm_needles,
             knobs.seed,
         )?;
         let wc = wc_bench.functional(
             alphabet,
-            EngineKind::Cpu,
+            EngineSpec::Cpu,
             knobs.wc_rows,
             knobs.wc_queries,
             knobs.seed ^ 0x5743, // "WC": decorrelate from the SM workload

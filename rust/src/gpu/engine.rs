@@ -1,0 +1,370 @@
+//! [`GpuEngine`]: the [`crate::engine::Engine`] implementation over
+//! the wgpu compute path.
+//!
+//! One [`Engine::run`] is one staged dispatch: refill the pooled
+//! [`FragmentStage`], upload it with the packed pattern and validity
+//! masks, run [`shader::SCORE_WGSL`] over one invocation per row, and
+//! fold the returned row-major score matrix host-side under exactly
+//! the CPU oracle's tie-break (per-row best over ascending locs with
+//! strict `>`, then rows ascending with strict `>`), pushing every
+//! `(row, loc, score)` through the shared [`HitAccumulator`] when the
+//! semantics enumerate. The fold is the bit-identity contract: a gpu
+//! lane merges with cpu/bitsim lanes without any per-engine
+//! canonicalization.
+//!
+//! Construction performs headless adapter selection; no adapter is the
+//! typed [`GpuUnavailable`] — surfaced through the coordinator's lane
+//! startup handshake at `Coordinator::new`, never a silent fallback.
+//! [`GpuEngine::software_reference`] builds the same engine over a
+//! host-side interpretation of the shader ([`shader::score_matrix`])
+//! so the WGSL semantics stay oracle-proven on adapterless machines.
+
+use super::shader;
+use super::stage::{FragmentStage, StageInfo};
+use super::wgpu_stub::{
+    ComputePipeline, Device, Instance, PowerPreference, Queue, RequestAdapterOptions,
+};
+use super::GpuUnavailable;
+use crate::alphabet::Alphabet;
+use crate::baselines::cpu_ref::BestAlignment;
+use crate::engine::{registry, Capabilities, Engine, EngineCtx, WorkItem, WorkResult};
+use crate::semantics::HitAccumulator;
+use crate::Result;
+
+/// Where the score matrix comes from.
+enum GpuExec {
+    /// A real adapter: dispatch the WGSL pipeline on its queue.
+    Device {
+        /// Kept alive for the queue's lifetime (wgpu drops pipelines
+        /// with their device).
+        _device: Device,
+        queue: Queue,
+        pipeline: ComputePipeline,
+    },
+    /// Host-side interpretation of the same shader — test-only
+    /// construction via [`GpuEngine::software_reference`]; adapter
+    /// selection never falls back to this.
+    Software,
+}
+
+/// The wgpu compute scoring engine.
+pub struct GpuEngine {
+    /// The alphabet this engine scores (items must match).
+    alphabet: Alphabet,
+    /// Pooled staging buffer, refilled per item.
+    stage: FragmentStage,
+    exec: GpuExec,
+}
+
+impl GpuEngine {
+    /// Headless adapter selection and pipeline compilation. `Err` with
+    /// a downcastable [`GpuUnavailable`] when no adapter exists — the
+    /// coordinator handshake turns that into a construction failure
+    /// for the lane set, and GPU tests turn it into a typed skip.
+    pub fn new(ctx: &EngineCtx) -> Result<Self> {
+        let instance = Instance::new();
+        let Some(adapter) = instance.request_adapter(&RequestAdapterOptions {
+            power_preference: PowerPreference::HighPerformance,
+            // A software rasterizer would silently turn "gpu" into a
+            // slow CPU run; refuse it and let the caller pick a real
+            // CPU engine instead.
+            force_fallback_adapter: false,
+        }) else {
+            return Err(anyhow::Error::new(GpuUnavailable {
+                reason: "headless adapter selection found no usable backend (the in-crate \
+                         wgpu stub reports none; vendor wgpu to enable device dispatch)",
+            }));
+        };
+        let (device, queue) = adapter.request_device();
+        let pipeline = device.create_compute_pipeline(shader::SCORE_WGSL, shader::SCORE_ENTRY);
+        Ok(GpuEngine {
+            alphabet: ctx.alphabet,
+            stage: FragmentStage::new(StageInfo::new(0, ctx.frag_chars)),
+            exec: GpuExec::Device { _device: device, queue, pipeline },
+        })
+    }
+
+    /// The adapter-free construction: identical engine, with the score
+    /// matrix computed by the host-side shader interpreter. What the
+    /// oracle-equivalence tests (and the capability matrix) run where
+    /// no adapter exists — an explicit choice at the call site, never
+    /// an automatic fallback from [`GpuEngine::new`].
+    pub fn software_reference(alphabet: Alphabet) -> Self {
+        GpuEngine { alphabet, stage: FragmentStage::new(StageInfo::new(0, 0)), exec: GpuExec::Software }
+    }
+
+    /// Whether this engine dispatches to a real device (`false`: the
+    /// software reference interpreter).
+    pub fn on_device(&self) -> bool {
+        matches!(self.exec, GpuExec::Device { .. })
+    }
+
+    /// The row-major `n_rows * n_locs` score matrix for the staged
+    /// fragments.
+    fn scores(&self, pattern: &[u32], masks: &[u32], n_locs: usize) -> Vec<u32> {
+        match &self.exec {
+            GpuExec::Software => shader::score_matrix(&self.stage, pattern, masks, n_locs),
+            GpuExec::Device { queue, pipeline, .. } => {
+                let info = self.stage.info();
+                let uniforms =
+                    shader::uniforms(info.rows, info.words_per_row(), pattern.len(), n_locs);
+                let workgroups = (info.rows as u32).div_ceil(shader::WORKGROUP_SIZE);
+                queue.dispatch(
+                    pipeline,
+                    &uniforms,
+                    &[self.stage.words(), pattern, masks],
+                    workgroups,
+                    info.rows * n_locs,
+                )
+            }
+        }
+    }
+}
+
+impl Engine for GpuEngine {
+    fn run(&mut self, item: &WorkItem) -> Result<WorkResult> {
+        anyhow::ensure!(
+            item.alphabet == self.alphabet,
+            "work item alphabet {} != engine alphabet {}",
+            item.alphabet,
+            self.alphabet
+        );
+        let frag_chars = item.fragments.first().map_or(0, |f| f.len());
+        anyhow::ensure!(
+            item.fragments.iter().all(|f| f.len() == frag_chars),
+            "the wgpu engine stages uniform fragment tiles; item holds ragged row lengths"
+        );
+        let pat_len = item.pattern.len();
+        let mut best: Option<BestAlignment> = None;
+        let mut acc = item.semantics.enumerates().then(|| HitAccumulator::new(item.semantics));
+        if !item.fragments.is_empty() && pat_len > 0 && pat_len <= frag_chars {
+            self.stage.fill(&item.fragments);
+            let pattern = shader::pack_codes(&item.pattern);
+            let masks = shader::validity_masks(pat_len);
+            let n_locs = frag_chars - pat_len + 1;
+            let scores = self.scores(&pattern, &masks, n_locs);
+            // The oracle's fold, verbatim: per-row best over ascending
+            // locs first (strict > keeps the lowest loc), then rows in
+            // ascending order (strict > keeps the lowest row) — so gpu
+            // partials merge bit-identically with any other engine's.
+            for (r, row_scores) in scores.chunks(n_locs).enumerate() {
+                let rid = item.row_ids[r] as usize;
+                let mut row_best = (0u32, 0usize);
+                for (loc, &s) in row_scores.iter().enumerate() {
+                    if s > row_best.0 {
+                        row_best = (s, loc);
+                    }
+                    if let Some(acc) = acc.as_mut() {
+                        acc.push(rid, loc, s as usize);
+                    }
+                }
+                if best.map_or(true, |b| (row_best.0 as usize) > b.score) {
+                    best =
+                        Some(BestAlignment { row: rid, loc: row_best.1, score: row_best.0 as usize });
+                }
+            }
+        }
+        let hits = acc.map(HitAccumulator::finish).unwrap_or_default();
+        Ok(WorkResult {
+            pattern_id: item.pattern_id,
+            best,
+            hits,
+            passes: 1,
+            faults_injected: 0,
+            faults_detected: 0,
+        })
+    }
+
+    fn label(&self) -> &'static str {
+        "gpu"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        registry::GPU_CAPS
+    }
+
+    // set_fault_plan / set_attempt keep the trait defaults: the engine
+    // has no device-fault model, and negotiation guarantees it never
+    // sees a rates-enabled plan. Lane-level panic/stall hooks run in
+    // the executor, not the engine, so they work here too.
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::coordinator::CpuEngine;
+    use crate::semantics::MatchSemantics;
+    use crate::simd::SimdKernel;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn ctx(alphabet: Alphabet, frag_chars: usize, pat_chars: usize) -> EngineCtx {
+        EngineCtx {
+            alphabet,
+            frag_chars,
+            pat_chars,
+            kernel: SimdKernel::Scalar,
+            rows_per_block: 256,
+            bitsim_cache: None,
+        }
+    }
+
+    /// The engine under test: the device when an adapter exists, else
+    /// the software reference with the typed skip reason logged — the
+    /// graceful-skip shape the `gpu-build` CI lane relies on.
+    fn engine_under_test(alphabet: Alphabet) -> GpuEngine {
+        match GpuEngine::new(&ctx(alphabet, 24, 6)) {
+            Ok(engine) => engine,
+            Err(err) => {
+                let unavailable = err
+                    .downcast_ref::<GpuUnavailable>()
+                    .expect("construction may only fail with the typed GpuUnavailable");
+                eprintln!("no adapter ({unavailable}); validating the software reference");
+                GpuEngine::software_reference(alphabet)
+            }
+        }
+    }
+
+    fn item(
+        alphabet: Alphabet,
+        seed: u64,
+        n_frags: usize,
+        frag_chars: usize,
+        pat_chars: usize,
+    ) -> WorkItem {
+        let mut rng = Rng::new(seed);
+        let fragments: Vec<Arc<[u8]>> = (0..n_frags)
+            .map(|_| Arc::from(alphabet.random_codes(&mut rng, frag_chars).as_slice()))
+            .collect();
+        let pattern: Arc<[u8]> = Arc::from(&fragments[1][3..3 + pat_chars]);
+        WorkItem {
+            pattern_id: 7,
+            alphabet,
+            semantics: MatchSemantics::BestOf,
+            pattern,
+            fragments,
+            row_ids: (100..100 + n_frags as u32).collect(),
+        }
+    }
+
+    fn assert_results_equal(a: &WorkResult, b: &WorkResult, what: &str) {
+        assert_eq!(
+            a.best.map(|x| (x.score, x.row, x.loc)),
+            b.best.map(|x| (x.score, x.row, x.loc)),
+            "{what}: best"
+        );
+        assert_eq!(a.hits, b.hits, "{what}: hits");
+    }
+
+    /// The acceptance gate: the wgpu engine (device or software
+    /// reference) returns the exact `WorkResult` the scalar CPU oracle
+    /// returns — every alphabet, every semantics, word-boundary
+    /// fragment lengths, tie-heavy inputs.
+    #[test]
+    fn gpu_engine_equals_scalar_oracle() {
+        for alphabet in Alphabet::ALL {
+            let mut gpu = engine_under_test(alphabet);
+            for frag_chars in [24usize, 63, 64, 65] {
+                for semantics in [
+                    MatchSemantics::BestOf,
+                    MatchSemantics::Threshold { min_score: 3 },
+                    MatchSemantics::TopK { k: 4 },
+                ] {
+                    let mut it = item(alphabet, 0x6E0, 6, frag_chars, 6);
+                    it.semantics = semantics;
+                    let want = CpuEngine::with_kernel(alphabet, SimdKernel::Scalar)
+                        .run(&it)
+                        .unwrap();
+                    let got = gpu.run(&it).unwrap();
+                    assert_results_equal(
+                        &got,
+                        &want,
+                        &format!("{alphabet} chars={frag_chars} {semantics}"),
+                    );
+                    assert_eq!(got.best.unwrap().score, 6, "planted pattern must score full");
+                }
+            }
+        }
+    }
+
+    /// Tie-breaking: identical rows force score ties everywhere; the
+    /// fold must keep the lowest (row, loc) exactly like the oracle.
+    #[test]
+    fn gpu_engine_tie_breaks_row_major() {
+        let mut it = item(Alphabet::Dna2, 9, 4, 24, 6);
+        let same = it.fragments[0].clone();
+        for f in &mut it.fragments {
+            *f = same.clone();
+        }
+        it.pattern = Arc::from(&same[5..11]);
+        it.semantics = MatchSemantics::TopK { k: 6 };
+        let want = CpuEngine::with_kernel(Alphabet::Dna2, SimdKernel::Scalar).run(&it).unwrap();
+        let got = engine_under_test(Alphabet::Dna2).run(&it).unwrap();
+        assert_results_equal(&got, &want, "identical rows");
+        let b = got.best.unwrap();
+        // Every row ties: the lowest row must win at full score.
+        assert_eq!((b.row, b.score), (100, 6));
+    }
+
+    /// Degenerate items answer like the oracle: no candidates, and a
+    /// pattern longer than the fragments, both yield no best.
+    #[test]
+    fn gpu_engine_degenerate_items_match_oracle() {
+        let mut gpu = engine_under_test(Alphabet::Dna2);
+        let empty = WorkItem {
+            pattern_id: 0,
+            alphabet: Alphabet::Dna2,
+            semantics: MatchSemantics::BestOf,
+            pattern: Arc::from(&[0u8; 4][..]),
+            fragments: vec![],
+            row_ids: vec![],
+        };
+        assert!(gpu.run(&empty).unwrap().best.is_none());
+        let mut long = item(Alphabet::Dna2, 3, 2, 8, 4);
+        long.pattern = Arc::from(&[0u8; 9][..]);
+        let got = gpu.run(&long).unwrap();
+        assert!(got.best.is_none());
+        assert!(got.hits.is_empty());
+    }
+
+    /// Ragged rows are a typed refusal (the stage uploads uniform
+    /// tiles), and an alphabet mismatch is refused like every engine.
+    #[test]
+    fn gpu_engine_refuses_ragged_and_mismatched_items() {
+        let mut gpu = engine_under_test(Alphabet::Dna2);
+        let mut ragged = item(Alphabet::Dna2, 4, 3, 24, 6);
+        let short: Arc<[u8]> = Arc::from(&ragged.fragments[1][..20]);
+        ragged.fragments[1] = short;
+        let err = gpu.run(&ragged).unwrap_err();
+        assert!(err.to_string().contains("ragged"), "unexpected: {err:#}");
+        let wrong = item(Alphabet::Protein5, 4, 3, 24, 6);
+        let err = gpu.run(&wrong).unwrap_err();
+        assert!(err.to_string().contains("alphabet"), "unexpected: {err:#}");
+    }
+
+    /// Construction never lies: either a device pipeline, or the typed
+    /// [`GpuUnavailable`] — no silent software fallback.
+    #[test]
+    fn construction_is_device_or_typed_unavailable() {
+        match GpuEngine::new(&ctx(Alphabet::Dna2, 24, 6)) {
+            Ok(engine) => assert!(engine.on_device()),
+            Err(err) => {
+                assert!(err.downcast_ref::<GpuUnavailable>().is_some(), "unexpected: {err:#}");
+                assert!(err.to_string().contains("no wgpu adapter"), "unexpected: {err:#}");
+            }
+        }
+        assert!(!GpuEngine::software_reference(Alphabet::Dna2).on_device());
+    }
+
+    /// The engine label and capability declaration match the registry.
+    #[test]
+    fn label_and_capabilities_match_the_registry() {
+        let gpu = GpuEngine::software_reference(Alphabet::Dna2);
+        assert_eq!(gpu.label(), "gpu");
+        assert_eq!(gpu.capabilities(), registry::GPU_CAPS);
+        assert!(!gpu.capabilities().fault_injection);
+        assert!(gpu.capabilities().enumeration);
+    }
+}

@@ -1,0 +1,49 @@
+//! The wgpu compute engine (`--features gpu`): the paper's GPU
+//! baseline (§IV–V) made executable instead of analytically modeled.
+//!
+//! The scoring kernel is a WGSL compute shader ([`shader::SCORE_WGSL`])
+//! that XORs a byte-packed pattern window against staged fragment
+//! tiles and popcounts the zero bytes — one matching character per set
+//! `0x80` marker bit, the same similarity count every other engine
+//! produces. Fragments are packed four codes per `u32` word and
+//! uploaded as row-major tiles through a kubecl-style staging buffer
+//! ([`stage::FragmentStage`]); the host folds the returned score
+//! matrix under the exact row-major tie-break the CPU oracle uses, so
+//! the merge is bit-identical at any lane split.
+//!
+//! Adapter selection is headless
+//! ([`wgpu_stub::Instance::request_adapter`]): no adapter is a typed
+//! [`GpuUnavailable`] at engine construction — surfaced by the
+//! coordinator's startup handshake, never a silent fallback to a
+//! different backend. The build image is offline, so the wgpu API
+//! surface the engine programs against is vendored in-crate
+//! ([`wgpu_stub`], the same pattern as the PJRT stub in
+//! [`crate::runtime`]); the stub reports no adapters, and
+//! [`engine::GpuEngine::software_reference`] executes the shader's
+//! semantics host-side so the WGSL stays proven against the scalar
+//! oracle even where no device exists.
+
+pub mod engine;
+pub mod shader;
+pub mod stage;
+pub mod wgpu_stub;
+
+pub use engine::GpuEngine;
+
+/// No usable wgpu adapter: the typed reason GPU-dependent tests skip
+/// with, and the construction error the coordinator handshake surfaces
+/// when a lane spec says `gpu` on a machine without one. Retrieve with
+/// `err.downcast_ref::<GpuUnavailable>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GpuUnavailable {
+    /// Why adapter selection failed.
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for GpuUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "no wgpu adapter available: {}", self.reason)
+    }
+}
+
+impl std::error::Error for GpuUnavailable {}

@@ -1,0 +1,281 @@
+//! The WGSL scoring kernel and its host-side interpreter.
+//!
+//! One compute invocation owns one fragment row and walks every
+//! alignment `loc`. Codes are packed four per `u32` word
+//! (little-endian byte order: char `i` is byte `i % 4` of word
+//! `i / 4`), so one XOR compares four characters and the zero bytes of
+//! the XOR are exactly the matching characters. Zero-byte detection
+//! uses the carry-exact SWAR form
+//!
+//! ```text
+//! zeros(x) = !((((x & 0x7F7F7F7F) + 0x7F7F7F7F) | x) | 0x7F7F7F7F)
+//! ```
+//!
+//! which raises `0x80` at precisely the zero bytes: per byte,
+//! `(b & 0x7F) + 0x7F` sets bit 7 iff the low seven bits are nonzero,
+//! `| b` folds in bit 7 itself, and no byte's sum exceeds `0xFE`, so
+//! carries never cross byte lanes. (The shorter textbook form
+//! `(x - 0x0101_0101) & !x & 0x8080_8080` does *not* have this
+//! property — borrows propagate across lanes and over-count — so it
+//! must not be substituted here.) Characters past the pattern length
+//! are cleared by a per-word validity mask rather than sentinel
+//! padding: `Ascii8` uses all 256 byte values, so no sentinel code is
+//! safe.
+//!
+//! The host functions below are the same algorithm, step for step, in
+//! Rust: [`super::engine::GpuEngine::software_reference`] runs them in
+//! place of a device so the WGSL semantics stay proven against the
+//! scalar oracle on machines with no adapter, and the staging/packing
+//! tests pin the layout the shader assumes.
+
+use super::stage::FragmentStage;
+
+/// The compute shader. Bind group 0: uniforms
+/// `[n_rows, words_per_row, pat_words, n_locs]`, then the staged
+/// fragment tiles, the packed pattern, the validity masks, and the
+/// row-major `n_rows * n_locs` output score matrix.
+pub const SCORE_WGSL: &str = r#"
+struct Params {
+    n_rows: u32,
+    words_per_row: u32,
+    pat_words: u32,
+    n_locs: u32,
+};
+
+@group(0) @binding(0) var<uniform> params: Params;
+@group(0) @binding(1) var<storage, read> fragments: array<u32>;
+@group(0) @binding(2) var<storage, read> pattern: array<u32>;
+@group(0) @binding(3) var<storage, read> masks: array<u32>;
+@group(0) @binding(4) var<storage, read_write> scores: array<u32>;
+
+// 0x80 at exactly the zero bytes of x; no cross-lane carries.
+fn zero_bytes(x: u32) -> u32 {
+    return ~((((x & 0x7f7f7f7fu) + 0x7f7f7f7fu) | x) | 0x7f7f7f7fu);
+}
+
+@compute @workgroup_size(64)
+fn score_rows(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let row = gid.x;
+    if (row >= params.n_rows) {
+        return;
+    }
+    let base = row * params.words_per_row;
+    for (var loc = 0u; loc < params.n_locs; loc = loc + 1u) {
+        let w = loc / 4u;
+        let s = (loc % 4u) * 8u;
+        var score = 0u;
+        for (var k = 0u; k < params.pat_words; k = k + 1u) {
+            var window = fragments[base + w + k] >> s;
+            if (s > 0u) {
+                window = window | (fragments[base + w + k + 1u] << (32u - s));
+            }
+            score = score + countOneBits(zero_bytes(window ^ pattern[k]) & masks[k]);
+        }
+        scores[row * params.n_locs + loc] = score;
+    }
+}
+"#;
+
+/// The shader's entry point name.
+pub const SCORE_ENTRY: &str = "score_rows";
+
+/// Workgroup width the shader declares; dispatches round rows up to
+/// this.
+pub const WORKGROUP_SIZE: u32 = 64;
+
+/// `zero_bytes` from the shader, host-side: `0x80` at exactly the zero
+/// bytes of `x`.
+#[inline]
+pub fn zero_bytes(x: u32) -> u32 {
+    !((((x & 0x7f7f_7f7f).wrapping_add(0x7f7f_7f7f)) | x) | 0x7f7f_7f7f)
+}
+
+/// Pack byte codes four per `u32`, little-endian byte order, zero-padding
+/// the trailing word — the layout both the staged fragments and the
+/// pattern buffer use.
+pub fn pack_codes(codes: &[u8]) -> Vec<u32> {
+    codes
+        .chunks(4)
+        .map(|c| {
+            c.iter().enumerate().fold(0u32, |w, (i, &b)| w | (u32::from(b) << (8 * i as u32)))
+        })
+        .collect()
+}
+
+/// Per-word validity masks for a pattern of `pat_len` chars: `0x80` at
+/// byte lane `i % 4` of word `i / 4` for every `i < pat_len`, so
+/// `zeros & mask` counts only real pattern characters.
+pub fn validity_masks(pat_len: usize) -> Vec<u32> {
+    (0..pat_len.div_ceil(4))
+        .map(|w| {
+            (0..4)
+                .filter(|b| w * 4 + b < pat_len)
+                .fold(0u32, |m, b| m | (0x80u32 << (8 * b as u32)))
+        })
+        .collect()
+}
+
+/// One row/loc score, interpreting the shader's inner loop exactly:
+/// funnel-shift the packed window out of the row's tile, XOR against
+/// the packed pattern, and popcount the masked zero-byte markers.
+#[inline]
+fn score_at(tile: &[u32], pattern: &[u32], masks: &[u32], loc: usize) -> u32 {
+    let w = loc / 4;
+    let s = ((loc % 4) * 8) as u32;
+    let mut score = 0u32;
+    for (k, (&pw, &mask)) in pattern.iter().zip(masks).enumerate() {
+        let mut window = tile[w + k] >> s;
+        if s > 0 {
+            window |= tile[w + k + 1] << (32 - s);
+        }
+        score += (zero_bytes(window ^ pw) & mask).count_ones();
+    }
+    score
+}
+
+/// The whole dispatch, host-side: the row-major `n_rows * n_locs`
+/// score matrix the device would write back. Bit-for-bit the shader's
+/// output (same packing, same SWAR, same mask) — the software
+/// reference path and the device-equivalence tests both call this.
+pub fn score_matrix(stage: &FragmentStage, pattern: &[u32], masks: &[u32], n_locs: usize) -> Vec<u32> {
+    let mut scores = vec![0u32; stage.rows() * n_locs];
+    for row in 0..stage.rows() {
+        let tile = stage.get_tile(row);
+        for (loc, out) in scores[row * n_locs..(row + 1) * n_locs].iter_mut().enumerate() {
+            *out = score_at(tile, pattern, masks, loc);
+        }
+    }
+    scores
+}
+
+/// The uniform block the dispatch uploads, in declaration order.
+pub fn uniforms(n_rows: usize, words_per_row: usize, pat_words: usize, n_locs: usize) -> [u32; 4] {
+    [n_rows as u32, words_per_row as u32, pat_words as u32, n_locs as u32]
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::gpu::stage::{FragmentStage, StageInfo};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    /// The SWAR detector against the byte-loop definition — including
+    /// the borrow-propagation shapes (a zero byte below a `0x01` byte)
+    /// that break the textbook `x - 0x01010101` form.
+    #[test]
+    fn zero_bytes_is_byte_exact() {
+        let naive = |x: u32| -> u32 {
+            (0..4).fold(0u32, |z, b| {
+                if (x >> (8 * b)) & 0xff == 0 { z | (0x80 << (8 * b)) } else { z }
+            })
+        };
+        let tricky = [
+            0x0000_0000,
+            0xffff_ffff,
+            0x0000_0100, // borrow shape: 0x80808080-form over-counts here
+            0x0001_0000,
+            0x0100_0000,
+            0x0000_0001,
+            0x8080_8080,
+            0x0080_0080,
+            0x7f00_7f00,
+            0x0101_0101,
+            0x00ff_00ff,
+        ];
+        for x in tricky {
+            assert_eq!(zero_bytes(x), naive(x), "x={x:#010x}");
+        }
+        let mut rng = Rng::new(0xD1CE);
+        for _ in 0..20_000 {
+            let x = rng.next_u64() as u32;
+            assert_eq!(zero_bytes(x), naive(x), "x={x:#010x}");
+        }
+    }
+
+    #[test]
+    fn packing_is_little_endian_four_per_word() {
+        assert_eq!(pack_codes(&[1, 2, 3, 4, 5]), vec![0x0403_0201, 0x0000_0005]);
+        assert_eq!(pack_codes(&[]), Vec::<u32>::new());
+        assert_eq!(pack_codes(&[0xff]), vec![0x0000_00ff]);
+    }
+
+    #[test]
+    fn validity_masks_cover_exactly_the_pattern() {
+        assert_eq!(validity_masks(0), Vec::<u32>::new());
+        assert_eq!(validity_masks(1), vec![0x0000_0080]);
+        assert_eq!(validity_masks(4), vec![0x8080_8080]);
+        assert_eq!(validity_masks(6), vec![0x8080_8080, 0x0000_8080]);
+    }
+
+    /// The host interpreter against the definition: the number of
+    /// matching characters at each (row, loc) — every alphabet width
+    /// (2-bit codes, 5-bit codes, full bytes including 0x00 and 0xff),
+    /// every alignment shift class (`loc % 4`).
+    #[test]
+    fn score_matrix_counts_matching_chars() {
+        let mut rng = Rng::new(0x5C04E);
+        for (frag_chars, pat_len) in [(11usize, 3usize), (16, 5), (24, 6), (13, 13), (7, 1)] {
+            for max_code in [3u8, 31, 255] {
+                let frags: Vec<Arc<[u8]>> = (0..5)
+                    .map(|_| {
+                        Arc::from(
+                            (0..frag_chars)
+                                .map(|_| (rng.next_u64() % (u64::from(max_code) + 1)) as u8)
+                                .collect::<Vec<u8>>()
+                                .as_slice(),
+                        )
+                    })
+                    .collect();
+                let pattern: Vec<u8> = (0..pat_len)
+                    .map(|_| (rng.next_u64() % (u64::from(max_code) + 1)) as u8)
+                    .collect();
+                let mut stage = FragmentStage::new(StageInfo::new(frags.len(), frag_chars));
+                stage.fill(&frags);
+                let pat_words = pack_codes(&pattern);
+                let masks = validity_masks(pat_len);
+                let n_locs = frag_chars - pat_len + 1;
+                let scores = score_matrix(&stage, &pat_words, &masks, n_locs);
+                for (r, frag) in frags.iter().enumerate() {
+                    for loc in 0..n_locs {
+                        let want = pattern
+                            .iter()
+                            .zip(&frag[loc..loc + pat_len])
+                            .filter(|(a, b)| a == b)
+                            .count() as u32;
+                        assert_eq!(
+                            scores[r * n_locs + loc],
+                            want,
+                            "chars={frag_chars} pat={pat_len} max_code={max_code} row={r} loc={loc}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// A pattern planted in a fragment scores full length at its loc —
+    /// the sanity shape every engine test leans on.
+    #[test]
+    fn planted_pattern_scores_full_length() {
+        let frag: Arc<[u8]> = Arc::from(&[9u8, 8, 7, 200, 201, 202, 203, 1, 2, 3, 4][..]);
+        let pattern = &frag[3..8]; // crosses a word boundary, loc % 4 == 3
+        let mut stage = FragmentStage::new(StageInfo::new(1, frag.len()));
+        stage.fill(std::slice::from_ref(&frag));
+        let scores =
+            score_matrix(&stage, &pack_codes(pattern), &validity_masks(5), frag.len() - 5 + 1);
+        assert_eq!(scores[3], 5);
+        assert!(scores.iter().enumerate().all(|(loc, &s)| loc == 3 || s < 5));
+    }
+
+    #[test]
+    fn uniform_block_layout_is_stable() {
+        assert_eq!(uniforms(3, 5, 2, 19), [3, 5, 2, 19]);
+        assert!(SCORE_WGSL.contains("fn score_rows"));
+        assert!(SCORE_WGSL.contains("@workgroup_size(64)"));
+        assert_eq!(WORKGROUP_SIZE, 64);
+        assert_eq!(SCORE_ENTRY, "score_rows");
+    }
+}

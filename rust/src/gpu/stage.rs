@@ -1,0 +1,159 @@
+//! Staged fragment tiles: the host-side buffer the dispatch uploads.
+//!
+//! Follows the kubecl stage idiom (`new` over static geometry, `fill`
+//! from the global view, `get_tile` per unit of compute): the stage is
+//! allocated once per engine at tile geometry and refilled in place
+//! per work item, so steady-state scoring never reallocates the upload
+//! buffer — the same pooling discipline the CPU engine's packed
+//! scratch buffers follow.
+//!
+//! Layout contract (what [`super::shader::SCORE_WGSL`] indexes): row
+//! `r`'s tile is `words_per_row` consecutive `u32`s at
+//! `r * words_per_row`, codes packed four per word little-endian, the
+//! tail word zero-padded, plus **one trailing guard word of zeros** so
+//! the shader's funnel shift (`tile[w + k + 1]` at `loc % 4 != 0`) may
+//! read one word past the last code without branching. Guard reads are
+//! masked out of the score by the validity masks, so their value only
+//! needs to be deterministic, not zero — zero keeps re-fills
+//! reproducible.
+
+use super::shader::pack_codes;
+use std::sync::Arc;
+
+/// Static tile geometry, fixed at engine construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageInfo {
+    /// Fragment rows the stage holds.
+    pub rows: usize,
+    /// Characters (codes) per fragment row.
+    pub frag_chars: usize,
+}
+
+impl StageInfo {
+    /// Geometry for `rows` fragments of `frag_chars` codes each.
+    pub fn new(rows: usize, frag_chars: usize) -> Self {
+        StageInfo { rows, frag_chars }
+    }
+
+    /// `u32` words per staged row: the packed codes plus the guard
+    /// word the funnel shift reads through.
+    pub fn words_per_row(&self) -> usize {
+        self.frag_chars.div_ceil(4) + 1
+    }
+}
+
+/// The staging buffer: every resident fragment row packed and tiled,
+/// ready for one upload.
+#[derive(Debug, Clone)]
+pub struct FragmentStage {
+    info: StageInfo,
+    words: Vec<u32>,
+}
+
+impl FragmentStage {
+    /// Allocate at geometry; all-zero until [`FragmentStage::fill`].
+    pub fn new(info: StageInfo) -> Self {
+        FragmentStage { info, words: vec![0u32; info.rows * info.words_per_row()] }
+    }
+
+    /// Refill in place from the work item's fragment rows. Grows (and
+    /// re-tiles) if the item geometry differs from the constructed one
+    /// — the coordinator never varies geometry per item, but the
+    /// engine stays correct if a caller does.
+    pub fn fill(&mut self, fragments: &[Arc<[u8]>]) {
+        let frag_chars = fragments.first().map_or(0, |f| f.len());
+        if self.info.rows != fragments.len() || self.info.frag_chars != frag_chars {
+            self.info = StageInfo::new(fragments.len(), frag_chars);
+        }
+        let wpr = self.info.words_per_row();
+        self.words.clear();
+        self.words.resize(self.info.rows * wpr, 0);
+        for (r, frag) in fragments.iter().enumerate() {
+            for (w, word) in pack_codes(frag).into_iter().enumerate() {
+                self.words[r * wpr + w] = word;
+            }
+        }
+    }
+
+    /// The geometry currently staged.
+    pub fn info(&self) -> StageInfo {
+        self.info
+    }
+
+    /// Rows currently staged.
+    pub fn rows(&self) -> usize {
+        self.info.rows
+    }
+
+    /// One row's tile: its packed words plus the guard word.
+    pub fn get_tile(&self, row: usize) -> &[u32] {
+        let wpr = self.info.words_per_row();
+        &self.words[row * wpr..(row + 1) * wpr]
+    }
+
+    /// The whole staged buffer, row-major — what one dispatch uploads.
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    fn frags(rows: usize, chars: usize) -> Vec<Arc<[u8]>> {
+        (0..rows)
+            .map(|r| Arc::from((0..chars).map(|c| (r * 31 + c) as u8).collect::<Vec<u8>>().as_slice()))
+            .collect()
+    }
+
+    #[test]
+    fn tiles_are_padded_and_guarded() {
+        let mut stage = FragmentStage::new(StageInfo::new(3, 6));
+        stage.fill(&frags(3, 6));
+        // 6 chars → 2 packed words + 1 guard.
+        assert_eq!(stage.info().words_per_row(), 3);
+        assert_eq!(stage.words().len(), 9);
+        for r in 0..3 {
+            let tile = stage.get_tile(r);
+            assert_eq!(tile.len(), 3);
+            assert_eq!(tile[2], 0, "guard word must be zero");
+            // Tail word: chars 4..6 only, upper bytes zero.
+            assert_eq!(tile[1] & 0xffff_0000, 0);
+            let b0 = (r * 31) as u32;
+            assert_eq!(tile[0], b0 | ((b0 + 1) << 8) | ((b0 + 2) << 16) | ((b0 + 3) << 24));
+        }
+    }
+
+    #[test]
+    fn refill_replaces_and_regrows() {
+        let mut stage = FragmentStage::new(StageInfo::new(2, 8));
+        stage.fill(&frags(2, 8));
+        let first = stage.words().to_vec();
+        // Same geometry, different content: fully replaced.
+        let other: Vec<Arc<[u8]>> =
+            (0..2).map(|_| Arc::from(vec![0xAAu8; 8].as_slice())).collect();
+        stage.fill(&other);
+        assert_ne!(stage.words(), first.as_slice());
+        assert!(stage.get_tile(0)[..2].iter().all(|&w| w == 0xAAAA_AAAA));
+        // Different geometry: re-tiles, stale words cannot leak.
+        stage.fill(&frags(4, 5));
+        assert_eq!(stage.info(), StageInfo::new(4, 5));
+        assert_eq!(stage.words().len(), 4 * stage.info().words_per_row());
+        for r in 0..4 {
+            let tile = stage.get_tile(r);
+            assert_eq!(tile[1] & 0xffff_ff00, 0, "row {r}: pad bytes must be zero");
+            assert_eq!(tile[2], 0, "row {r}: guard word must be zero");
+        }
+    }
+
+    #[test]
+    fn empty_stage_is_well_formed() {
+        let mut stage = FragmentStage::new(StageInfo::new(0, 16));
+        stage.fill(&[]);
+        assert_eq!(stage.rows(), 0);
+        assert!(stage.words().is_empty());
+    }
+}

@@ -1,0 +1,157 @@
+//! In-crate stand-in for the `wgpu` API surface the GPU engine
+//! programs against — the build image is offline, so the real crates
+//! cannot be added (see Cargo.toml `[features] gpu`). Mirrors the
+//! shape of wgpu's headless compute path (instance → adapter → device
+//! + queue → pipeline → dispatch) closely enough that swapping the
+//! vendored crate in later is a one-file change, exactly like the PJRT
+//! stub in [`crate::runtime::xla_stub`].
+//!
+//! Honesty rule: [`Instance::request_adapter`] answers `None` — this
+//! stub never pretends a device exists. Everything downstream of an
+//! [`Adapter`] is therefore statically unreachable, which the types
+//! encode with an uninhabited [`Void`] member: the device-path code in
+//! [`crate::gpu::engine`] type-checks against the real call shapes,
+//! and no stub method can ever fabricate a result.
+
+/// Uninhabited: proof that a value cannot exist. Every post-adapter
+/// stub type carries one, so their methods are `match self.void {}` —
+/// type-correct, and impossible to reach without a real adapter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Void {}
+
+/// Adapter power preference (mirrors `wgpu::PowerPreference`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PowerPreference {
+    /// Prefer the high-performance adapter (discrete GPU).
+    #[default]
+    HighPerformance,
+    /// Prefer the low-power adapter (integrated GPU).
+    LowPower,
+}
+
+/// Headless adapter request (mirrors `wgpu::RequestAdapterOptions` —
+/// no surface: the engine never presents).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestAdapterOptions {
+    /// Which adapter class to prefer when several exist.
+    pub power_preference: PowerPreference,
+    /// Whether a software rasterizer counts as an adapter. The engine
+    /// asks for `false`: a CPU fallback adapter would silently turn
+    /// "gpu" into a slow CPU run, which the honesty rule forbids.
+    pub force_fallback_adapter: bool,
+}
+
+/// Entry point (mirrors `wgpu::Instance`).
+#[derive(Debug, Default)]
+pub struct Instance;
+
+impl Instance {
+    /// New instance over all compiled-in backends.
+    pub fn new() -> Self {
+        Instance
+    }
+
+    /// Headless adapter selection. The stub has no backends, so this
+    /// is always `None` — callers must surface that as their own typed
+    /// unavailability error.
+    pub fn request_adapter(&self, _options: &RequestAdapterOptions) -> Option<Adapter> {
+        None
+    }
+}
+
+/// A physical device handle (mirrors `wgpu::Adapter`). Uninhabited in
+/// the stub: only a vendored real backend can produce one.
+#[derive(Debug)]
+pub struct Adapter {
+    void: Void,
+}
+
+/// Adapter identity, for logs and skip reasons.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdapterInfo {
+    /// Human-readable device name.
+    pub name: String,
+    /// Backend the adapter runs on ("vulkan", "metal", ...).
+    pub backend: &'static str,
+}
+
+impl Adapter {
+    /// Identity of the selected adapter.
+    pub fn info(&self) -> AdapterInfo {
+        match self.void {}
+    }
+
+    /// Open the logical device and its submission queue.
+    pub fn request_device(&self) -> (Device, Queue) {
+        match self.void {}
+    }
+}
+
+/// The logical device (mirrors `wgpu::Device`).
+#[derive(Debug)]
+pub struct Device {
+    void: Void,
+}
+
+impl Device {
+    /// Compile a WGSL module and wire its `entry` compute stage into a
+    /// pipeline (collapses wgpu's create_shader_module /
+    /// create_compute_pipeline pair — the engine needs exactly one).
+    pub fn create_compute_pipeline(&self, _wgsl: &str, _entry: &str) -> ComputePipeline {
+        match self.void {}
+    }
+}
+
+/// A compiled compute pipeline (mirrors `wgpu::ComputePipeline`).
+#[derive(Debug)]
+pub struct ComputePipeline {
+    void: Void,
+}
+
+impl ComputePipeline {
+    /// The compute entry point this pipeline was built around.
+    pub fn entry(&self) -> &'static str {
+        match self.void {}
+    }
+}
+
+/// The submission queue (mirrors `wgpu::Queue`).
+#[derive(Debug)]
+pub struct Queue {
+    void: Void,
+}
+
+impl Queue {
+    /// One staged compute dispatch: upload the uniform block and the
+    /// read-only storage buffers, run `workgroups` groups of `entry`,
+    /// and read back `out_words` words of the read-write output buffer
+    /// (collapses wgpu's buffer-init / bind-group / encoder /
+    /// map-async sequence into the engine's one call shape).
+    pub fn dispatch(
+        &self,
+        _pipeline: &ComputePipeline,
+        _uniforms: &[u32],
+        _storage: &[&[u32]],
+        _workgroups: u32,
+        _out_words: usize,
+    ) -> Vec<u32> {
+        match self.void {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_never_fabricates_an_adapter() {
+        let instance = Instance::new();
+        assert!(instance.request_adapter(&RequestAdapterOptions::default()).is_none());
+        assert!(instance
+            .request_adapter(&RequestAdapterOptions {
+                power_preference: PowerPreference::LowPower,
+                force_fallback_adapter: true,
+            })
+            .is_none());
+    }
+}

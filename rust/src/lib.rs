@@ -39,6 +39,8 @@
 //! | [`baselines`] | §4–5 | GPU (BWA), NMP/NMP-Hyp (HMC), Ambit, Pinatubo, CPU reference |
 //! | [`bench_apps`] | §4 Table 4 | DNA, BitCount, StringMatch, RC4, WordCount workloads |
 //! | [`runtime`] | — | PJRT client: load + execute `artifacts/*.hlo.txt` |
+//! | [`engine`] | §5 (substrate comparison) | the unified engine API: capability-negotiating `Engine` trait, typed `EngineSpec`s, and the backend registry (CPU / bitsim / XLA / wgpu) |
+//! | `gpu` (`--features gpu`) | §4–5 GPU baseline, made real | wgpu compute scorer: WGSL XOR + zero-byte popcount over staged/tiled packed-fragment uploads, host-verified against the scalar oracle |
 //! | [`coordinator`] | §2.5 | async serving loop: pattern pool → arrays → scores |
 //! | [`serve`] | — | concurrent batching serving layer: admission queue, micro-batch dedup, load generators |
 //! | [`simd`] | — | explicit AVX2/NEON kernels for the packed scorer and bitsim word ops, runtime-dispatched (`CRAM_PM_SIMD`) with the scalar paths as oracle |
@@ -50,9 +52,12 @@ pub mod baselines;
 pub mod bench_apps;
 pub mod coordinator;
 pub mod dna;
+pub mod engine;
 pub mod experiments;
 pub mod fault;
 pub mod gates;
+#[cfg(feature = "gpu")]
+pub mod gpu;
 pub mod isa;
 pub mod runtime;
 pub mod scheduler;

@@ -4,7 +4,8 @@
 //! cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|chaos|tables|all>
 //!                    [--smoke] [--json FILE]
 //! cram-pm chaos [--smoke] [--json FILE]
-//! cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N]
+//! cram-pm run [--engine xla|bitsim|cpu|gpu] [--lane-engines a,b,...]
+//!             [--patterns N] [--ref-chars N]
 //!             [--pat-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F]
 //!             [--semantics best|threshold:N|topk:K]
 //! cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein]
@@ -21,7 +22,7 @@
 
 use cram_pm::alphabet::Alphabet;
 use cram_pm::bench_apps::dna::DnaWorkload;
-use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use cram_pm::experiments::serving::ServingKnobs;
 use cram_pm::isa::{mutation_self_test, PresetMode, ProgramCache};
 use cram_pm::semantics::MatchSemantics;
@@ -31,7 +32,7 @@ use std::path::PathBuf;
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|chaos|tables|all> [--smoke] [--json FILE]\n  cram-pm chaos [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu] [--patterns N] [--ref-chars N] [--pat-chars N]\n              [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F] [--artifacts DIR]\n              [--semantics best|threshold:N|topk:K]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm verify-programs\n  cram-pm simd-info\n  cram-pm info"
+        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|chaos|tables|all> [--smoke] [--json FILE]\n  cram-pm chaos [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu|gpu] [--lane-engines a,b,...] [--patterns N] [--ref-chars N]\n              [--pat-chars N] [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F]\n              [--artifacts DIR] [--semantics best|threshold:N|topk:K]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm verify-programs\n  cram-pm simd-info\n  cram-pm info"
     );
     std::process::exit(2);
 }
@@ -178,13 +179,39 @@ fn cmd_bench_gate(kv: &FxHashMap<String, String>) -> Result<()> {
 
 fn cmd_run(kv: &FxHashMap<String, String>, flags: &[String]) -> Result<()> {
     let get = |k: &str, d: usize| kv.get(k).map(|v| v.parse().unwrap_or(d)).unwrap_or(d);
-    let engine = match kv.get("engine").map(|s| s.as_str()).unwrap_or("xla") {
-        "xla" => EngineKind::Xla,
-        "bitsim" => EngineKind::Bitsim,
-        "cpu" => EngineKind::Cpu,
-        other => {
-            eprintln!("unknown engine: {other}");
+    let engine_name = kv.get("engine").map(|s| s.as_str()).unwrap_or("xla");
+    let mut engine = match EngineSpec::parse(engine_name) {
+        Some(spec) => spec,
+        None => {
+            eprintln!("unknown engine: {engine_name} (expected xla|bitsim|cpu|gpu)");
             usage();
+        }
+    };
+    if let Some(dir) = kv.get("artifacts") {
+        let xla_variant = match &engine {
+            EngineSpec::Xla { variant, .. } => Some(variant.clone()),
+            _ => None,
+        };
+        match xla_variant {
+            Some(variant) => engine = EngineSpec::xla(&variant, dir),
+            None => eprintln!("note: --artifacts only affects the xla engine; ignored"),
+        }
+    }
+    let lane_engines = match kv.get("lane-engines") {
+        None => None,
+        Some(list) => {
+            let specs: Option<Vec<EngineSpec>> =
+                list.split(',').map(EngineSpec::parse).collect();
+            match specs {
+                Some(v) if !v.is_empty() => Some(v),
+                _ => {
+                    eprintln!(
+                        "--lane-engines must be a comma-separated list of xla|bitsim|cpu|gpu, \
+                         got {list}"
+                    );
+                    usage();
+                }
+            }
         }
     };
     let n_patterns = get("patterns", 200);
@@ -205,6 +232,7 @@ fn cmd_run(kv: &FxHashMap<String, String>, flags: &[String]) -> Result<()> {
 
     let mut cfg = CoordinatorConfig::xla("dna_small", frag_chars, pat_chars);
     cfg.engine = engine;
+    cfg.lane_engines = lane_engines;
     if naive {
         cfg.oracular = None;
     }
@@ -225,9 +253,6 @@ fn cmd_run(kv: &FxHashMap<String, String>, flags: &[String]) -> Result<()> {
                 usage();
             }
         }
-    }
-    if let Some(dir) = kv.get("artifacts") {
-        cfg.artifacts_dir = dir.into();
     }
     let semantics = cfg.semantics;
     let coord = Coordinator::new(cfg, fragments)?;

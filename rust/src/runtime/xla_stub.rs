@@ -7,7 +7,8 @@
 //!
 //! Every artifact-gated test, bench, and example checks for
 //! `artifacts/manifest.txt` before exercising the XLA path and skips
-//! (or falls back to [`crate::coordinator::EngineKind::Bitsim`]) when
+//! (or falls back to [`crate::engine::EngineSpec::Bitsim`], resolved
+//! through [`crate::engine::registry`] like every other engine) when
 //! it is absent, so the default build stays green end to end. Swapping
 //! the real bindings back in is one line: re-point the `xla` alias at
 //! the top of `runtime/engine.rs` from this module to the crate.
@@ -22,7 +23,7 @@ impl Error {
     fn stub() -> Self {
         Error(
             "PJRT/XLA bindings are not vendored in this build; score with \
-             EngineKind::Cpu or EngineKind::Bitsim instead (see README.md)"
+             EngineSpec::Cpu or EngineSpec::Bitsim instead (see README.md)"
                 .to_string(),
         )
     }

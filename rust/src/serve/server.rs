@@ -247,6 +247,14 @@ pub struct MatchResponse {
     /// the index within the request). For deduplicated patterns,
     /// `passes` counts the one shared execution.
     pub results: Vec<WorkResult>,
+    /// The engine lane composition that served this request — the
+    /// coordinator's [`Engine::label`](crate::engine::Engine::label)s
+    /// deduplicated in lane order (`"cpu"`, `"cpu+bitsim"`, ...), the
+    /// same string [`RunMetrics::engine`](crate::coordinator::RunMetrics)
+    /// reports. Empty requests answer on the fast path without a
+    /// dispatch but still carry the label: the server knows its
+    /// coordinator's composition at start.
+    pub engine: String,
     /// Latency breakdown.
     pub timing: RequestTiming,
     /// The batch this request rode in.
@@ -379,6 +387,10 @@ pub struct MatchServer {
     pat_chars: usize,
     alphabet: Alphabet,
     semantics: MatchSemantics,
+    /// The serving coordinator's lane-composition label, captured at
+    /// start for the empty-request fast path (which never reaches the
+    /// batcher's coordinator handle).
+    engine_label: String,
     backpressure: Backpressure,
     /// Server-wide default response budget ([`ServeConfig::deadline`]).
     deadline: Option<Duration>,
@@ -392,6 +404,7 @@ impl MatchServer {
         let pat_chars = coordinator.pat_chars();
         let alphabet = coordinator.alphabet();
         let semantics = coordinator.semantics();
+        let engine_label = coordinator.engine_label().to_string();
         let backpressure = cfg.backpressure;
         let deadline = cfg.deadline;
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth.max(1));
@@ -407,6 +420,7 @@ impl MatchServer {
             pat_chars,
             alphabet,
             semantics,
+            engine_label,
             backpressure,
             deadline,
             totals,
@@ -488,6 +502,7 @@ impl MatchServer {
             let total = admitted.elapsed().as_secs_f64();
             let _ = resp_tx.send(Ok(MatchResponse {
                 results: Vec::new(),
+                engine: self.engine_label.clone(),
                 timing: RequestTiming { total, ..RequestTiming::default() },
                 batch: BatchStats::empty_request(),
             }));
@@ -791,8 +806,12 @@ fn dispatch_batch(
                             execute,
                             total: done.saturating_duration_since(req.admitted).as_secs_f64(),
                         };
-                        let _ =
-                            req.resp.send(Ok(MatchResponse { results, timing, batch: stats }));
+                        let _ = req.resp.send(Ok(MatchResponse {
+                            results,
+                            engine: coordinator.engine_label().to_string(),
+                            timing,
+                            batch: stats,
+                        }));
                     }
                     // Response-size cap tripped: this request alone is
                     // refused; the rest of the batch is unaffected.
@@ -818,13 +837,13 @@ mod tests {
 
     use super::*;
     use crate::bench_apps::dna::DnaWorkload;
-    use crate::coordinator::{CoordinatorConfig, EngineKind};
+    use crate::coordinator::{CoordinatorConfig, EngineSpec};
 
     fn server(max_batch: usize, dedup: bool) -> (MatchServer, Vec<Vec<u8>>) {
         let w = DnaWorkload::generate(2048, 24, 16, 0.0, 9);
         let frags = w.fragments(64, 16);
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-        cfg.engine = EngineKind::Cpu;
+        cfg.engine = EngineSpec::Cpu;
         cfg.lanes = 2;
         let coord = Arc::new(Coordinator::new(cfg, frags).unwrap());
         let serve_cfg = ServeConfig {
@@ -846,7 +865,7 @@ mod tests {
         max_hits: usize,
     ) -> MatchServer {
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-        cfg.engine = EngineKind::Cpu;
+        cfg.engine = EngineSpec::Cpu;
         cfg.lanes = 2;
         cfg.oracular = None;
         cfg.semantics = semantics;
@@ -868,6 +887,7 @@ mod tests {
         let (server, patterns) = server(8, true);
         let resp = server.match_patterns(patterns[..3].to_vec()).unwrap();
         assert_eq!(resp.results.len(), 3);
+        assert_eq!(resp.engine, "cpu", "responses must carry the serving engine label");
         for (i, r) in resp.results.iter().enumerate() {
             assert_eq!(r.pattern_id, i);
             assert_eq!(r.best.unwrap().score, 16);
@@ -903,6 +923,7 @@ mod tests {
         let (server, _) = server(8, true);
         let resp = server.match_patterns(Vec::new()).unwrap();
         assert!(resp.results.is_empty());
+        assert_eq!(resp.engine, "cpu", "the fast path must carry the engine label too");
         let totals = server.shutdown();
         assert_eq!(totals.batches, 0, "empty request must not open a batch");
     }
@@ -1060,7 +1081,7 @@ mod tests {
         let w = DnaWorkload::generate(2048, 24, 16, 0.0, 9);
         let frags = w.fragments(64, 16);
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-        cfg.engine = EngineKind::Cpu;
+        cfg.engine = EngineSpec::Cpu;
         cfg.lanes = 2;
         let coord = Arc::new(Coordinator::new(cfg, frags).unwrap());
         let serve_cfg = ServeConfig {

@@ -1,0 +1,239 @@
+//! The engine-API keystone: every registered backend × every
+//! configuration axis either answers bit-identically to the CPU oracle
+//! or refuses — typed, at `Coordinator::new`, naming the engine and
+//! the missing capability. Never a mid-run failure, never a silently
+//! wrong answer. Plus the heterogeneous-lane guarantee: a mixed lane
+//! set merges bit-identically to any homogeneous one at every split.
+
+use cram_pm::alphabet::Alphabet;
+use cram_pm::coordinator::{
+    Coordinator, CoordinatorConfig, CoordinatorError, EngineSpec, Need, Requirements, WorkResult,
+};
+use cram_pm::engine::registered;
+use cram_pm::fault::FaultPlan;
+use cram_pm::semantics::MatchSemantics;
+use cram_pm::util::Rng;
+
+const FRAG_CHARS: usize = 24;
+const PAT_CHARS: usize = 6;
+
+/// A small deterministic workload: 12 fragments, 6 patterns, half of
+/// them planted (full-score hits exist) and half random.
+fn workload(alphabet: Alphabet, seed: u64) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let mut rng = Rng::new(seed);
+    let fragments: Vec<Vec<u8>> =
+        (0..12).map(|_| alphabet.random_codes(&mut rng, FRAG_CHARS)).collect();
+    let patterns: Vec<Vec<u8>> = (0..6)
+        .map(|i| {
+            if i % 2 == 0 {
+                fragments[i][3..3 + PAT_CHARS].to_vec()
+            } else {
+                alphabet.random_codes(&mut rng, PAT_CHARS)
+            }
+        })
+        .collect();
+    (fragments, patterns)
+}
+
+fn cfg_for(
+    spec: &EngineSpec,
+    alphabet: Alphabet,
+    semantics: MatchSemantics,
+    fault: Option<FaultPlan>,
+) -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::for_alphabet(alphabet, spec.clone(), FRAG_CHARS, PAT_CHARS);
+    cfg.semantics = semantics;
+    cfg.fault = fault;
+    cfg.oracular = None;
+    cfg.lanes = 2;
+    cfg
+}
+
+/// The spec a registry name sweeps as. The XLA spec points at the
+/// crate's artifact directory so the matrix is cwd-independent.
+fn spec_for(name: &str) -> EngineSpec {
+    match name {
+        "xla" => EngineSpec::xla(
+            "dna_small",
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        ),
+        other => EngineSpec::parse(other).expect("every registry name parses"),
+    }
+}
+
+fn assert_bit_identical(got: &[WorkResult], want: &[WorkResult], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: result count");
+    for (a, b) in got.iter().zip(want) {
+        assert_eq!(a.pattern_id, b.pattern_id, "{what}");
+        assert_eq!(
+            a.best.map(|x| (x.score, x.row, x.loc)),
+            b.best.map(|x| (x.score, x.row, x.loc)),
+            "{what}: best of pattern {}",
+            a.pattern_id
+        );
+        assert_eq!(a.hits, b.hits, "{what}: hits of pattern {}", a.pattern_id);
+    }
+}
+
+/// Satellite keystone: sweep every registered engine against every
+/// alphabet × semantics × fault axis. Each cell must land in exactly
+/// one of three honest outcomes:
+///
+/// 1. negotiation predicts a refusal → `Coordinator::new` fails with
+///    `UnsupportedCapability` naming that engine and that need;
+/// 2. construction fails for environmental reasons (XLA artifacts not
+///    built, no wgpu adapter) → allowed only for those backends, and
+///    never disguised as a capability refusal;
+/// 3. construction succeeds → the run completes and is bit-identical
+///    to the CPU oracle (fault off) or replays deterministically
+///    (fault on) — a refusal can never first surface mid-run.
+#[test]
+fn capability_matrix_is_oracle_identical_or_typed_refusal() {
+    let semantics_axis = [
+        MatchSemantics::BestOf,
+        MatchSemantics::Threshold { min_score: 4 },
+        MatchSemantics::TopK { k: 3 },
+    ];
+    for factory in registered() {
+        let spec = spec_for(factory.name);
+        for (ai, alphabet) in Alphabet::ALL.into_iter().enumerate() {
+            let (fragments, patterns) = workload(alphabet, 0xE2A9 + ai as u64);
+            for semantics in semantics_axis {
+                for fault in [None, Some(FaultPlan::rates(0.0, 0.0, 0.2, 11))] {
+                    let cell = format!(
+                        "{} × {alphabet} × {semantics} × fault={}",
+                        factory.name,
+                        fault.is_some()
+                    );
+                    let requirements = Requirements {
+                        alphabet,
+                        semantics,
+                        device_faults: fault.as_ref().map_or(false, FaultPlan::rates_enabled),
+                        forced_simd: None,
+                    };
+                    let predicted = factory.capabilities.unmet(&requirements);
+                    let cfg = cfg_for(&spec, alphabet, semantics, fault.clone());
+                    match (predicted, Coordinator::new(cfg, fragments.clone())) {
+                        (Some(needs), Ok(_)) => {
+                            panic!("{cell}: construction must refuse (needs {needs})")
+                        }
+                        (Some(needs), Err(err)) => match err.downcast_ref::<CoordinatorError>() {
+                            Some(&CoordinatorError::UnsupportedCapability {
+                                engine,
+                                needs: got,
+                                ..
+                            }) => {
+                                assert_eq!(engine, factory.name, "{cell}: refusal names engine");
+                                assert_eq!(got, needs, "{cell}: refusal names the unmet need");
+                            }
+                            _ => panic!("{cell}: refusal must be UnsupportedCapability: {err:#}"),
+                        },
+                        (None, Err(err)) => {
+                            // Environmental, not capability: only the
+                            // backends with outside dependencies may
+                            // fail a negotiated cell, and never with a
+                            // capability refusal.
+                            assert!(
+                                matches!(factory.name, "xla" | "gpu"),
+                                "{cell}: negotiated cell failed construction: {err:#}"
+                            );
+                            assert!(
+                                !matches!(
+                                    err.downcast_ref::<CoordinatorError>(),
+                                    Some(CoordinatorError::UnsupportedCapability { .. })
+                                ),
+                                "{cell}: environmental failure disguised as a refusal: {err:#}"
+                            );
+                            eprintln!("skipping {cell}: {err:#}");
+                        }
+                        (None, Ok(coord)) => {
+                            assert_eq!(coord.engine_label(), factory.name, "{cell}");
+                            let (res, metrics) = coord.run(&patterns).unwrap_or_else(|err| {
+                                panic!("{cell}: negotiated cell failed mid-run: {err:#}")
+                            });
+                            assert_eq!(metrics.engine, factory.name, "{cell}");
+                            if fault.is_none() {
+                                let oracle = Coordinator::new(
+                                    cfg_for(&EngineSpec::Cpu, alphabet, semantics, None),
+                                    fragments.clone(),
+                                )
+                                .unwrap();
+                                let (want, _) = oracle.run(&patterns).unwrap();
+                                assert_bit_identical(&res, &want, &cell);
+                            } else {
+                                // Faulted scores are engine-model
+                                // specific; the contract is determinism:
+                                // the same coordinator replays the same
+                                // corrupted answers bit-identically.
+                                let (again, _) = coord.run(&patterns).unwrap();
+                                assert_bit_identical(&again, &res, &format!("{cell} replay"));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Tentpole acceptance: heterogeneous lane sets answer bit-identically
+/// to a single-engine run at every lane split, and the metrics label
+/// reports the distinct lane engines in lane order.
+#[test]
+fn heterogeneous_lanes_merge_bit_identically_at_every_split() {
+    let (fragments, patterns) = workload(Alphabet::Dna2, 77);
+    let run_with = |lane_engines: Option<Vec<EngineSpec>>, lanes: usize| {
+        let mut cfg = cfg_for(
+            &EngineSpec::Cpu,
+            Alphabet::Dna2,
+            MatchSemantics::TopK { k: 3 },
+            None,
+        );
+        cfg.lanes = lanes;
+        cfg.lane_engines = lane_engines;
+        let coord = Coordinator::new(cfg, fragments.clone()).unwrap();
+        let (res, metrics) = coord.run(&patterns).unwrap();
+        (res, metrics.engine)
+    };
+    let (want, label) = run_with(None, 1);
+    assert_eq!(label, "cpu");
+    for lanes in [1usize, 2, 3, 4] {
+        let (got, label) = run_with(Some(vec![EngineSpec::Cpu, EngineSpec::Bitsim]), lanes);
+        // Lane specs cycle; distinct labels join in lane order.
+        assert_eq!(label, if lanes == 1 { "cpu" } else { "cpu+bitsim" }, "lanes={lanes}");
+        assert_bit_identical(&got, &want, &format!("cpu+bitsim lanes={lanes}"));
+    }
+    let (bitsim_only, label) = run_with(Some(vec![EngineSpec::Bitsim]), 2);
+    assert_eq!(label, "bitsim");
+    assert_bit_identical(&bitsim_only, &want, "homogeneous bitsim lanes=2");
+}
+
+/// Negotiation covers every lane spec, not just `cfg.engine`: one
+/// incapable engine anywhere in the mix refuses the whole lane set —
+/// before any backend construction runs (the XLA spec here points at a
+/// nonexistent artifact directory that is never touched).
+#[test]
+fn mixed_lane_negotiation_checks_every_spec() {
+    let (fragments, _) = workload(Alphabet::Dna2, 5);
+    let mut cfg = cfg_for(
+        &EngineSpec::Cpu,
+        Alphabet::Dna2,
+        MatchSemantics::TopK { k: 2 },
+        None,
+    );
+    cfg.lanes = 2;
+    cfg.lane_engines =
+        Some(vec![EngineSpec::Cpu, EngineSpec::xla("dna_small", "/nonexistent/artifacts")]);
+    let err = Coordinator::new(cfg, fragments).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<CoordinatorError>(),
+            Some(&CoordinatorError::UnsupportedCapability {
+                engine: "xla",
+                needs: Need::Enumeration(MatchSemantics::TopK { k: 2 }),
+                ..
+            })
+        ),
+        "unexpected: {err:#}"
+    );
+}

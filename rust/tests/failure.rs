@@ -2,7 +2,7 @@
 //! panics or silent corruption.
 
 use cram_pm::bench_apps::dna::DnaWorkload;
-use cram_pm::coordinator::{Coordinator, CoordinatorConfig, CoordinatorError, EngineKind};
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, CoordinatorError, EngineSpec};
 use cram_pm::fault::FaultPlan;
 use cram_pm::runtime::{Manifest, Runtime};
 use std::path::PathBuf;
@@ -58,8 +58,7 @@ fn xla_engine_surfaces_missing_artifacts_from_new() {
     // The startup handshake: engine construction failures inside the
     // executor lanes must fail `Coordinator::new`, not the first run.
     let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-    cfg.engine = EngineKind::Xla;
-    cfg.artifacts_dir = PathBuf::from("/nonexistent/artifacts");
+    cfg.engine = EngineSpec::xla("dna_small", "/nonexistent/artifacts");
     let res = Coordinator::new(cfg, vec![vec![0u8; 64]; 4]);
     let err = res.err().expect("missing artifacts must fail the startup handshake");
     let msg = format!("{err:#}");
@@ -70,8 +69,7 @@ fn xla_engine_surfaces_missing_artifacts_from_new() {
 fn broken_engine_fails_construction_for_every_lane_count() {
     for lanes in [1usize, 2, 4] {
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-        cfg.engine = EngineKind::Xla;
-        cfg.artifacts_dir = PathBuf::from("/nonexistent/artifacts");
+        cfg.engine = EngineSpec::xla("dna_small", "/nonexistent/artifacts");
         cfg.lanes = lanes;
         assert!(
             Coordinator::new(cfg, vec![vec![0u8; 64]; 8]).is_err(),
@@ -85,7 +83,7 @@ fn empty_pattern_slice_short_circuits_cleanly() {
     // The bugfix: an empty pool must not fall through the lane
     // machinery — it returns an empty result with zeroed metrics.
     let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-    cfg.engine = EngineKind::Cpu;
+    cfg.engine = EngineSpec::Cpu;
     cfg.lanes = 3;
     let coord = Coordinator::new(cfg, vec![vec![0u8; 64]; 6]).unwrap();
     let (results, m) = coord.run(&[]).unwrap();
@@ -134,7 +132,7 @@ fn panicking_engine_mid_batch_recovers_bit_identically() {
     let w = DnaWorkload::generate(2048, 24, 16, 0.0, 13);
     let fragments = w.fragments(64, 16);
     let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-    cfg.engine = EngineKind::Cpu;
+    cfg.engine = EngineSpec::Cpu;
     cfg.oracular = None;
     cfg.lanes = 2;
     let clean = Coordinator::new(cfg.clone(), fragments.clone()).unwrap();
@@ -167,7 +165,7 @@ fn pattern_codes_out_of_alphabet_do_not_crash_bitsim() {
     // asserts even lengths. Feed the coordinator a pattern with a
     // (masked-out) high code — must either work or error, not panic.
     let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-    cfg.engine = EngineKind::Bitsim;
+    cfg.engine = EngineSpec::Bitsim;
     let coord = Coordinator::new(cfg, vec![vec![1u8; 64]; 2]).unwrap();
     let _ = coord.run(&[vec![3u8; 16]]).unwrap();
 }

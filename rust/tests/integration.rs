@@ -3,7 +3,7 @@
 //! story on the same workloads.
 
 use cram_pm::bench_apps::dna::DnaWorkload;
-use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use cram_pm::dna::encode;
 use cram_pm::isa::PresetMode;
 use cram_pm::scheduler::{NaiveScheduler, PatternScheduler};
@@ -22,16 +22,17 @@ fn three_engines_agree_end_to_end() {
     let w = DnaWorkload::generate(16_384, 64, 16, 0.05, 321);
     let fragments = w.fragments(64, 16);
 
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let mut results = Vec::new();
-    for engine in [EngineKind::Cpu, EngineKind::Bitsim, EngineKind::Xla] {
-        if engine == EngineKind::Xla && !artifacts_available() {
+    for engine in
+        [EngineSpec::Cpu, EngineSpec::Bitsim, EngineSpec::xla("dna_small", &artifacts)]
+    {
+        if matches!(engine, EngineSpec::Xla { .. }) && !artifacts_available() {
             eprintln!("skipping XLA engine: run `make artifacts`");
             continue;
         }
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-        cfg.engine = engine;
-        cfg.artifacts_dir =
-            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        cfg.engine = engine.clone();
         let coord = Coordinator::new(cfg, fragments.clone()).unwrap();
         let (res, metrics) = coord.run(&w.patterns).unwrap();
         assert_eq!(metrics.patterns, w.patterns.len());
@@ -57,11 +58,11 @@ fn three_engines_agree_end_to_end() {
 fn multi_lane_pipeline_is_bit_identical_to_single_lane() {
     let w = DnaWorkload::generate(4_096, 16, 16, 0.05, 55);
     let fragments = w.fragments(64, 16);
-    for engine in [EngineKind::Cpu, EngineKind::Bitsim] {
+    for engine in [EngineSpec::Cpu, EngineSpec::Bitsim] {
         for oracular in [Some((8, 24)), None] {
             let run_with = |lanes: usize| {
                 let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-                cfg.engine = engine;
+                cfg.engine = engine.clone();
                 cfg.oracular = oracular;
                 cfg.lanes = lanes;
                 Coordinator::new(cfg, fragments.clone()).unwrap().run(&w.patterns).unwrap().0
@@ -90,13 +91,13 @@ fn oracular_is_sound_but_possibly_incomplete() {
     let fragments = w.fragments(64, 16);
 
     let mut naive_cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-    naive_cfg.engine = EngineKind::Cpu;
+    naive_cfg.engine = EngineSpec::Cpu;
     naive_cfg.oracular = None;
     let naive = Coordinator::new(naive_cfg, fragments.clone()).unwrap();
     let (naive_res, _) = naive.run(&w.patterns).unwrap();
 
     let mut orac_cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-    orac_cfg.engine = EngineKind::Cpu;
+    orac_cfg.engine = EngineSpec::Cpu;
     let orac = Coordinator::new(orac_cfg, fragments.clone()).unwrap();
     let (orac_res, _) = orac.run(&w.patterns).unwrap();
 
@@ -162,7 +163,7 @@ fn planted_motif_recovered_at_correct_row() {
     let fragments = w.fragments(64, 16);
 
     let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-    cfg.engine = EngineKind::Bitsim;
+    cfg.engine = EngineSpec::Bitsim;
     let coord = Coordinator::new(cfg, fragments.clone()).unwrap();
     let (res, _) = coord.run(&[encode(motif)]).unwrap();
     let best = res[0].best.expect("motif must be found");

@@ -22,7 +22,7 @@
 
 use cram_pm::array::{CramArray, RowLayout};
 use cram_pm::bench_apps::dna::DnaWorkload;
-use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use cram_pm::dna::{encode, score_profile, Encoded};
 use cram_pm::isa::{CodeGen, MicroInstr, PresetMode};
 use cram_pm::scheduler::{OracularScheduler, PatternScheduler, RowAddr, ShardMap};
@@ -244,7 +244,7 @@ fn prop_multi_lane_results_invariant_random_pools() {
 
         let run_with = |l: usize| {
             let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-            cfg.engine = EngineKind::Cpu;
+            cfg.engine = EngineSpec::Cpu;
             cfg.oracular = Some((8, 16));
             cfg.lanes = l;
             Coordinator::new(cfg, fragments.clone()).unwrap().run(&w.patterns).unwrap().0
@@ -315,7 +315,7 @@ fn fresh_bitsim_best(
 /// row counts, so pooled state must also not leak between items.
 #[test]
 fn prop_cached_pooled_bitsim_equals_fresh_everything() {
-    use cram_pm::coordinator::{BitsimEngine, MatchEngine, WorkItem};
+    use cram_pm::coordinator::{BitsimEngine, Engine, WorkItem};
     use std::sync::Arc;
     let mut rng = Rng::new(0x90013D);
     let (frag_chars, pat_chars) = (24usize, 6usize);
@@ -385,7 +385,7 @@ fn prop_bitsim_coordinator_lane_count_invariant() {
             for oracular in [None, Some((8usize, 32usize))] {
                 let run_with = |lanes: usize| {
                     let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-                    cfg.engine = EngineKind::Bitsim;
+                    cfg.engine = EngineSpec::Bitsim;
                     cfg.preset_mode = mode;
                     cfg.oracular = oracular;
                     cfg.lanes = lanes;
@@ -576,7 +576,7 @@ fn prop_bitsim_generic_alphabets_equal_oracle() {
 fn prop_hit_enumeration_equals_scalar_oracle_both_engines() {
     use cram_pm::alphabet::Alphabet;
     use cram_pm::bench_apps::{reference_best, reference_hits};
-    use cram_pm::coordinator::{BitsimEngine, CpuEngine, MatchEngine, WorkItem};
+    use cram_pm::coordinator::{BitsimEngine, CpuEngine, Engine, WorkItem};
     use cram_pm::semantics::MatchSemantics;
     use std::sync::Arc;
     let mut rng = Rng::new(0x4117);
@@ -640,7 +640,7 @@ fn prop_hit_enumeration_equals_scalar_oracle_both_engines() {
 #[test]
 fn prop_simd_scorer_equals_scalar_every_width() {
     use cram_pm::alphabet::Alphabet;
-    use cram_pm::coordinator::{CpuEngine, MatchEngine, SimdKernel, WorkItem};
+    use cram_pm::coordinator::{CpuEngine, Engine, SimdKernel, WorkItem};
     use cram_pm::semantics::MatchSemantics;
     use std::sync::Arc;
     let mut rng = Rng::new(0x51DCAFE);
@@ -742,7 +742,7 @@ fn prop_coordinator_forced_dispatch_invariant() {
     let fragments = w.fragments(64, 16);
     let run_with = |kernel: SimdKernel| {
         let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-        cfg.engine = EngineKind::Cpu;
+        cfg.engine = EngineSpec::Cpu;
         cfg.semantics = MatchSemantics::TopK { k: 4 };
         cfg.oracular = None;
         cfg.lanes = 2;

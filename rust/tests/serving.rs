@@ -7,7 +7,7 @@
 use cram_pm::alphabet::{Alphabet, CodedWorkload};
 use cram_pm::bench_apps::dna::DnaWorkload;
 use cram_pm::bench_apps::{reference_best, reference_hits};
-use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use cram_pm::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use cram_pm::semantics::MatchSemantics;
 use cram_pm::serve::{Backpressure, MatchRequest, MatchServer, ServeConfig, ServeError};
 use cram_pm::util::Rng;
@@ -20,7 +20,7 @@ fn coordinator(lanes: usize, seed: u64, catalog: usize) -> (Arc<Coordinator>, Ve
     let w = DnaWorkload::generate(4096, catalog, 16, 0.05, seed);
     let fragments = w.fragments(64, 16);
     let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-    cfg.engine = EngineKind::Cpu;
+    cfg.engine = EngineSpec::Cpu;
     cfg.lanes = lanes;
     (Arc::new(Coordinator::new(cfg, fragments).unwrap()), w.patterns)
 }
@@ -195,7 +195,7 @@ fn ascii_and_protein_pools_serve_end_to_end_matching_scalar_reference() {
     for alphabet in [Alphabet::Ascii8, Alphabet::Protein5] {
         let w = CodedWorkload::generate(alphabet, 4096, 32, 16, 0.05, 42);
         let fragments = w.fragments(64, 16);
-        let mut cfg = CoordinatorConfig::for_alphabet(alphabet, EngineKind::Cpu, 64, 16);
+        let mut cfg = CoordinatorConfig::for_alphabet(alphabet, EngineSpec::Cpu, 64, 16);
         cfg.oracular = None; // broadcast: the reference scans every row
         cfg.lanes = 3;
         let coordinator = Arc::new(Coordinator::new(cfg, fragments.clone()).unwrap());
@@ -277,7 +277,7 @@ fn prop_bestof_bit_identical_across_lanes_dedup_and_alphabets() {
         let pool: Vec<Vec<u8>> = (0..10).map(|i| w.patterns[i % 5].clone()).collect();
         for lanes in [1usize, 2, 3, 4] {
             for dedup in [true, false] {
-                let mut cfg = CoordinatorConfig::for_alphabet(alphabet, EngineKind::Cpu, 64, 16);
+                let mut cfg = CoordinatorConfig::for_alphabet(alphabet, EngineSpec::Cpu, 64, 16);
                 cfg.oracular = None; // broadcast: the reference scans every row
                 cfg.lanes = lanes;
                 assert_eq!(cfg.semantics, MatchSemantics::BestOf, "BestOf must stay the default");
@@ -347,7 +347,7 @@ fn shutdown_drains_inflight_topk_batch() {
     let fragments = w.fragments(64, 16);
     let semantics = MatchSemantics::TopK { k: 3 };
     let mut cfg = CoordinatorConfig::xla("dna_small", 64, 16);
-    cfg.engine = EngineKind::Cpu;
+    cfg.engine = EngineSpec::Cpu;
     cfg.oracular = None;
     cfg.semantics = semantics;
     cfg.lanes = 2;
