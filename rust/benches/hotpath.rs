@@ -380,15 +380,40 @@ fn main() {
             ),
             // Static-verifier census of the default-geometry cache:
             // exact structural counts, gated by bench-gate so a codegen
-            // change that alters the microcode shape is visible.
+            // change that alters the microcode shape is visible. The
+            // pre-optimization report keeps the anchor pinned to what
+            // codegen emits; the optimizer's deltas are gated below.
             (
                 "verify",
                 Json::obj(vec![
                     ("programs", Json::int(engine.cache().len())),
-                    ("instructions", Json::int(engine.cache().verify_report().instructions)),
-                    ("gates", Json::int(engine.cache().verify_report().gates)),
-                    ("presets", Json::int(engine.cache().verify_report().presets)),
+                    ("instructions", Json::int(engine.cache().unoptimized_report().instructions)),
+                    ("gates", Json::int(engine.cache().unoptimized_report().gates)),
+                    ("presets", Json::int(engine.cache().unoptimized_report().presets)),
                     ("full_adders", Json::int(engine.cache().stats().full_adders)),
+                ]),
+            ),
+            // Optimizer census at the default geometry: exact counts
+            // of what O1 removed from the executed programs (every
+            // rewrite re-verified and proven output-equivalent), gated
+            // so a pass regression — eliminating less, or nothing — is
+            // as visible as a codegen shape change.
+            (
+                "optimizer",
+                Json::obj(vec![
+                    ("opt_level", Json::str(engine.cache().opt_level().name())),
+                    (
+                        "instructions_eliminated",
+                        Json::int(engine.cache().opt_census().instructions_eliminated),
+                    ),
+                    (
+                        "gates_eliminated",
+                        Json::int(engine.cache().opt_census().gates_eliminated),
+                    ),
+                    (
+                        "presets_eliminated",
+                        Json::int(engine.cache().opt_census().presets_eliminated),
+                    ),
                 ]),
             ),
         ]);

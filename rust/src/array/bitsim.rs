@@ -458,6 +458,15 @@ impl CramArray {
             ensure!(c != out, "gate output {out} aliases input (non-destructive rule)");
         }
         ensure!(ins.len() <= 5, "gate arity {} exceeds 5 inputs", ins.len());
+        // A duplicated input would double-count one cell in the
+        // threshold popcount — electrically impossible (one bit-line
+        // per cell). Codegen never emits one, and the optimizer's
+        // copy-sinking refuses rewrites that would create one; this
+        // assert keeps that invariant loud in debug builds.
+        debug_assert!(
+            ins.iter().enumerate().all(|(i, a)| !ins[..i].contains(a)),
+            "gate inputs {ins:?} are not pairwise distinct"
+        );
         let t = kind.threshold();
         if t > 2 {
             bail!("unsupported gate threshold {t}");

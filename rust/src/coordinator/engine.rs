@@ -24,7 +24,7 @@ use crate::array::{CramArray, ExecOutput, RowLayout};
 use crate::baselines::cpu_ref::BestAlignment;
 use crate::engine::registry;
 use crate::fault::FaultPlan;
-use crate::isa::{PresetMode, ProgramCache};
+use crate::isa::{OptLevel, PresetMode, ProgramCache};
 use crate::semantics::{Hit, HitAccumulator};
 use crate::simd::{self, PackedBlock, PatternWindows, SimdKernel};
 use crate::Result;
@@ -32,39 +32,6 @@ use anyhow::Context as _;
 use std::sync::Arc;
 
 pub use crate::engine::{Capabilities, Engine, EngineSpec, WorkItem, WorkResult};
-
-/// Which backend the executor stage uses — superseded by
-/// [`EngineSpec`], which carries backend-specific parameters (the XLA
-/// artifact location) on the variant that needs them and constructs
-/// engines through the capability-negotiating registry
-/// ([`crate::engine::registry`]). Convert with
-/// `EngineSpec::from(kind)` while migrating.
-#[deprecated(note = "use EngineSpec: `EngineSpec::Cpu`, `EngineSpec::Bitsim`, \
-                     `EngineSpec::xla(variant, artifacts_dir)`, or `EngineSpec::Gpu`")]
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum EngineKind {
-    /// AOT XLA artifact on the PJRT CPU client.
-    Xla,
-    /// Gate-level bit simulator (micro-instruction programs).
-    Bitsim,
-    /// Software oracle.
-    Cpu,
-}
-
-#[allow(deprecated)]
-impl From<EngineKind> for EngineSpec {
-    /// The migration shim: maps each legacy kind to its spec,
-    /// reproducing the old config defaults (`Xla` points at the
-    /// `dna_small` variant under `artifacts/`, which the removed
-    /// `variant`/`artifacts_dir` config fields defaulted to).
-    fn from(kind: EngineKind) -> Self {
-        match kind {
-            EngineKind::Cpu => EngineSpec::Cpu,
-            EngineKind::Bitsim => EngineSpec::Bitsim,
-            EngineKind::Xla => EngineSpec::xla("dna_small", "artifacts"),
-        }
-    }
-}
 
 /// Software-oracle engine: width-generic packed XOR+popcount scoring
 /// ([`crate::alphabet::packed_similarity`]) — no per-`loc` score
@@ -361,7 +328,7 @@ impl BitsimEngine {
         mode: PresetMode,
     ) -> Result<Self> {
         let cache = Arc::new(
-            ProgramCache::for_alphabet(alphabet, frag_chars, pat_chars, mode, true)
+            ProgramCache::for_alphabet_at(alphabet, frag_chars, pat_chars, mode, true, OptLevel::O1)
                 .context("static verification of the compiled alignment programs failed")?,
         );
         Ok(Self::with_cache(cache, rows_per_block))

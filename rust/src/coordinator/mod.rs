@@ -51,8 +51,6 @@ pub mod engine;
 pub mod pipeline;
 
 pub use engine::{BitsimEngine, CpuEngine, WorkItem, WorkResult};
-#[allow(deprecated)]
-pub use engine::EngineKind;
 pub use pipeline::{
     Coordinator, CoordinatorConfig, CoordinatorError, LaneStats, Protection, RunMetrics,
 };

@@ -18,7 +18,7 @@ use crate::alphabet::Alphabet;
 use crate::baselines::cpu_ref::BestAlignment;
 use crate::engine::{registry, Engine, EngineCtx, EngineSpec, Need, Requirements, WorkItem, WorkResult};
 use crate::fault::FaultPlan;
-use crate::isa::{PresetMode, ProgramCache};
+use crate::isa::{OptLevel, PresetMode, ProgramCache};
 use crate::scheduler::{OracularIndex, ShardMap};
 use crate::semantics::MatchSemantics;
 use crate::sim::SystemConfig;
@@ -209,6 +209,16 @@ pub struct CoordinatorConfig {
     /// Preset scheduling assumed for the hardware cost projection (and
     /// used by the bit-level engine).
     pub preset_mode: PresetMode,
+    /// Optimization level for the compiled alignment programs the
+    /// bit-level engine executes. `O1` (the default) runs the static
+    /// dataflow optimizer over every cached program — the bitsim lane
+    /// then executes strictly fewer gates and presets per pass — and
+    /// every rewrite is translation-validated (re-verified against
+    /// R1–R6 and proven output-equivalent by the symbolic checker)
+    /// with a per-program fall-back to the unoptimized form, so `O0`
+    /// and `O1` are bit-identical by construction. Engines without a
+    /// compiled cache ignore this.
+    pub opt_level: OptLevel,
     /// Technology corner for the hardware cost projection.
     pub tech: Technology,
     /// SIMD kernel the lane engines dispatch their hot word loops to:
@@ -265,6 +275,7 @@ impl CoordinatorConfig {
             queue_depth: 64,
             lanes: Self::default_lanes(),
             preset_mode: PresetMode::Gang,
+            opt_level: OptLevel::O1,
             tech: Technology::NearTerm,
             simd: None,
             fault: None,
@@ -686,12 +697,13 @@ impl Coordinator {
         // factory wants it.
         let bitsim_cache: Option<Arc<ProgramCache>> = if needs_program_cache {
             Some(Arc::new(
-                ProgramCache::for_alphabet(
+                ProgramCache::for_alphabet_at(
                     cfg.alphabet,
                     cfg.frag_chars,
                     cfg.pat_chars,
                     cfg.preset_mode,
                     true,
+                    cfg.opt_level,
                 )
                 .context("static verification of the coordinator's alignment programs failed")?,
             ))

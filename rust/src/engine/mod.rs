@@ -20,6 +20,12 @@
 //! (score desc, row asc, loc asc), so a heterogeneous lane set answers
 //! bit-identically to any homogeneous one.
 
+// Engine construction failures surface as typed registry errors that
+// the coordinator converts into construction-time refusals; a panic
+// here would strand its lane thread instead. Test modules opt back
+// out locally.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod registry;
 pub mod xla;
 
@@ -213,10 +219,9 @@ impl std::fmt::Display for Need {
     }
 }
 
-/// Which backend a lane runs — the typed replacement for the old
-/// `EngineKind` enum plus the `variant`/`artifacts_dir` config field
-/// trio. Backend-specific parameters live on the variant that needs
-/// them, so a `Cpu` spec can't carry a dangling artifact path.
+/// Which backend a lane runs. Backend-specific parameters live on the
+/// variant that needs them, so a `Cpu` spec can't carry a dangling
+/// artifact path.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EngineSpec {
     /// The packed word-parallel CPU scorer — the reference every other

@@ -1,0 +1,591 @@
+//! Static dataflow analysis of compiled programs: the explicit
+//! def-use/column-dataflow graph the optimizer passes plan over
+//! ([`DefUse`]), a per-program [`DataflowSummary`] for the
+//! `analyze-programs` CLI report, and — the load-bearing piece — an
+//! **independent symbolic bit-level evaluator** ([`check_equivalent`])
+//! that proves an optimized program output-equivalent to its original.
+//!
+//! The equivalence checker shares *no code* with the optimizer's
+//! rewrite logic: it abstract-interprets both instruction streams over
+//! a hash-consed expression pool and compares what the outside world
+//! can observe — every read-out instruction's value stream, in order,
+//! plus the final contents of the architected score compartment. Every
+//! [`GateKind`] is a symmetric threshold function
+//! (`eval = preset ^ (ones <= threshold)`), so gate children are
+//! sorted; `COPY x → x` and `INV(INV x) → x` collapse; all-constant
+//! fan-ins fold through [`GateKind::eval`]. Normalization only ever
+//! *merges* genuinely equal values, so a mismatch verdict is reliable:
+//! the checker can report a false *in*equivalence (the optimizer then
+//! falls back to the unoptimized program — safe), but never a false
+//! equivalence.
+
+use crate::array::RowLayout;
+use crate::gates::GateKind;
+use crate::isa::{MicroInstr, Program};
+use crate::util::FxHashMap;
+
+/// Which of the two programs under comparison an error refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    /// The unoptimized reference stream.
+    Original,
+    /// The candidate (optimized) stream.
+    Candidate,
+}
+
+impl std::fmt::Display for Side {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Side::Original => "original",
+            Side::Candidate => "candidate",
+        })
+    }
+}
+
+/// Typed symbolic-equivalence failure: why the candidate program is
+/// not provably output-equivalent to the original.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EquivalenceError {
+    /// A gate read a column holding no symbolic value (never driven).
+    UndefinedInput { side: Side, col: u32 },
+    /// The two programs issue different numbers of read-outs.
+    ReadCountMismatch { original: usize, candidate: usize },
+    /// Read-out `index` differs in kind, row, or width.
+    ReadShapeMismatch { index: usize },
+    /// Read-out `index`, bit `bit` resolves to different values.
+    ReadValueMismatch { index: usize, bit: usize },
+    /// The final symbolic value of score column `col` differs.
+    ScoreMismatch { col: u32 },
+}
+
+impl std::fmt::Display for EquivalenceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EquivalenceError::UndefinedInput { side, col } => {
+                write!(f, "{side} program reads column {col}, which holds no value")
+            }
+            EquivalenceError::ReadCountMismatch { original, candidate } => {
+                write!(f, "read-out count differs: original {original}, candidate {candidate}")
+            }
+            EquivalenceError::ReadShapeMismatch { index } => {
+                write!(f, "read-out #{index} differs in kind, row, or width")
+            }
+            EquivalenceError::ReadValueMismatch { index, bit } => {
+                write!(f, "read-out #{index} bit {bit} is not provably equal")
+            }
+            EquivalenceError::ScoreMismatch { col } => {
+                write!(f, "final value of score column {col} is not provably equal")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EquivalenceError {}
+
+/// A hash-consed symbolic expression node. Children of gate nodes are
+/// sorted [`ExprId`]s — legal because every substrate gate is a
+/// symmetric threshold function of its fan-in.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum Node {
+    /// A data-compartment column's initial (unknown) row value.
+    Var(u32),
+    /// A known constant in every row (preset polarity).
+    Const(bool),
+    /// One bit of a single-row memory write, opaque to the checker —
+    /// identified by issue sequence so streams only match if their
+    /// writes line up.
+    Written(u32),
+    /// A gate over already-interned children (sorted).
+    Gate(GateKind, [u32; 5], u8),
+}
+
+/// Interned expression pool shared by both interpretation passes, so
+/// equal ids mean structurally (and, by soundness of the
+/// normalizations, semantically) equal values.
+#[derive(Default)]
+struct Pool {
+    nodes: Vec<Node>,
+    depths: Vec<u32>,
+    index: FxHashMap<Node, u32>,
+}
+
+impl Pool {
+    fn intern(&mut self, node: Node) -> u32 {
+        if let Some(&id) = self.index.get(&node) {
+            return id;
+        }
+        let depth = match &node {
+            Node::Var(_) | Node::Const(_) | Node::Written(_) => 0,
+            Node::Gate(_, children, n) => {
+                1 + children[..*n as usize]
+                    .iter()
+                    .map(|&c| self.depths[c as usize])
+                    .max()
+                    .unwrap_or(0)
+            }
+        };
+        let id = self.nodes.len() as u32;
+        self.nodes.push(node.clone());
+        self.depths.push(depth);
+        self.index.insert(node, id);
+        id
+    }
+
+    fn var(&mut self, col: u32) -> u32 {
+        self.intern(Node::Var(col))
+    }
+
+    fn constant(&mut self, val: bool) -> u32 {
+        self.intern(Node::Const(val))
+    }
+
+    fn written(&mut self, seq: u32) -> u32 {
+        self.intern(Node::Written(seq))
+    }
+
+    /// Build a gate expression with the soundness-preserving
+    /// normalizations of the module docs.
+    fn gate(&mut self, kind: GateKind, children: &[u32]) -> u32 {
+        // All-constant fan-in folds through the gate's truth table.
+        let consts: Option<Vec<bool>> = children
+            .iter()
+            .map(|&c| match self.nodes[c as usize] {
+                Node::Const(v) => Some(v),
+                _ => None,
+            })
+            .collect();
+        if let Some(vals) = consts {
+            let out = kind.eval(&vals);
+            return self.constant(out);
+        }
+        // COPY is the identity on row values.
+        if kind == GateKind::Copy {
+            return children[0];
+        }
+        // INV(INV(x)) is x.
+        if kind == GateKind::Inv {
+            if let Node::Gate(GateKind::Inv, inner, 1) = self.nodes[children[0] as usize] {
+                return inner[0];
+            }
+        }
+        let mut sorted = [u32::MAX; 5];
+        sorted[..children.len()].copy_from_slice(children);
+        sorted[..children.len()].sort_unstable();
+        self.intern(Node::Gate(kind, sorted, children.len() as u8))
+    }
+
+    fn depth(&self, id: u32) -> u32 {
+        self.depths[id as usize]
+    }
+}
+
+/// Shape of one read-out observation (the value stream is compared
+/// separately, bit by bit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReadShape {
+    Row { row: u32, len: u32 },
+    ScoreAllRows { len: u32 },
+}
+
+/// One observable read-out: its shape and the symbolic value of every
+/// bit it delivers to the host.
+struct Observation {
+    shape: ReadShape,
+    bits: Vec<u32>,
+}
+
+/// Everything the outside world can see of one program run: the
+/// ordered read-out stream plus the final score compartment.
+struct Observed {
+    reads: Vec<Observation>,
+    score: Vec<Option<u32>>,
+}
+
+/// Abstract-interpret `prog` over the shared pool, producing its
+/// observable behaviour. Opaque write tokens are numbered by issue
+/// order from zero, so two streams with matching write sequences
+/// intern the same tokens.
+fn interpret(
+    prog: &Program,
+    layout: &RowLayout,
+    pool: &mut Pool,
+    side: Side,
+) -> Result<Observed, EquivalenceError> {
+    let width = layout.total_cols();
+    let mut state: Vec<Option<u32>> = vec![None; width];
+    for col in 0..width as u32 {
+        if layout.is_data_col(col) {
+            state[col as usize] = Some(pool.var(col));
+        }
+    }
+    let mut write_seq = 0u32;
+    let mut reads = Vec::new();
+    for (_, instr) in &prog.instrs {
+        match instr {
+            MicroInstr::Preset { col, val } | MicroInstr::GangPreset { col, val } => {
+                state[*col as usize] = Some(pool.constant(*val));
+            }
+            MicroInstr::Gate { kind, out, ins, n_ins } => {
+                let inputs = &ins[..*n_ins as usize];
+                let mut children = Vec::with_capacity(inputs.len());
+                for &c in inputs {
+                    let expr = state[c as usize]
+                        .ok_or(EquivalenceError::UndefinedInput { side, col: c })?;
+                    children.push(expr);
+                }
+                state[*out as usize] = Some(pool.gate(*kind, &children));
+            }
+            MicroInstr::WriteRow { col, bits, .. } => {
+                // Single-row writes are opaque tokens: the checker only
+                // proves streams equal when their writes line up 1:1,
+                // which is exactly right — the optimizer never touches
+                // memory-mode traffic.
+                for i in 0..bits.len() as u32 {
+                    state[(*col + i) as usize] = Some(pool.written(write_seq));
+                    write_seq += 1;
+                }
+            }
+            MicroInstr::ReadRow { row, col, len } => {
+                let bits = collect_bits(&state, side, *col, *len)?;
+                reads.push(Observation { shape: ReadShape::Row { row: *row, len: *len }, bits });
+            }
+            MicroInstr::ReadScoreAllRows { col, len } => {
+                let bits = collect_bits(&state, side, *col, *len)?;
+                reads.push(Observation { shape: ReadShape::ScoreAllRows { len: *len }, bits });
+            }
+        }
+    }
+    let score: Vec<Option<u32>> = (layout.score_col()
+        ..layout.score_col() + layout.score_bits() as u32)
+        .map(|c| state[c as usize])
+        .collect();
+    Ok(Observed { reads, score })
+}
+
+fn collect_bits(
+    state: &[Option<u32>],
+    side: Side,
+    col: u32,
+    len: u32,
+) -> Result<Vec<u32>, EquivalenceError> {
+    (col..col + len)
+        .map(|c| state[c as usize].ok_or(EquivalenceError::UndefinedInput { side, col: c }))
+        .collect()
+}
+
+/// Prove `candidate` observationally equivalent to `original` over
+/// `layout`: identical ordered read-out streams (shape and symbolic
+/// value of every bit) and an identical final score compartment. This
+/// is the translation-validation oracle
+/// [`optimize`](crate::isa::opt::optimize) gates every rewrite behind.
+pub fn check_equivalent(
+    original: &Program,
+    candidate: &Program,
+    layout: &RowLayout,
+) -> Result<(), EquivalenceError> {
+    let mut pool = Pool::default();
+    let a = interpret(original, layout, &mut pool, Side::Original)?;
+    let b = interpret(candidate, layout, &mut pool, Side::Candidate)?;
+    if a.reads.len() != b.reads.len() {
+        return Err(EquivalenceError::ReadCountMismatch {
+            original: a.reads.len(),
+            candidate: b.reads.len(),
+        });
+    }
+    for (index, (ra, rb)) in a.reads.iter().zip(&b.reads).enumerate() {
+        if ra.shape != rb.shape {
+            return Err(EquivalenceError::ReadShapeMismatch { index });
+        }
+        for (bit, (&ea, &eb)) in ra.bits.iter().zip(&rb.bits).enumerate() {
+            if ea != eb {
+                return Err(EquivalenceError::ReadValueMismatch { index, bit });
+            }
+        }
+    }
+    for (i, (&sa, &sb)) in a.score.iter().zip(&b.score).enumerate() {
+        if sa != sb {
+            return Err(EquivalenceError::ScoreMismatch { col: layout.score_col() + i as u32 });
+        }
+    }
+    Ok(())
+}
+
+/// Per-column entry of the def-use graph.
+#[derive(Debug, Clone, Default)]
+pub struct ColumnInfo {
+    /// Instruction indices that pre-set this column.
+    pub presets: Vec<usize>,
+    /// Instruction indices of gates driving this column.
+    pub gate_defs: Vec<usize>,
+    /// Instruction indices of single-row writes covering this column.
+    pub writes: Vec<usize>,
+    /// Instruction indices of gates reading this column.
+    pub gate_uses: Vec<usize>,
+    /// Instruction indices of read-outs covering this column.
+    pub read_uses: Vec<usize>,
+}
+
+/// The explicit def-use/column-dataflow graph of one program: for every
+/// column, who defines it and who consumes it, by instruction index.
+/// This is what the optimizer passes plan their rewrites over; it is
+/// rebuilt after each pass rather than incrementally patched, so a
+/// stale-graph bug cannot silently misplan (and translation validation
+/// would catch it anyway).
+#[derive(Debug, Clone)]
+pub struct DefUse {
+    /// One entry per column of the layout's row.
+    pub cols: Vec<ColumnInfo>,
+}
+
+impl DefUse {
+    /// Build the graph for `prog` over `layout`'s row width.
+    pub fn build(prog: &Program, layout: &RowLayout) -> DefUse {
+        let mut cols = vec![ColumnInfo::default(); layout.total_cols()];
+        for (i, (_, instr)) in prog.instrs.iter().enumerate() {
+            match instr {
+                MicroInstr::Preset { col, .. } | MicroInstr::GangPreset { col, .. } => {
+                    cols[*col as usize].presets.push(i);
+                }
+                MicroInstr::Gate { out, ins, n_ins, .. } => {
+                    cols[*out as usize].gate_defs.push(i);
+                    for &c in &ins[..*n_ins as usize] {
+                        cols[c as usize].gate_uses.push(i);
+                    }
+                }
+                MicroInstr::WriteRow { col, bits, .. } => {
+                    for c in *col..*col + bits.len() as u32 {
+                        cols[c as usize].writes.push(i);
+                    }
+                }
+                MicroInstr::ReadRow { col, len, .. }
+                | MicroInstr::ReadScoreAllRows { col, len } => {
+                    for c in *col..*col + *len {
+                        cols[c as usize].read_uses.push(i);
+                    }
+                }
+            }
+        }
+        DefUse { cols }
+    }
+
+    /// Whether `col` is in single-static-assignment form: at most one
+    /// preset, at most one gate def, and no memory-mode writes. The
+    /// rewriting passes only touch SSA columns.
+    pub fn is_ssa(&self, col: u32) -> bool {
+        let c = &self.cols[col as usize];
+        c.presets.len() <= 1 && c.gate_defs.len() <= 1 && c.writes.is_empty()
+    }
+}
+
+/// Per-program dataflow metrics for the `analyze-programs` report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DataflowSummary {
+    /// Instructions in the stream.
+    pub instructions: usize,
+    /// Gate firings.
+    pub gates: usize,
+    /// Presets (standard or gang).
+    pub presets: usize,
+    /// Read-out instructions.
+    pub reads: usize,
+    /// Distinct symbolic values the program computes (hash-consed gate
+    /// expressions — duplicates collapse, so this measures genuine
+    /// dataflow, not instruction count).
+    pub distinct_exprs: usize,
+    /// Depth of the deepest observed expression (the critical path of
+    /// the readout cone).
+    pub max_depth: usize,
+}
+
+/// Symbolically evaluate `prog` and summarize its dataflow.
+pub fn dataflow_summary(
+    prog: &Program,
+    layout: &RowLayout,
+) -> Result<DataflowSummary, EquivalenceError> {
+    let mut pool = Pool::default();
+    let observed = interpret(prog, layout, &mut pool, Side::Original)?;
+    let distinct_exprs =
+        pool.nodes.iter().filter(|n| matches!(n, Node::Gate(..))).count();
+    let max_depth = observed
+        .reads
+        .iter()
+        .flat_map(|r| r.bits.iter())
+        .chain(observed.score.iter().flatten())
+        .map(|&e| pool.depth(e) as usize)
+        .max()
+        .unwrap_or(0);
+    let mut s = DataflowSummary {
+        instructions: prog.len(),
+        distinct_exprs,
+        max_depth,
+        ..Default::default()
+    };
+    for (_, instr) in &prog.instrs {
+        match instr {
+            MicroInstr::Gate { .. } => s.gates += 1,
+            MicroInstr::Preset { .. } | MicroInstr::GangPreset { .. } => s.presets += 1,
+            MicroInstr::ReadRow { .. } | MicroInstr::ReadScoreAllRows { .. } => s.reads += 1,
+            MicroInstr::WriteRow { .. } => {}
+        }
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::isa::{cache::ProgramCache, PresetMode, Stage};
+
+    /// Columns: fragment [0,16), pattern [16,20), score [20,22), match
+    /// bits [22,24), free scratch [24,38).
+    fn small_layout() -> RowLayout {
+        RowLayout::new(8, 2, 16)
+    }
+
+    #[test]
+    fn program_is_equivalent_to_itself() {
+        let cache = ProgramCache::for_geometry(24, 6, PresetMode::Gang, true).unwrap();
+        for loc in 0..cache.len() as u32 {
+            check_equivalent(cache.program(loc), cache.program(loc), cache.layout())
+                .unwrap_or_else(|e| panic!("loc {loc}: {e}"));
+        }
+    }
+
+    #[test]
+    fn copy_collapse_proves_sunk_copies_equal() {
+        let l = small_layout();
+        // Original: s = NOR(f0, f1) into scratch 30, then COPY into the
+        // score column. Candidate: NOR lands in the score column
+        // directly (the copy-sinking rewrite).
+        let mut orig = Program::new();
+        orig.push(Stage::PresetMatch, MicroInstr::GangPreset { col: 30, val: false });
+        orig.push(Stage::Match, MicroInstr::gate(GateKind::Nor2, 30, &[0, 1]));
+        orig.push(Stage::PresetScore, MicroInstr::GangPreset { col: l.score_col(), val: true });
+        orig.push(Stage::ComputeScore, MicroInstr::gate(GateKind::Copy, l.score_col(), &[30]));
+        let mut cand = Program::new();
+        cand.push(Stage::PresetMatch, MicroInstr::GangPreset { col: l.score_col(), val: false });
+        cand.push(Stage::Match, MicroInstr::gate(GateKind::Nor2, l.score_col(), &[0, 1]));
+        check_equivalent(&orig, &cand, &l).unwrap();
+    }
+
+    #[test]
+    fn changed_gate_kind_is_a_score_mismatch() {
+        let l = small_layout();
+        let build = |kind: GateKind| {
+            let mut p = Program::new();
+            p.push(Stage::PresetScore, MicroInstr::GangPreset { col: l.score_col(), val: kind.preset() });
+            p.push(Stage::ComputeScore, MicroInstr::gate(kind, l.score_col(), &[0, 1]));
+            p
+        };
+        let e = check_equivalent(&build(GateKind::Nor2), &build(GateKind::Nand2), &l).unwrap_err();
+        assert!(matches!(e, EquivalenceError::ScoreMismatch { .. }), "{e}");
+    }
+
+    #[test]
+    fn input_order_does_not_matter() {
+        let l = small_layout();
+        let build = |ins: [u32; 3]| {
+            let mut p = Program::new();
+            p.push(Stage::PresetScore, MicroInstr::GangPreset { col: l.score_col(), val: true });
+            p.push(Stage::ComputeScore, MicroInstr::gate(GateKind::Maj3, l.score_col(), &ins));
+            p
+        };
+        check_equivalent(&build([0, 1, 2]), &build([2, 0, 1]), &l).unwrap();
+    }
+
+    #[test]
+    fn double_inversion_collapses() {
+        let l = small_layout();
+        let mut orig = Program::new();
+        orig.push(Stage::PresetScore, MicroInstr::GangPreset { col: l.score_col(), val: true });
+        orig.push(Stage::ComputeScore, MicroInstr::gate(GateKind::Copy, l.score_col(), &[0]));
+        let mut cand = Program::new();
+        cand.push(Stage::PresetScore, MicroInstr::GangPreset { col: 30, val: false });
+        cand.push(Stage::PresetScore, MicroInstr::GangPreset { col: 31, val: false });
+        cand.push(Stage::PresetScore, MicroInstr::GangPreset { col: l.score_col(), val: false });
+        cand.push(Stage::ComputeScore, MicroInstr::gate(GateKind::Inv, 30, &[0]));
+        cand.push(Stage::ComputeScore, MicroInstr::gate(GateKind::Inv, 31, &[30]));
+        cand.push(Stage::ComputeScore, MicroInstr::gate(GateKind::Inv, l.score_col(), &[31]));
+        // INV(INV(INV(x))) == INV(x) != x: candidate must NOT prove
+        // equal to COPY(x)…
+        assert!(check_equivalent(&orig, &cand, &l).is_err());
+        // …but INV(INV(x)) must prove equal to COPY(x).
+        let mut two = Program::new();
+        two.push(Stage::PresetScore, MicroInstr::GangPreset { col: 30, val: false });
+        two.push(Stage::PresetScore, MicroInstr::GangPreset { col: l.score_col(), val: false });
+        two.push(Stage::ComputeScore, MicroInstr::gate(GateKind::Inv, 30, &[0]));
+        two.push(Stage::ComputeScore, MicroInstr::gate(GateKind::Inv, l.score_col(), &[30]));
+        check_equivalent(&orig, &two, &l).unwrap();
+    }
+
+    #[test]
+    fn constant_fan_in_folds_through_truth_tables() {
+        let l = small_layout();
+        // AND(1, 1) computed by gates vs pre-set directly.
+        let mut gates = Program::new();
+        gates.push(Stage::PresetMatch, MicroInstr::GangPreset { col: 30, val: true });
+        gates.push(Stage::PresetMatch, MicroInstr::GangPreset { col: 31, val: true });
+        gates.push(Stage::PresetScore, MicroInstr::GangPreset { col: l.score_col(), val: true });
+        gates.push(Stage::ComputeScore, MicroInstr::gate(GateKind::And2, l.score_col(), &[30, 31]));
+        let mut preset = Program::new();
+        preset.push(Stage::PresetScore, MicroInstr::GangPreset { col: l.score_col(), val: true });
+        check_equivalent(&gates, &preset, &l).unwrap();
+    }
+
+    #[test]
+    fn dropped_read_is_a_count_mismatch() {
+        let cache = ProgramCache::for_geometry(24, 6, PresetMode::Gang, true).unwrap();
+        let orig = cache.program(0);
+        let mut cand = orig.clone();
+        cand.instrs
+            .retain(|(_, i)| !matches!(i, MicroInstr::ReadScoreAllRows { .. }));
+        let e = check_equivalent(orig, &cand, cache.layout()).unwrap_err();
+        assert!(matches!(e, EquivalenceError::ReadCountMismatch { .. }), "{e}");
+    }
+
+    #[test]
+    fn undefined_input_is_typed_per_side() {
+        let l = small_layout();
+        let mut p = Program::new();
+        p.push(Stage::PresetScore, MicroInstr::GangPreset { col: l.score_col(), val: false });
+        p.push(Stage::ComputeScore, MicroInstr::gate(GateKind::Inv, l.score_col(), &[37]));
+        let empty = Program::new();
+        let e = check_equivalent(&p, &empty, &l).unwrap_err();
+        assert!(
+            matches!(e, EquivalenceError::UndefinedInput { side: Side::Original, col: 37 }),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn def_use_graph_indexes_defs_and_uses() {
+        let l = small_layout();
+        let mut p = Program::new();
+        p.push(Stage::PresetMatch, MicroInstr::GangPreset { col: 30, val: false });
+        p.push(Stage::Match, MicroInstr::gate(GateKind::Nor2, 30, &[0, 1]));
+        p.push(Stage::ReadOut, MicroInstr::ReadScoreAllRows { col: 30, len: 1 });
+        let du = DefUse::build(&p, &l);
+        assert_eq!(du.cols[30].presets, vec![0]);
+        assert_eq!(du.cols[30].gate_defs, vec![1]);
+        assert_eq!(du.cols[30].read_uses, vec![2]);
+        assert_eq!(du.cols[0].gate_uses, vec![1]);
+        assert!(du.is_ssa(30));
+    }
+
+    #[test]
+    fn dataflow_summary_counts_real_programs() {
+        let cache = ProgramCache::for_geometry(24, 6, PresetMode::Gang, true).unwrap();
+        let s = dataflow_summary(cache.program(0), cache.layout()).unwrap();
+        assert_eq!(s.instructions, cache.program(0).len());
+        assert_eq!(s.reads, 1);
+        assert!(s.gates > 0 && s.presets > 0);
+        assert!(s.distinct_exprs > 0);
+        // The adder tree's critical path dominates the depth.
+        assert!(s.max_depth > 3, "depth {} too shallow", s.max_depth);
+        // Hash-consing collapses duplicate work: distinct expressions
+        // are strictly fewer than gate firings (COPY chains collapse).
+        assert!(s.distinct_exprs < s.gates, "{} !< {}", s.distinct_exprs, s.gates);
+    }
+}

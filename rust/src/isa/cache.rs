@@ -10,41 +10,94 @@
 //! shared (via `Arc`) across every coordinator executor lane.
 
 use crate::array::RowLayout;
+use crate::isa::opt::{optimize, OptCensus, OptLevel};
 use crate::isa::verify::{verify, VerifyError, VerifyReport};
 use crate::isa::{CodeGen, CodegenStats, PresetMode, Program};
 
 /// Immutable cache of the lowered alignment programs for one
-/// `(layout, mode, readout)` configuration — one compiled [`Program`]
-/// per alignment `loc`. Build once, execute forever. Every program is
-/// statically verified at build ([`crate::isa::verify`]): a cache in
-/// hand is proof its programs are hazard-free.
+/// `(layout, mode, readout, opt level)` configuration — one compiled
+/// [`Program`] per alignment `loc`. Build once, execute forever. Every
+/// program is statically verified at build ([`crate::isa::verify`]):
+/// a cache in hand is proof its programs are hazard-free. At
+/// [`OptLevel::O1`] each program is additionally run through the
+/// translation-validated optimizer ([`crate::isa::opt`]); a program
+/// whose rewrite fails validation silently keeps its unoptimized
+/// stream (counted in [`OptCensus::fallbacks`]) — optimization can
+/// shrink programs, never break a build.
 #[derive(Debug)]
 pub struct ProgramCache {
     layout: RowLayout,
     mode: PresetMode,
     readout: bool,
+    opt_level: OptLevel,
     programs: Vec<Program>,
     stats: CodegenStats,
     verify: VerifyReport,
+    unopt_verify: VerifyReport,
+    opt_census: OptCensus,
 }
 
 impl ProgramCache {
     /// Compile every alignment program of `layout` up front and verify
-    /// each against the layout. Verification is always-on: the cache is
-    /// built once per geometry, so the scan is off the execution path,
-    /// and a [`VerifyError`] here means codegen emitted a program that
-    /// would corrupt the array.
+    /// each against the layout, with no optimization. Verification is
+    /// always-on: the cache is built once per geometry, so the scan is
+    /// off the execution path, and a [`VerifyError`] here means codegen
+    /// emitted a program that would corrupt the array.
     pub fn build(layout: RowLayout, mode: PresetMode, readout: bool) -> Result<Self, VerifyError> {
+        ProgramCache::build_at(layout, mode, readout, OptLevel::O0)
+    }
+
+    /// [`ProgramCache::build`] at an explicit [`OptLevel`].
+    pub fn build_at(
+        layout: RowLayout,
+        mode: PresetMode,
+        readout: bool,
+        opt_level: OptLevel,
+    ) -> Result<Self, VerifyError> {
         let mut cg = CodeGen::new(layout, mode);
-        let programs: Vec<Program> = (0..layout.n_alignments() as u32)
+        let mut programs: Vec<Program> = (0..layout.n_alignments() as u32)
             .map(|loc| cg.alignment_program(loc, readout))
             .collect();
-        let mut report = VerifyReport::default();
+        let mut unopt_report = VerifyReport::default();
         for (loc, prog) in programs.iter().enumerate() {
             let rep = verify(prog, &layout).map_err(|e| e.with_loc(loc as u32))?;
-            report.absorb(&rep);
+            unopt_report.absorb(&rep);
         }
-        Ok(ProgramCache { layout, mode, readout, programs, stats: cg.stats(), verify: report })
+        let mut opt_census = OptCensus::default();
+        let report = match opt_level {
+            OptLevel::O0 => unopt_report,
+            OptLevel::O1 => {
+                let mut post_report = VerifyReport::default();
+                for prog in &mut programs {
+                    match optimize(prog, &layout) {
+                        Ok((optimized, census)) => {
+                            opt_census.absorb(&census);
+                            *prog = optimized;
+                        }
+                        // Translation validation refused the rewrite:
+                        // the unoptimized program is known-good, keep
+                        // it and count the fallback.
+                        Err(_) => opt_census.fallbacks += 1,
+                    }
+                }
+                for (loc, prog) in programs.iter().enumerate() {
+                    let rep = verify(prog, &layout).map_err(|e| e.with_loc(loc as u32))?;
+                    post_report.absorb(&rep);
+                }
+                post_report
+            }
+        };
+        Ok(ProgramCache {
+            layout,
+            mode,
+            readout,
+            opt_level,
+            programs,
+            stats: cg.stats(),
+            verify: report,
+            unopt_verify: unopt_report,
+            opt_census,
+        })
     }
 
     /// Probe the scratch demand of a 2-bit `(frag_chars, pat_chars)`
@@ -56,8 +109,19 @@ impl ProgramCache {
         mode: PresetMode,
         readout: bool,
     ) -> Result<Self, VerifyError> {
+        ProgramCache::for_geometry_at(frag_chars, pat_chars, mode, readout, OptLevel::O0)
+    }
+
+    /// [`ProgramCache::for_geometry`] at an explicit [`OptLevel`].
+    pub fn for_geometry_at(
+        frag_chars: usize,
+        pat_chars: usize,
+        mode: PresetMode,
+        readout: bool,
+        opt_level: OptLevel,
+    ) -> Result<Self, VerifyError> {
         let dna = crate::alphabet::Alphabet::Dna2;
-        ProgramCache::for_alphabet(dna, frag_chars, pat_chars, mode, readout)
+        ProgramCache::for_alphabet_at(dna, frag_chars, pat_chars, mode, readout, opt_level)
     }
 
     /// [`ProgramCache::for_geometry`] at an explicit symbol width: the
@@ -71,12 +135,24 @@ impl ProgramCache {
         mode: PresetMode,
         readout: bool,
     ) -> Result<Self, VerifyError> {
+        ProgramCache::for_alphabet_at(alphabet, frag_chars, pat_chars, mode, readout, OptLevel::O0)
+    }
+
+    /// [`ProgramCache::for_alphabet`] at an explicit [`OptLevel`].
+    pub fn for_alphabet_at(
+        alphabet: crate::alphabet::Alphabet,
+        frag_chars: usize,
+        pat_chars: usize,
+        mode: PresetMode,
+        readout: bool,
+        opt_level: OptLevel,
+    ) -> Result<Self, VerifyError> {
         let probe = RowLayout::for_alphabet(alphabet, frag_chars, pat_chars, usize::MAX / 2);
         let mut cg = CodeGen::new(probe, mode);
         let _ = cg.alignment_program(0, true);
         let layout =
             RowLayout::for_alphabet(alphabet, frag_chars, pat_chars, cg.stats().scratch_high_water);
-        ProgramCache::build(layout, mode, readout)
+        ProgramCache::build_at(layout, mode, readout, opt_level)
     }
 
     /// Bits per character the cached programs were lowered for.
@@ -121,14 +197,36 @@ impl ProgramCache {
     }
 
     /// Aggregate static-verification report across all cached programs
+    /// as they will execute — post-optimization at [`OptLevel::O1`]
     /// (counts summed, column maxima maxed).
     pub fn verify_report(&self) -> VerifyReport {
         self.verify
+    }
+
+    /// Aggregate static-verification report of the programs exactly as
+    /// codegen lowered them, before any optimization — the stable
+    /// codegen-census baseline the bench anchors pin. Equal to
+    /// [`ProgramCache::verify_report`] at [`OptLevel::O0`].
+    pub fn unoptimized_report(&self) -> VerifyReport {
+        self.unopt_verify
+    }
+
+    /// What the optimizer eliminated across all cached programs (all
+    /// zeros at [`OptLevel::O0`]).
+    pub fn opt_census(&self) -> OptCensus {
+        self.opt_census
+    }
+
+    /// The optimization level the cache was built at.
+    pub fn opt_level(&self) -> OptLevel {
+        self.opt_level
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     #[test]
@@ -209,5 +307,82 @@ mod tests {
         assert_eq!(vr.gates, cache.stats().gates);
         assert_eq!(vr.presets, cache.stats().presets);
         assert!((vr.max_column.unwrap() as usize) < cache.layout().total_cols());
+    }
+
+    /// The acceptance bar of the optimizer: at the default hot-path
+    /// geometry and O1, every program re-verifies (guaranteed by
+    /// construction or the build would have errored), the aggregate
+    /// census eliminates > 0 instructions with zero fallbacks, and the
+    /// post-opt verify totals are the pre-opt totals minus exactly what
+    /// the census claims.
+    #[test]
+    fn o1_default_geometry_shrinks_with_zero_fallbacks() {
+        let cache =
+            ProgramCache::for_geometry_at(64, 16, PresetMode::Gang, true, OptLevel::O1).unwrap();
+        assert_eq!(cache.opt_level(), OptLevel::O1);
+        let census = cache.opt_census();
+        assert!(census.instructions_eliminated > 0);
+        assert_eq!(census.fallbacks, 0);
+        assert_eq!(
+            census.instructions_eliminated,
+            census.gates_eliminated + census.presets_eliminated
+        );
+        let pre = cache.unoptimized_report();
+        let post = cache.verify_report();
+        assert_eq!(post.instructions, pre.instructions - census.instructions_eliminated);
+        assert_eq!(post.gates, pre.gates - census.gates_eliminated);
+        assert_eq!(post.presets, pre.presets - census.presets_eliminated);
+        assert_eq!(post.reads, pre.reads);
+        // The unoptimized baseline still matches the codegen census the
+        // bench anchors pin.
+        assert_eq!(pre.gates, cache.stats().gates);
+        assert_eq!(pre.presets, cache.stats().presets);
+    }
+
+    /// Every sweep geometry and both preset modes shrink at O1: the
+    /// score-compartment copies sink everywhere.
+    #[test]
+    fn o1_shrinks_at_every_geometry_and_mode() {
+        for (frag, pat) in [(24, 6), (32, 8), (65, 16)] {
+            for mode in [PresetMode::Standard, PresetMode::Gang] {
+                let cache =
+                    ProgramCache::for_geometry_at(frag, pat, mode, true, OptLevel::O1).unwrap();
+                let census = cache.opt_census();
+                assert!(
+                    census.instructions_eliminated >= cache.len(),
+                    "{frag}x{pat} {mode:?}: {census:?}"
+                );
+                assert_eq!(census.fallbacks, 0, "{frag}x{pat} {mode:?}");
+            }
+        }
+    }
+
+    /// O0 through the `_at` constructor is byte-identical to the legacy
+    /// constructors: same programs, same reports, all-zero census.
+    #[test]
+    fn o0_is_the_identity_configuration() {
+        let legacy = ProgramCache::for_geometry(20, 5, PresetMode::Gang, true).unwrap();
+        let at =
+            ProgramCache::for_geometry_at(20, 5, PresetMode::Gang, true, OptLevel::O0).unwrap();
+        assert_eq!(at.opt_level(), OptLevel::O0);
+        assert_eq!(at.opt_census(), crate::isa::OptCensus::default());
+        assert_eq!(at.verify_report(), at.unoptimized_report());
+        assert_eq!(legacy.verify_report(), at.verify_report());
+        for loc in 0..legacy.len() as u32 {
+            assert_eq!(legacy.program(loc), at.program(loc), "loc {loc}");
+        }
+    }
+
+    /// O1 cached programs are exactly `optimize()` of the O0 cached
+    /// programs — the cache applies the optimizer, nothing more.
+    #[test]
+    fn o1_programs_equal_optimizer_output() {
+        let o0 = ProgramCache::for_geometry(24, 6, PresetMode::Gang, true).unwrap();
+        let o1 =
+            ProgramCache::for_geometry_at(24, 6, PresetMode::Gang, true, OptLevel::O1).unwrap();
+        for loc in 0..o0.len() as u32 {
+            let (expected, _) = crate::isa::optimize(o0.program(loc), o0.layout()).unwrap();
+            assert_eq!(*o1.program(loc), expected, "loc {loc}");
+        }
     }
 }

@@ -400,6 +400,8 @@ impl CodeGen {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     fn layout(frag: usize, pat: usize) -> RowLayout {

@@ -41,7 +41,16 @@ impl Stage {
 
     /// Paper stage number (1-based).
     pub fn number(&self) -> usize {
-        Stage::ALL.iter().position(|s| s == self).unwrap() + 1
+        match self {
+            Stage::WritePatterns => 1,
+            Stage::PresetMatch => 2,
+            Stage::ActivateBitlinesMatch => 3,
+            Stage::Match => 4,
+            Stage::PresetScore => 5,
+            Stage::ActivateBitlinesScore => 6,
+            Stage::ComputeScore => 7,
+            Stage::ReadOut => 8,
+        }
     }
 
     /// Whether this stage is a preset stage (the Fig. 6 breakdown

@@ -16,18 +16,31 @@
 //! Compiled programs are cached per geometry ([`cache`]) and statically
 //! verified at cache build ([`verify`]) — dataflow, stage ordering,
 //! geometry bounds, gate legality, readout coverage, and preset
-//! liveness are proven before a program ever executes.
+//! liveness are proven before a program ever executes. On top of the
+//! verifier sit the static dataflow analyses ([`analyze`]: def-use
+//! graph, symbolic evaluator, equivalence checking) and the
+//! translation-validated program optimizer ([`opt`]: copy sinking,
+//! constant folding, CSE, readout-cone trimming behind
+//! [`OptLevel::O1`]) — every rewrite is re-verified and proven
+//! output-equivalent before the cache will serve it.
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod analyze;
 pub mod cache;
 pub mod codegen;
 pub mod macro_;
 pub mod micro;
+pub mod opt;
 pub mod verify;
 
+pub use analyze::{check_equivalent, dataflow_summary, DataflowSummary, DefUse, EquivalenceError};
 pub use cache::ProgramCache;
 pub use codegen::{CodeGen, CodegenStats, PresetMode};
 pub use macro_::MacroInstr;
 pub use micro::{MicroInstr, Program, Stage};
+pub use opt::{optimize, OptCensus, OptError, OptLevel};
 pub use verify::{
-    mutation_self_test, verify, CellState, Corruption, Rule, VerifyError, VerifyReport, Violation,
+    mutation_self_test, verify, CellState, Corruption, Rejection, Rule, VerifyError, VerifyReport,
+    Violation,
 };

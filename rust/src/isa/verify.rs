@@ -46,6 +46,7 @@
 
 use crate::array::RowLayout;
 use crate::gates::GateKind;
+use crate::isa::analyze::{check_equivalent, EquivalenceError};
 use crate::isa::cache::ProgramCache;
 use crate::isa::{MicroInstr, Program, Stage};
 
@@ -435,9 +436,35 @@ pub fn verify(prog: &Program, layout: &RowLayout) -> Result<VerifyReport, Verify
     Ok(report)
 }
 
+/// How the checking stack rejected one corrupted program: by the
+/// static verifier, or — for hazards that are verifier-clean by
+/// construction — by the independent symbolic equivalence checker.
+/// That second arm is the point of the optimizer-hazard classes: it
+/// proves translation validation is load-bearing, not redundant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejection {
+    /// Rejected by [`verify`] (rules R1–R6).
+    Verify(VerifyError),
+    /// Passed [`verify`] but failed the symbolic equivalence check
+    /// against the uncorrupted program.
+    NotEquivalent(EquivalenceError),
+}
+
+impl std::fmt::Display for Rejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejection::Verify(e) => write!(f, "{e}"),
+            Rejection::NotEquivalent(e) => write!(f, "equivalence: {e}"),
+        }
+    }
+}
+
 /// The corruption classes of the mutation self-test harness. The first
-/// six are the issue-mandated set; the last two extend coverage to R1
-/// and the clobber arm of R2.
+/// six are the original issue-mandated set; `DanglingInput` and
+/// `ClobberLive` extend coverage to R1 and the clobber arm of R2; the
+/// last three model *optimizer* hazards — the ways a buggy rewrite
+/// pass could corrupt a program — and must be caught by verify or the
+/// equivalence checker.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Corruption {
     /// Remove a preset a later gate's output depends on.
@@ -456,11 +483,23 @@ pub enum Corruption {
     DanglingInput,
     /// Preset over a computed column that is still live.
     ClobberLive,
+    /// Optimizer hazard: a scheduling pass moves a preset past the
+    /// gate that depends on it.
+    ReorderedPreset,
+    /// Optimizer hazard: a constant-fold deletes a gate but leaves its
+    /// output pre-set to the gate's firing polarity instead of the
+    /// folded value — every static rule still holds, only the
+    /// *computed value* is wrong, so the equivalence checker is the
+    /// sole line of defense.
+    WrongPolarityFold,
+    /// Optimizer hazard: a cone-trimming pass deletes a live gate and
+    /// its preset, cutting a dependency the read-out cone still needs.
+    TrimmedLiveCone,
 }
 
 impl Corruption {
     /// Every corruption class, in a stable order.
-    pub const ALL: [Corruption; 8] = [
+    pub const ALL: [Corruption; 11] = [
         Corruption::DroppedPreset,
         Corruption::SwappedStage,
         Corruption::OutOfRangeColumn,
@@ -469,6 +508,9 @@ impl Corruption {
         Corruption::DeadStore,
         Corruption::DanglingInput,
         Corruption::ClobberLive,
+        Corruption::ReorderedPreset,
+        Corruption::WrongPolarityFold,
+        Corruption::TrimmedLiveCone,
     ];
 
     /// Stable name for reports.
@@ -482,34 +524,66 @@ impl Corruption {
             Corruption::DeadStore => "dead-store",
             Corruption::DanglingInput => "dangling-input",
             Corruption::ClobberLive => "clobber-live",
+            Corruption::ReorderedPreset => "reordered-preset",
+            Corruption::WrongPolarityFold => "wrong-polarity-fold",
+            Corruption::TrimmedLiveCone => "trimmed-live-cone",
         }
     }
 
-    /// Whether `violation` is the variant this corruption must be
+    /// Whether `rejection` is the typed error this corruption must be
     /// rejected with.
-    pub fn expects(&self, violation: &Violation) -> bool {
-        matches!(
-            (self, violation),
-            (Corruption::DroppedPreset, Violation::UnpresetOutput { .. })
-                | (Corruption::SwappedStage, Violation::StageMismatch { .. })
-                | (Corruption::OutOfRangeColumn, Violation::ColumnOutOfRange { .. })
-                | (Corruption::BadArity, Violation::BadArity { .. })
-                | (Corruption::DanglingRead, Violation::UndrivenRead { .. })
-                | (Corruption::DeadStore, Violation::DeadStore { .. })
-                | (Corruption::DanglingInput, Violation::UseBeforeDef { .. })
-                | (Corruption::ClobberLive, Violation::ClobberedLiveColumn { .. })
-        )
+    pub fn expects(&self, rejection: &Rejection) -> bool {
+        match rejection {
+            Rejection::Verify(e) => matches!(
+                (self, &e.violation),
+                (Corruption::DroppedPreset, Violation::UnpresetOutput { .. })
+                    | (Corruption::SwappedStage, Violation::StageMismatch { .. })
+                    | (Corruption::OutOfRangeColumn, Violation::ColumnOutOfRange { .. })
+                    | (Corruption::BadArity, Violation::BadArity { .. })
+                    | (Corruption::DanglingRead, Violation::UndrivenRead { .. })
+                    | (Corruption::DeadStore, Violation::DeadStore { .. })
+                    | (Corruption::DanglingInput, Violation::UseBeforeDef { .. })
+                    | (Corruption::ClobberLive, Violation::ClobberedLiveColumn { .. })
+                    | (Corruption::ReorderedPreset, Violation::UnpresetOutput { .. })
+                    | (Corruption::TrimmedLiveCone, Violation::UseBeforeDef { .. })
+                    | (Corruption::TrimmedLiveCone, Violation::UndrivenRead { .. })
+            ),
+            Rejection::NotEquivalent(e) => matches!(
+                (self, e),
+                (Corruption::WrongPolarityFold, EquivalenceError::ReadValueMismatch { .. })
+                    | (Corruption::WrongPolarityFold, EquivalenceError::ScoreMismatch { .. })
+            ),
+        }
     }
 }
 
 /// Seed one corruption `class` into a copy of a known-good `prog`.
 /// Each mutation is chosen so the *intended* violation is the first
-/// one the scan reaches.
-pub fn corrupt(prog: &Program, layout: &RowLayout, class: Corruption) -> Program {
+/// one the scan reaches. Errors when `prog` lacks the structure the
+/// mutation needs (e.g. no gates at all).
+pub fn corrupt(prog: &Program, layout: &RowLayout, class: Corruption) -> Result<Program, String> {
     let mut p = prog.clone();
     let preset_col = |instr: &MicroInstr| match instr {
         MicroInstr::Preset { col, .. } | MicroInstr::GangPreset { col, .. } => Some(*col),
         _ => None,
+    };
+    // The first gate and the index of the preset driving its output —
+    // the dependency pair the optimizer-hazard classes disturb.
+    let first_gate_pair = |p: &Program| -> Result<(usize, usize), String> {
+        let ig = p
+            .instrs
+            .iter()
+            .position(|(_, instr)| matches!(instr, MicroInstr::Gate { .. }))
+            .ok_or_else(|| "no gate in program".to_string())?;
+        let out = match &p.instrs[ig].1 {
+            MicroInstr::Gate { out, .. } => *out,
+            _ => unreachable!("position matched a gate"),
+        };
+        let ip = p.instrs[..ig]
+            .iter()
+            .position(|(_, instr)| preset_col(instr) == Some(out))
+            .ok_or_else(|| "first gate's output has no preceding preset".to_string())?;
+        Ok((ig, ip))
     };
     match class {
         Corruption::DroppedPreset => {
@@ -526,7 +600,7 @@ pub fn corrupt(prog: &Program, layout: &RowLayout, class: Corruption) -> Program
                     }
                 }
             }
-            let i = victim.expect("no droppable preset in program");
+            let i = victim.ok_or("no droppable preset in program")?;
             p.instrs.remove(i);
         }
         Corruption::SwappedStage => {
@@ -534,12 +608,12 @@ pub fn corrupt(prog: &Program, layout: &RowLayout, class: Corruption) -> Program
                 .instrs
                 .iter()
                 .position(|(_, instr)| preset_col(instr).is_some())
-                .expect("no preset in program");
+                .ok_or("no preset in program")?;
             let ig = p.instrs[ip..]
                 .iter()
                 .position(|(_, instr)| matches!(instr, MicroInstr::Gate { .. }))
                 .map(|off| ip + off)
-                .expect("no gate after first preset");
+                .ok_or("no gate after first preset")?;
             let (sp, sg) = (p.instrs[ip].0, p.instrs[ig].0);
             p.instrs[ip].0 = sg;
             p.instrs[ig].0 = sp;
@@ -549,7 +623,7 @@ pub fn corrupt(prog: &Program, layout: &RowLayout, class: Corruption) -> Program
                 .instrs
                 .iter_mut()
                 .find(|(_, instr)| matches!(instr, MicroInstr::Gate { .. }))
-                .expect("no gate in program");
+                .ok_or("no gate in program")?;
             if let MicroInstr::Gate { ins, .. } = instr {
                 ins[0] = layout.total_cols() as u32 + 7;
             }
@@ -559,7 +633,7 @@ pub fn corrupt(prog: &Program, layout: &RowLayout, class: Corruption) -> Program
                 .instrs
                 .iter_mut()
                 .find(|(_, instr)| matches!(instr, MicroInstr::Gate { n_ins, .. } if *n_ins >= 2))
-                .expect("no multi-input gate in program");
+                .ok_or("no multi-input gate in program")?;
             if let MicroInstr::Gate { n_ins, .. } = instr {
                 *n_ins -= 1;
             }
@@ -598,7 +672,7 @@ pub fn corrupt(prog: &Program, layout: &RowLayout, class: Corruption) -> Program
                 .instrs
                 .iter_mut()
                 .find(|(_, instr)| matches!(instr, MicroInstr::Gate { .. }))
-                .expect("no gate in program");
+                .ok_or("no gate in program")?;
             if let MicroInstr::Gate { ins, .. } = instr {
                 ins[0] = layout.score_col();
             }
@@ -610,7 +684,7 @@ pub fn corrupt(prog: &Program, layout: &RowLayout, class: Corruption) -> Program
                 .instrs
                 .iter()
                 .position(|(stage, _)| phase_rank(*stage) >= 2)
-                .expect("no score phase in program");
+                .ok_or("no score phase in program")?;
             p.instrs.insert(
                 at,
                 (
@@ -619,30 +693,64 @@ pub fn corrupt(prog: &Program, layout: &RowLayout, class: Corruption) -> Program
                 ),
             );
         }
+        Corruption::ReorderedPreset => {
+            // Move the first gate's output preset to just after the
+            // gate. The preset keeps its stage tag (same coarse phase),
+            // so the only broken invariant is preset-before-compute:
+            // the gate now fires on an un-preset cell.
+            let (ig, ip) = first_gate_pair(&p)?;
+            let moved = p.instrs.remove(ip);
+            // `ig` shifted down by one after the removal.
+            p.instrs.insert(ig, moved);
+        }
+        Corruption::WrongPolarityFold => {
+            // Delete the first gate but keep its output preset: a
+            // botched constant-fold. The preset already holds the
+            // gate's *firing* polarity, every consumer still sees a
+            // defined, consumed, in-phase cell — statically flawless,
+            // semantically wrong.
+            let (ig, _) = first_gate_pair(&p)?;
+            p.instrs.remove(ig);
+        }
+        Corruption::TrimmedLiveCone => {
+            // Delete the first gate AND its preset: a cone trim that
+            // misjudged liveness. Whatever consumed that gate's output
+            // now reads an undefined column.
+            let (ig, ip) = first_gate_pair(&p)?;
+            p.instrs.remove(ig);
+            p.instrs.remove(ip);
+        }
     }
-    p
+    Ok(p)
 }
 
 /// Run every [`Corruption`] class against `cache`'s first program and
-/// assert each is rejected with its intended violation. Returns the
-/// per-class rejections for reporting, or a description of the first
-/// class the verifier failed to catch correctly.
-pub fn mutation_self_test(cache: &ProgramCache) -> Result<Vec<(Corruption, VerifyError)>, String> {
+/// assert each is rejected — by [`verify`], or (for the hazards that
+/// are verifier-clean by construction) by the symbolic equivalence
+/// check against the uncorrupted program — with its intended typed
+/// error. Returns the per-class rejections for reporting, or a
+/// description of the first class the checking stack failed to catch
+/// correctly.
+pub fn mutation_self_test(cache: &ProgramCache) -> Result<Vec<(Corruption, Rejection)>, String> {
     let prog = cache.program(0);
     let layout = cache.layout();
     debug_assert!(verify(prog, layout).is_ok(), "seed program must verify");
     let mut rejections = Vec::with_capacity(Corruption::ALL.len());
     for class in Corruption::ALL {
-        let mutated = corrupt(prog, layout, class);
-        match verify(&mutated, layout) {
-            Ok(_) => return Err(format!("{}: corruption was not rejected", class.name())),
-            Err(e) if class.expects(&e.violation) => rejections.push((class, e)),
-            Err(e) => {
-                return Err(format!(
-                    "{}: rejected with the wrong violation: {e}",
-                    class.name()
-                ))
-            }
+        let mutated = corrupt(prog, layout, class).map_err(|e| format!("{}: {e}", class.name()))?;
+        let rejection = match verify(&mutated, layout) {
+            Err(e) => Rejection::Verify(e),
+            Ok(_) => match check_equivalent(prog, &mutated, layout) {
+                Err(e) => Rejection::NotEquivalent(e),
+                Ok(()) => {
+                    return Err(format!("{}: corruption was not rejected", class.name()));
+                }
+            },
+        };
+        if class.expects(&rejection) {
+            rejections.push((class, rejection));
+        } else {
+            return Err(format!("{}: rejected with the wrong error: {rejection}", class.name()));
         }
     }
     Ok(rejections)
@@ -650,6 +758,8 @@ pub fn mutation_self_test(cache: &ProgramCache) -> Result<Vec<(Corruption, Verif
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::isa::PresetMode;
 
@@ -839,7 +949,13 @@ mod tests {
         let cache = ProgramCache::for_geometry(24, 6, PresetMode::Gang, true).unwrap();
         let rejections = mutation_self_test(&cache).unwrap();
         assert_eq!(rejections.len(), Corruption::ALL.len());
-        let rules: HashSet<Rule> = rejections.iter().map(|(_, e)| e.rule()).collect();
+        let rules: HashSet<Rule> = rejections
+            .iter()
+            .filter_map(|(_, r)| match r {
+                Rejection::Verify(e) => Some(e.rule()),
+                Rejection::NotEquivalent(_) => None,
+            })
+            .collect();
         for rule in [
             Rule::DefBeforeUse,
             Rule::StageOrder,
@@ -849,6 +965,88 @@ mod tests {
             Rule::Liveness,
         ] {
             assert!(rules.contains(&rule), "{rule} not covered by any corruption class");
+        }
+        // Exactly one class must exercise the equivalence-checker arm:
+        // the stack's second line of defense is proven load-bearing.
+        let equiv: Vec<Corruption> = rejections
+            .iter()
+            .filter(|(_, r)| matches!(r, Rejection::NotEquivalent(_)))
+            .map(|(c, _)| *c)
+            .collect();
+        assert_eq!(equiv, vec![Corruption::WrongPolarityFold]);
+    }
+
+    /// The self-test holds in both preset modes (Standard interleaves
+    /// presets with gates, which the reorder/trim mutations disturb
+    /// differently).
+    #[test]
+    fn mutation_self_test_passes_in_standard_mode() {
+        let cache = ProgramCache::for_geometry(24, 6, PresetMode::Standard, true).unwrap();
+        let rejections = mutation_self_test(&cache).unwrap();
+        assert_eq!(rejections.len(), Corruption::ALL.len());
+    }
+
+    /// The wrong-polarity fold is *statically flawless*: verify accepts
+    /// it, and only the symbolic equivalence check catches the damage.
+    /// This is the existence proof that translation validation is not
+    /// subsumed by re-verification.
+    #[test]
+    fn wrong_polarity_fold_defeats_verify_but_not_the_checker() {
+        let cache = ProgramCache::for_geometry(24, 6, PresetMode::Gang, true).unwrap();
+        let prog = cache.program(0);
+        let mutated = corrupt(prog, cache.layout(), Corruption::WrongPolarityFold).unwrap();
+        verify(&mutated, cache.layout()).expect("the fold must pass every static rule");
+        let e = check_equivalent(prog, &mutated, cache.layout()).unwrap_err();
+        assert!(
+            matches!(e, EquivalenceError::ReadValueMismatch { .. }),
+            "unexpected equivalence error: {e}"
+        );
+    }
+
+    /// A reordered preset breaks preset-before-compute at the gate that
+    /// depended on it.
+    #[test]
+    fn reordered_preset_is_rejected_at_the_orphaned_gate() {
+        let cache = ProgramCache::for_geometry(24, 6, PresetMode::Gang, true).unwrap();
+        let mutated =
+            corrupt(cache.program(0), cache.layout(), Corruption::ReorderedPreset).unwrap();
+        let e = verify(&mutated, cache.layout()).unwrap_err();
+        assert!(
+            matches!(e.violation, Violation::UnpresetOutput { found: CellState::Undefined, .. }),
+            "{e}"
+        );
+    }
+
+    /// Trimming a live cone leaves its consumers reading an undefined
+    /// column.
+    #[test]
+    fn trimmed_live_cone_is_rejected_at_the_cut_dependency() {
+        let cache = ProgramCache::for_geometry(24, 6, PresetMode::Gang, true).unwrap();
+        let mutated =
+            corrupt(cache.program(0), cache.layout(), Corruption::TrimmedLiveCone).unwrap();
+        let e = verify(&mutated, cache.layout()).unwrap_err();
+        assert!(
+            matches!(
+                e.violation,
+                Violation::UseBeforeDef { .. } | Violation::UndrivenRead { .. }
+            ),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn corrupt_reports_missing_structure_instead_of_panicking() {
+        let l = small_layout();
+        let empty = Program::new();
+        for class in [
+            Corruption::DroppedPreset,
+            Corruption::SwappedStage,
+            Corruption::BadArity,
+            Corruption::ReorderedPreset,
+            Corruption::WrongPolarityFold,
+            Corruption::TrimmedLiveCone,
+        ] {
+            assert!(corrupt(&empty, &l, class).is_err(), "{} on empty program", class.name());
         }
     }
 

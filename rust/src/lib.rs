@@ -29,7 +29,7 @@
 //! | [`alphabet`] | §3.1, §4 Table 4 | symbol alphabets (2-bit DNA, 5-bit protein, 8-bit bytes), width-generic packed scorer, coded workloads |
 //! | [`tech`] | §4 Table 3, §3.4, §5.5 | MTJ device + periphery + interconnect models, process variation |
 //! | [`gates`] | §2.1–2.2 | resistive-divider gate formation, V_gate windows, compound XOR/adder sequences |
-//! | [`isa`] | §3.3 | micro/macro instructions and code generation |
+//! | [`isa`] | §3.3 | micro/macro instructions, code generation, the static verifier, and the translation-validated dataflow optimizer (`analyze`/`opt`) |
 //! | [`array`] | §2.3–2.4, §3.1 | bit-level CRAM-PM array with row-parallel semantics |
 //! | [`fault`] | §2.1 (thermally-activated switching) | deterministic, seed-splittable device-fault injection: gate/write/readout flip channels, geometric skip sampling, supervision test hooks |
 //! | [`smc`] | §3.3 | memory controller: decode LUT, issue, cycle allocation |

@@ -14,6 +14,7 @@
 //!                     [--lanes N] [--seed S]
 //! cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]
 //! cram-pm verify-programs
+//! cram-pm analyze-programs
 //! cram-pm simd-info
 //! cram-pm info
 //! ```
@@ -32,7 +33,7 @@ use std::path::PathBuf;
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|chaos|tables|all> [--smoke] [--json FILE]\n  cram-pm chaos [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu|gpu] [--lane-engines a,b,...] [--patterns N] [--ref-chars N]\n              [--pat-chars N] [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F]\n              [--artifacts DIR] [--semantics best|threshold:N|topk:K]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm verify-programs\n  cram-pm simd-info\n  cram-pm info"
+        "usage:\n  cram-pm experiment <fig5|fig6|fig7|fig8|fig9|fig10|fig11|row-width|variation|ablation|scheduling|lanes|serving|workloads|hits|chaos|tables|all> [--smoke] [--json FILE]\n  cram-pm chaos [--smoke] [--json FILE]\n  cram-pm run [--engine xla|bitsim|cpu|gpu] [--lane-engines a,b,...] [--patterns N] [--ref-chars N]\n              [--pat-chars N] [--frag-chars N] [--lanes N] [--naive] [--seed S] [--error-rate F]\n              [--artifacts DIR] [--semantics best|threshold:N|topk:K]\n  cram-pm serve-bench [--smoke] [--json FILE] [--workload dna|ascii|protein] [--clients N]\n              [--requests N] [--ppr N] [--catalog N] [--zipf S] [--batch N] [--delay-us N]\n              [--queue N] [--lanes N] [--seed S]\n  cram-pm bench-gate --baseline FILE --measured FILE [--tolerance F]\n  cram-pm verify-programs\n  cram-pm analyze-programs\n  cram-pm simd-info\n  cram-pm info"
     );
     std::process::exit(2);
 }
@@ -360,6 +361,107 @@ fn cmd_verify_programs() -> Result<()> {
     Ok(())
 }
 
+/// The `analyze-programs` subcommand: the dataflow twin of
+/// `verify-programs`. Over the same geometry × alphabet × preset-mode
+/// sweep (readout on — the serving shape), run the static optimizer on
+/// each compiled program and dump the per-program before/after
+/// dataflow reports (instruction/gate/preset counts, distinct symbolic
+/// expressions, readout-cone depth). Every rewrite is proven inside
+/// `optimize` (re-verify + symbolic equivalence); on top of that the
+/// sweep cross-checks that an `O1` cache build of the same cell lands
+/// the identical aggregate census with zero fall-backs, then replays
+/// the mutation self-test so the optimizer-hazard corruption classes
+/// stay covered.
+fn cmd_analyze_programs() -> Result<()> {
+    use cram_pm::isa::{dataflow_summary, optimize, OptCensus, OptLevel};
+    const GEOMETRIES: [(usize, usize); 5] = [(24, 6), (32, 8), (64, 16), (65, 16), (100, 25)];
+    let mut total = OptCensus::default();
+    let mut programs = 0usize;
+    println!("── static dataflow optimization sweep (O0 → O1) ────");
+    for (frag_chars, pat_chars) in GEOMETRIES {
+        for alphabet in Alphabet::ALL {
+            for mode in [PresetMode::Standard, PresetMode::Gang] {
+                let label = format!("{frag_chars}×{pat_chars} {} {mode:?}", alphabet.tag());
+                let cache =
+                    ProgramCache::for_alphabet(alphabet, frag_chars, pat_chars, mode, true)
+                        .map_err(|e| anyhow::anyhow!("{label}: {e}"))?;
+                let layout = cache.layout();
+                let mut census = OptCensus::default();
+                println!("  {label}: {} programs", cache.len());
+                for loc in 0..cache.len() as u32 {
+                    let prog = cache.program(loc);
+                    let before = dataflow_summary(prog, layout)
+                        .map_err(|e| anyhow::anyhow!("{label} loc={loc} (before): {e}"))?;
+                    let (opt, c) = optimize(prog, layout)
+                        .map_err(|e| anyhow::anyhow!("{label} loc={loc}: {e}"))?;
+                    let after = dataflow_summary(&opt, layout)
+                        .map_err(|e| anyhow::anyhow!("{label} loc={loc} (after): {e}"))?;
+                    println!(
+                        "    loc {loc:>3}: {:>4} → {:>4} instrs ({:>3} → {:>3} gates, \
+                         {:>3} → {:>3} presets), {:>4} exprs, depth {}",
+                        before.instructions,
+                        after.instructions,
+                        before.gates,
+                        after.gates,
+                        before.presets,
+                        after.presets,
+                        after.distinct_exprs,
+                        after.max_depth
+                    );
+                    census.absorb(&c);
+                    programs += 1;
+                }
+                anyhow::ensure!(
+                    census.instructions_eliminated > 0,
+                    "{label}: the optimizer eliminated nothing"
+                );
+                // An O1 cache build of the same cell must land the
+                // identical aggregate census, with every program's
+                // proof passing (a fall-back keeps the unoptimized
+                // program and would silently shrink the census).
+                let o1 = ProgramCache::for_alphabet_at(
+                    alphabet,
+                    frag_chars,
+                    pat_chars,
+                    mode,
+                    true,
+                    OptLevel::O1,
+                )
+                .map_err(|e| anyhow::anyhow!("{label} O1 rebuild: {e}"))?;
+                anyhow::ensure!(
+                    *o1.opt_census() == census,
+                    "{label}: O1 cache census {:?} != per-program sweep {:?}",
+                    o1.opt_census(),
+                    census
+                );
+                anyhow::ensure!(
+                    o1.opt_census().fallbacks == 0,
+                    "{label}: O1 cache fell back to unoptimized programs"
+                );
+                total.absorb(&census);
+            }
+        }
+    }
+    println!(
+        "  {programs} programs optimized and proven: {} instructions eliminated \
+         ({} gates, {} presets)",
+        total.instructions_eliminated, total.gates_eliminated, total.presets_eliminated
+    );
+
+    println!("── mutation self-test (optimizer hazards included) ─");
+    for mode in [PresetMode::Standard, PresetMode::Gang] {
+        let cache = ProgramCache::for_geometry(64, 16, mode, true)
+            .map_err(|e| anyhow::anyhow!("building the 64×16 {mode:?} cache: {e}"))?;
+        let rejections = mutation_self_test(&cache)
+            .map_err(|e| anyhow::anyhow!("mutation self-test ({mode:?}): {e}"))?;
+        for (class, rejection) in &rejections {
+            println!("  {:<8} {:<20} rejected: {rejection}", format!("{mode:?}"), class.name());
+        }
+    }
+    println!("analyze-programs: every rewrite verified and proven equivalent");
+    Ok(())
+}
+
 /// The `simd-info` subcommand: what the host CPU supports, which
 /// kernel the process would dispatch to, and how to override it.
 fn cmd_simd_info() {
@@ -438,6 +540,7 @@ fn main() -> Result<()> {
             cmd_bench_gate(&kv)?;
         }
         Some("verify-programs") => cmd_verify_programs()?,
+        Some("analyze-programs") => cmd_analyze_programs()?,
         Some("simd-info") => cmd_simd_info(),
         Some("info") => cmd_info(),
         _ => usage(),

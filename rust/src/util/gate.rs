@@ -33,7 +33,7 @@ use crate::util::Json;
 /// geometry, plus the static verifier's microcode census — a codegen
 /// change that alters the compiled programs' shape must move the
 /// anchor deliberately, not drift past CI).
-const EXACT_KEYS: [&str; 20] = [
+const EXACT_KEYS: [&str; 23] = [
     "patterns",
     "matched",
     "total_hits",
@@ -50,6 +50,13 @@ const EXACT_KEYS: [&str; 20] = [
     "gates",
     "presets",
     "full_adders",
+    // Optimizer census: what the O1 dataflow passes removed from the
+    // default-geometry programs. Exact for the same reason as the
+    // verifier census — a pass that starts eliminating less (or a
+    // rewrite that stops proving) must move the anchor deliberately.
+    "instructions_eliminated",
+    "gates_eliminated",
+    "presets_eliminated",
     // Chaos/fault-tolerance counters: the fault plan is seed-split per
     // pattern × attempt and the lane count is pinned by the knobs, so
     // these are deterministic — drift means the injection or detection
@@ -337,6 +344,9 @@ mod tests {
             "faults_detected",
             "diverged_patterns",
             "lane_restarts",
+            "instructions_eliminated",
+            "gates_eliminated",
+            "presets_eliminated",
         ] {
             assert!(EXACT_KEYS.contains(&k), "{k} must gate exactly");
         }

@@ -630,6 +630,88 @@ fn prop_hit_enumeration_equals_scalar_oracle_both_engines() {
     }
 }
 
+/// Satellite: the static dataflow optimizer is invisible end-to-end.
+/// An `O1` coordinator (optimized alignment programs) answers every
+/// query bit-identically to `O0` (raw codegen output) — best tuples,
+/// full hit lists, and the countable metrics shape — for both device
+/// engines, every alphabet, all three semantics, 1–4 executor lanes,
+/// and substrate heights straddling the 64-row word boundary. The CPU
+/// engine has no compiled cache, so its pair doubles as a check that
+/// `opt_level` is inert where it should be.
+#[test]
+fn prop_optimized_programs_bit_identical_end_to_end() {
+    use cram_pm::alphabet::Alphabet;
+    use cram_pm::isa::OptLevel;
+    use cram_pm::semantics::MatchSemantics;
+    let mut rng = Rng::new(0x0715CA7);
+    let (frag_chars, pat_chars) = (24usize, 6usize);
+    let semantics_pool = [
+        MatchSemantics::BestOf,
+        MatchSemantics::Threshold { min_score: 4 },
+        MatchSemantics::TopK { k: 5 },
+    ];
+    for engine in [EngineSpec::Cpu, EngineSpec::Bitsim] {
+        for alphabet in Alphabet::ALL {
+            for (row_case, n_frags) in [63usize, 64, 65].into_iter().enumerate() {
+                let fragments: Vec<Vec<u8>> =
+                    (0..n_frags).map(|_| alphabet.random_codes(&mut rng, frag_chars)).collect();
+                let home = rng.below(n_frags);
+                let start = rng.below(frag_chars - pat_chars + 1);
+                let patterns: Vec<Vec<u8>> = vec![
+                    fragments[home][start..start + pat_chars].to_vec(),
+                    alphabet.random_codes(&mut rng, pat_chars),
+                ];
+                for lanes in 1usize..=4 {
+                    // Cycle the semantics against the lane count so every
+                    // (lanes, semantics) pairing appears across the sweep
+                    // without cubing the matrix.
+                    let semantics = semantics_pool[(lanes + row_case) % semantics_pool.len()];
+                    let run_at = |opt_level: OptLevel| {
+                        let mut cfg = CoordinatorConfig::for_alphabet(
+                            alphabet,
+                            engine.clone(),
+                            frag_chars,
+                            pat_chars,
+                        );
+                        cfg.semantics = semantics;
+                        cfg.oracular = None;
+                        cfg.lanes = lanes;
+                        cfg.opt_level = opt_level;
+                        Coordinator::new(cfg, fragments.clone()).unwrap().run(&patterns).unwrap()
+                    };
+                    let (r0, m0) = run_at(OptLevel::O0);
+                    let (r1, m1) = run_at(OptLevel::O1);
+                    let ctx =
+                        format!("{engine} {alphabet} rows={n_frags} lanes={lanes} {semantics}");
+                    assert_eq!(r0.len(), r1.len(), "{ctx}: result count diverged");
+                    for (a, b) in r0.iter().zip(&r1) {
+                        assert_eq!(a.pattern_id, b.pattern_id, "{ctx}");
+                        assert_eq!(
+                            a.best.map(|x| (x.score, x.row, x.loc)),
+                            b.best.map(|x| (x.score, x.row, x.loc)),
+                            "{ctx} pattern {}: best diverged",
+                            a.pattern_id
+                        );
+                        assert_eq!(
+                            a.hits, b.hits,
+                            "{ctx} pattern {}: hit list diverged",
+                            a.pattern_id
+                        );
+                    }
+                    // The countable metrics shape must match exactly —
+                    // O1 changes how many gates a pass executes, never
+                    // how many passes, matches, or hits a run reports.
+                    assert_eq!(
+                        (m0.patterns, m0.matched, m0.hits, m0.passes, &m0.engine, m0.lanes),
+                        (m1.patterns, m1.matched, m1.hits, m1.passes, &m1.engine, m1.lanes),
+                        "{ctx}: metrics shape diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Tentpole: the CPU engine's SIMD block path is bit-identical to the
 /// scalar oracle for every kernel available on this host — every
 /// alphabet, fragment lengths straddling the 64- and 128-char word

@@ -59,6 +59,9 @@ fn all_corruption_classes_are_rejected_in_both_modes() {
         Corruption::BadArity,
         Corruption::DanglingRead,
         Corruption::DeadStore,
+        Corruption::ReorderedPreset,
+        Corruption::WrongPolarityFold,
+        Corruption::TrimmedLiveCone,
     ];
     for class in mandated {
         assert!(Corruption::ALL.contains(&class), "{} missing from ALL", class.name());
@@ -68,10 +71,10 @@ fn all_corruption_classes_are_rejected_in_both_modes() {
         let rejections = mutation_self_test(&cache)
             .unwrap_or_else(|e| panic!("mutation self-test failed under {mode:?}: {e}"));
         assert_eq!(rejections.len(), Corruption::ALL.len());
-        for (class, err) in &rejections {
+        for (class, rejection) in &rejections {
             assert!(
-                class.expects(&err.violation),
-                "{} rejected with the wrong violation under {mode:?}: {err}",
+                class.expects(rejection),
+                "{} rejected with the wrong error under {mode:?}: {rejection}",
                 class.name()
             );
         }
@@ -87,7 +90,7 @@ fn rejections_carry_index_rule_and_loc() {
     let prog = cache.program(0);
     let layout = cache.layout();
 
-    let mutated = corrupt(prog, layout, Corruption::DanglingRead);
+    let mutated = corrupt(prog, layout, Corruption::DanglingRead).unwrap();
     let err = verify(&mutated, layout).unwrap_err();
     assert_eq!(err.index, 0, "the inserted read is the first instruction");
     assert_eq!(err.rule(), Rule::ReadoutCoverage);
@@ -98,7 +101,7 @@ fn rejections_carry_index_rule_and_loc() {
     assert!(msg.contains("instr #0") && msg.contains("alignment 5"), "{msg}");
     assert!(msg.contains("R5:readout-coverage"), "{msg}");
 
-    let mutated = corrupt(prog, layout, Corruption::OutOfRangeColumn);
+    let mutated = corrupt(prog, layout, Corruption::OutOfRangeColumn).unwrap();
     let err = verify(&mutated, layout).unwrap_err();
     assert_eq!(err.rule(), Rule::Geometry);
     let width = layout.total_cols() as u32;
@@ -120,7 +123,7 @@ fn cache_build_attaches_the_failing_loc() {
     // Every program of a fresh build at that layout verifies with the
     // loc attached on failure; simulate a failure by verifying a
     // corrupted copy the way build() does.
-    let bad = corrupt(healthy.program(3), &layout, Corruption::DeadStore);
+    let bad = corrupt(healthy.program(3), &layout, Corruption::DeadStore).unwrap();
     let err = verify(&bad, &layout).unwrap_err().with_loc(3);
     assert_eq!(err.loc, Some(3));
     assert_eq!(err.rule(), Rule::Liveness);
